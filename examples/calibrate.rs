@@ -1,0 +1,67 @@
+//! Calibration sweep: find TaskCosts that reproduce the paper's measured
+//! response-time scales (Sort ≈ 0.5 s, Eigen ≈ 13–14 s under HPA on the
+//! Table-2 cluster) — the mapping documented in DESIGN.md §Substitutions.
+//!
+//! ```bash
+//! cargo run --release --example calibrate            # coarse grid
+//! cargo run --release --example calibrate -- 120     # longer runs (min)
+//! ```
+
+use ppa_edge::app::{TaskCosts, TaskType};
+use ppa_edge::autoscaler::Hpa;
+use ppa_edge::config::paper_cluster;
+use ppa_edge::experiments::SimWorld;
+use ppa_edge::sim::{MIN, MS};
+use ppa_edge::stats::summarize;
+use ppa_edge::workload::{Generator, RandomAccessGen};
+
+fn run(costs: TaskCosts, minutes: u64, seed: u64) -> (f64, f64, f64, f64, f64) {
+    let cfg = paper_cluster();
+    let mut world = SimWorld::build(&cfg, costs, seed);
+    world.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
+    world.add_generator(Generator::RandomAccess(RandomAccessGen::new(2)));
+    for svc in 0..world.app.services.len() {
+        world.add_scaler(Box::new(Hpa::with_defaults()), svc);
+    }
+    world.run_until(minutes * MIN);
+    let sort = summarize(&world.response_times(TaskType::Sort));
+    let eigen = summarize(&world.response_times(TaskType::Eigen));
+    let rirs: Vec<f64> = world.rir_log.iter().map(|s| s.rir).collect();
+    (
+        sort.mean,
+        sort.std,
+        eigen.mean,
+        eigen.std,
+        summarize(&rirs).mean,
+    )
+}
+
+fn main() {
+    let minutes: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    println!("paper targets (HPA): sort 0.592±0.067  eigen 14.206±1.703  RIR ~0.32");
+    println!(
+        "{:>6} {:>6} {:>5} {:>5} | {:>7} {:>6} | {:>7} {:>6} | {:>5}",
+        "sortCS", "eigCS", "ovhMS", "base", "sort", "std", "eigen", "std", "RIR"
+    );
+    for base in [0.3, 0.45, 0.6] {
+        for sort_cs in [0.08, 0.1, 0.12] {
+            for eigen_cs in [6.0, 7.5, 9.0] {
+                let ovh_ms = 250u64;
+                let costs = TaskCosts {
+                    sort_core_secs: sort_cs,
+                    eigen_core_secs: eigen_cs,
+                    overhead: ovh_ms * MS,
+                    base_burn_frac: base,
+                    ..TaskCosts::default()
+                };
+                let (sm, ss, em, es, rir) = run(costs, minutes, 17);
+                println!(
+                    "{sort_cs:>6} {eigen_cs:>6} {ovh_ms:>5} {base:>5} | {sm:>7.3} {ss:>6.3} | {em:>7.2} {es:>6.2} | {rir:>5.3}"
+                );
+            }
+        }
+    }
+}

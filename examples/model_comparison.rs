@@ -1,0 +1,38 @@
+//! Fig 7 driver: inject different predictive models (AOT-compiled
+//! JAX/Pallas LSTM vs from-scratch ARMA) into the PPA and compare their
+//! live prediction quality on the running application.
+//!
+//! ```bash
+//! cargo run --release --example model_comparison           # paper scale
+//! cargo run --release --example model_comparison -- 30 1   # 30 min, 1 h pretrain
+//! ```
+
+use ppa_edge::experiments::{fig7_model_comparison, fig8_update_policies, FigParams};
+use ppa_edge::report;
+
+fn main() -> anyhow::Result<()> {
+    let minutes: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(200);
+    let pretrain_hours: f64 = std::env::args()
+        .nth(2)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(10.0);
+    let params = FigParams {
+        minutes,
+        pretrain_hours,
+        seed: 2021,
+    };
+
+    println!("Fig 7 (model comparison): {minutes} min runs, {pretrain_hours} h pretraining");
+    let fig7 = fig7_model_comparison(&params)?;
+    report::print_fig7(&fig7);
+
+    println!("\nFig 8 (update policies): same configuration, LSTM model");
+    let fig8 = fig8_update_policies(&params)?;
+    report::print_fig8(&fig8);
+    Ok(())
+}

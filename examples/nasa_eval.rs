@@ -1,0 +1,49 @@
+//! End-to-end driver: the paper's full evaluation (Figs 11–14).
+//!
+//! Replays the scaled 2-day NASA trace against the Table-2 cluster twice —
+//! once autoscaled by the default HPA, once by the optimally configured
+//! PPA (LSTM seed model pretrained on 10 h of Random Access, update
+//! policy 3, key metric = CPU) — and prints the paper's comparison rows
+//! with Welch p-values. Requires `make artifacts`.
+//!
+//! ```bash
+//! cargo run --release --example nasa_eval            # full 48 h run
+//! cargo run --release --example nasa_eval -- 6       # shortened (hours)
+//! ```
+
+use ppa_edge::experiments::{nasa_eval, NasaParams};
+use ppa_edge::report;
+
+fn main() -> anyhow::Result<()> {
+    let hours: f64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(48.0);
+    let pretrain_hours: f64 = std::env::args()
+        .nth(2)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(10.0);
+
+    let params = NasaParams {
+        hours,
+        pretrain_hours,
+        ..NasaParams::default()
+    };
+    println!(
+        "NASA evaluation: {hours} simulated hours, {pretrain_hours} h pretraining (paper: 48 / 10)"
+    );
+
+    let wall = std::time::Instant::now();
+    let eval = nasa_eval(&params)?;
+    report::print_nasa_eval(&eval);
+    println!(
+        "\nwall time: {:.1}s for {:.0} simulated hours ({:.0}x real time)",
+        wall.elapsed().as_secs_f64(),
+        2.0 * hours,
+        2.0 * hours * 3600.0 / wall.elapsed().as_secs_f64()
+    );
+    println!("CSV dumps: target/experiments/fig11..14*.csv");
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: build a small edge cluster, generate Random-Access load,
+//! autoscale with the PPA (naive model — no artifacts needed), and print
+//! what happened.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ppa_edge::app::{TaskCosts, TaskType};
+use ppa_edge::autoscaler::{Hpa, Ppa, PpaConfig};
+use ppa_edge::config::quickstart_cluster;
+use ppa_edge::experiments::SimWorld;
+use ppa_edge::forecast::NaiveForecaster;
+use ppa_edge::sim::MIN;
+use ppa_edge::stats::summarize;
+use ppa_edge::workload::{Generator, RandomAccessGen};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A two-node cluster (one edge zone + one cloud node).
+    let cfg = quickstart_cluster();
+    let mut world = SimWorld::build(&cfg, TaskCosts::default(), 42);
+
+    // 2. Clients at edge zone 1 follow the paper's Random Access pattern.
+    world.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
+
+    // 3. Autoscalers: a PPA (naive last-value model — see
+    //    examples/model_comparison.rs for the LSTM) on the edge pool and
+    //    the stock HPA on the cloud pool.
+    let ppa = Ppa::new(PpaConfig::default(), Box::new(NaiveForecaster));
+    world.add_scaler(Box::new(ppa), 0);
+    world.add_scaler(Box::new(Hpa::with_defaults()), 1);
+
+    // 4. Run 30 simulated minutes.
+    let events = world.run_until(30 * MIN);
+
+    // 5. Report.
+    let sort = summarize(&world.response_times(TaskType::Sort));
+    let eigen = summarize(&world.response_times(TaskType::Eigen));
+    let rirs: Vec<f64> = world.rir_log.iter().map(|s| s.rir).collect();
+    println!("events processed : {events}");
+    println!("requests served  : {}", world.app.responses.len());
+    println!(
+        "sort  response   : {:.3} ± {:.3} s (n={})",
+        sort.mean, sort.std, sort.n
+    );
+    println!(
+        "eigen response   : {:.2} ± {:.2} s (n={})",
+        eigen.mean, eigen.std, eigen.n
+    );
+    println!("mean RIR         : {:.3}", summarize(&rirs).mean);
+    let max_replicas = world
+        .replica_log
+        .iter()
+        .map(|&(_, _, r)| r)
+        .max()
+        .unwrap_or(0);
+    println!("max replicas seen: {max_replicas}");
+    Ok(())
+}

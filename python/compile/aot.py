@@ -1,0 +1,114 @@
+"""AOT pipeline: lower the L2 model to HLO text artifacts for the rust runtime.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/gen_hlo.py.
+
+Run once via ``make artifacts``; emits into ``artifacts/``:
+  lstm_init.hlo.txt         (seed:u32) -> (w, b, wd, bd)
+  lstm_predict.hlo.txt      (w, b, wd, bd, x[1,T,I]) -> (y[1,O],)
+  lstm_train_step.hlo.txt   (params, m, v, t, xb[B,T,I], yb[B,O]) -> (params', m', v', t', loss)
+  lstm_train_epoch.hlo.txt  (params, m, v, t, xs[K,B,T,I], ys[K,B,O]) -> same
+  manifest.json             shapes + Adam constants for the rust runtime
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs():
+    return [_spec(model.PARAM_SHAPES[n]) for n in model.PARAM_NAMES]
+
+
+def _opt_specs():
+    # m then v, one per param, then the scalar step count.
+    return _param_specs() + _param_specs() + [_spec(())]
+
+
+def build_artifacts():
+    """Lower all entry points. Returns {filename: hlo_text} plus manifest."""
+    t, b, k = model.SEQ_LEN, model.BATCH, model.EPOCH_BATCHES
+    i_dim, o_dim = model.INPUT_DIM, model.OUTPUT_DIM
+
+    artifacts = {}
+
+    lowered = jax.jit(model.init_entry).lower(_spec((), jnp.uint32))
+    artifacts["lstm_init.hlo.txt"] = to_hlo_text(lowered)
+
+    lowered = jax.jit(model.predict_entry).lower(
+        *_param_specs(), _spec((1, t, i_dim))
+    )
+    artifacts["lstm_predict.hlo.txt"] = to_hlo_text(lowered)
+
+    lowered = jax.jit(model.train_step_entry).lower(
+        *_param_specs(), *_opt_specs(), _spec((b, t, i_dim)), _spec((b, o_dim))
+    )
+    artifacts["lstm_train_step.hlo.txt"] = to_hlo_text(lowered)
+
+    lowered = jax.jit(model.train_epoch_entry).lower(
+        *_param_specs(), *_opt_specs(), _spec((k, b, t, i_dim)), _spec((k, b, o_dim))
+    )
+    artifacts["lstm_train_epoch.hlo.txt"] = to_hlo_text(lowered)
+
+    manifest = {
+        "input_dim": i_dim,
+        "hidden_dim": model.HIDDEN_DIM,
+        "output_dim": o_dim,
+        "seq_len": t,
+        "batch": b,
+        "epoch_batches": k,
+        "adam": {
+            "lr": model.ADAM_LR,
+            "beta1": model.ADAM_B1,
+            "beta2": model.ADAM_B2,
+            "eps": model.ADAM_EPS,
+        },
+        "param_shapes": {n: list(model.PARAM_SHAPES[n]) for n in model.PARAM_NAMES},
+        "artifacts": sorted(artifacts),
+    }
+    return artifacts, manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    artifacts, manifest = build_artifacts()
+    for name, text in artifacts.items():
+        path = os.path.join(args.out, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,213 @@
+"""L1 — Pallas LSTM cell kernels (forward + backward).
+
+The compute hot-spot of the PPA forecaster is the LSTM cell: a fused
+``(B, I+H) x (I+H, 4H)`` gate matmul followed by elementwise sigmoid/tanh
+gating. Both directions are written as Pallas kernels and wired together
+with ``jax.custom_vjp`` so the L2 model (``compile.model``) is end-to-end
+differentiable while every FLOP of the cell goes through Pallas.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT client cannot run
+Mosaic custom-calls, so interpret mode is the correctness path (see
+DESIGN.md §Hardware-Adaptation for the TPU tiling story: the whole cell —
+x/h blocks, the fused weight, and the 4H gate block — is VMEM-resident,
+and the gate matmul is shaped for the 128x128 MXU with H=50 padding to 64
+lanes).
+
+Correctness oracle: ``kernels.ref`` (pure jnp), tested by
+``python/tests/test_kernel.py`` under hypothesis shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Pallas must run in interpret mode on the CPU PJRT backend (Mosaic
+# custom-calls are TPU-only). Kept as a module flag so tests can assert
+# both paths produce identical HLO-visible numerics.
+INTERPRET = True
+
+
+def _cell_fwd_kernel(x_ref, h_ref, c_ref, w_ref, b_ref, h_out, c_out, gates_out):
+    """Fused LSTM cell forward.
+
+    z = x @ W[:I] + h @ W[I:] + b          (one logical (B,I+H)x(I+H,4H) matmul,
+                                            split to avoid an in-kernel concat)
+    i,f,g,o = sigmoid/tanh gate split of z
+    c' = f*c + i*g ; h' = o*tanh(c')
+
+    Also emits the post-activation gates (B, 4H) — the residuals the
+    backward kernel needs; saving them here avoids recomputing the matmul
+    in the backward pass.
+    """
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+
+    i_dim = x.shape[-1]
+    hidden = h.shape[-1]
+
+    # Fused gate pre-activations. float32 accumulation is explicit so the
+    # kernel is MXU-shaped (bf16 in / f32 acc) when compiled for TPU.
+    z = (
+        jnp.dot(x, w[:i_dim, :], preferred_element_type=jnp.float32)
+        + jnp.dot(h, w[i_dim:, :], preferred_element_type=jnp.float32)
+        + b[None, :]
+    )
+
+    i_g = jax.nn.sigmoid(z[:, 0 * hidden : 1 * hidden])
+    f_g = jax.nn.sigmoid(z[:, 1 * hidden : 2 * hidden])
+    g_g = jnp.tanh(z[:, 2 * hidden : 3 * hidden])
+    o_g = jax.nn.sigmoid(z[:, 3 * hidden : 4 * hidden])
+
+    c_new = f_g * c + i_g * g_g
+    h_new = o_g * jnp.tanh(c_new)
+
+    h_out[...] = h_new.astype(h_out.dtype)
+    c_out[...] = c_new.astype(c_out.dtype)
+    gates_out[...] = jnp.concatenate([i_g, f_g, g_g, o_g], axis=-1).astype(
+        gates_out.dtype
+    )
+
+
+def _cell_bwd_kernel(
+    x_ref,
+    h_ref,
+    c_ref,
+    w_ref,
+    gates_ref,
+    c_new_ref,
+    dh_ref,
+    dc_ref,
+    dx_out,
+    dh_prev_out,
+    dc_prev_out,
+    dw_out,
+    db_out,
+):
+    """Fused LSTM cell backward.
+
+    Consumes the saved post-activation gates and produces gradients w.r.t.
+    every input of the forward kernel. The two transposed matmuls
+    (dz @ Wᵀ and [x,h]ᵀ @ dz) are the backward hot-spot and stay in-kernel.
+    """
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    w = w_ref[...]
+    gates = gates_ref[...]
+    c_new = c_new_ref[...]
+    dh = dh_ref[...]
+    dc_in = dc_ref[...]
+
+    i_dim = x.shape[-1]
+    hidden = h.shape[-1]
+
+    i_g = gates[:, 0 * hidden : 1 * hidden]
+    f_g = gates[:, 1 * hidden : 2 * hidden]
+    g_g = gates[:, 2 * hidden : 3 * hidden]
+    o_g = gates[:, 3 * hidden : 4 * hidden]
+
+    tanh_c_new = jnp.tanh(c_new)
+    dc = dc_in + dh * o_g * (1.0 - tanh_c_new * tanh_c_new)
+
+    do = dh * tanh_c_new
+    di = dc * g_g
+    df = dc * c
+    dg = dc * i_g
+
+    dz_i = di * i_g * (1.0 - i_g)
+    dz_f = df * f_g * (1.0 - f_g)
+    dz_g = dg * (1.0 - g_g * g_g)
+    dz_o = do * o_g * (1.0 - o_g)
+    dz = jnp.concatenate([dz_i, dz_f, dz_g, dz_o], axis=-1)
+
+    # dxh = dz @ Wᵀ, split back into the x and h slices of the fused weight.
+    dx = jnp.dot(dz, w[:i_dim, :].T, preferred_element_type=jnp.float32)
+    dh_prev = jnp.dot(dz, w[i_dim:, :].T, preferred_element_type=jnp.float32)
+
+    # dW = [x;h]ᵀ @ dz — written as two stacked blocks of the fused weight.
+    dw_x = jnp.dot(x.T, dz, preferred_element_type=jnp.float32)
+    dw_h = jnp.dot(h.T, dz, preferred_element_type=jnp.float32)
+
+    dx_out[...] = dx.astype(dx_out.dtype)
+    dh_prev_out[...] = dh_prev.astype(dh_prev_out.dtype)
+    dc_prev_out[...] = (dc * f_g).astype(dc_prev_out.dtype)
+    dw_out[...] = jnp.concatenate([dw_x, dw_h], axis=0).astype(dw_out.dtype)
+    db_out[...] = jnp.sum(dz, axis=0).astype(db_out.dtype)
+
+
+def _cell_fwd_call(x, h, c, w, b):
+    batch, _ = x.shape
+    hidden = h.shape[-1]
+    dt = x.dtype
+    return pl.pallas_call(
+        _cell_fwd_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, hidden), dt),  # h'
+            jax.ShapeDtypeStruct((batch, hidden), dt),  # c'
+            jax.ShapeDtypeStruct((batch, 4 * hidden), dt),  # gates residual
+        ],
+        interpret=INTERPRET,
+    )(x, h, c, w, b)
+
+
+def _cell_bwd_call(x, h, c, w, gates, c_new, dh, dc):
+    batch, i_dim = x.shape
+    hidden = h.shape[-1]
+    dt = x.dtype
+    return pl.pallas_call(
+        _cell_bwd_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, i_dim), dt),  # dx
+            jax.ShapeDtypeStruct((batch, hidden), dt),  # dh_prev
+            jax.ShapeDtypeStruct((batch, hidden), dt),  # dc_prev
+            jax.ShapeDtypeStruct((i_dim + hidden, 4 * hidden), dt),  # dW
+            jax.ShapeDtypeStruct((4 * hidden,), dt),  # db
+        ],
+        interpret=INTERPRET,
+    )(x, h, c, w, gates, c_new, dh, dc)
+
+
+@jax.custom_vjp
+def lstm_cell(x, h, c, w, b):
+    """Differentiable fused LSTM cell.
+
+    Args:
+      x: (B, I) inputs for this step.
+      h: (B, H) previous hidden state.
+      c: (B, H) previous cell state.
+      w: (I+H, 4H) fused gate weight, gate order [i, f, g, o].
+      b: (4H,) fused gate bias.
+
+    Returns:
+      (h', c') — next hidden and cell state, both (B, H).
+    """
+    h_new, c_new, _ = _cell_fwd_call(x, h, c, w, b)
+    return h_new, c_new
+
+
+def _lstm_cell_fwd(x, h, c, w, b):
+    h_new, c_new, gates = _cell_fwd_call(x, h, c, w, b)
+    return (h_new, c_new), (x, h, c, w, gates, c_new)
+
+
+def _lstm_cell_bwd(res, cotangents):
+    x, h, c, w, gates, c_new = res
+    dh, dc = cotangents
+    dx, dh_prev, dc_prev, dw, db = _cell_bwd_call(x, h, c, w, gates, c_new, dh, dc)
+    return dx, dh_prev, dc_prev, dw, db
+
+
+lstm_cell.defvjp(_lstm_cell_fwd, _lstm_cell_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lstm_cell_jit(x, h, c, w, b):
+    """Jitted convenience wrapper used by tests."""
+    return lstm_cell(x, h, c, w, b)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for the Pallas LSTM kernels.
+
+Every Pallas kernel in ``kernels.lstm_cell`` is checked against these
+reference implementations by ``python/tests``. Gradients of the custom-vjp
+cell are checked against ``jax.grad`` of :func:`lstm_cell_ref`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, h, c, w, b):
+    """Reference LSTM cell, gate order [i, f, g, o] over a fused weight.
+
+    Mirrors kernels.lstm_cell.lstm_cell exactly (same fused-weight layout,
+    same float32 accumulation).
+    """
+    i_dim = x.shape[-1]
+    hidden = h.shape[-1]
+    z = (
+        jnp.dot(x, w[:i_dim, :], preferred_element_type=jnp.float32)
+        + jnp.dot(h, w[i_dim:, :], preferred_element_type=jnp.float32)
+        + b[None, :]
+    )
+    i_g = jax.nn.sigmoid(z[:, 0 * hidden : 1 * hidden])
+    f_g = jax.nn.sigmoid(z[:, 1 * hidden : 2 * hidden])
+    g_g = jnp.tanh(z[:, 2 * hidden : 3 * hidden])
+    o_g = jax.nn.sigmoid(z[:, 3 * hidden : 4 * hidden])
+    c_new = f_g * c + i_g * g_g
+    h_new = o_g * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_ref(xs, h0, c0, w, b):
+    """Unrolled reference LSTM over a (T, B, I) sequence. Returns final h."""
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = lstm_cell_ref(x_t, h, c, w, b)
+        return (h, c), None
+
+    (h, _c), _ = jax.lax.scan(step, (h0, c0), xs)
+    return h
+
+
+def forecaster_ref(params, x):
+    """Reference forward pass of the full L2 model (LSTM + ReLU dense).
+
+    Args:
+      params: dict with w (I+H,4H), b (4H,), wd (H,O), bd (O,).
+      x: (B, T, I) batch of input windows.
+
+    Returns:
+      (B, O) predicted next-step metric vector.
+    """
+    batch = x.shape[0]
+    hidden = params["wd"].shape[0]
+    h0 = jnp.zeros((batch, hidden), x.dtype)
+    c0 = jnp.zeros((batch, hidden), x.dtype)
+    xs = jnp.swapaxes(x, 0, 1)  # (T, B, I)
+    h = lstm_ref(xs, h0, c0, params["w"], params["b"])
+    return jax.nn.relu(jnp.dot(h, params["wd"]) + params["bd"])
+
+
+def mse_ref(pred, target):
+    return jnp.mean((pred - target) ** 2)

@@ -1,0 +1,191 @@
+"""L2 — the PPA forecaster model in JAX, calling the L1 Pallas kernels.
+
+The paper's predictive model (§5.3.1): a 50-unit LSTM layer followed by a
+ReLU-activated dense layer with 5 outputs, trained with MSE loss and the
+Adam optimizer. Input metric vector (protocol §4.2.2):
+``[CPU, RAM, NetIn, NetOut, CustomMetric(req rate)]``.
+
+Everything here is build-time Python: ``compile.aot`` lowers the four entry
+points (init / predict / train_step / train_epoch) to HLO text once, and
+the rust coordinator executes the artifacts via PJRT. Python is never on
+the control path.
+
+Parameter layout (flat, positional — the rust side mirrors this order):
+  w  : (I+H, 4H)  fused LSTM gate weight, gate order [i, f, g, o]
+  b  : (4H,)      fused gate bias (forget-gate slice initialized to 1.0)
+  wd : (H, O)     dense weight
+  bd : (O,)       dense bias
+Adam state is one (m, v) pair per parameter plus a scalar step count.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.lstm_cell import lstm_cell
+
+# Model hyperparameters — fixed by the paper (§5.3.1) and baked into the
+# AOT artifacts; compile.aot writes them to artifacts/manifest.json so the
+# rust runtime can size its buffers without parsing HLO.
+INPUT_DIM = 5
+HIDDEN_DIM = 50
+OUTPUT_DIM = 5
+SEQ_LEN = 8  # metric-history window fed to the LSTM (paper protocol: >= 1)
+BATCH = 32
+EPOCH_BATCHES = 16  # minibatches fused into one train_epoch dispatch
+
+ADAM_LR = 1e-3
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+PARAM_NAMES = ("w", "b", "wd", "bd")
+PARAM_SHAPES = {
+    "w": (INPUT_DIM + HIDDEN_DIM, 4 * HIDDEN_DIM),
+    "b": (4 * HIDDEN_DIM,),
+    "wd": (HIDDEN_DIM, OUTPUT_DIM),
+    "bd": (OUTPUT_DIM,),
+}
+
+
+# ---------------------------------------------------------------------------
+# Initialization (Keras-equivalent: glorot_uniform kernels, unit forget bias)
+# ---------------------------------------------------------------------------
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[1]
+    limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -limit, limit)
+
+
+def init_params(seed):
+    """Seeded parameter init. ``seed`` is a uint32 scalar (traced input)."""
+    key = jax.random.PRNGKey(seed)
+    k_w, k_wd = jax.random.split(key)
+    w = _glorot(k_w, PARAM_SHAPES["w"])
+    # unit_forget_bias: the f-gate slice starts at 1.0 (Keras default).
+    b = jnp.zeros(PARAM_SHAPES["b"], jnp.float32)
+    b = b.at[HIDDEN_DIM : 2 * HIDDEN_DIM].set(1.0)
+    wd = _glorot(k_wd, PARAM_SHAPES["wd"])
+    bd = jnp.zeros(PARAM_SHAPES["bd"], jnp.float32)
+    return w, b, wd, bd
+
+
+def zeros_like_params():
+    return tuple(jnp.zeros(PARAM_SHAPES[n], jnp.float32) for n in PARAM_NAMES)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def forecast(params, x):
+    """Model forward pass.
+
+    Args:
+      params: (w, b, wd, bd) tuple.
+      x: (B, T, I) scaled metric windows.
+
+    Returns:
+      (B, O) predicted next-step metric vector (ReLU-activated — metrics
+      are non-negative after the rust-side scaler's inverse transform).
+    """
+    w, b, wd, bd = params
+    batch = x.shape[0]
+    h = jnp.zeros((batch, HIDDEN_DIM), x.dtype)
+    c = jnp.zeros((batch, HIDDEN_DIM), x.dtype)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = lstm_cell(x_t, h, c, w, b)
+        return (h, c), None
+
+    xs = jnp.swapaxes(x, 0, 1)  # (T, B, I)
+    (h, _c), _ = jax.lax.scan(step, (h, c), xs)
+    return jax.nn.relu(jnp.dot(h, wd) + bd)
+
+
+def loss_fn(params, xb, yb):
+    pred = forecast(params, xb)
+    return jnp.mean((pred - yb) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Adam (from scratch — optimizer state is explicit so rust owns it between
+# dispatches)
+# ---------------------------------------------------------------------------
+
+
+def adam_update(params, grads, m, v, t):
+    """One Adam step. ``t`` is the 1-based step count AFTER this update."""
+    t_new = t + 1.0
+    b1t = ADAM_B1**t_new
+    b2t = ADAM_B2**t_new
+    new_params, new_m, new_v = [], [], []
+    for p, g, m_i, v_i in zip(params, grads, m, v):
+        m_n = ADAM_B1 * m_i + (1.0 - ADAM_B1) * g
+        v_n = ADAM_B2 * v_i + (1.0 - ADAM_B2) * (g * g)
+        m_hat = m_n / (1.0 - b1t)
+        v_hat = v_n / (1.0 - b2t)
+        new_params.append(p - ADAM_LR * m_hat / (jnp.sqrt(v_hat) + ADAM_EPS))
+        new_m.append(m_n)
+        new_v.append(v_n)
+    return tuple(new_params), tuple(new_m), tuple(new_v), t_new
+
+
+def train_step(params, m, v, t, xb, yb):
+    """One fused fwd+bwd+Adam step on a (B, T, I)/(B, O) minibatch."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb)
+    params, m, v, t = adam_update(params, grads, m, v, t)
+    return params, m, v, t, loss
+
+
+def train_epoch(params, m, v, t, xs, ys):
+    """K fused train steps in one dispatch.
+
+    Args:
+      xs: (K, B, T, I) stacked minibatches.
+      ys: (K, B, O) stacked targets.
+
+    Returns:
+      updated (params, m, v, t) and the mean loss across the K steps.
+    """
+
+    def body(carry, batch):
+        params, m, v, t = carry
+        xb, yb = batch
+        params, m, v, t, loss = train_step(params, m, v, t, xb, yb)
+        return (params, m, v, t), loss
+
+    (params, m, v, t), losses = jax.lax.scan(body, (params, m, v, t), (xs, ys))
+    return params, m, v, t, jnp.mean(losses)
+
+
+# ---------------------------------------------------------------------------
+# Flat AOT entry points (positional args mirror the rust runtime's order)
+# ---------------------------------------------------------------------------
+
+
+def predict_entry(w, b, wd, bd, x):
+    return (forecast((w, b, wd, bd), x),)
+
+
+def init_entry(seed):
+    return init_params(seed)
+
+
+def train_step_entry(w, b, wd, bd, mw, mb, mwd, mbd, vw, vb, vwd, vbd, t, xb, yb):
+    params, m, v, t, loss = train_step(
+        (w, b, wd, bd), (mw, mb, mwd, mbd), (vw, vb, vwd, vbd), t, xb, yb
+    )
+    return (*params, *m, *v, t, loss)
+
+
+def train_epoch_entry(w, b, wd, bd, mw, mb, mwd, mbd, vw, vb, vwd, vbd, t, xs, ys):
+    params, m, v, t, loss = train_epoch(
+        (w, b, wd, bd), (mw, mb, mwd, mbd), (vw, vb, vwd, vbd), t, xs, ys
+    )
+    return (*params, *m, *v, t, loss)

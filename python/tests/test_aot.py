@@ -1,0 +1,56 @@
+"""AOT pipeline: artifacts lower, parse as HLO text, and carry sane shapes."""
+
+import json
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built():
+    return aot.build_artifacts()
+
+
+def test_all_artifacts_emitted(built):
+    artifacts, manifest = built
+    assert set(artifacts) == {
+        "lstm_init.hlo.txt",
+        "lstm_predict.hlo.txt",
+        "lstm_train_step.hlo.txt",
+        "lstm_train_epoch.hlo.txt",
+    }
+    assert manifest["artifacts"] == sorted(artifacts)
+
+
+def test_hlo_text_not_proto(built):
+    artifacts, _ = built
+    for name, text in artifacts.items():
+        # HLO text starts with an HloModule header — never raw proto bytes.
+        assert text.lstrip().startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_manifest_shapes(built):
+    _, manifest = built
+    assert manifest["input_dim"] == model.INPUT_DIM
+    assert manifest["hidden_dim"] == model.HIDDEN_DIM == 50
+    assert manifest["output_dim"] == model.OUTPUT_DIM == 5
+    assert manifest["param_shapes"]["w"] == [
+        model.INPUT_DIM + model.HIDDEN_DIM,
+        4 * model.HIDDEN_DIM,
+    ]
+    assert manifest["adam"]["lr"] == model.ADAM_LR
+
+
+def test_predict_entry_signature_in_hlo(built):
+    artifacts, _ = built
+    text = artifacts["lstm_predict.hlo.txt"]
+    # 5 params: w, b, wd, bd, x — the rust runtime feeds them positionally.
+    assert f"f32[1,{model.SEQ_LEN},{model.INPUT_DIM}]" in text
+    assert f"f32[{model.INPUT_DIM + model.HIDDEN_DIM},{4 * model.HIDDEN_DIM}]" in text
+
+
+def test_manifest_roundtrips_json(built):
+    _, manifest = built
+    assert json.loads(json.dumps(manifest)) == manifest

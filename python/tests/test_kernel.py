@@ -1,0 +1,122 @@
+"""L1 correctness: Pallas LSTM cell vs the pure-jnp oracle.
+
+Hypothesis sweeps batch/input/hidden shapes; forward values and custom-vjp
+gradients must match ``jax.grad`` of the reference to float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lstm_cell import lstm_cell, lstm_cell_jit
+from compile.kernels.ref import lstm_cell_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_inputs(rng, batch, i_dim, hidden, dtype=np.float32, scale=1.0):
+    x = rng.standard_normal((batch, i_dim)).astype(dtype) * scale
+    h = rng.standard_normal((batch, hidden)).astype(dtype) * scale
+    c = rng.standard_normal((batch, hidden)).astype(dtype) * scale
+    w = (rng.standard_normal((i_dim + hidden, 4 * hidden)) * 0.2).astype(dtype)
+    b = (rng.standard_normal(4 * hidden) * 0.1).astype(dtype)
+    return x, h, c, w, b
+
+
+def test_cell_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    args = _rand_inputs(rng, 4, 5, 50)
+    h_k, c_k = lstm_cell_jit(*args)
+    h_r, c_r = lstm_cell_ref(*args)
+    np.testing.assert_allclose(h_k, h_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_k, c_r, rtol=1e-5, atol=1e-6)
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    batch=st.integers(1, 16),
+    i_dim=st.integers(1, 12),
+    hidden=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cell_matches_ref_shape_sweep(batch, i_dim, hidden, seed):
+    rng = np.random.default_rng(seed)
+    args = _rand_inputs(rng, batch, i_dim, hidden)
+    h_k, c_k = lstm_cell(*args)
+    h_r, c_r = lstm_cell_ref(*args)
+    np.testing.assert_allclose(h_k, h_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_k, c_r, rtol=1e-5, atol=1e-6)
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    batch=st.integers(1, 8),
+    i_dim=st.integers(1, 8),
+    hidden=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cell_grads_match_ref(batch, i_dim, hidden, seed):
+    """Backward Pallas kernel (via custom_vjp) vs jax.grad of the oracle."""
+    rng = np.random.default_rng(seed)
+    args = _rand_inputs(rng, batch, i_dim, hidden)
+
+    def loss_kernel(x, h, c, w, b):
+        h_n, c_n = lstm_cell(x, h, c, w, b)
+        return jnp.sum(h_n**2) + jnp.sum(jnp.sin(c_n))
+
+    def loss_ref(x, h, c, w, b):
+        h_n, c_n = lstm_cell_ref(x, h, c, w, b)
+        return jnp.sum(h_n**2) + jnp.sum(jnp.sin(c_n))
+
+    g_k = jax.grad(loss_kernel, argnums=(0, 1, 2, 3, 4))(*args)
+    g_r = jax.grad(loss_ref, argnums=(0, 1, 2, 3, 4))(*args)
+    for got, want, name in zip(g_k, g_r, ["dx", "dh", "dc", "dw", "db"]):
+        np.testing.assert_allclose(
+            got, want, rtol=2e-4, atol=1e-5, err_msg=f"gradient mismatch: {name}"
+        )
+
+
+def test_cell_extreme_values_saturate_not_nan():
+    """Saturated gates (large pre-activations) must stay finite."""
+    rng = np.random.default_rng(7)
+    args = _rand_inputs(rng, 2, 5, 16, scale=50.0)
+    h_k, c_k = lstm_cell(*args)
+    assert np.all(np.isfinite(np.asarray(h_k)))
+    assert np.all(np.isfinite(np.asarray(c_k)))
+    h_r, c_r = lstm_cell_ref(*args)
+    np.testing.assert_allclose(h_k, h_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(c_k, c_r, rtol=1e-4, atol=1e-5)
+
+
+def test_cell_zero_state_identity_gates():
+    """With zero weights, i=f=o=0.5, g=0 -> c' = c/2, h' = tanh(c/2)/2."""
+    batch, i_dim, hidden = 3, 5, 10
+    x = np.ones((batch, i_dim), np.float32)
+    h = np.zeros((batch, hidden), np.float32)
+    c = np.ones((batch, hidden), np.float32)
+    w = np.zeros((i_dim + hidden, 4 * hidden), np.float32)
+    b = np.zeros(4 * hidden, np.float32)
+    h_k, c_k = lstm_cell(x, h, c, w, b)
+    np.testing.assert_allclose(c_k, 0.5 * np.ones_like(c), rtol=1e-6)
+    np.testing.assert_allclose(h_k, 0.5 * np.tanh(0.5) * np.ones_like(c), rtol=1e-6)
+
+
+def test_cell_batch_independence():
+    """Rows of a batch must not interact (no cross-batch reduction bugs)."""
+    rng = np.random.default_rng(3)
+    x, h, c, w, b = _rand_inputs(rng, 6, 5, 20)
+    h_full, c_full = lstm_cell(x, h, c, w, b)
+    for i in [0, 2, 5]:
+        h_i, c_i = lstm_cell(x[i : i + 1], h[i : i + 1], c[i : i + 1], w, b)
+        np.testing.assert_allclose(h_full[i : i + 1], h_i, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(c_full[i : i + 1], c_i, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_cell_dtype_preserved(dtype):
+    rng = np.random.default_rng(11)
+    args = _rand_inputs(rng, 2, 5, 8, dtype=dtype)
+    h_k, c_k = lstm_cell(*args)
+    assert h_k.dtype == dtype and c_k.dtype == dtype

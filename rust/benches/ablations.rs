@@ -1,0 +1,150 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * HPA baseline strength: full K8s semantics vs the paper's bare Eq 1.
+//! * PPA static policy: literal Eq-1-on-prediction vs conservative ceil.
+//! * PPA downscale stabilization window: 0 / 1 min / 2 min / 5 min.
+//! * Injected model: naive / ARMA / LSTM on the identical NASA workload.
+//!
+//! Each cell replays the same seeded NASA trace and reports Sort mean
+//! response + system RIR. Run with `cargo bench --bench ablations`
+//! (scale via PPA_ABLATION_HOURS, default 4).
+
+use ppa_edge::app::{TaskCosts, TaskType};
+use ppa_edge::autoscaler::ppa::{ConservativeCeilPolicy, HpaCeilPolicy, StaticPolicy};
+use ppa_edge::autoscaler::{Autoscaler, Hpa, Ppa, PpaConfig};
+use ppa_edge::config::paper_cluster;
+use ppa_edge::experiments::{make_forecaster, pretrain_histories, try_runtime, ModelKind, SimWorld};
+use ppa_edge::forecast::UpdatePolicy;
+use ppa_edge::sim::{Time, HOUR, MIN, SEC};
+use ppa_edge::stats::summarize;
+use ppa_edge::workload::{nasa_synthetic, Generator, NasaTraceConfig, TraceGen};
+use std::sync::Arc;
+
+struct Cell {
+    label: String,
+    sort_mean: f64,
+    sort_std: f64,
+    eigen_mean: f64,
+    rir_mean: f64,
+    wall_s: f64,
+}
+
+fn run_world(
+    label: &str,
+    counts: &Arc<Vec<f64>>,
+    hours: f64,
+    mut make_scaler: impl FnMut(usize) -> Box<dyn Autoscaler>,
+) -> Cell {
+    let cfg = paper_cluster();
+    let mut world = SimWorld::build(&cfg, TaskCosts::default(), 2021);
+    world.add_generator(Generator::Trace(TraceGen::new(1, counts.clone(), 0.5)));
+    world.add_generator(Generator::Trace(TraceGen::new(2, counts.clone(), 0.5)));
+    for svc in 0..world.app.services.len() {
+        world.add_scaler(make_scaler(svc), svc);
+    }
+    let wall = std::time::Instant::now();
+    world.run_until((hours * HOUR as f64) as Time);
+    let sort = summarize(&world.response_times(TaskType::Sort));
+    let eigen = summarize(&world.response_times(TaskType::Eigen));
+    let rirs: Vec<f64> = world.rir_log.iter().map(|s| s.rir).collect();
+    Cell {
+        label: label.to_string(),
+        sort_mean: sort.mean,
+        sort_std: sort.std,
+        eigen_mean: eigen.mean,
+        rir_mean: summarize(&rirs).mean,
+        wall_s: wall.elapsed().as_secs_f64(),
+    }
+}
+
+fn print_cells(title: &str, cells: &[Cell]) {
+    println!("\n### {title}");
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>8} {:>8}",
+        "configuration", "sort mean", "sort std", "eigen", "RIR", "wall"
+    );
+    println!("{}", "-".repeat(96));
+    for c in cells {
+        println!(
+            "{:<44} {:>9.4}s {:>9.4}s {:>9.3}s {:>8.3} {:>7.1}s",
+            c.label, c.sort_mean, c.sort_std, c.eigen_mean, c.rir_mean, c.wall_s
+        );
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let hours: f64 = std::env::var("PPA_ABLATION_HOURS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4.0);
+    println!("ablation benches: {hours} h NASA replays (PPA_ABLATION_HOURS to change)");
+    let counts = Arc::new(nasa_synthetic(&NasaTraceConfig::default()));
+
+    // --- HPA baseline strength -------------------------------------------
+    let mut cells = Vec::new();
+    cells.push(run_world("hpa: full k8s semantics", &counts, hours, |_| {
+        Box::new(Hpa::with_defaults())
+    }));
+    cells.push(run_world("hpa: bare Eq 1 (paper text)", &counts, hours, |_| {
+        Box::new(Hpa::pure_eq1(70.0, 15 * SEC))
+    }));
+    print_cells("HPA baseline ablation", &cells);
+
+    // --- PPA variants (need artifacts) -----------------------------------
+    let Some(runtime) = try_runtime() else {
+        println!("\nLSTM artifacts missing — PPA ablations need `make artifacts`.");
+        return Ok(());
+    };
+    let (hist, _) = pretrain_histories(2.0, 20, 2021);
+
+    let ppa_with = |svc: usize,
+                    model: ModelKind,
+                    stab: Time,
+                    policy: Box<dyn StaticPolicy>|
+     -> Box<dyn Autoscaler> {
+        let pre = if svc == 1 { &hist[0] } else { &hist[svc.min(1)] };
+        let pre = if svc + 1 == 3 { hist.last().unwrap() } else { pre };
+        let forecaster = make_forecaster(model, Some(&runtime), pre, 2021).unwrap();
+        let cfg = PpaConfig {
+            update_policy: UpdatePolicy::FineTune,
+            downscale_stabilization: stab,
+            ..PpaConfig::default()
+        };
+        Box::new(Ppa::new(cfg, forecaster).with_policy(policy))
+    };
+
+    let mut cells = Vec::new();
+    for (label, stab) in [
+        ("ppa: stabilization 0", 0),
+        ("ppa: stabilization 1 min", MIN),
+        ("ppa: stabilization 2 min (default)", 2 * MIN),
+        ("ppa: stabilization 5 min", 5 * MIN),
+    ] {
+        cells.push(run_world(label, &counts, hours, |svc| {
+            ppa_with(svc, ModelKind::Lstm, stab, Box::new(ConservativeCeilPolicy))
+        }));
+    }
+    print_cells("PPA stabilization-window ablation", &cells);
+
+    let mut cells = Vec::new();
+    cells.push(run_world("ppa: conservative ceil (default)", &counts, hours, |svc| {
+        ppa_with(svc, ModelKind::Lstm, 2 * MIN, Box::new(ConservativeCeilPolicy))
+    }));
+    cells.push(run_world("ppa: literal Eq1-on-prediction", &counts, hours, |svc| {
+        ppa_with(svc, ModelKind::Lstm, 2 * MIN, Box::new(HpaCeilPolicy))
+    }));
+    print_cells("PPA static-policy ablation", &cells);
+
+    let mut cells = Vec::new();
+    for model in [ModelKind::Naive, ModelKind::Arma, ModelKind::Lstm] {
+        cells.push(run_world(
+            &format!("ppa model: {}", model.name()),
+            &counts,
+            hours,
+            |svc| ppa_with(svc, model, 2 * MIN, Box::new(ConservativeCeilPolicy)),
+        ));
+    }
+    print_cells("PPA injected-model ablation", &cells);
+
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Tiny benchmarking harness shared by the bench binaries (criterion is
+//! not in the offline crate set). Reports mean / p50 / p95 over timed
+//! iterations after warmup.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+}
+
+/// Time `f` for `iters` iterations (after `warmup` untimed ones).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_us: mean,
+        p50_us: pct(0.50),
+        p95_us: pct(0.95),
+    }
+}
+
+pub fn print_header(title: &str) {
+    println!("\n### {title}");
+    println!(
+        "{:<44} {:>8} {:>12} {:>12} {:>12}",
+        "benchmark", "iters", "mean", "p50", "p95"
+    );
+    println!("{}", "-".repeat(92));
+}
+
+fn fmt_us(us: f64) -> String {
+    if us < 1000.0 {
+        format!("{us:.2} µs")
+    } else if us < 1_000_000.0 {
+        format!("{:.2} ms", us / 1000.0)
+    } else {
+        format!("{:.2} s", us / 1_000_000.0)
+    }
+}
+
+pub fn print_result(r: &BenchResult) {
+    println!(
+        "{:<44} {:>8} {:>12} {:>12} {:>12}",
+        r.name,
+        r.iters,
+        fmt_us(r.mean_us),
+        fmt_us(r.p50_us),
+        fmt_us(r.p95_us)
+    );
+}
+
+/// Convenience: bench + print.
+pub fn run<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> BenchResult {
+    let r = bench(name, warmup, iters, f);
+    print_result(&r);
+    r
+}

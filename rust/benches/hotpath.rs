@@ -1,0 +1,172 @@
+//! Hot-path micro-benchmarks (L3 perf deliverable): the DES event loop,
+//! scheduler, metrics scrape, forecaster dispatches, and end-to-end
+//! simulation rate. Run with `cargo bench --bench hotpath`.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+use bench_common::{print_header, run};
+
+use ppa_edge::app::{TaskCosts, TaskType};
+use ppa_edge::autoscaler::Hpa;
+use ppa_edge::cluster::{Cluster, Deployment, NodeSpec, PodSpec, Selector, Tier};
+use ppa_edge::config::{paper_cluster, quickstart_cluster};
+use ppa_edge::experiments::SimWorld;
+use ppa_edge::forecast::{arma::fit_arma, Forecaster, LstmForecaster};
+use ppa_edge::metrics::METRIC_DIM;
+use ppa_edge::sim::{Event, EventQueue, MIN, SEC};
+use ppa_edge::util::rng::Pcg64;
+use ppa_edge::workload::{Generator, RandomAccessGen};
+use std::rc::Rc;
+
+fn bench_event_queue() {
+    print_header("DES event queue");
+    let mut rng = Pcg64::new(1, 0);
+    run("queue push+pop, 10k events", 3, 30, || {
+        let mut q = EventQueue::new();
+        for i in 0..10_000u64 {
+            q.schedule_at(
+                rng.below(1_000_000),
+                Event::WorkloadTick { generator: i as u32 },
+            );
+        }
+        while q.pop().is_some() {}
+    });
+}
+
+fn bench_scheduler() {
+    print_header("pod scheduler (filter+score over 7 nodes)");
+    let cfg = paper_cluster();
+    let (mut cluster, ids) = cfg.build();
+    let mut q = EventQueue::new();
+    let mut rng = Pcg64::new(2, 0);
+    run("reconcile 0->6->0 replicas", 3, 200, || {
+        cluster.reconcile(ids[0], 6, &mut q, &mut rng);
+        cluster.reconcile(ids[0], 0, &mut q, &mut rng);
+        while let Some((_, ev)) = q.pop() {
+            match ev {
+                Event::PodRunning { pod } => {
+                    cluster.on_pod_running(pod);
+                }
+                Event::PodTerminated { pod } => cluster.on_pod_terminated(pod),
+                _ => {}
+            }
+        }
+    });
+}
+
+fn bench_scrape() {
+    print_header("metrics pipeline scrape (3 services, 12 pods)");
+    let cfg = paper_cluster();
+    let mut world = SimWorld::build(&cfg, TaskCosts::default(), 3);
+    world.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
+    for svc in 0..world.app.services.len() {
+        world.add_scaler(Box::new(Hpa::with_defaults()), svc);
+    }
+    world.run_until(5 * MIN);
+    let mut t = 5 * MIN;
+    run("scrape tick", 5, 500, || {
+        t += 10 * SEC;
+        world.metrics.scrape(t, &mut world.cluster, &mut world.app);
+    });
+}
+
+fn bench_forecasters() {
+    print_header("forecaster hot path");
+    // ARMA fit on a 200-row history (every update loop).
+    let mut rng = Pcg64::new(5, 0);
+    let series: Vec<f64> = (0..200)
+        .map(|i| 100.0 + 30.0 * ((i as f64) / 12.0).sin() + rng.normal() * 4.0)
+        .collect();
+    run("ARMA(1,1) CSS fit, 200 points", 2, 20, || {
+        let _ = fit_arma(&series);
+    });
+
+    // LSTM dispatches (the PJRT path) — only with artifacts.
+    if let Some(rt) = ppa_edge::experiments::try_runtime() {
+        let rt: Rc<_> = rt;
+        let mut f = LstmForecaster::new(rt.clone(), 1).unwrap();
+        let history: Vec<[f64; METRIC_DIM]> = (0..300)
+            .map(|i| {
+                let v = 100.0 + 50.0 * ((i as f64) / 20.0).sin();
+                [v; METRIC_DIM]
+            })
+            .collect();
+        f.pretrain_on(&history).unwrap();
+        run("LSTM predict dispatch (PJRT)", 5, 200, || {
+            let _ = f.predict(&history);
+        });
+        run("LSTM fine-tune (6 train_epoch dispatches)", 1, 5, || {
+            f.retrain(&history, ppa_edge::forecast::UpdatePolicy::FineTune)
+                .unwrap();
+        });
+    } else {
+        println!("(LSTM benches skipped: run `make artifacts`)");
+    }
+}
+
+fn bench_end_to_end() {
+    print_header("end-to-end simulation rate");
+    let r = run("quickstart world, 60 sim-minutes (HPA)", 1, 5, || {
+        let cfg = quickstart_cluster();
+        let mut world = SimWorld::build(&cfg, TaskCosts::default(), 9);
+        world.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
+        for svc in 0..world.app.services.len() {
+            world.add_scaler(Box::new(Hpa::with_defaults()), svc);
+        }
+        world.run_until(60 * MIN);
+    });
+    let speedup = 3600.0 / (r.mean_us / 1e6);
+    println!("  -> simulation speed ~{speedup:.0}x real time");
+
+    // Request-to-completion throughput of the app model itself.
+    let mut cluster = Cluster::new();
+    cluster.add_node(NodeSpec::new("e", Tier::Edge, 1, 8000, 8192));
+    let edge = cluster.add_deployment(Deployment::new(
+        "edge",
+        Selector::new(Tier::Edge, None),
+        PodSpec::new(500, 256),
+        1,
+        8,
+    ));
+    let cloud = cluster.add_deployment(Deployment::new(
+        "cloud",
+        Selector::new(Tier::Edge, None),
+        PodSpec::new(500, 256),
+        1,
+        8,
+    ));
+    let mut q = EventQueue::new();
+    let mut rng = Pcg64::new(11, 0);
+    cluster.reconcile(edge, 4, &mut q, &mut rng);
+    while let Some((_, ev)) = q.pop() {
+        if let Event::PodRunning { pod } = ev {
+            cluster.on_pod_running(pod);
+        }
+    }
+    let mut app = ppa_edge::app::App::new(TaskCosts::default(), &[(1, edge)], cloud);
+    run("submit+serve 100 sort requests", 2, 50, || {
+        for _ in 0..100 {
+            app.submit(TaskType::Sort, 1, q.now(), &mut q);
+        }
+        while let Some((_, ev)) = q.pop() {
+            match ev {
+                Event::RequestArrival { request_id } => {
+                    app.on_arrival(request_id, &mut cluster, &mut q, &mut rng)
+                }
+                Event::ServiceComplete { pod, request_id } => {
+                    app.on_complete(pod, request_id, &mut cluster, &mut q, &mut rng)
+                }
+                _ => {}
+            }
+        }
+    });
+}
+
+fn main() {
+    println!("ppa-edge hot-path benchmarks");
+    bench_event_queue();
+    bench_scheduler();
+    bench_scrape();
+    bench_forecasters();
+    bench_end_to_end();
+}

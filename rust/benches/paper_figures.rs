@@ -1,0 +1,85 @@
+//! Paper-figure benchmark harness: regenerates every evaluation figure at
+//! a reduced-but-faithful scale and prints the same rows the paper
+//! reports (plus wall-clock cost). Full-scale runs are available through
+//! `ppa-edge experiment <fig>` / `examples/nasa_eval.rs`.
+//!
+//! Run with `cargo bench --bench paper_figures`.
+//! Scale up via env: `PPA_BENCH_MINUTES=200 PPA_BENCH_HOURS=48
+//! PPA_BENCH_PRETRAIN=10 cargo bench --bench paper_figures`.
+
+use ppa_edge::experiments::{
+    fig6_trace, fig7_model_comparison, fig8_update_policies, fig9_fig10_key_metric, nasa_eval,
+    try_runtime, FigParams, NasaParams,
+};
+use ppa_edge::report;
+use ppa_edge::stats::summarize;
+use ppa_edge::workload::NasaTraceConfig;
+use std::time::Instant;
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let minutes = env_f64("PPA_BENCH_MINUTES", 40.0) as u64;
+    let hours = env_f64("PPA_BENCH_HOURS", 2.0);
+    let pretrain = env_f64("PPA_BENCH_PRETRAIN", 1.0);
+    println!(
+        "paper-figure bench: {minutes} min optimization runs, {hours} h NASA eval, {pretrain} h pretraining"
+    );
+    println!("(paper scale: 200 min / 48 h / 10 h — set PPA_BENCH_* to reproduce)");
+
+    let params = FigParams {
+        minutes,
+        pretrain_hours: pretrain,
+        seed: 2021,
+    };
+    let nasa_params = NasaParams {
+        hours,
+        pretrain_hours: pretrain,
+        seed: 2021,
+        trace: NasaTraceConfig::default(),
+    };
+
+    // Fig 6 — trace generation.
+    let t = Instant::now();
+    let counts = fig6_trace(&NasaTraceConfig::default())?;
+    let s = summarize(&counts);
+    println!(
+        "\n== Fig 6 — scaled NASA trace == [{:.2}s]\n  {} minutes, mean {:.1} req/min, peak {:.0}",
+        t.elapsed().as_secs_f64(),
+        counts.len(),
+        s.mean,
+        s.max
+    );
+
+    if try_runtime().is_none() {
+        println!("\nLSTM artifacts missing — figs 7-14 need `make artifacts`. Exiting.");
+        return Ok(());
+    }
+
+    let t = Instant::now();
+    let fig7 = fig7_model_comparison(&params)?;
+    report::print_fig7(&fig7);
+    println!("  [fig7 wall: {:.1}s]", t.elapsed().as_secs_f64());
+
+    let t = Instant::now();
+    let fig8 = fig8_update_policies(&params)?;
+    report::print_fig8(&fig8);
+    println!("  [fig8 wall: {:.1}s]", t.elapsed().as_secs_f64());
+
+    let t = Instant::now();
+    let fig910 = fig9_fig10_key_metric(&params)?;
+    report::print_fig9_10(&fig910);
+    println!("  [figs 9/10 wall: {:.1}s]", t.elapsed().as_secs_f64());
+
+    let t = Instant::now();
+    let eval = nasa_eval(&nasa_params)?;
+    report::print_nasa_eval(&eval);
+    println!("  [figs 11-14 wall: {:.1}s]", t.elapsed().as_secs_f64());
+
+    Ok(())
+}

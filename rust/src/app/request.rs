@@ -1,0 +1,70 @@
+//! Request and response-record types.
+
+use crate::sim::{ServiceId, Time};
+
+/// The two task classes of the example application (paper §5.1.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskType {
+    /// Sort a 3000-element array — `n log n ≈ 1e4` ops; handled at the edge.
+    Sort,
+    /// Eigenvalues of a 1000x1000 matrix — `n³ = 1e9` ops; forwarded to cloud.
+    Eigen,
+}
+
+impl TaskType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskType::Sort => "sort",
+            TaskType::Eigen => "eigen",
+        }
+    }
+}
+
+/// An in-flight request.
+#[derive(Debug, Clone, Copy)]
+pub struct Request {
+    pub id: u64,
+    pub task: TaskType,
+    pub origin_zone: u32,
+    pub service: ServiceId,
+    pub created: Time,
+}
+
+/// A completed request (the experiments' unit of observation).
+#[derive(Debug, Clone, Copy)]
+pub struct ResponseRecord {
+    pub task: TaskType,
+    pub origin_zone: u32,
+    pub created: Time,
+    pub completed: Time,
+}
+
+impl ResponseRecord {
+    /// End-to-end response time in seconds (what Figs 9, 11, 12 plot).
+    pub fn response_secs(&self) -> f64 {
+        crate::sim::to_secs(self.completed.saturating_sub(self.created))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SEC;
+
+    #[test]
+    fn response_secs_computed() {
+        let r = ResponseRecord {
+            task: TaskType::Sort,
+            origin_zone: 1,
+            created: 2 * SEC,
+            completed: 3 * SEC + SEC / 2,
+        };
+        assert!((r.response_secs() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn task_names() {
+        assert_eq!(TaskType::Sort.name(), "sort");
+        assert_eq!(TaskType::Eigen.name(), "eigen");
+    }
+}

@@ -1,0 +1,238 @@
+//! The reactive Horizontal Pod Autoscaler baseline — Kubernetes' default
+//! semantics: Eq 1 on the *current* metric, a ±10% tolerance band, and a
+//! scale-down stabilization window (the max of recent desired counts),
+//! mirroring `--horizontal-pod-autoscaler-downscale-stabilization`.
+
+use super::{eq1_replicas, Autoscaler, ScaleDecision};
+use crate::cluster::{Cluster, DeploymentId};
+use crate::metrics::MetricsPipeline;
+use crate::sim::{ServiceId, Time, MIN, SEC};
+use std::collections::VecDeque;
+
+/// HPA configuration (defaults match upstream Kubernetes).
+#[derive(Debug, Clone, Copy)]
+pub struct HpaConfig {
+    /// Key-metric index into the protocol vector (HPA: CPU).
+    pub key_metric: usize,
+    /// Eq 1 denominator (summed per-pod % — 70 ≈ the common 70% target).
+    pub threshold: f64,
+    /// Control-loop period (upstream sync period: 15 s).
+    pub sync_period: Time,
+    /// No action when the ratio is within ±tolerance of 1 (upstream 0.1).
+    pub tolerance: f64,
+    /// Scale-down stabilization window (upstream default 5 min).
+    pub stabilization_window: Time,
+}
+
+impl Default for HpaConfig {
+    fn default() -> Self {
+        HpaConfig {
+            key_metric: crate::metrics::M_CPU,
+            threshold: 70.0,
+            sync_period: 15 * SEC,
+            tolerance: 0.1,
+            stabilization_window: 5 * MIN,
+        }
+    }
+}
+
+/// The reactive baseline autoscaler.
+#[derive(Debug)]
+pub struct Hpa {
+    cfg: HpaConfig,
+    /// (time, desired) history for the stabilization window.
+    recent_desired: VecDeque<(Time, usize)>,
+}
+
+impl Hpa {
+    pub fn new(cfg: HpaConfig) -> Self {
+        Hpa {
+            cfg,
+            recent_desired: VecDeque::new(),
+        }
+    }
+
+    pub fn with_defaults() -> Self {
+        Self::new(HpaConfig::default())
+    }
+
+    /// Paper-faithful variant: pure Eq 1, no stabilization (used by the
+    /// ablation bench to quantify what stabilization contributes).
+    pub fn pure_eq1(threshold: f64, sync_period: Time) -> Self {
+        Self::new(HpaConfig {
+            threshold,
+            sync_period,
+            tolerance: 0.0,
+            stabilization_window: 0,
+            ..HpaConfig::default()
+        })
+    }
+}
+
+impl Autoscaler for Hpa {
+    fn name(&self) -> &str {
+        "hpa"
+    }
+
+    fn control_interval(&self) -> Time {
+        self.cfg.sync_period
+    }
+
+    fn evaluate(
+        &mut self,
+        now: Time,
+        service: ServiceId,
+        target: DeploymentId,
+        metrics: &MetricsPipeline,
+        cluster: &Cluster,
+    ) -> ScaleDecision {
+        let vector = metrics.latest_vector(service);
+        let key_value = vector[self.cfg.key_metric];
+        let current = cluster.live_replicas(target).max(1);
+
+        // Tolerance band: skip action if the per-replica ratio is close
+        // to target (upstream behaviour).
+        let ratio = key_value / (self.cfg.threshold * current as f64);
+        let mut desired = if (ratio - 1.0).abs() <= self.cfg.tolerance {
+            current
+        } else {
+            eq1_replicas(key_value, self.cfg.threshold).max(1)
+        };
+
+        // Scale-down stabilization: never drop below the max desired in
+        // the recent window.
+        if self.cfg.stabilization_window > 0 {
+            self.recent_desired.push_back((now, desired));
+            let cutoff = now.saturating_sub(self.cfg.stabilization_window);
+            while matches!(self.recent_desired.front(), Some(&(t, _)) if t < cutoff) {
+                self.recent_desired.pop_front();
+            }
+            if desired < current {
+                let stabilized = self
+                    .recent_desired
+                    .iter()
+                    .map(|&(_, d)| d)
+                    .max()
+                    .unwrap_or(desired);
+                desired = stabilized.min(current);
+            }
+        }
+
+        ScaleDecision {
+            desired,
+            key_value,
+            predicted: None,
+            used_fallback: false,
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::{App, TaskCosts};
+    use crate::cluster::{Deployment, NodeSpec, PodSpec, Selector, Tier};
+    use crate::metrics::{MetricsPipeline, M_CPU, METRIC_DIM};
+    use crate::sim::{EventQueue, ServiceId};
+    use crate::util::rng::Pcg64;
+
+    fn world_with_cpu(cpu_sum: f64, replicas: usize) -> (Cluster, MetricsPipeline) {
+        let mut cluster = Cluster::new();
+        cluster.add_node(NodeSpec::new("e", Tier::Edge, 1, 8000, 8192));
+        let dep = cluster.add_deployment(Deployment::new(
+            "edge",
+            Selector::new(Tier::Edge, None),
+            PodSpec::new(500, 256),
+            1,
+            16,
+        ));
+        let cloud = cluster.add_deployment(Deployment::new(
+            "cloud",
+            Selector::new(Tier::Edge, None),
+            PodSpec::new(500, 256),
+            1,
+            16,
+        ));
+        let mut q = EventQueue::new();
+        let mut rng = Pcg64::new(1, 0);
+        cluster.reconcile(dep, replicas, &mut q, &mut rng);
+        while let Some((_, ev)) = q.pop() {
+            if let crate::sim::Event::PodRunning { pod } = ev {
+                cluster.on_pod_running(pod);
+            }
+        }
+        let app = App::new(TaskCosts::default(), &[(1, dep)], cloud);
+        let mut mp = MetricsPipeline::new(10 * SEC, app.services.len());
+        // Inject a synthetic latest vector.
+        let mut v = [0.0; METRIC_DIM];
+        v[M_CPU] = cpu_sum;
+        mp_inject(&mut mp, ServiceId(0), v, replicas);
+        (cluster, mp)
+    }
+
+    /// Test helper: force a latest snapshot.
+    fn mp_inject(
+        mp: &mut MetricsPipeline,
+        svc: ServiceId,
+        vector: [f64; METRIC_DIM],
+        replicas: usize,
+    ) {
+        // MetricsPipeline has no public injection; emulate a scrape by
+        // writing through its internals via scrape of an empty world is
+        // complex — instead use the test-only setter.
+        mp.test_set_latest(svc, vector, replicas);
+    }
+
+    #[test]
+    fn scales_up_per_eq1() {
+        let (cluster, mp) = world_with_cpu(350.0, 2);
+        let mut hpa = Hpa::with_defaults();
+        let d = hpa.evaluate(0, ServiceId(0), DeploymentId(0), &mp, &cluster);
+        assert_eq!(d.desired, 5); // ceil(350/70)
+    }
+
+    #[test]
+    fn tolerance_band_holds() {
+        // 2 replicas at 145 total (72.5 each): ratio 1.036, inside ±0.1.
+        let (cluster, mp) = world_with_cpu(145.0, 2);
+        let mut hpa = Hpa::with_defaults();
+        let d = hpa.evaluate(0, ServiceId(0), DeploymentId(0), &mp, &cluster);
+        assert_eq!(d.desired, 2, "within tolerance — no action");
+    }
+
+    #[test]
+    fn scale_down_stabilized() {
+        let (cluster, mp) = world_with_cpu(70.0, 4);
+        let mut hpa = Hpa::with_defaults();
+        // Earlier in the window the load was high → desired 5.
+        let (c2, mp2) = world_with_cpu(350.0, 4);
+        let d0 = hpa.evaluate(0, ServiceId(0), DeploymentId(0), &mp2, &c2);
+        assert_eq!(d0.desired, 5);
+        // 1 min later load collapsed; stabilization keeps replicas.
+        let d1 = hpa.evaluate(60 * SEC, ServiceId(0), DeploymentId(0), &mp, &cluster);
+        assert_eq!(d1.desired, 4, "held by stabilization (min with current)");
+        // After the window passes, scale-down proceeds.
+        let d2 = hpa.evaluate(7 * MIN, ServiceId(0), DeploymentId(0), &mp, &cluster);
+        assert_eq!(d2.desired, 1); // ceil(70/70)
+    }
+
+    #[test]
+    fn pure_eq1_mode_reacts_immediately() {
+        let (cluster, mp) = world_with_cpu(70.0, 4);
+        let mut hpa = Hpa::pure_eq1(70.0, 20 * SEC);
+        let d = hpa.evaluate(0, ServiceId(0), DeploymentId(0), &mp, &cluster);
+        assert_eq!(d.desired, 1);
+    }
+
+    #[test]
+    fn zero_metric_keeps_min_one() {
+        let (cluster, mp) = world_with_cpu(0.0, 1);
+        let mut hpa = Hpa::pure_eq1(70.0, 20 * SEC);
+        let d = hpa.evaluate(0, ServiceId(0), DeploymentId(0), &mp, &cluster);
+        assert_eq!(d.desired, 1);
+    }
+}

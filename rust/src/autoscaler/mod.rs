@@ -1,0 +1,87 @@
+//! Autoscalers: the reactive Kubernetes HPA baseline and the paper's
+//! Proactive Pod Autoscaler (PPA).
+//!
+//! Both implement [`Autoscaler`]; the experiment driver ticks them on
+//! their control interval and applies the returned desired-replica count
+//! through [`crate::cluster::Cluster::reconcile`] — exactly the paper's
+//! "make requests for scaling decisions to the Kubernetes master" flow.
+
+pub mod hpa;
+pub mod ppa;
+
+pub use hpa::Hpa;
+pub use ppa::{Ppa, PpaConfig};
+
+use crate::cluster::{Cluster, DeploymentId};
+use crate::metrics::MetricsPipeline;
+use crate::sim::{ServiceId, Time};
+
+/// One control-loop decision (with provenance, for the experiment logs).
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleDecision {
+    pub desired: usize,
+    /// The key-metric value the decision was computed from.
+    pub key_value: f64,
+    /// The model's prediction for the *next* interval, if one was made.
+    pub predicted: Option<f64>,
+    /// True when Algorithm 1 fell back to current metrics (invalid model
+    /// or low confidence).
+    pub used_fallback: bool,
+}
+
+/// A pod autoscaler bound to one target service/deployment.
+pub trait Autoscaler {
+    fn name(&self) -> &str;
+
+    /// The control-loop period.
+    fn control_interval(&self) -> Time;
+
+    /// The model-update-loop period (proactive autoscalers only).
+    fn update_interval(&self) -> Option<Time> {
+        None
+    }
+
+    /// One control-loop evaluation: read metrics via the adapter, decide
+    /// the desired replica count for `target`.
+    fn evaluate(
+        &mut self,
+        now: Time,
+        service: ServiceId,
+        target: DeploymentId,
+        metrics: &MetricsPipeline,
+        cluster: &Cluster,
+    ) -> ScaleDecision;
+
+    /// One model-update-loop step (no-op for reactive autoscalers).
+    fn model_update(&mut self, _now: Time) -> crate::Result<()> {
+        Ok(())
+    }
+
+    /// Downcast hook so experiment harnesses can recover concrete state
+    /// (e.g. the PPA's prediction log) after a run.
+    fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// Eq 1 of the paper (also the K8s HPA rule):
+/// `NumOfReplicas = ceil(CurrentMetricValue / PredefinedMetricValue)`.
+pub fn eq1_replicas(metric_value: f64, predefined: f64) -> usize {
+    if !metric_value.is_finite() || metric_value <= 0.0 {
+        return 0;
+    }
+    (metric_value / predefined).ceil() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_matches_paper_rule() {
+        assert_eq!(eq1_replicas(0.0, 70.0), 0);
+        assert_eq!(eq1_replicas(1.0, 70.0), 1);
+        assert_eq!(eq1_replicas(70.0, 70.0), 1);
+        assert_eq!(eq1_replicas(70.1, 70.0), 2);
+        assert_eq!(eq1_replicas(350.0, 70.0), 5);
+        assert_eq!(eq1_replicas(f64::NAN, 70.0), 0);
+    }
+}

@@ -1,0 +1,245 @@
+//! The Evaluator — paper Algorithm 1.
+//!
+//! ```text
+//! Get current_metrics;
+//! Calculate max_replicas limited by system resources;
+//! model <- Load(model_file);
+//! if model.isValid():
+//!     key_metric <- Predict(model, current_metrics)
+//!     if model.isBayesian() and confidence < threshold:
+//!         key_metric <- current_key_metric
+//! else:
+//!     key_metric <- current_key_metric
+//! num_replicas <- Static_Policies(key_metric)
+//! num_replicas <- min(num_replicas, max_replicas)
+//! ```
+
+use super::policy::{ConservativeCeilPolicy, StaticPolicy};
+use super::super::ScaleDecision;
+use crate::cluster::{Cluster, DeploymentId};
+use crate::forecast::Forecaster;
+use crate::metrics::METRIC_DIM;
+
+/// The Evaluator: injected model + static policy + key-metric choice.
+pub struct Evaluator {
+    forecaster: Box<dyn Forecaster>,
+    policy: Box<dyn StaticPolicy>,
+    key_metric: usize,
+    threshold: f64,
+    confidence_threshold: f64,
+}
+
+impl Evaluator {
+    pub fn new(
+        forecaster: Box<dyn Forecaster>,
+        key_metric: usize,
+        threshold: f64,
+        confidence_threshold: f64,
+    ) -> Self {
+        Evaluator {
+            forecaster,
+            policy: Box::new(ConservativeCeilPolicy),
+            key_metric,
+            threshold,
+            confidence_threshold,
+        }
+    }
+
+    pub fn set_policy(&mut self, policy: Box<dyn StaticPolicy>) {
+        self.policy = policy;
+    }
+
+    pub fn forecaster_mut(&mut self) -> &mut dyn Forecaster {
+        self.forecaster.as_mut()
+    }
+
+    pub fn forecaster_name(&self) -> &str {
+        self.forecaster.name()
+    }
+
+    /// Feed the realized vector back to confidence-tracking models.
+    pub fn observe_actual(&mut self, actual: &[f64; METRIC_DIM]) {
+        self.forecaster.observe(actual);
+    }
+
+    /// Algorithm 1.
+    pub fn evaluate(
+        &mut self,
+        current: &[f64; METRIC_DIM],
+        history: &[[f64; METRIC_DIM]],
+        target: DeploymentId,
+        cluster: &Cluster,
+    ) -> ScaleDecision {
+        let current_key = current[self.key_metric];
+        // "Calculate max_replicas limited by system resources": the total
+        // replica count the matching nodes can host (other deployments'
+        // usage subtracted; this deployment's own pods are part of the
+        // total, not additional load).
+        let max_replicas = cluster.max_replicas(target);
+
+        let mut predicted = None;
+        let mut used_fallback = false;
+
+        let key_value = match self.forecaster.predict(history) {
+            Some(pred_vector) => {
+                let pred_key = pred_vector[self.key_metric];
+                predicted = Some(pred_key);
+                if self.forecaster.is_bayesian()
+                    && self.forecaster.confidence() < self.confidence_threshold
+                {
+                    // Confident-only proactivity: fall back to reactive.
+                    used_fallback = true;
+                    current_key
+                } else {
+                    pred_key
+                }
+            }
+            None => {
+                // Invalid/missing model file — robust fallback.
+                used_fallback = true;
+                current_key
+            }
+        };
+
+        let current_replicas = cluster.live_replicas(target);
+        let desired = self
+            .policy
+            .replicas(key_value, current_key, self.threshold, current_replicas)
+            .min(max_replicas)
+            .max(1);
+
+        ScaleDecision {
+            desired,
+            key_value,
+            predicted,
+            used_fallback,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Deployment, NodeSpec, PodSpec, Selector, Tier};
+    use crate::forecast::{NaiveForecaster, UpdatePolicy};
+    use crate::metrics::M_CPU;
+    use crate::sim::EventQueue;
+    use crate::util::rng::Pcg64;
+
+    struct FailingModel;
+    impl Forecaster for FailingModel {
+        fn name(&self) -> &str {
+            "failing"
+        }
+        fn predict(&mut self, _h: &[[f64; METRIC_DIM]]) -> Option<[f64; METRIC_DIM]> {
+            None
+        }
+        fn retrain(
+            &mut self,
+            _h: &[[f64; METRIC_DIM]],
+            _p: UpdatePolicy,
+        ) -> crate::Result<()> {
+            Ok(())
+        }
+    }
+
+    struct UnderConfidentModel;
+    impl Forecaster for UnderConfidentModel {
+        fn name(&self) -> &str {
+            "shaky"
+        }
+        fn predict(&mut self, _h: &[[f64; METRIC_DIM]]) -> Option<[f64; METRIC_DIM]> {
+            Some([999.0; METRIC_DIM])
+        }
+        fn retrain(
+            &mut self,
+            _h: &[[f64; METRIC_DIM]],
+            _p: UpdatePolicy,
+        ) -> crate::Result<()> {
+            Ok(())
+        }
+        fn is_bayesian(&self) -> bool {
+            true
+        }
+        fn confidence(&self) -> f64 {
+            0.1
+        }
+    }
+
+    fn fixture() -> Cluster {
+        let mut cluster = Cluster::new();
+        cluster.add_node(NodeSpec::new("e", Tier::Edge, 1, 2000, 2048));
+        let dep = cluster.add_deployment(Deployment::new(
+            "edge",
+            Selector::new(Tier::Edge, None),
+            PodSpec::new(500, 256),
+            1,
+            16,
+        ));
+        let mut q = EventQueue::new();
+        let mut rng = Pcg64::new(1, 0);
+        cluster.reconcile(dep, 1, &mut q, &mut rng);
+        while let Some((_, ev)) = q.pop() {
+            if let crate::sim::Event::PodRunning { pod } = ev {
+                cluster.on_pod_running(pod);
+            }
+        }
+        cluster
+    }
+
+    fn vec_with_cpu(cpu: f64) -> [f64; METRIC_DIM] {
+        let mut v = [0.0; METRIC_DIM];
+        v[M_CPU] = cpu;
+        v
+    }
+
+    #[test]
+    fn invalid_model_falls_back_to_current() {
+        let cluster = fixture();
+        let mut e = Evaluator::new(Box::new(FailingModel), M_CPU, 70.0, 0.5);
+        let d = e.evaluate(&vec_with_cpu(150.0), &[], DeploymentId(0), &cluster);
+        assert!(d.used_fallback);
+        assert_eq!(d.predicted, None);
+        assert_eq!(d.desired, 3); // ceil(150/70) from CURRENT metric
+    }
+
+    #[test]
+    fn low_confidence_bayesian_falls_back() {
+        let cluster = fixture();
+        let mut e = Evaluator::new(Box::new(UnderConfidentModel), M_CPU, 70.0, 0.5);
+        let d = e.evaluate(&vec_with_cpu(70.0), &[], DeploymentId(0), &cluster);
+        assert!(d.used_fallback, "confidence 0.1 < threshold 0.5");
+        assert_eq!(d.desired, 1, "uses current 70, not predicted 999");
+        assert_eq!(d.predicted, Some(999.0));
+    }
+
+    #[test]
+    fn valid_model_prediction_used() {
+        let cluster = fixture();
+        let mut e = Evaluator::new(Box::new(NaiveForecaster), M_CPU, 70.0, 0.5);
+        let history = vec![vec_with_cpu(200.0)];
+        let d = e.evaluate(&vec_with_cpu(50.0), &history, DeploymentId(0), &cluster);
+        assert!(!d.used_fallback);
+        // Naive predicts the last history row (200) → ceil(200/70)=3.
+        assert_eq!(d.desired, 3);
+    }
+
+    #[test]
+    fn limitation_aware_cap() {
+        let cluster = fixture();
+        // Node allows 1800/500 = 3 pods total.
+        let mut e = Evaluator::new(Box::new(NaiveForecaster), M_CPU, 70.0, 0.5);
+        let history = vec![vec_with_cpu(100_000.0)];
+        let d = e.evaluate(&vec_with_cpu(1.0), &history, DeploymentId(0), &cluster);
+        assert_eq!(d.desired, 3, "never overscale past physical limits");
+    }
+
+    #[test]
+    fn floor_of_one_replica() {
+        let cluster = fixture();
+        let mut e = Evaluator::new(Box::new(NaiveForecaster), M_CPU, 70.0, 0.5);
+        let history = vec![vec_with_cpu(0.0)];
+        let d = e.evaluate(&vec_with_cpu(0.0), &history, DeploymentId(0), &cluster);
+        assert_eq!(d.desired, 1);
+    }
+}

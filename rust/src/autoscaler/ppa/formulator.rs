@@ -1,0 +1,76 @@
+//! The Formulator: extracts required metrics from raw adapter output and
+//! maintains the *metrics history file* (paper Fig 4).
+
+use crate::metrics::METRIC_DIM;
+
+/// Hard cap on the in-memory history file — at a 20 s control interval
+/// this is over a week of records, far beyond any update interval.
+const HISTORY_CAP: usize = 40_000;
+
+/// The metrics history file: protocol vectors, chronological.
+#[derive(Debug, Default)]
+pub struct Formulator {
+    history: Vec<[f64; METRIC_DIM]>,
+}
+
+impl Formulator {
+    pub fn new() -> Self {
+        Formulator {
+            history: Vec::new(),
+        }
+    }
+
+    /// Append one control-loop record.
+    pub fn record(&mut self, vector: [f64; METRIC_DIM]) {
+        if self.history.len() == HISTORY_CAP {
+            self.history.remove(0);
+        }
+        self.history.push(vector);
+    }
+
+    /// The history file contents (training set for the Updater; model
+    /// input window source for the Evaluator).
+    pub fn history(&self) -> &[[f64; METRIC_DIM]] {
+        &self.history
+    }
+
+    /// The Updater "removes the metrics history file" after an update.
+    pub fn clear(&mut self) {
+        self.history.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.history.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.history.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_clears() {
+        let mut f = Formulator::new();
+        assert!(f.is_empty());
+        f.record([1.0; METRIC_DIM]);
+        f.record([2.0; METRIC_DIM]);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.history()[1][0], 2.0);
+        f.clear();
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn capped_history_drops_oldest() {
+        let mut f = Formulator::new();
+        for i in 0..(HISTORY_CAP + 10) {
+            f.record([i as f64; METRIC_DIM]);
+        }
+        assert_eq!(f.len(), HISTORY_CAP);
+        assert_eq!(f.history()[0][0], 10.0);
+    }
+}

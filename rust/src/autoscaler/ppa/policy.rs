@@ -1,0 +1,126 @@
+//! Static policies: key-metric value → replica count. The default is a
+//! conservative variant of the paper's Eq 1 (HPA ceil rule); users can
+//! inject custom policies (§4.2.1 "Static Policies are customizable").
+
+/// A pluggable replica policy.
+///
+/// `key_value` is the (possibly predicted) key metric Algorithm 1
+/// selected; `current_key` is the currently measured key metric — kept
+/// available so policies can be conservative about scale-down.
+pub trait StaticPolicy {
+    fn name(&self) -> &str;
+
+    /// Desired replicas.
+    fn replicas(
+        &self,
+        key_value: f64,
+        current_key: f64,
+        threshold: f64,
+        current_replicas: usize,
+    ) -> usize;
+}
+
+/// Eq 1 on the selected key metric only: `ceil(key / threshold)` — the
+/// paper's literal default static policy.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct HpaCeilPolicy;
+
+impl StaticPolicy for HpaCeilPolicy {
+    fn name(&self) -> &str {
+        "hpa-ceil"
+    }
+
+    fn replicas(
+        &self,
+        key_value: f64,
+        _current_key: f64,
+        threshold: f64,
+        _current: usize,
+    ) -> usize {
+        super::super::eq1_replicas(key_value, threshold).max(1)
+    }
+}
+
+/// Eq 1 on `max(predicted, current)`: scale up as soon as either the
+/// model or the live metric demands it, scale down only when both agree.
+/// This keeps the proactive ramp-up benefit while preventing a transient
+/// prediction dip from killing pods that a 10–20 s init delay would make
+/// expensive to get back — the PPA's default.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ConservativeCeilPolicy;
+
+impl StaticPolicy for ConservativeCeilPolicy {
+    fn name(&self) -> &str {
+        "conservative-ceil"
+    }
+
+    fn replicas(
+        &self,
+        key_value: f64,
+        current_key: f64,
+        threshold: f64,
+        _current: usize,
+    ) -> usize {
+        super::super::eq1_replicas(key_value.max(current_key), threshold).max(1)
+    }
+}
+
+/// A damped policy that moves at most `max_step` replicas per decision —
+/// an example custom policy (used by `examples/custom_policy.rs` to
+/// demonstrate injection, and by the ablation bench).
+#[derive(Debug, Clone, Copy)]
+pub struct StepPolicy {
+    pub max_step: usize,
+}
+
+impl StaticPolicy for StepPolicy {
+    fn name(&self) -> &str {
+        "damped-step"
+    }
+
+    fn replicas(
+        &self,
+        key_value: f64,
+        _current_key: f64,
+        threshold: f64,
+        current: usize,
+    ) -> usize {
+        let target = super::super::eq1_replicas(key_value, threshold).max(1);
+        if target > current {
+            target.min(current + self.max_step)
+        } else {
+            target.max(current.saturating_sub(self.max_step))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_policy_eq1() {
+        let p = HpaCeilPolicy;
+        assert_eq!(p.replicas(140.1, 0.0, 70.0, 1), 3);
+        assert_eq!(p.replicas(0.0, 500.0, 70.0, 5), 1, "floor of 1, ignores current");
+    }
+
+    #[test]
+    fn conservative_policy_uses_max() {
+        let p = ConservativeCeilPolicy;
+        // Predicted spike, current low: scale up proactively.
+        assert_eq!(p.replicas(210.0, 70.0, 70.0, 1), 3);
+        // Predicted dip, current high: hold.
+        assert_eq!(p.replicas(10.0, 210.0, 70.0, 3), 3);
+        // Both low: scale down.
+        assert_eq!(p.replicas(10.0, 60.0, 70.0, 3), 1);
+    }
+
+    #[test]
+    fn step_policy_damps_both_directions() {
+        let p = StepPolicy { max_step: 2 };
+        assert_eq!(p.replicas(700.0, 0.0, 70.0, 1), 3, "up capped at +2");
+        assert_eq!(p.replicas(70.0, 0.0, 70.0, 8), 6, "down capped at -2");
+        assert_eq!(p.replicas(140.0, 0.0, 70.0, 1), 2, "small moves unaffected");
+    }
+}

@@ -1,0 +1,153 @@
+//! The Updater — the model-update loop (paper §4.1.2, §4.2.3).
+//!
+//! Each update-loop tick: load the metrics history file as the training
+//! set, apply the configured update policy to the model, then remove the
+//! history file and re-save the model (here: clear the in-memory history;
+//! the model lives in the forecaster).
+
+use super::Formulator;
+use crate::forecast::{Forecaster, UpdatePolicy};
+
+/// Minimum records to attempt an update (shorter histories can't even
+/// fill one LSTM window batch).
+const MIN_RECORDS: usize = 16;
+
+#[derive(Debug)]
+pub struct Updater {
+    policy: UpdatePolicy,
+    /// Completed update-loop count (for logs/experiments).
+    pub updates_run: usize,
+    /// Updates skipped for lack of data.
+    pub updates_skipped: usize,
+}
+
+impl Updater {
+    pub fn new(policy: UpdatePolicy) -> Self {
+        Updater {
+            policy,
+            updates_run: 0,
+            updates_skipped: 0,
+        }
+    }
+
+    pub fn policy(&self) -> UpdatePolicy {
+        self.policy
+    }
+
+    /// One model-update-loop step.
+    pub fn run(
+        &mut self,
+        forecaster: &mut dyn Forecaster,
+        formulator: &mut Formulator,
+    ) -> crate::Result<()> {
+        if formulator.len() < MIN_RECORDS {
+            self.updates_skipped += 1;
+            // Paper semantics: the loop still runs; an empty history just
+            // cannot improve the model. History is kept for next time.
+            return Ok(());
+        }
+        let result = forecaster.retrain(formulator.history(), self.policy);
+        match result {
+            Ok(()) => {
+                self.updates_run += 1;
+                formulator.clear();
+                Ok(())
+            }
+            Err(e) => {
+                // Robustness: a failed update leaves the previous model
+                // file in place (Algorithm 1 keeps serving).
+                self.updates_skipped += 1;
+                Err(e)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forecast::NaiveForecaster;
+    use crate::metrics::METRIC_DIM;
+
+    struct CountingModel {
+        retrains: usize,
+        fail: bool,
+    }
+    impl Forecaster for CountingModel {
+        fn name(&self) -> &str {
+            "counting"
+        }
+        fn predict(&mut self, _h: &[[f64; METRIC_DIM]]) -> Option<[f64; METRIC_DIM]> {
+            None
+        }
+        fn retrain(
+            &mut self,
+            _h: &[[f64; METRIC_DIM]],
+            _p: UpdatePolicy,
+        ) -> crate::Result<()> {
+            if self.fail {
+                anyhow::bail!("injected failure");
+            }
+            self.retrains += 1;
+            Ok(())
+        }
+    }
+
+    fn filled_formulator(n: usize) -> Formulator {
+        let mut f = Formulator::new();
+        for i in 0..n {
+            f.record([i as f64; METRIC_DIM]);
+        }
+        f
+    }
+
+    #[test]
+    fn runs_update_and_clears_history() {
+        let mut u = Updater::new(UpdatePolicy::FineTune);
+        let mut m = CountingModel {
+            retrains: 0,
+            fail: false,
+        };
+        let mut f = filled_formulator(100);
+        u.run(&mut m, &mut f).unwrap();
+        assert_eq!(m.retrains, 1);
+        assert!(f.is_empty());
+        assert_eq!(u.updates_run, 1);
+    }
+
+    #[test]
+    fn skips_on_thin_history() {
+        let mut u = Updater::new(UpdatePolicy::RetrainScratch);
+        let mut m = CountingModel {
+            retrains: 0,
+            fail: false,
+        };
+        let mut f = filled_formulator(3);
+        u.run(&mut m, &mut f).unwrap();
+        assert_eq!(m.retrains, 0);
+        assert_eq!(f.len(), 3, "history preserved for next loop");
+        assert_eq!(u.updates_skipped, 1);
+    }
+
+    #[test]
+    fn failed_update_keeps_history_and_reports() {
+        let mut u = Updater::new(UpdatePolicy::FineTune);
+        let mut m = CountingModel {
+            retrains: 0,
+            fail: true,
+        };
+        let mut f = filled_formulator(50);
+        assert!(u.run(&mut m, &mut f).is_err());
+        assert_eq!(f.len(), 50);
+        assert_eq!(u.updates_skipped, 1);
+    }
+
+    #[test]
+    fn naive_model_update_is_cheap_noop() {
+        let mut u = Updater::new(UpdatePolicy::KeepSeed);
+        let mut m = NaiveForecaster;
+        let mut f = filled_formulator(40);
+        u.run(&mut m, &mut f).unwrap();
+        assert!(f.is_empty());
+    }
+}

@@ -1,0 +1,80 @@
+//! Deployments: replica sets of identical worker pods, pinned to a tier
+//! (and optionally a zone) by a node selector — the autoscalers' targets.
+
+use super::{NodeSpec, PodSpec, Tier};
+use crate::sim::PodId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeploymentId(pub u32);
+
+/// Node selector: tier + optional zone (edge worker deployments are
+/// per-zone; the cloud worker deployment spans the cloud tier).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Selector {
+    pub tier: Tier,
+    pub zone: Option<u32>,
+}
+
+impl Selector {
+    pub fn new(tier: Tier, zone: Option<u32>) -> Self {
+        Selector { tier, zone }
+    }
+
+    pub fn matches(&self, node: &NodeSpec) -> bool {
+        node.tier == self.tier && self.zone.map_or(true, |z| node.zone == z)
+    }
+}
+
+/// A deployment of identical worker pods.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    pub name: String,
+    pub selector: Selector,
+    pub pod_spec: PodSpec,
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    pub desired_replicas: usize,
+    /// All live pods (any phase but Gone).
+    pub pods: Vec<PodId>,
+}
+
+impl Deployment {
+    pub fn new(
+        name: &str,
+        selector: Selector,
+        pod_spec: PodSpec,
+        min_replicas: usize,
+        max_replicas: usize,
+    ) -> Self {
+        Deployment {
+            name: name.to_string(),
+            selector,
+            pod_spec,
+            min_replicas,
+            max_replicas,
+            desired_replicas: min_replicas,
+            pods: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selector_matches_tier_and_zone() {
+        let edge1 = NodeSpec::new("e1", Tier::Edge, 1, 2000, 2048);
+        let edge2 = NodeSpec::new("e2", Tier::Edge, 2, 2000, 2048);
+        let cloud = NodeSpec::new("c", Tier::Cloud, 0, 3000, 3072);
+
+        let s_zone1 = Selector::new(Tier::Edge, Some(1));
+        assert!(s_zone1.matches(&edge1));
+        assert!(!s_zone1.matches(&edge2));
+        assert!(!s_zone1.matches(&cloud));
+
+        let s_cloud = Selector::new(Tier::Cloud, None);
+        assert!(s_cloud.matches(&cloud));
+        assert!(!s_cloud.matches(&edge1));
+    }
+}

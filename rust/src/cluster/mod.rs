@@ -1,0 +1,450 @@
+//! Kubernetes cluster substrate: nodes, pods, deployments, scheduler,
+//! and the replica-reconciliation loop.
+//!
+//! This models exactly the mechanisms the paper's autoscalers interact
+//! with: resource-constrained heterogeneous nodes (Table 2), pod
+//! lifecycle with container-init delay (the reactive-lag the PPA
+//! attacks), a filter+score scheduler (K8s `LeastAllocated`), and
+//! deployment replica reconciliation driven by scale requests.
+
+mod deployment;
+mod node;
+mod pod;
+mod scheduler;
+
+pub use deployment::{Deployment, DeploymentId, Selector};
+pub use node::{Node, NodeSpec, Tier};
+pub use pod::{Pod, PodPhase, PodSpec};
+
+use crate::sim::{Event, EventQueue, NodeId, PodId, Time, SEC};
+use crate::util::rng::Pcg64;
+
+/// Pod container-init delay bounds on constrained edge devices (layer
+/// unpack + runtime start + worker warm-up): the paper's protocol pins
+/// this to "generally ... less than one time interval of control loops"
+/// (§4.2.2), i.e. up to ~20 s — this reactive lag is exactly what
+/// proactive scaling attacks.
+pub const INIT_DELAY_MIN: Time = 10 * SEC;
+pub const INIT_DELAY_MAX: Time = 20 * SEC;
+/// Graceful-termination lag for an idle pod.
+pub const TERMINATION_GRACE: Time = SEC;
+
+/// The simulated cluster state.
+#[derive(Debug)]
+pub struct Cluster {
+    pub nodes: Vec<Node>,
+    pub pods: Vec<Pod>, // slab: Pod::phase == Gone marks free entries
+    pub deployments: Vec<Deployment>,
+}
+
+impl Cluster {
+    pub fn new() -> Self {
+        Cluster {
+            nodes: Vec::new(),
+            pods: Vec::new(),
+            deployments: Vec::new(),
+        }
+    }
+
+    pub fn add_node(&mut self, spec: NodeSpec) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(Node::new(spec));
+        id
+    }
+
+    pub fn add_deployment(&mut self, dep: Deployment) -> DeploymentId {
+        let id = DeploymentId(self.deployments.len() as u32);
+        self.deployments.push(dep);
+        id
+    }
+
+    pub fn pod(&self, id: PodId) -> &Pod {
+        &self.pods[id.0 as usize]
+    }
+
+    pub fn pod_mut(&mut self, id: PodId) -> &mut Pod {
+        &mut self.pods[id.0 as usize]
+    }
+
+    pub fn deployment(&self, id: DeploymentId) -> &Deployment {
+        &self.deployments[id.0 as usize]
+    }
+
+    /// Running pods of a deployment (the ones a service can dispatch to).
+    pub fn running_pods(&self, dep: DeploymentId) -> impl Iterator<Item = &Pod> + '_ {
+        self.deployments[dep.0 as usize]
+            .pods
+            .iter()
+            .map(|&p| self.pod(p))
+            .filter(|p| p.phase == PodPhase::Running)
+    }
+
+    /// Count of pods in a phase for a deployment.
+    pub fn count_phase(&self, dep: DeploymentId, phase: PodPhase) -> usize {
+        self.deployments[dep.0 as usize]
+            .pods
+            .iter()
+            .filter(|&&p| self.pod(p).phase == phase)
+            .count()
+    }
+
+    /// Live replicas (everything not terminating/gone) — what HPA's
+    /// `currentReplicas` sees.
+    pub fn live_replicas(&self, dep: DeploymentId) -> usize {
+        self.deployments[dep.0 as usize]
+            .pods
+            .iter()
+            .filter(|&&p| {
+                matches!(
+                    self.pod(p).phase,
+                    PodPhase::Pending | PodPhase::Initializing | PodPhase::Running
+                )
+            })
+            .count()
+    }
+
+    /// The "limitation-aware" cap (paper Algorithm 1): the maximum number
+    /// of replicas of `dep` the matching nodes can physically host,
+    /// accounting for resources used by other deployments' pods.
+    pub fn max_replicas(&self, dep: DeploymentId) -> usize {
+        let d = &self.deployments[dep.0 as usize];
+        let mut total = 0usize;
+        for node in &self.nodes {
+            if !d.selector.matches(&node.spec) {
+                continue;
+            }
+            // Capacity minus what OTHER deployments' pods occupy.
+            let mut other_cpu = 0u32;
+            let mut other_ram = 0u32;
+            for &pid in &node.pods {
+                let p = self.pod(pid);
+                if p.deployment != dep && p.phase != PodPhase::Gone {
+                    other_cpu += p.spec.cpu_millis;
+                    other_ram += p.spec.ram_mb;
+                }
+            }
+            let free_cpu = node.spec.allocatable_cpu().saturating_sub(other_cpu);
+            let free_ram = node.spec.allocatable_ram().saturating_sub(other_ram);
+            let by_cpu = free_cpu / d.pod_spec.cpu_millis.max(1);
+            let by_ram = free_ram / d.pod_spec.ram_mb.max(1);
+            total += by_cpu.min(by_ram) as usize;
+        }
+        total
+    }
+
+    /// Reconcile a deployment to `desired` replicas. Creates pods (through
+    /// the scheduler, with init delay) and/or terminates surplus pods
+    /// (Pending first, then newest Running; busy pods drain).
+    ///
+    /// This is the single entry point both autoscalers use — it is the
+    /// Kubernetes control-plane's "handle scaling requests" step (§3.2.3).
+    pub fn reconcile(
+        &mut self,
+        dep: DeploymentId,
+        desired: usize,
+        queue: &mut EventQueue,
+        rng: &mut Pcg64,
+    ) {
+        let desired = desired
+            .max(self.deployments[dep.0 as usize].min_replicas)
+            .min(self.deployments[dep.0 as usize].max_replicas);
+        let current = self.live_replicas(dep);
+        self.deployments[dep.0 as usize].desired_replicas = desired;
+
+        if desired > current {
+            for _ in 0..(desired - current) {
+                self.spawn_pod(dep, queue, rng);
+            }
+        } else if desired < current {
+            self.terminate_surplus(dep, current - desired, queue);
+        }
+    }
+
+    fn spawn_pod(&mut self, dep: DeploymentId, queue: &mut EventQueue, rng: &mut Pcg64) {
+        let spec = self.deployments[dep.0 as usize].pod_spec;
+        // Slab allocation: reuse a Gone slot if available.
+        let pid = match self.pods.iter().position(|p| p.phase == PodPhase::Gone) {
+            Some(i) => {
+                let id = PodId(i as u32);
+                self.pods[i] = Pod::new(id, dep, spec, queue.now());
+                id
+            }
+            None => {
+                let id = PodId(self.pods.len() as u32);
+                self.pods.push(Pod::new(id, dep, spec, queue.now()));
+                id
+            }
+        };
+        self.deployments[dep.0 as usize].pods.push(pid);
+
+        match scheduler::schedule(&self.nodes, &self.deployments[dep.0 as usize], spec) {
+            Some(node_id) => {
+                self.nodes[node_id.0 as usize].bind(pid, spec);
+                let pod = &mut self.pods[pid.0 as usize];
+                pod.node = Some(node_id);
+                pod.phase = PodPhase::Initializing;
+                let delay =
+                    rng.int_range(INIT_DELAY_MIN, INIT_DELAY_MAX + 1);
+                queue.schedule_in(delay, Event::PodRunning { pod: pid });
+            }
+            None => {
+                // Unschedulable — stays Pending; re-tried on next reconcile.
+            }
+        }
+    }
+
+    fn terminate_surplus(&mut self, dep: DeploymentId, n: usize, queue: &mut EventQueue) {
+        // Victim order: Pending, then Initializing, then newest Running idle,
+        // then newest Running busy (drained).
+        let mut victims: Vec<PodId> = Vec::with_capacity(n);
+        let dep_pods = self.deployments[dep.0 as usize].pods.clone();
+        let mut candidates: Vec<PodId> = dep_pods
+            .iter()
+            .copied()
+            .filter(|&p| {
+                matches!(
+                    self.pod(p).phase,
+                    PodPhase::Pending | PodPhase::Initializing | PodPhase::Running
+                )
+            })
+            .collect();
+        candidates.sort_by_key(|&p| {
+            let pod = self.pod(p);
+            let phase_rank = match pod.phase {
+                PodPhase::Pending => 0u8,
+                PodPhase::Initializing => 1,
+                PodPhase::Running if pod.current_request.is_none() => 2,
+                PodPhase::Running => 3,
+                _ => 4,
+            };
+            // Newest first within a rank.
+            (phase_rank, u64::MAX - pod.created)
+        });
+        victims.extend(candidates.into_iter().take(n));
+
+        for pid in victims {
+            let pod = &mut self.pods[pid.0 as usize];
+            match pod.phase {
+                PodPhase::Pending => {
+                    pod.phase = PodPhase::Gone;
+                    self.detach(pid, dep);
+                }
+                PodPhase::Initializing => {
+                    pod.phase = PodPhase::Terminating;
+                    queue.schedule_in(TERMINATION_GRACE, Event::PodTerminated { pod: pid });
+                }
+                PodPhase::Running => {
+                    pod.phase = PodPhase::Terminating;
+                    if pod.current_request.is_none() {
+                        queue.schedule_in(
+                            TERMINATION_GRACE,
+                            Event::PodTerminated { pod: pid },
+                        );
+                    }
+                    // Busy pods drain: the ServiceComplete handler emits
+                    // PodTerminated when the in-flight request finishes.
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Handle `PodRunning`: Initializing → Running (no-op if the pod was
+    /// terminated while initializing).
+    pub fn on_pod_running(&mut self, pid: PodId) -> bool {
+        let pod = &mut self.pods[pid.0 as usize];
+        if pod.phase == PodPhase::Initializing {
+            pod.phase = PodPhase::Running;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Handle `PodTerminated`: release node resources, free the slab slot.
+    pub fn on_pod_terminated(&mut self, pid: PodId) {
+        let dep = self.pods[pid.0 as usize].deployment;
+        let node = self.pods[pid.0 as usize].node;
+        if let Some(nid) = node {
+            let spec = self.pods[pid.0 as usize].spec;
+            self.nodes[nid.0 as usize].unbind(pid, spec);
+        }
+        self.pods[pid.0 as usize].phase = PodPhase::Gone;
+        self.detach(pid, dep);
+    }
+
+    fn detach(&mut self, pid: PodId, dep: DeploymentId) {
+        let pods = &mut self.deployments[dep.0 as usize].pods;
+        if let Some(idx) = pods.iter().position(|&p| p == pid) {
+            pods.swap_remove(idx);
+        }
+    }
+
+    /// Retry scheduling for Pending pods (called per reconcile tick).
+    pub fn retry_pending(&mut self, queue: &mut EventQueue, rng: &mut Pcg64) {
+        let pending: Vec<PodId> = self
+            .pods
+            .iter()
+            .filter(|p| p.phase == PodPhase::Pending)
+            .map(|p| p.id)
+            .collect();
+        for pid in pending {
+            let dep = self.pods[pid.0 as usize].deployment;
+            let spec = self.pods[pid.0 as usize].spec;
+            if let Some(node_id) =
+                scheduler::schedule(&self.nodes, &self.deployments[dep.0 as usize], spec)
+            {
+                self.nodes[node_id.0 as usize].bind(pid, spec);
+                let pod = &mut self.pods[pid.0 as usize];
+                pod.node = Some(node_id);
+                pod.phase = PodPhase::Initializing;
+                let delay = rng.int_range(INIT_DELAY_MIN, INIT_DELAY_MAX + 1);
+                queue.schedule_in(delay, Event::PodRunning { pod: pid });
+            }
+        }
+    }
+}
+
+impl Default for Cluster {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cluster() -> (Cluster, EventQueue, Pcg64) {
+        let mut c = Cluster::new();
+        c.add_node(NodeSpec::new("edge-1", Tier::Edge, 1, 2000, 2048));
+        c.add_node(NodeSpec::new("edge-2", Tier::Edge, 1, 2000, 2048));
+        let dep = Deployment::new(
+            "edge-workers",
+            Selector::new(Tier::Edge, Some(1)),
+            PodSpec::new(500, 256),
+            1,
+            16,
+        );
+        c.add_deployment(dep);
+        (c, EventQueue::new(), Pcg64::new(1, 0))
+    }
+
+    fn drain_inits(c: &mut Cluster, q: &mut EventQueue) {
+        while let Some((_, ev)) = q.pop() {
+            match ev {
+                Event::PodRunning { pod } => {
+                    c.on_pod_running(pod);
+                }
+                Event::PodTerminated { pod } => {
+                    c.on_pod_terminated(pod);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn scale_up_schedules_and_runs_pods() {
+        let (mut c, mut q, mut rng) = test_cluster();
+        c.reconcile(DeploymentId(0), 3, &mut q, &mut rng);
+        assert_eq!(c.count_phase(DeploymentId(0), PodPhase::Initializing), 3);
+        drain_inits(&mut c, &mut q);
+        assert_eq!(c.count_phase(DeploymentId(0), PodPhase::Running), 3);
+        // Resources allocated on nodes.
+        let alloc: u32 = c.nodes.iter().map(|n| n.alloc_cpu).sum();
+        assert_eq!(alloc, 3 * 500);
+    }
+
+    #[test]
+    fn init_delay_within_bounds() {
+        let (mut c, mut q, mut rng) = test_cluster();
+        c.reconcile(DeploymentId(0), 1, &mut q, &mut rng);
+        let t = q.peek_time().unwrap();
+        assert!((INIT_DELAY_MIN..=INIT_DELAY_MAX).contains(&t), "{t}");
+    }
+
+    #[test]
+    fn scale_down_removes_newest_first() {
+        let (mut c, mut q, mut rng) = test_cluster();
+        c.reconcile(DeploymentId(0), 4, &mut q, &mut rng);
+        drain_inits(&mut c, &mut q);
+        c.reconcile(DeploymentId(0), 2, &mut q, &mut rng);
+        drain_inits(&mut c, &mut q);
+        assert_eq!(c.count_phase(DeploymentId(0), PodPhase::Running), 2);
+        let alloc: u32 = c.nodes.iter().map(|n| n.alloc_cpu).sum();
+        assert_eq!(alloc, 2 * 500);
+    }
+
+    #[test]
+    fn unschedulable_pods_stay_pending_then_retry() {
+        let (mut c, mut q, mut rng) = test_cluster();
+        // 2 nodes x 1800m allocatable / 500m = 3 per node = 6; ask for 10.
+        c.reconcile(DeploymentId(0), 10, &mut q, &mut rng);
+        assert_eq!(c.count_phase(DeploymentId(0), PodPhase::Pending), 4);
+        drain_inits(&mut c, &mut q);
+        assert_eq!(c.count_phase(DeploymentId(0), PodPhase::Running), 6);
+        // Cluster still full: pending pods stay pending after a retry.
+        c.reconcile(DeploymentId(0), 10, &mut q, &mut rng); // no-op, still full
+        c.retry_pending(&mut q, &mut rng);
+        assert_eq!(c.count_phase(DeploymentId(0), PodPhase::Pending), 4);
+    }
+
+    #[test]
+    fn max_replicas_respects_capacity_and_other_pods() {
+        let (mut c, mut q, mut rng) = test_cluster();
+        // 1800m allocatable per node -> 3 x 500m pods per node.
+        assert_eq!(c.max_replicas(DeploymentId(0)), 6);
+        // A second deployment taking 1000m per node shrinks it to 800m
+        // free -> 1 slot per node.
+        let other = Deployment::new(
+            "other",
+            Selector::new(Tier::Edge, Some(1)),
+            PodSpec::new(1000, 512),
+            0,
+            4,
+        );
+        let other_id = c.add_deployment(other);
+        c.reconcile(other_id, 2, &mut q, &mut rng);
+        drain_inits(&mut c, &mut q);
+        assert_eq!(c.max_replicas(DeploymentId(0)), 2);
+    }
+
+    #[test]
+    fn reconcile_clamps_to_min_max() {
+        let (mut c, mut q, mut rng) = test_cluster();
+        c.reconcile(DeploymentId(0), 0, &mut q, &mut rng);
+        assert_eq!(c.live_replicas(DeploymentId(0)), 1); // min_replicas
+        c.reconcile(DeploymentId(0), 100, &mut q, &mut rng);
+        assert_eq!(c.deployments[0].desired_replicas, 16); // max_replicas
+    }
+
+    #[test]
+    fn busy_pod_drains_on_scale_down() {
+        let (mut c, mut q, mut rng) = test_cluster();
+        c.reconcile(DeploymentId(0), 2, &mut q, &mut rng);
+        drain_inits(&mut c, &mut q);
+        // Mark both busy.
+        let pods: Vec<PodId> = c.deployments[0].pods.clone();
+        for &p in &pods {
+            c.pod_mut(p).current_request = Some(7);
+        }
+        c.reconcile(DeploymentId(0), 1, &mut q, &mut rng);
+        // No PodTerminated scheduled yet (busy drain).
+        assert_eq!(c.count_phase(DeploymentId(0), PodPhase::Terminating), 1);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn slab_reuses_slots() {
+        let (mut c, mut q, mut rng) = test_cluster();
+        c.reconcile(DeploymentId(0), 3, &mut q, &mut rng);
+        drain_inits(&mut c, &mut q);
+        let slots_before = c.pods.len();
+        c.reconcile(DeploymentId(0), 1, &mut q, &mut rng);
+        drain_inits(&mut c, &mut q);
+        c.reconcile(DeploymentId(0), 3, &mut q, &mut rng);
+        drain_inits(&mut c, &mut q);
+        assert_eq!(c.pods.len(), slots_before, "slab should reuse Gone slots");
+    }
+}

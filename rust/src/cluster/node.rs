@@ -1,0 +1,152 @@
+//! Nodes: heterogeneous cloud/edge machines with CPU (millicores) and RAM
+//! (MB) capacities, per Table 2 of the paper.
+
+use crate::sim::PodId;
+use super::PodSpec;
+
+/// Which tier a node lives in — the defining heterogeneity of the edge
+/// environment (Fig 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tier {
+    Cloud,
+    Edge,
+}
+
+/// Static node description.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    pub tier: Tier,
+    /// Zone index: 0 = cloud zone, 1.. = edge zones.
+    pub zone: u32,
+    pub cpu_millis: u32,
+    pub ram_mb: u32,
+    /// Capacity reserved for system/static pods (kubelet, exporters,
+    /// entrypoint services — the paper's "supportive static pods").
+    pub reserved_cpu_millis: u32,
+    pub reserved_ram_mb: u32,
+}
+
+impl NodeSpec {
+    pub fn new(name: &str, tier: Tier, zone: u32, cpu_millis: u32, ram_mb: u32) -> Self {
+        NodeSpec {
+            name: name.to_string(),
+            tier,
+            zone,
+            cpu_millis,
+            ram_mb,
+            reserved_cpu_millis: 200,
+            reserved_ram_mb: 256,
+        }
+    }
+
+    pub fn with_reserved(mut self, cpu: u32, ram: u32) -> Self {
+        self.reserved_cpu_millis = cpu;
+        self.reserved_ram_mb = ram;
+        self
+    }
+
+    /// CPU available for scheduling workload pods.
+    pub fn allocatable_cpu(&self) -> u32 {
+        self.cpu_millis.saturating_sub(self.reserved_cpu_millis)
+    }
+
+    pub fn allocatable_ram(&self) -> u32 {
+        self.ram_mb.saturating_sub(self.reserved_ram_mb)
+    }
+}
+
+/// Live node state: allocations and bound pods.
+#[derive(Debug)]
+pub struct Node {
+    pub spec: NodeSpec,
+    pub alloc_cpu: u32,
+    pub alloc_ram: u32,
+    pub pods: Vec<PodId>,
+}
+
+impl Node {
+    pub fn new(spec: NodeSpec) -> Self {
+        Node {
+            spec,
+            alloc_cpu: 0,
+            alloc_ram: 0,
+            pods: Vec::new(),
+        }
+    }
+
+    pub fn free_cpu(&self) -> u32 {
+        self.spec.allocatable_cpu().saturating_sub(self.alloc_cpu)
+    }
+
+    pub fn free_ram(&self) -> u32 {
+        self.spec.allocatable_ram().saturating_sub(self.alloc_ram)
+    }
+
+    /// K8s `PodFitsResources` filter.
+    pub fn fits(&self, spec: PodSpec) -> bool {
+        self.free_cpu() >= spec.cpu_millis && self.free_ram() >= spec.ram_mb
+    }
+
+    /// Allocation fraction after hypothetically placing `spec` — the
+    /// `LeastAllocated` score input (lower is better).
+    pub fn score_after(&self, spec: PodSpec) -> f64 {
+        let cpu = (self.alloc_cpu + spec.cpu_millis) as f64
+            / self.spec.allocatable_cpu().max(1) as f64;
+        let ram =
+            (self.alloc_ram + spec.ram_mb) as f64 / self.spec.allocatable_ram().max(1) as f64;
+        (cpu + ram) / 2.0
+    }
+
+    pub fn bind(&mut self, pod: PodId, spec: PodSpec) {
+        debug_assert!(self.fits(spec), "bind without fit check");
+        self.alloc_cpu += spec.cpu_millis;
+        self.alloc_ram += spec.ram_mb;
+        self.pods.push(pod);
+    }
+
+    pub fn unbind(&mut self, pod: PodId, spec: PodSpec) {
+        self.alloc_cpu = self.alloc_cpu.saturating_sub(spec.cpu_millis);
+        self.alloc_ram = self.alloc_ram.saturating_sub(spec.ram_mb);
+        if let Some(i) = self.pods.iter().position(|&p| p == pod) {
+            self.pods.swap_remove(i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocatable_subtracts_reserved() {
+        let spec = NodeSpec::new("n", Tier::Edge, 1, 2000, 2048);
+        assert_eq!(spec.allocatable_cpu(), 1800);
+        assert_eq!(spec.allocatable_ram(), 1792);
+    }
+
+    #[test]
+    fn fits_and_bind_unbind() {
+        let mut n = Node::new(NodeSpec::new("n", Tier::Edge, 1, 2000, 2048));
+        let p = PodSpec::new(500, 256);
+        assert!(n.fits(p));
+        n.bind(PodId(0), p);
+        n.bind(PodId(1), p);
+        n.bind(PodId(2), p);
+        assert!(!n.fits(PodSpec::new(500, 256)), "1800-1500=300 < 500");
+        assert_eq!(n.free_cpu(), 300);
+        n.unbind(PodId(1), p);
+        assert!(n.fits(p));
+        assert_eq!(n.pods.len(), 2);
+    }
+
+    #[test]
+    fn score_increases_with_load() {
+        let mut n = Node::new(NodeSpec::new("n", Tier::Cloud, 0, 3000, 3072));
+        let p = PodSpec::new(500, 256);
+        let s0 = n.score_after(p);
+        n.bind(PodId(0), p);
+        let s1 = n.score_after(p);
+        assert!(s1 > s0);
+    }
+}

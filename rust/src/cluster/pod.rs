@@ -1,0 +1,142 @@
+//! Pods: the schedulable worker units, with lifecycle FSM and busy-time
+//! accounting (the source of the CPU-utilization metric).
+
+use super::DeploymentId;
+use crate::sim::{NodeId, PodId, Time};
+
+/// Pod lifecycle. `Gone` marks a free slab slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PodPhase {
+    /// Created but unschedulable (no node fits).
+    Pending,
+    /// Bound to a node, container initializing (the reactive-lag window).
+    Initializing,
+    /// Serving.
+    Running,
+    /// Draining; accepts no new work.
+    Terminating,
+    /// Removed.
+    Gone,
+}
+
+/// Resource requests (K8s Guaranteed QoS: request == limit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PodSpec {
+    pub cpu_millis: u32,
+    pub ram_mb: u32,
+}
+
+impl PodSpec {
+    pub fn new(cpu_millis: u32, ram_mb: u32) -> Self {
+        PodSpec { cpu_millis, ram_mb }
+    }
+}
+
+/// A pod instance.
+#[derive(Debug, Clone)]
+pub struct Pod {
+    pub id: PodId,
+    pub deployment: DeploymentId,
+    pub node: Option<NodeId>,
+    pub phase: PodPhase,
+    pub spec: PodSpec,
+    pub created: Time,
+    /// Request currently being serviced (workers are single-slot, like a
+    /// Celery worker with concurrency 1).
+    pub current_request: Option<u64>,
+    /// Busy-time accumulator since the last metrics scrape.
+    busy_accum: Time,
+    /// When the current service period started (None if idle).
+    busy_since: Option<Time>,
+}
+
+impl Pod {
+    pub fn new(id: PodId, deployment: DeploymentId, spec: PodSpec, now: Time) -> Self {
+        Pod {
+            id,
+            deployment,
+            node: None,
+            phase: PodPhase::Pending,
+            spec,
+            created: now,
+            current_request: None,
+            busy_accum: 0,
+            busy_since: None,
+        }
+    }
+
+    /// Mark the pod busy on `request_id` starting at `now`.
+    pub fn start_service(&mut self, request_id: u64, now: Time) {
+        debug_assert!(self.current_request.is_none(), "pod already busy");
+        self.current_request = Some(request_id);
+        self.busy_since = Some(now);
+    }
+
+    /// Mark the current request finished at `now`.
+    pub fn finish_service(&mut self, now: Time) -> Option<u64> {
+        let req = self.current_request.take();
+        if let Some(since) = self.busy_since.take() {
+            self.busy_accum += now.saturating_sub(since);
+        }
+        req
+    }
+
+    /// Drain the busy-time accumulator for a scrape at `now`, restarting
+    /// accounting for a still-in-flight request. Returns busy time since
+    /// the previous scrape.
+    pub fn take_busy(&mut self, now: Time) -> Time {
+        let mut busy = self.busy_accum;
+        self.busy_accum = 0;
+        if let Some(since) = self.busy_since {
+            busy += now.saturating_sub(since);
+            self.busy_since = Some(now);
+        }
+        busy
+    }
+
+    pub fn is_idle_running(&self) -> bool {
+        self.phase == PodPhase::Running && self.current_request.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SEC;
+
+    fn pod() -> Pod {
+        Pod::new(PodId(0), DeploymentId(0), PodSpec::new(500, 256), 0)
+    }
+
+    #[test]
+    fn busy_accounting_across_scrapes() {
+        let mut p = pod();
+        p.start_service(1, 2 * SEC);
+        // Scrape at t=5s: busy 3s, still in flight.
+        assert_eq!(p.take_busy(5 * SEC), 3 * SEC);
+        // Finish at t=7s; busy 2s more.
+        assert_eq!(p.finish_service(7 * SEC), Some(1));
+        assert_eq!(p.take_busy(10 * SEC), 2 * SEC);
+        // Idle after.
+        assert_eq!(p.take_busy(12 * SEC), 0);
+    }
+
+    #[test]
+    fn busy_accumulates_multiple_requests() {
+        let mut p = pod();
+        p.start_service(1, 0);
+        p.finish_service(SEC);
+        p.start_service(2, 2 * SEC);
+        p.finish_service(3 * SEC);
+        assert_eq!(p.take_busy(4 * SEC), 2 * SEC);
+    }
+
+    #[test]
+    fn idle_running_check() {
+        let mut p = pod();
+        p.phase = PodPhase::Running;
+        assert!(p.is_idle_running());
+        p.start_service(5, 0);
+        assert!(!p.is_idle_running());
+    }
+}

@@ -1,0 +1,84 @@
+//! The pod scheduler: K8s default-profile shape — a `PodFitsResources` +
+//! node-selector filter stage, then a `LeastAllocated` score stage.
+//! Deterministic tie-break on node index keeps runs reproducible.
+
+use super::{Deployment, Node, PodSpec};
+use crate::sim::NodeId;
+
+/// Pick the best node for a pod of `dep`, or `None` if unschedulable.
+pub fn schedule(nodes: &[Node], dep: &Deployment, spec: PodSpec) -> Option<NodeId> {
+    let mut best: Option<(f64, usize)> = None;
+    for (idx, node) in nodes.iter().enumerate() {
+        // Filter stage.
+        if !dep.selector.matches(&node.spec) || !node.fits(spec) {
+            continue;
+        }
+        // Score stage: least allocated after placement (lower = better).
+        let score = node.score_after(spec);
+        match best {
+            Some((s, _)) if s <= score => {}
+            _ => best = Some((score, idx)),
+        }
+    }
+    best.map(|(_, idx)| NodeId(idx as u32))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{NodeSpec, Selector, Tier};
+    use crate::sim::PodId;
+
+    fn dep(selector: Selector) -> Deployment {
+        Deployment::new("d", selector, PodSpec::new(500, 256), 0, 100)
+    }
+
+    #[test]
+    fn filters_by_selector() {
+        let nodes = vec![
+            Node::new(NodeSpec::new("c", Tier::Cloud, 0, 3000, 3072)),
+            Node::new(NodeSpec::new("e", Tier::Edge, 1, 2000, 2048)),
+        ];
+        let d = dep(Selector::new(Tier::Edge, Some(1)));
+        assert_eq!(
+            schedule(&nodes, &d, d.pod_spec),
+            Some(NodeId(1)),
+            "must skip the cloud node"
+        );
+    }
+
+    #[test]
+    fn prefers_least_allocated() {
+        let mut nodes = vec![
+            Node::new(NodeSpec::new("e1", Tier::Edge, 1, 2000, 2048)),
+            Node::new(NodeSpec::new("e2", Tier::Edge, 1, 2000, 2048)),
+        ];
+        let d = dep(Selector::new(Tier::Edge, None));
+        nodes[0].bind(PodId(0), d.pod_spec);
+        assert_eq!(schedule(&nodes, &d, d.pod_spec), Some(NodeId(1)));
+    }
+
+    #[test]
+    fn spreads_round_robin_under_equal_load() {
+        let mut nodes = vec![
+            Node::new(NodeSpec::new("e1", Tier::Edge, 1, 2000, 2048)),
+            Node::new(NodeSpec::new("e2", Tier::Edge, 1, 2000, 2048)),
+        ];
+        let d = dep(Selector::new(Tier::Edge, None));
+        let mut placements = Vec::new();
+        for i in 0..4 {
+            let n = schedule(&nodes, &d, d.pod_spec).unwrap();
+            nodes[n.0 as usize].bind(PodId(i), d.pod_spec);
+            placements.push(n.0);
+        }
+        assert_eq!(placements, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn none_when_full() {
+        let mut nodes = vec![Node::new(NodeSpec::new("e", Tier::Edge, 1, 700, 2048))];
+        let d = dep(Selector::new(Tier::Edge, None));
+        nodes[0].bind(PodId(0), d.pod_spec); // 500 of 500 allocatable
+        assert_eq!(schedule(&nodes, &d, d.pod_spec), None);
+    }
+}

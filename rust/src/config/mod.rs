@@ -1,0 +1,383 @@
+//! Configuration system: cluster topology (Table 2), application costs,
+//! PPA arguments (Table 4), and experiment parameters — loadable from
+//! JSON files and shipped as presets mirroring the paper's testbed.
+
+mod presets;
+
+pub use presets::*;
+
+use crate::app::TaskCosts;
+use crate::cluster::{Cluster, Deployment, NodeSpec, PodSpec, Selector, Tier};
+use crate::forecast::UpdatePolicy;
+use crate::sim::{Time, HOUR, MS, SEC};
+use crate::util::json::Json;
+use anyhow::{bail, Context};
+
+/// One node entry in a cluster config.
+#[derive(Debug, Clone)]
+pub struct NodeConfig {
+    pub name: String,
+    pub tier: Tier,
+    pub zone: u32,
+    pub cpu_millis: u32,
+    pub ram_mb: u32,
+    pub reserved_cpu_millis: u32,
+    pub reserved_ram_mb: u32,
+}
+
+/// One autoscaled deployment entry.
+#[derive(Debug, Clone)]
+pub struct DeploymentConfig {
+    pub name: String,
+    pub tier: Tier,
+    pub zone: Option<u32>,
+    pub pod_cpu_millis: u32,
+    pub pod_ram_mb: u32,
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    pub initial_replicas: usize,
+}
+
+/// Full cluster topology.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub nodes: Vec<NodeConfig>,
+    pub deployments: Vec<DeploymentConfig>,
+}
+
+impl ClusterConfig {
+    /// Materialize a [`Cluster`]; returns it plus deployment ids in
+    /// config order.
+    pub fn build(&self) -> (Cluster, Vec<crate::cluster::DeploymentId>) {
+        let mut cluster = Cluster::new();
+        for n in &self.nodes {
+            cluster.add_node(
+                NodeSpec::new(&n.name, n.tier, n.zone, n.cpu_millis, n.ram_mb)
+                    .with_reserved(n.reserved_cpu_millis, n.reserved_ram_mb),
+            );
+        }
+        let mut ids = Vec::new();
+        for d in &self.deployments {
+            ids.push(cluster.add_deployment(Deployment::new(
+                &d.name,
+                Selector::new(d.tier, d.zone),
+                PodSpec::new(d.pod_cpu_millis, d.pod_ram_mb),
+                d.min_replicas,
+                d.max_replicas,
+            )));
+        }
+        (cluster, ids)
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.nodes.is_empty() {
+            bail!("cluster has no nodes");
+        }
+        if self.deployments.is_empty() {
+            bail!("cluster has no deployments");
+        }
+        for d in &self.deployments {
+            if d.pod_cpu_millis == 0 {
+                bail!("deployment {} has zero-CPU pods", d.name);
+            }
+            if d.min_replicas > d.max_replicas {
+                bail!("deployment {}: min > max replicas", d.name);
+            }
+            // Every deployment must have at least one matching node.
+            let sel = Selector::new(d.tier, d.zone);
+            let matches = self.nodes.iter().any(|n| {
+                sel.matches(
+                    &NodeSpec::new(&n.name, n.tier, n.zone, n.cpu_millis, n.ram_mb),
+                )
+            });
+            if !matches {
+                bail!("deployment {} matches no node", d.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// PPA arguments — Table 4 of the paper.
+#[derive(Debug, Clone)]
+pub struct PpaArgs {
+    /// `ModelType`: "lstm", "arma" or "naive".
+    pub model_type: String,
+    /// `KeyMetric`: "cpu", "ram", "net_in", "net_out" or "req_rate".
+    pub key_metric: String,
+    /// `ControlInterval` in seconds.
+    pub control_interval_secs: u64,
+    /// `UpdateInterval` in hours.
+    pub update_interval_hours: f64,
+    /// `Threashold` (sic, Table 4) on the key metric.
+    pub threshold: f64,
+    /// Update policy 1/2/3 (§4.2.3).
+    pub update_policy: u8,
+    /// Confidence threshold for Bayesian models.
+    pub confidence_threshold: f64,
+}
+
+impl Default for PpaArgs {
+    fn default() -> Self {
+        PpaArgs {
+            model_type: "lstm".into(),
+            key_metric: "cpu".into(),
+            control_interval_secs: 20,
+            update_interval_hours: 1.0,
+            threshold: 70.0,
+            update_policy: 3,
+            confidence_threshold: 0.5,
+        }
+    }
+}
+
+impl PpaArgs {
+    pub fn key_metric_index(&self) -> crate::Result<usize> {
+        crate::metrics::METRIC_NAMES
+            .iter()
+            .position(|&n| n == self.key_metric)
+            .with_context(|| format!("unknown key metric '{}'", self.key_metric))
+    }
+
+    pub fn update_policy_enum(&self) -> crate::Result<UpdatePolicy> {
+        Ok(match self.update_policy {
+            1 => UpdatePolicy::KeepSeed,
+            2 => UpdatePolicy::RetrainScratch,
+            3 => UpdatePolicy::FineTune,
+            p => bail!("update policy must be 1..=3, got {p}"),
+        })
+    }
+
+    pub fn control_interval(&self) -> Time {
+        self.control_interval_secs * SEC
+    }
+
+    pub fn update_interval(&self) -> Time {
+        (self.update_interval_hours * HOUR as f64) as Time
+    }
+
+    /// To the runtime PpaConfig.
+    pub fn to_ppa_config(&self) -> crate::Result<crate::autoscaler::PpaConfig> {
+        Ok(crate::autoscaler::PpaConfig {
+            key_metric: self.key_metric_index()?,
+            threshold: self.threshold,
+            control_interval: self.control_interval(),
+            update_interval: self.update_interval(),
+            update_policy: self.update_policy_enum()?,
+            confidence_threshold: self.confidence_threshold,
+            downscale_stabilization: 2 * crate::sim::MIN,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON loading
+// ---------------------------------------------------------------------------
+
+fn tier_from(s: &str) -> crate::Result<Tier> {
+    match s {
+        "cloud" => Ok(Tier::Cloud),
+        "edge" => Ok(Tier::Edge),
+        other => bail!("unknown tier '{other}'"),
+    }
+}
+
+impl ClusterConfig {
+    pub fn from_json(doc: &Json) -> crate::Result<Self> {
+        let mut nodes = Vec::new();
+        for n in doc.get("nodes").as_arr().context("nodes array")? {
+            nodes.push(NodeConfig {
+                name: n.get("name").as_str().context("node.name")?.to_string(),
+                tier: tier_from(n.get("tier").as_str().context("node.tier")?)?,
+                zone: n.get("zone").as_usize().context("node.zone")? as u32,
+                cpu_millis: n.get("cpu_millis").as_usize().context("node.cpu_millis")? as u32,
+                ram_mb: n.get("ram_mb").as_usize().context("node.ram_mb")? as u32,
+                reserved_cpu_millis: n.get("reserved_cpu_millis").as_usize().unwrap_or(200)
+                    as u32,
+                reserved_ram_mb: n.get("reserved_ram_mb").as_usize().unwrap_or(256) as u32,
+            });
+        }
+        let mut deployments = Vec::new();
+        for d in doc.get("deployments").as_arr().context("deployments")? {
+            deployments.push(DeploymentConfig {
+                name: d.get("name").as_str().context("dep.name")?.to_string(),
+                tier: tier_from(d.get("tier").as_str().context("dep.tier")?)?,
+                zone: d.get("zone").as_usize().map(|z| z as u32),
+                pod_cpu_millis: d
+                    .get("pod_cpu_millis")
+                    .as_usize()
+                    .context("dep.pod_cpu_millis")? as u32,
+                pod_ram_mb: d.get("pod_ram_mb").as_usize().context("dep.pod_ram_mb")? as u32,
+                min_replicas: d.get("min_replicas").as_usize().unwrap_or(1),
+                max_replicas: d.get("max_replicas").as_usize().unwrap_or(100),
+                initial_replicas: d.get("initial_replicas").as_usize().unwrap_or(1),
+            });
+        }
+        let cfg = ClusterConfig { nodes, deployments };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = Json::parse(&text)?;
+        Self::from_json(doc.get("cluster"))
+            .or_else(|_| Self::from_json(&doc))
+            .with_context(|| format!("parsing cluster config {}", path.display()))
+    }
+}
+
+impl PpaArgs {
+    pub fn from_json(doc: &Json) -> crate::Result<Self> {
+        let d = PpaArgs::default();
+        let args = PpaArgs {
+            model_type: doc
+                .get("ModelType")
+                .as_str()
+                .unwrap_or(&d.model_type)
+                .to_string(),
+            key_metric: doc
+                .get("KeyMetric")
+                .as_str()
+                .unwrap_or(&d.key_metric)
+                .to_string(),
+            control_interval_secs: doc
+                .get("ControlInterval")
+                .as_usize()
+                .unwrap_or(d.control_interval_secs as usize) as u64,
+            update_interval_hours: doc
+                .get("UpdateInterval")
+                .as_f64()
+                .unwrap_or(d.update_interval_hours),
+            threshold: doc.get("Threashold").as_f64().unwrap_or(d.threshold),
+            update_policy: doc.get("UpdatePolicy").as_usize().unwrap_or(3) as u8,
+            confidence_threshold: doc
+                .get("ConfidenceThreshold")
+                .as_f64()
+                .unwrap_or(d.confidence_threshold),
+        };
+        // Validate eagerly.
+        args.key_metric_index()?;
+        args.update_policy_enum()?;
+        if args.control_interval_secs == 0 {
+            bail!("ControlInterval must be positive");
+        }
+        Ok(args)
+    }
+}
+
+/// Task-cost calibration from JSON (optional fields, defaults otherwise).
+pub fn costs_from_json(doc: &Json) -> TaskCosts {
+    let d = TaskCosts::default();
+    TaskCosts {
+        sort_core_secs: doc.get("sort_core_secs").as_f64().unwrap_or(d.sort_core_secs),
+        eigen_core_secs: doc
+            .get("eigen_core_secs")
+            .as_f64()
+            .unwrap_or(d.eigen_core_secs),
+        overhead: doc
+            .get("overhead_ms")
+            .as_f64()
+            .map(|ms| (ms * MS as f64) as Time)
+            .unwrap_or(d.overhead),
+        network_latency: doc
+            .get("network_latency_ms")
+            .as_f64()
+            .map(|ms| (ms * MS as f64) as Time)
+            .unwrap_or(d.network_latency),
+        forward_latency: doc
+            .get("forward_latency_ms")
+            .as_f64()
+            .map(|ms| (ms * MS as f64) as Time)
+            .unwrap_or(d.forward_latency),
+        jitter_std: doc.get("jitter_std").as_f64().unwrap_or(d.jitter_std),
+        base_burn_frac: doc
+            .get("base_burn_frac")
+            .as_f64()
+            .unwrap_or(d.base_burn_frac),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_preset_builds_and_validates() {
+        let cfg = paper_cluster();
+        cfg.validate().unwrap();
+        let (cluster, ids) = cfg.build();
+        assert_eq!(cluster.nodes.len(), 7); // 1 control + 2 cloud + 4 edge
+        assert_eq!(ids.len(), 3); // z1, z2, cloud
+    }
+
+    #[test]
+    fn cluster_json_roundtrip() {
+        let text = r#"{
+          "nodes": [
+            {"name": "c1", "tier": "cloud", "zone": 0, "cpu_millis": 3000, "ram_mb": 3072},
+            {"name": "e1", "tier": "edge", "zone": 1, "cpu_millis": 2000, "ram_mb": 2048}
+          ],
+          "deployments": [
+            {"name": "edge-z1", "tier": "edge", "zone": 1,
+             "pod_cpu_millis": 500, "pod_ram_mb": 256},
+            {"name": "cloud", "tier": "cloud",
+             "pod_cpu_millis": 1000, "pod_ram_mb": 512, "max_replicas": 8}
+          ]
+        }"#;
+        let cfg = ClusterConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.nodes.len(), 2);
+        assert_eq!(cfg.deployments[1].max_replicas, 8);
+        assert_eq!(cfg.deployments[0].zone, Some(1));
+        assert_eq!(cfg.deployments[1].zone, None);
+    }
+
+    #[test]
+    fn invalid_cluster_rejected() {
+        // Deployment matches no node.
+        let text = r#"{
+          "nodes": [{"name": "c1", "tier": "cloud", "zone": 0, "cpu_millis": 3000, "ram_mb": 3072}],
+          "deployments": [{"name": "edge", "tier": "edge", "pod_cpu_millis": 500, "pod_ram_mb": 256}]
+        }"#;
+        assert!(ClusterConfig::from_json(&Json::parse(text).unwrap()).is_err());
+    }
+
+    #[test]
+    fn ppa_args_table4_mapping() {
+        let doc = Json::parse(
+            r#"{"ModelType": "arma", "KeyMetric": "req_rate", "ControlInterval": 30,
+                "UpdateInterval": 2, "Threashold": 4.5, "UpdatePolicy": 2}"#,
+        )
+        .unwrap();
+        let args = PpaArgs::from_json(&doc).unwrap();
+        assert_eq!(args.model_type, "arma");
+        assert_eq!(args.key_metric_index().unwrap(), crate::metrics::M_REQ_RATE);
+        assert_eq!(args.control_interval(), 30 * SEC);
+        assert_eq!(args.update_interval(), 2 * HOUR);
+        assert_eq!(
+            args.update_policy_enum().unwrap(),
+            UpdatePolicy::RetrainScratch
+        );
+        assert!((args.threshold - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ppa_args_bad_values_rejected() {
+        let doc = Json::parse(r#"{"KeyMetric": "bogus"}"#).unwrap();
+        assert!(PpaArgs::from_json(&doc).is_err());
+        let doc = Json::parse(r#"{"UpdatePolicy": 5}"#).unwrap();
+        assert!(PpaArgs::from_json(&doc).is_err());
+        let doc = Json::parse(r#"{"ControlInterval": 0}"#).unwrap();
+        assert!(PpaArgs::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn costs_json_defaults_and_overrides() {
+        let d = costs_from_json(&Json::parse("{}").unwrap());
+        assert!((d.sort_core_secs - TaskCosts::default().sort_core_secs).abs() < 1e-12);
+        let c = costs_from_json(&Json::parse(r#"{"sort_core_secs": 0.5, "overhead_ms": 10}"#).unwrap());
+        assert!((c.sort_core_secs - 0.5).abs() < 1e-12);
+        assert_eq!(c.overhead, 10 * MS);
+    }
+}

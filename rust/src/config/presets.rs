@@ -1,0 +1,210 @@
+//! Presets mirroring the paper's testbed.
+
+use super::{ClusterConfig, DeploymentConfig, NodeConfig};
+use crate::cluster::Tier;
+
+/// Table 2: 1 cloud control node (4000m/4GB), 2 cloud workers
+/// (3000m/3GB), 2 edge zones with 2 worker nodes each (2000m/2GB).
+/// The control node is fully reserved (control plane + Prometheus stack
+/// + the autoscalers themselves run there — §3.2.3).
+pub fn paper_cluster() -> ClusterConfig {
+    let mut nodes = vec![NodeConfig {
+        name: "cloud-control".into(),
+        tier: Tier::Cloud,
+        zone: 0,
+        cpu_millis: 4000,
+        ram_mb: 4096,
+        // Fully reserved: hosts no worker pods.
+        reserved_cpu_millis: 4000,
+        reserved_ram_mb: 4096,
+    }];
+    for i in 1..=2 {
+        nodes.push(NodeConfig {
+            name: format!("cloud-worker-{i}"),
+            tier: Tier::Cloud,
+            zone: 0,
+            cpu_millis: 3000,
+            ram_mb: 3072,
+            reserved_cpu_millis: 200,
+            reserved_ram_mb: 256,
+        });
+    }
+    for zone in 1..=2u32 {
+        for i in 1..=2 {
+            nodes.push(NodeConfig {
+                name: format!("edge-z{zone}-worker-{i}"),
+                tier: Tier::Edge,
+                zone,
+                cpu_millis: 2000,
+                ram_mb: 2048,
+                // Edge nodes also host the zone entrypoint + exporter.
+                reserved_cpu_millis: 300,
+                reserved_ram_mb: 384,
+            });
+        }
+    }
+
+    let deployments = vec![
+        DeploymentConfig {
+            name: "edge-workers-z1".into(),
+            tier: Tier::Edge,
+            zone: Some(1),
+            pod_cpu_millis: 500,
+            pod_ram_mb: 256,
+            min_replicas: 1,
+            max_replicas: 100,
+            initial_replicas: 1,
+        },
+        DeploymentConfig {
+            name: "edge-workers-z2".into(),
+            tier: Tier::Edge,
+            zone: Some(2),
+            pod_cpu_millis: 500,
+            pod_ram_mb: 256,
+            min_replicas: 1,
+            max_replicas: 100,
+            initial_replicas: 1,
+        },
+        DeploymentConfig {
+            name: "cloud-workers".into(),
+            tier: Tier::Cloud,
+            zone: None,
+            pod_cpu_millis: 1000,
+            pod_ram_mb: 512,
+            min_replicas: 1,
+            max_replicas: 100,
+            initial_replicas: 1,
+        },
+    ];
+
+    ClusterConfig { nodes, deployments }
+}
+
+/// A single unconstrained node — the paper's pretraining setup (§5.3.1:
+/// "running the example application for 10 hours ... on a single
+/// unconstrained node").
+pub fn unconstrained_cluster() -> ClusterConfig {
+    ClusterConfig {
+        nodes: vec![
+            NodeConfig {
+                name: "big-edge".into(),
+                tier: Tier::Edge,
+                zone: 1,
+                cpu_millis: 64_000,
+                ram_mb: 65_536,
+                reserved_cpu_millis: 0,
+                reserved_ram_mb: 0,
+            },
+            NodeConfig {
+                name: "big-cloud".into(),
+                tier: Tier::Cloud,
+                zone: 0,
+                cpu_millis: 64_000,
+                ram_mb: 65_536,
+                reserved_cpu_millis: 0,
+                reserved_ram_mb: 0,
+            },
+        ],
+        deployments: vec![
+            DeploymentConfig {
+                name: "edge-workers-z1".into(),
+                tier: Tier::Edge,
+                zone: Some(1),
+                pod_cpu_millis: 500,
+                pod_ram_mb: 256,
+                min_replicas: 1,
+                max_replicas: 100,
+                initial_replicas: 1,
+            },
+            DeploymentConfig {
+                name: "cloud-workers".into(),
+                tier: Tier::Cloud,
+                zone: None,
+                pod_cpu_millis: 1000,
+                pod_ram_mb: 512,
+                min_replicas: 1,
+                max_replicas: 100,
+                initial_replicas: 1,
+            },
+        ],
+    }
+}
+
+/// A small two-node cluster for quickstart/demo runs.
+pub fn quickstart_cluster() -> ClusterConfig {
+    ClusterConfig {
+        nodes: vec![
+            NodeConfig {
+                name: "edge-1".into(),
+                tier: Tier::Edge,
+                zone: 1,
+                cpu_millis: 2000,
+                ram_mb: 2048,
+                reserved_cpu_millis: 200,
+                reserved_ram_mb: 256,
+            },
+            NodeConfig {
+                name: "cloud-1".into(),
+                tier: Tier::Cloud,
+                zone: 0,
+                cpu_millis: 3000,
+                ram_mb: 3072,
+                reserved_cpu_millis: 200,
+                reserved_ram_mb: 256,
+            },
+        ],
+        deployments: vec![
+            DeploymentConfig {
+                name: "edge-workers-z1".into(),
+                tier: Tier::Edge,
+                zone: Some(1),
+                pod_cpu_millis: 500,
+                pod_ram_mb: 256,
+                min_replicas: 1,
+                max_replicas: 16,
+                initial_replicas: 1,
+            },
+            DeploymentConfig {
+                name: "cloud-workers".into(),
+                tier: Tier::Cloud,
+                zone: None,
+                pod_cpu_millis: 1000,
+                pod_ram_mb: 512,
+                min_replicas: 1,
+                max_replicas: 8,
+                initial_replicas: 1,
+            },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_matches_table2() {
+        let cfg = paper_cluster();
+        assert_eq!(cfg.nodes.len(), 7);
+        let control = &cfg.nodes[0];
+        assert_eq!(control.cpu_millis, 4000);
+        assert_eq!(control.reserved_cpu_millis, 4000, "control hosts no workers");
+        let edge: Vec<_> = cfg.nodes.iter().filter(|n| n.tier == Tier::Edge).collect();
+        assert_eq!(edge.len(), 4, "2 zones x 2 workers");
+        assert!(edge.iter().all(|n| n.cpu_millis == 2000 && n.ram_mb == 2048));
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn all_presets_validate() {
+        paper_cluster().validate().unwrap();
+        unconstrained_cluster().validate().unwrap();
+        quickstart_cluster().validate().unwrap();
+    }
+
+    #[test]
+    fn unconstrained_has_huge_capacity() {
+        let (cluster, ids) = unconstrained_cluster().build();
+        assert!(cluster.max_replicas(ids[0]) >= 100);
+    }
+}

@@ -1,0 +1,357 @@
+//! The simulation driver: wires cluster + app + metrics + workload +
+//! autoscalers into one event loop (the whole Fig 3 system).
+
+use crate::app::{App, TaskCosts};
+use crate::autoscaler::Autoscaler;
+use crate::cluster::{Cluster, DeploymentId};
+use crate::config::ClusterConfig;
+use crate::metrics::{MetricsPipeline, DEFAULT_SCRAPE_INTERVAL};
+use crate::sim::{Event, EventQueue, ServiceId, Time};
+use crate::util::rng::Pcg64;
+use crate::workload::Generator;
+
+/// An autoscaler bound to its target service/deployment.
+pub struct ScalerBinding {
+    pub autoscaler: Box<dyn Autoscaler>,
+    pub service: ServiceId,
+    pub deployment: DeploymentId,
+}
+
+/// Per-scrape RIR sample for one service (Figs 10, 13, 14).
+#[derive(Debug, Clone, Copy)]
+pub struct RirSample {
+    pub time: Time,
+    pub service: ServiceId,
+    pub rir: f64,
+}
+
+/// The assembled world.
+pub struct SimWorld {
+    pub queue: EventQueue,
+    pub cluster: Cluster,
+    pub app: App,
+    pub metrics: MetricsPipeline,
+    pub generators: Vec<Generator>,
+    pub scalers: Vec<ScalerBinding>,
+    pub rir_log: Vec<RirSample>,
+    /// (time, service, replicas) per scrape — replica-trajectory data.
+    pub replica_log: Vec<(Time, ServiceId, usize)>,
+    rng_cluster: Pcg64,
+    rng_service: Pcg64,
+    rng_workload: Pcg64,
+    scrape_interval: Time,
+    /// Events processed (perf counter).
+    pub events_processed: u64,
+}
+
+impl SimWorld {
+    /// Build from a cluster config. Deployment order in the config maps
+    /// to services: all edge deployments (each with its zone), then the
+    /// last deployment as the cloud Eigen pool.
+    pub fn build(cfg: &ClusterConfig, costs: TaskCosts, seed: u64) -> Self {
+        let (mut cluster, dep_ids) = cfg.build();
+        assert!(
+            dep_ids.len() >= 2,
+            "need at least one edge and one cloud deployment"
+        );
+        let edge: Vec<(u32, DeploymentId)> = cfg.deployments[..dep_ids.len() - 1]
+            .iter()
+            .zip(&dep_ids)
+            .map(|(d, &id)| (d.zone.expect("edge deployments must set zone"), id))
+            .collect();
+        let cloud = *dep_ids.last().unwrap();
+        let app = App::new(costs, &edge, cloud);
+        let metrics = MetricsPipeline::with_base_burn(
+            DEFAULT_SCRAPE_INTERVAL,
+            app.services.len(),
+            costs.base_burn_frac,
+        );
+
+        let mut queue = EventQueue::new();
+        let mut rng_cluster = Pcg64::new(seed, 1);
+        // Initial replicas.
+        for (dcfg, &id) in cfg.deployments.iter().zip(&dep_ids) {
+            cluster.reconcile(id, dcfg.initial_replicas, &mut queue, &mut rng_cluster);
+        }
+
+        SimWorld {
+            queue,
+            cluster,
+            app,
+            metrics,
+            generators: Vec::new(),
+            scalers: Vec::new(),
+            rir_log: Vec::new(),
+            replica_log: Vec::new(),
+            rng_cluster,
+            rng_service: Pcg64::new(seed, 2),
+            rng_workload: Pcg64::new(seed, 3),
+            scrape_interval: DEFAULT_SCRAPE_INTERVAL,
+            events_processed: 0,
+        }
+    }
+
+    /// Register a workload generator (started by [`Self::run_until`]).
+    pub fn add_generator(&mut self, gen: Generator) {
+        self.generators.push(gen);
+    }
+
+    /// Bind an autoscaler to service index `service_idx` (== deployment
+    /// order in the config).
+    pub fn add_scaler(&mut self, autoscaler: Box<dyn Autoscaler>, service_idx: usize) {
+        let service = ServiceId(service_idx as u32);
+        let deployment = self.app.services[service_idx].deployment;
+        self.scalers.push(ScalerBinding {
+            autoscaler,
+            service,
+            deployment,
+        });
+    }
+
+    fn schedule_initial(&mut self) {
+        for (i, g) in self.generators.iter_mut().enumerate() {
+            g.start(i as u32, &mut self.queue);
+        }
+        self.queue
+            .schedule_in(self.scrape_interval, Event::Scrape);
+        for (i, s) in self.scalers.iter().enumerate() {
+            self.queue.schedule_in(
+                s.autoscaler.control_interval(),
+                Event::AutoscaleTick { scaler: i as u32 },
+            );
+            if let Some(u) = s.autoscaler.update_interval() {
+                self.queue
+                    .schedule_in(u, Event::ModelUpdateTick { scaler: i as u32 });
+            }
+        }
+    }
+
+    /// Run the world until simulated `end`. Returns the number of events
+    /// processed. Subsequent calls continue from where the previous run
+    /// stopped (periodic ticks keep self-rescheduling).
+    pub fn run_until(&mut self, end: Time) -> u64 {
+        if self.events_processed == 0 {
+            self.schedule_initial();
+        }
+        let mut processed = 0u64;
+        while let Some(next_t) = self.queue.peek_time() {
+            if next_t > end {
+                break;
+            }
+            let (now, event) = self.queue.pop().unwrap();
+            processed += 1;
+            match event {
+                Event::RequestArrival { request_id } => {
+                    self.app.on_arrival(
+                        request_id,
+                        &mut self.cluster,
+                        &mut self.queue,
+                        &mut self.rng_service,
+                    );
+                }
+                Event::ServiceComplete { pod, request_id } => {
+                    self.app.on_complete(
+                        pod,
+                        request_id,
+                        &mut self.cluster,
+                        &mut self.queue,
+                        &mut self.rng_service,
+                    );
+                }
+                Event::PodRunning { pod } => {
+                    if self.cluster.on_pod_running(pod) {
+                        let dep = self.cluster.pod(pod).deployment;
+                        if let Some(svc) = self
+                            .app
+                            .services
+                            .iter()
+                            .position(|s| s.deployment == dep)
+                        {
+                            self.app.dispatch(
+                                ServiceId(svc as u32),
+                                &mut self.cluster,
+                                &mut self.queue,
+                                &mut self.rng_service,
+                            );
+                        }
+                    }
+                }
+                Event::PodTerminated { pod } => {
+                    self.cluster.on_pod_terminated(pod);
+                }
+                Event::Scrape => {
+                    self.metrics.scrape(now, &mut self.cluster, &mut self.app);
+                    for svc_idx in 0..self.app.services.len() {
+                        let svc = ServiceId(svc_idx as u32);
+                        let snap = self.metrics.latest_snapshot(svc);
+                        if let Some(rir) = snap.rir() {
+                            self.rir_log.push(RirSample {
+                                time: now,
+                                service: svc,
+                                rir,
+                            });
+                        }
+                        self.replica_log.push((now, svc, snap.replicas));
+                    }
+                    self.queue
+                        .schedule_in(self.scrape_interval, Event::Scrape);
+                }
+                Event::AutoscaleTick { scaler } => {
+                    let b = &mut self.scalers[scaler as usize];
+                    let decision = b.autoscaler.evaluate(
+                        now,
+                        b.service,
+                        b.deployment,
+                        &self.metrics,
+                        &self.cluster,
+                    );
+                    self.cluster.reconcile(
+                        b.deployment,
+                        decision.desired,
+                        &mut self.queue,
+                        &mut self.rng_cluster,
+                    );
+                    self.cluster
+                        .retry_pending(&mut self.queue, &mut self.rng_cluster);
+                    self.queue.schedule_in(
+                        b.autoscaler.control_interval(),
+                        Event::AutoscaleTick { scaler },
+                    );
+                }
+                Event::ModelUpdateTick { scaler } => {
+                    let b = &mut self.scalers[scaler as usize];
+                    // A failed model update must not kill the system
+                    // (Algorithm 1 robustness); log and continue.
+                    if let Err(e) = b.autoscaler.model_update(now) {
+                        eprintln!("[t={now}] model update failed: {e:#}");
+                    }
+                    if let Some(u) = b.autoscaler.update_interval() {
+                        self.queue
+                            .schedule_in(u, Event::ModelUpdateTick { scaler });
+                    }
+                }
+                Event::WorkloadTick { generator } => {
+                    let g = &mut self.generators[generator as usize];
+                    let _alive = g.on_tick(
+                        generator,
+                        &mut self.app,
+                        &mut self.queue,
+                        &mut self.rng_workload,
+                    );
+                }
+            }
+        }
+        self.events_processed += processed;
+        processed
+    }
+
+    /// RIR samples for one service.
+    pub fn rir_for(&self, service_idx: usize) -> Vec<f64> {
+        self.rir_log
+            .iter()
+            .filter(|s| s.service == ServiceId(service_idx as u32))
+            .map(|s| s.rir)
+            .collect()
+    }
+
+    /// Response times (seconds) filtered by task type.
+    pub fn response_times(&self, task: crate::app::TaskType) -> Vec<f64> {
+        self.app
+            .responses
+            .iter()
+            .filter(|r| r.task == task)
+            .map(|r| r.response_secs())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::TaskType;
+    use crate::autoscaler::Hpa;
+    use crate::config::quickstart_cluster;
+    use crate::sim::{MIN, SEC};
+    use crate::workload::{Generator, RandomAccessGen};
+
+    fn hpa_world(seed: u64) -> SimWorld {
+        let cfg = quickstart_cluster();
+        let mut w = SimWorld::build(&cfg, TaskCosts::default(), seed);
+        w.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
+        w.add_scaler(Box::new(Hpa::with_defaults()), 0);
+        w.add_scaler(Box::new(Hpa::with_defaults()), 1);
+        w
+    }
+
+    #[test]
+    fn end_to_end_10_minutes_with_hpa() {
+        let mut w = hpa_world(11);
+        let events = w.run_until(10 * MIN);
+        assert!(events > 100, "world should be busy: {events} events");
+        assert!(
+            w.app.responses.len() > 50,
+            "requests completed: {}",
+            w.app.responses.len()
+        );
+        // Both task types present (0.9/0.1 mix).
+        assert!(!w.response_times(TaskType::Sort).is_empty());
+        assert!(!w.rir_log.is_empty());
+        // Replica counts stayed within physical bounds.
+        assert!(w
+            .replica_log
+            .iter()
+            .all(|&(_, svc, r)| if svc == ServiceId(0) { r <= 16 } else { r <= 8 }));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = hpa_world(42);
+        let mut b = hpa_world(42);
+        a.run_until(5 * MIN);
+        b.run_until(5 * MIN);
+        assert_eq!(a.app.responses.len(), b.app.responses.len());
+        assert_eq!(a.events_processed, b.events_processed);
+        let ra: Vec<f64> = a.app.responses.iter().map(|r| r.response_secs()).collect();
+        let rb: Vec<f64> = b.app.responses.iter().map(|r| r.response_secs()).collect();
+        assert_eq!(ra, rb, "bit-identical runs for equal seeds");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = hpa_world(1);
+        let mut b = hpa_world(2);
+        a.run_until(5 * MIN);
+        b.run_until(5 * MIN);
+        let ra: Vec<f64> = a.app.responses.iter().map(|r| r.response_secs()).collect();
+        let rb: Vec<f64> = b.app.responses.iter().map(|r| r.response_secs()).collect();
+        assert_ne!(ra, rb);
+    }
+
+    #[test]
+    fn run_can_continue() {
+        let mut w = hpa_world(3);
+        w.run_until(2 * MIN);
+        let n1 = w.app.responses.len();
+        w.run_until(4 * MIN);
+        let n2 = w.app.responses.len();
+        assert!(n2 > n1);
+    }
+
+    #[test]
+    fn hpa_scales_up_under_load() {
+        let mut w = hpa_world(7);
+        w.run_until(30 * MIN);
+        let max_replicas = w
+            .replica_log
+            .iter()
+            .filter(|&&(_, svc, _)| svc == ServiceId(0))
+            .map(|&(_, _, r)| r)
+            .max()
+            .unwrap();
+        assert!(
+            max_replicas > 1,
+            "heavy phases must trigger scale-up; max={max_replicas}"
+        );
+        let _ = SEC;
+    }
+}

@@ -1,0 +1,109 @@
+//! Experiment harnesses — one per paper figure (DESIGN.md §5 index).
+//!
+//! Each `figN` function reproduces the corresponding figure's data:
+//! it builds the paper's cluster, replays the figure's workload under the
+//! figure's autoscaler configuration(s), and returns the same summary
+//! rows the paper reports (means, stds, MSEs, p-values). CSV dumps land
+//! in `target/experiments/` for plotting.
+
+pub mod driver;
+pub mod figures;
+pub mod pretrain;
+
+pub use driver::{RirSample, ScalerBinding, SimWorld};
+pub use figures::*;
+pub use pretrain::pretrain_histories;
+
+use crate::forecast::Forecaster;
+use crate::metrics::METRIC_DIM;
+use crate::runtime::LstmRuntime;
+use std::rc::Rc;
+
+/// Which predictive model a PPA is injected with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Lstm,
+    Arma,
+    Naive,
+}
+
+impl ModelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Lstm => "lstm",
+            ModelKind::Arma => "arma",
+            ModelKind::Naive => "naive",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "lstm" => Ok(ModelKind::Lstm),
+            "arma" => Ok(ModelKind::Arma),
+            "naive" => Ok(ModelKind::Naive),
+            other => anyhow::bail!("unknown model type '{other}'"),
+        }
+    }
+}
+
+/// Build a pretrained forecaster of `kind` (the "injected seed model").
+pub fn make_forecaster(
+    kind: ModelKind,
+    runtime: Option<&Rc<LstmRuntime>>,
+    pretrain: &[[f64; METRIC_DIM]],
+    seed: u32,
+) -> crate::Result<Box<dyn Forecaster>> {
+    use anyhow::Context;
+    match kind {
+        ModelKind::Lstm => {
+            let rt = runtime
+                .context("LSTM model requires the PJRT runtime (run `make artifacts`)")?;
+            let mut f = crate::forecast::LstmForecaster::new(rt.clone(), seed)?;
+            f.pretrain_on(pretrain)
+                .context("pretraining the LSTM seed model")?;
+            Ok(Box::new(f))
+        }
+        ModelKind::Arma => {
+            let mut f = crate::forecast::ArmaForecaster::new();
+            f.retrain(pretrain, crate::forecast::UpdatePolicy::RetrainScratch)
+                .context("fitting the ARMA seed model")?;
+            Ok(Box::new(f))
+        }
+        ModelKind::Naive => Ok(Box::new(crate::forecast::NaiveForecaster)),
+    }
+}
+
+/// Load the PJRT runtime if artifacts are present.
+pub fn try_runtime() -> Option<Rc<LstmRuntime>> {
+    let dir = crate::runtime::find_artifacts_dir()?;
+    match LstmRuntime::load(&dir) {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            eprintln!("warning: artifacts present but failed to load: {e:#}");
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_kind_parse() {
+        assert_eq!(ModelKind::parse("lstm").unwrap(), ModelKind::Lstm);
+        assert_eq!(ModelKind::parse("arma").unwrap(), ModelKind::Arma);
+        assert!(ModelKind::parse("gpt5").is_err());
+    }
+
+    #[test]
+    fn naive_forecaster_needs_no_runtime() {
+        let f = make_forecaster(ModelKind::Naive, None, &[], 0).unwrap();
+        assert_eq!(f.name(), "naive-last-value");
+    }
+
+    #[test]
+    fn lstm_without_runtime_errors() {
+        assert!(make_forecaster(ModelKind::Lstm, None, &[], 0).is_err());
+    }
+}

@@ -1,0 +1,295 @@
+//! The LSTM forecaster — the paper's optimal predictive model, executed
+//! entirely through the AOT-compiled JAX/Pallas artifacts via PJRT.
+//!
+//! Prediction: scale the last `seq_len` metric rows, run the `predict`
+//! artifact, inverse-scale. Updating: the three paper policies map to
+//! (1) no-op, (2) re-init params + retrain on the history file,
+//! (3) extra `train_epoch` dispatches from the current parameters.
+
+use super::window::{latest_window, WindowDataset};
+use super::{Forecaster, MinMaxScaler, Scaler, UpdatePolicy};
+use crate::metrics::METRIC_DIM;
+use crate::runtime::{AdamState, LstmParams, LstmRuntime};
+use crate::util::rng::Pcg64;
+use std::rc::Rc;
+
+/// `train_epoch` dispatches for a from-scratch (re)train. Each dispatch
+/// runs `epoch_batches x batch` samples (16 x 32 = 512 by default).
+pub const SCRATCH_DISPATCHES: usize = 24;
+/// Dispatches for a policy-3 fine-tune ("several extra epochs").
+pub const FINETUNE_DISPATCHES: usize = 6;
+
+/// LSTM forecaster state (the PPA's *model file* + *scaler*).
+pub struct LstmForecaster {
+    runtime: Rc<LstmRuntime>,
+    params: LstmParams,
+    opt: AdamState,
+    scaler: MinMaxScaler,
+    seed: u32,
+    rng: Pcg64,
+    /// Rolling one-step absolute errors (pseudo-confidence source).
+    recent_errors: Vec<f64>,
+    last_prediction: Option<[f64; METRIC_DIM]>,
+}
+
+impl LstmForecaster {
+    /// Fresh forecaster with seeded parameters (no pretraining yet).
+    pub fn new(runtime: Rc<LstmRuntime>, seed: u32) -> crate::Result<Self> {
+        let params = runtime.init(seed)?;
+        let opt = AdamState::zeros(runtime.manifest());
+        Ok(LstmForecaster {
+            runtime,
+            params,
+            opt,
+            scaler: MinMaxScaler::identity(),
+            seed,
+            rng: Pcg64::new(seed as u64, 17),
+            recent_errors: Vec::new(),
+            last_prediction: None,
+        })
+    }
+
+    fn train_dispatches(
+        &mut self,
+        history: &[[f64; METRIC_DIM]],
+        dispatches: usize,
+    ) -> crate::Result<f32> {
+        let m = self.runtime.manifest();
+        let ds = WindowDataset::build(history, m.seq_len, &self.scaler);
+        let mut last_loss = f32::NAN;
+        for _ in 0..dispatches {
+            let Some((xs, ys)) = ds.epoch_batches(m.epoch_batches, m.batch, &mut self.rng)
+            else {
+                anyhow::bail!(
+                    "history too short for LSTM training ({} rows < seq_len {})",
+                    history.len(),
+                    m.seq_len + 1
+                );
+            };
+            last_loss = self
+                .runtime
+                .train_epoch(&mut self.params, &mut self.opt, &xs, &ys)?;
+        }
+        Ok(last_loss)
+    }
+
+    /// Record the realized metric row so the forecaster can calibrate its
+    /// pseudo-confidence (rolling relative error of recent predictions).
+    pub fn observe_actual(&mut self, actual: &[f64; METRIC_DIM]) {
+        if let Some(pred) = self.last_prediction.take() {
+            let mut rel = 0.0;
+            for f in 0..METRIC_DIM {
+                let scale = self.scaler.range[f].max(1e-9);
+                rel += ((pred[f] - actual[f]) / scale).abs() / METRIC_DIM as f64;
+            }
+            self.recent_errors.push(rel);
+            if self.recent_errors.len() > 30 {
+                self.recent_errors.remove(0);
+            }
+        }
+    }
+
+    pub fn seed(&self) -> u32 {
+        self.seed
+    }
+}
+
+impl LstmForecaster {
+    /// Pretrain the seed model on an offline history (paper §5.3.1: 10 h
+    /// of Random Access on an unconstrained node). Fits the scaler and
+    /// runs a from-scratch training pass; returns the final loss.
+    pub fn pretrain_on(&mut self, history: &[[f64; METRIC_DIM]]) -> crate::Result<f32> {
+        self.scaler = MinMaxScaler::fit(history);
+        self.train_dispatches(history, SCRATCH_DISPATCHES)
+    }
+}
+
+impl Forecaster for LstmForecaster {
+    fn name(&self) -> &str {
+        "lstm(50)"
+    }
+
+    fn predict(&mut self, history: &[[f64; METRIC_DIM]]) -> Option<[f64; METRIC_DIM]> {
+        let m = self.runtime.manifest();
+        let window = latest_window(history, m.seq_len, &self.scaler)?;
+        let scaled = self.runtime.predict(&self.params, &window).ok()?;
+        let mut out = [0.0; METRIC_DIM];
+        for f in 0..METRIC_DIM {
+            out[f] = self.scaler.inverse(f, scaled[f] as f64).max(0.0);
+        }
+        self.last_prediction = Some(out);
+        Some(out)
+    }
+
+    fn retrain(
+        &mut self,
+        history: &[[f64; METRIC_DIM]],
+        policy: UpdatePolicy,
+    ) -> crate::Result<()> {
+        match policy {
+            UpdatePolicy::KeepSeed => Ok(()),
+            UpdatePolicy::RetrainScratch => {
+                // Drop the model: fresh params (new stream), fresh Adam,
+                // refit scaler to the new data distribution.
+                self.seed = self.seed.wrapping_add(1);
+                self.params = self.runtime.init(self.seed)?;
+                self.opt = AdamState::zeros(self.runtime.manifest());
+                self.scaler = MinMaxScaler::fit(history);
+                self.train_dispatches(history, SCRATCH_DISPATCHES)?;
+                Ok(())
+            }
+            UpdatePolicy::FineTune => {
+                // Keep params/opt/scaler; extra epochs on the new data.
+                self.train_dispatches(history, FINETUNE_DISPATCHES)?;
+                Ok(())
+            }
+        }
+    }
+
+    fn observe(&mut self, actual: &[f64; METRIC_DIM]) {
+        self.observe_actual(actual);
+    }
+
+    fn is_bayesian(&self) -> bool {
+        // Pseudo-Bayesian: confidence from rolling empirical error.
+        !self.recent_errors.is_empty()
+    }
+
+    fn confidence(&self) -> f64 {
+        if self.recent_errors.is_empty() {
+            return 1.0;
+        }
+        let mean_rel =
+            self.recent_errors.iter().sum::<f64>() / self.recent_errors.len() as f64;
+        // Map mean relative error (in scaler std units) to (0, 1].
+        (1.0 / (1.0 + mean_rel)).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::find_artifacts_dir;
+
+    fn forecaster() -> Option<LstmForecaster> {
+        let dir = find_artifacts_dir()?;
+        let rt = Rc::new(LstmRuntime::load(&dir).expect("artifacts load"));
+        Some(LstmForecaster::new(rt, 7).unwrap())
+    }
+
+    fn sine_history(n: usize) -> Vec<[f64; METRIC_DIM]> {
+        (0..n)
+            .map(|i| {
+                let t = i as f64;
+                let base = 200.0 + 150.0 * (t / 25.0).sin();
+                [
+                    base,
+                    base * 0.8 + 20.0,
+                    base * 2.0,
+                    base * 1.5,
+                    base / 40.0,
+                ]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pretrained_lstm_tracks_sine() {
+        let Some(mut f) = forecaster() else {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        };
+        let h = sine_history(400);
+        let loss = f.pretrain_on(&h[..300]).unwrap();
+        assert!(loss.is_finite());
+
+        // Walk forward: predictions should track the actual CPU series
+        // much better than the series' own std.
+        let mut errs = Vec::new();
+        for i in 300..390 {
+            let pred = f.predict(&h[..i]).unwrap();
+            errs.push((pred[0] - h[i][0]).abs());
+        }
+        let mae = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!(mae < 60.0, "LSTM should track the sine; mae={mae}");
+    }
+
+    #[test]
+    fn short_history_returns_none() {
+        let Some(mut f) = forecaster() else {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        };
+        assert!(f.predict(&sine_history(3)).is_none());
+    }
+
+    #[test]
+    fn fine_tune_improves_on_shifted_distribution() {
+        let Some(mut f) = forecaster() else {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        };
+        let pre = sine_history(300);
+        f.pretrain_on(&pre).unwrap();
+
+        // Shifted regime: the sine moved up by 100.
+        let shifted: Vec<[f64; METRIC_DIM]> = sine_history(200)
+            .into_iter()
+            .map(|mut r| {
+                for v in &mut r {
+                    *v += 100.0;
+                }
+                r
+            })
+            .collect();
+
+        let mae = |f: &mut LstmForecaster| {
+            let mut errs = Vec::new();
+            for i in 150..190 {
+                if let Some(p) = f.predict(&shifted[..i]) {
+                    errs.push((p[0] - shifted[i][0]).abs());
+                }
+            }
+            errs.iter().sum::<f64>() / errs.len().max(1) as f64
+        };
+        let before = mae(&mut f);
+        f.retrain(&shifted[..150], UpdatePolicy::FineTune).unwrap();
+        let after = mae(&mut f);
+        assert!(
+            after < before * 1.05,
+            "fine-tune should not hurt: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn keep_seed_is_noop() {
+        let Some(mut f) = forecaster() else {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        };
+        let h = sine_history(100);
+        f.pretrain_on(&h).unwrap();
+        let params_before = f.params.clone();
+        f.retrain(&h, UpdatePolicy::KeepSeed).unwrap();
+        assert_eq!(f.params, params_before);
+    }
+
+    #[test]
+    fn confidence_tracks_errors() {
+        let Some(mut f) = forecaster() else {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        };
+        assert_eq!(f.confidence(), 1.0);
+        assert!(!f.is_bayesian());
+        let h = sine_history(100);
+        f.pretrain_on(&h).unwrap();
+        for i in 50..70 {
+            let _ = f.predict(&h[..i]);
+            f.observe_actual(&h[i]);
+        }
+        assert!(f.is_bayesian());
+        let c = f.confidence();
+        assert!((0.0..=1.0).contains(&c));
+    }
+}

@@ -1,0 +1,124 @@
+//! Time-series forecasters for the PPA (paper §4.2.2 model protocol).
+//!
+//! Every model consumes the 5-metric protocol vector history and predicts
+//! the next control-loop's full vector (the protocol: "the model should
+//! predict all input variables"). Implementations:
+//!
+//! * [`LstmForecaster`] — the paper's optimal model: the AOT-compiled
+//!   JAX/Pallas LSTM executed via PJRT ([`crate::runtime`]).
+//! * [`ArmaForecaster`] — the paper's baseline: per-series ARMA(1,1)
+//!   fitted from scratch by conditional-sum-of-squares (what statsmodels
+//!   did in the paper's stack).
+//! * [`NaiveForecaster`] — last-value persistence (sanity floor).
+
+pub mod arma;
+pub mod lstm;
+pub mod scaler;
+pub mod window;
+
+pub use arma::ArmaForecaster;
+pub use lstm::LstmForecaster;
+pub use scaler::{MinMaxScaler, Scaler, StandardScaler};
+
+use crate::metrics::METRIC_DIM;
+
+/// The paper's three model-update policies (§4.2.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdatePolicy {
+    /// Policy 1: never retrain; the seed model runs forever.
+    KeepSeed,
+    /// Policy 2: drop the model, retrain from scratch on the history file.
+    RetrainScratch,
+    /// Policy 3: fine-tune the current model for extra epochs on the
+    /// history file (paper's winner).
+    FineTune,
+}
+
+impl UpdatePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            UpdatePolicy::KeepSeed => "policy1-keep-seed",
+            UpdatePolicy::RetrainScratch => "policy2-retrain-scratch",
+            UpdatePolicy::FineTune => "policy3-fine-tune",
+        }
+    }
+}
+
+/// A one-step-ahead multivariate forecaster.
+pub trait Forecaster {
+    fn name(&self) -> &str;
+
+    /// Predict the next protocol vector from chronological `history`
+    /// (most recent last). `None` when the model cannot predict (not
+    /// enough history, invalid model file) — Algorithm 1 then falls back
+    /// to the current metric ("Robust" property).
+    fn predict(&mut self, history: &[[f64; METRIC_DIM]]) -> Option<[f64; METRIC_DIM]>;
+
+    /// Apply a model-update-loop step with the given policy over the
+    /// metrics-history file contents.
+    fn retrain(
+        &mut self,
+        history: &[[f64; METRIC_DIM]],
+        policy: UpdatePolicy,
+    ) -> crate::Result<()>;
+
+    /// Feed back the realized vector for the instant the last prediction
+    /// targeted (confidence calibration; default no-op).
+    fn observe(&mut self, _actual: &[f64; METRIC_DIM]) {}
+
+    /// Whether the model produces calibrated uncertainty (Algorithm 1's
+    /// confidence gate).
+    fn is_bayesian(&self) -> bool {
+        false
+    }
+
+    /// Confidence of the last prediction in [0, 1] (only meaningful when
+    /// `is_bayesian`).
+    fn confidence(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Last-value persistence baseline.
+#[derive(Debug, Default)]
+pub struct NaiveForecaster;
+
+impl Forecaster for NaiveForecaster {
+    fn name(&self) -> &str {
+        "naive-last-value"
+    }
+
+    fn predict(&mut self, history: &[[f64; METRIC_DIM]]) -> Option<[f64; METRIC_DIM]> {
+        history.last().copied()
+    }
+
+    fn retrain(
+        &mut self,
+        _history: &[[f64; METRIC_DIM]],
+        _policy: UpdatePolicy,
+    ) -> crate::Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_predicts_last() {
+        let mut f = NaiveForecaster;
+        let h = vec![[1.0; METRIC_DIM], [2.0; METRIC_DIM]];
+        assert_eq!(f.predict(&h), Some([2.0; METRIC_DIM]));
+        assert_eq!(f.predict(&[]), None);
+        assert!(f.retrain(&h, UpdatePolicy::FineTune).is_ok());
+        assert!(!f.is_bayesian());
+    }
+
+    #[test]
+    fn policy_names() {
+        assert!(UpdatePolicy::KeepSeed.name().contains("policy1"));
+        assert!(UpdatePolicy::RetrainScratch.name().contains("policy2"));
+        assert!(UpdatePolicy::FineTune.name().contains("policy3"));
+    }
+}

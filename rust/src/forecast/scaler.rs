@@ -1,0 +1,236 @@
+//! Feature scalers — the paper's `ScalerLink` companion to the injected
+//! model: metrics are scaled before the LSTM and inverse-scaled after
+//! prediction.
+//!
+//! The LSTM uses [`MinMaxScaler`] (range [0, 1]): its ReLU output head
+//! can only produce non-negative values, so targets must live in a
+//! non-negative space — standardized (z-score) targets would make every
+//! below-mean value unlearnable. [`StandardScaler`] remains for models
+//! without output-range constraints.
+
+use crate::metrics::METRIC_DIM;
+
+/// Common scaler interface (the paper's scaler-file protocol).
+pub trait Scaler {
+    fn transform(&self, row: &[f64; METRIC_DIM]) -> [f64; METRIC_DIM];
+    fn inverse(&self, feature: usize, value: f64) -> f64;
+
+    fn inverse_row(&self, row: &[f64; METRIC_DIM]) -> [f64; METRIC_DIM] {
+        let mut out = [0.0; METRIC_DIM];
+        for i in 0..METRIC_DIM {
+            out[i] = self.inverse(i, row[i]);
+        }
+        out
+    }
+}
+
+/// Per-feature standardization: `x' = (x - mean) / std`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StandardScaler {
+    pub mean: [f64; METRIC_DIM],
+    pub std: [f64; METRIC_DIM],
+}
+
+impl StandardScaler {
+    /// Identity scaler (mean 0, std 1).
+    pub fn identity() -> Self {
+        StandardScaler {
+            mean: [0.0; METRIC_DIM],
+            std: [1.0; METRIC_DIM],
+        }
+    }
+
+    /// Fit on a history matrix. Features with ~zero variance get std 1 so
+    /// transforms stay finite.
+    pub fn fit(rows: &[[f64; METRIC_DIM]]) -> Self {
+        let n = rows.len().max(1) as f64;
+        let mut mean = [0.0; METRIC_DIM];
+        for row in rows {
+            for (m, x) in mean.iter_mut().zip(row) {
+                *m += x / n;
+            }
+        }
+        let mut std = [0.0; METRIC_DIM];
+        for row in rows {
+            for ((s, x), m) in std.iter_mut().zip(row).zip(&mean) {
+                *s += (x - m) * (x - m) / n;
+            }
+        }
+        for s in &mut std {
+            *s = s.sqrt();
+            if !s.is_finite() || *s < 1e-9 {
+                *s = 1.0;
+            }
+        }
+        StandardScaler { mean, std }
+    }
+
+    /// Non-trait accessor kept for backwards compatibility in tests.
+    pub fn inverse_row(&self, row: &[f64; METRIC_DIM]) -> [f64; METRIC_DIM] {
+        Scaler::inverse_row(self, row)
+    }
+}
+
+impl Scaler for StandardScaler {
+    fn transform(&self, row: &[f64; METRIC_DIM]) -> [f64; METRIC_DIM] {
+        let mut out = [0.0; METRIC_DIM];
+        for i in 0..METRIC_DIM {
+            out[i] = (row[i] - self.mean[i]) / self.std[i];
+        }
+        out
+    }
+
+    fn inverse(&self, feature: usize, value: f64) -> f64 {
+        value * self.std[feature] + self.mean[feature]
+    }
+}
+
+/// Min-max scaler to [0, 1] — what the LSTM's ReLU head requires.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MinMaxScaler {
+    pub min: [f64; METRIC_DIM],
+    /// max - min, floored at a small epsilon for constant features.
+    pub range: [f64; METRIC_DIM],
+}
+
+impl MinMaxScaler {
+    pub fn identity() -> Self {
+        MinMaxScaler {
+            min: [0.0; METRIC_DIM],
+            range: [1.0; METRIC_DIM],
+        }
+    }
+
+    /// Fit on a history matrix. A 10% headroom margin is added on top so
+    /// production values modestly above the training max still map inside
+    /// a learnable region.
+    pub fn fit(rows: &[[f64; METRIC_DIM]]) -> Self {
+        let mut min = [f64::INFINITY; METRIC_DIM];
+        let mut max = [f64::NEG_INFINITY; METRIC_DIM];
+        for row in rows {
+            for i in 0..METRIC_DIM {
+                min[i] = min[i].min(row[i]);
+                max[i] = max[i].max(row[i]);
+            }
+        }
+        let mut range = [1.0; METRIC_DIM];
+        for i in 0..METRIC_DIM {
+            if !min[i].is_finite() {
+                min[i] = 0.0;
+            }
+            if !max[i].is_finite() {
+                max[i] = 1.0;
+            }
+            let r = (max[i] - min[i]) * 1.1;
+            range[i] = if r > 1e-9 { r } else { 1.0 };
+        }
+        MinMaxScaler { min, range }
+    }
+}
+
+impl Scaler for MinMaxScaler {
+    fn transform(&self, row: &[f64; METRIC_DIM]) -> [f64; METRIC_DIM] {
+        let mut out = [0.0; METRIC_DIM];
+        for i in 0..METRIC_DIM {
+            out[i] = (row[i] - self.min[i]) / self.range[i];
+        }
+        out
+    }
+
+    fn inverse(&self, feature: usize, value: f64) -> f64 {
+        value * self.range[feature] + self.min[feature]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_transform_roundtrip() {
+        let rows = vec![
+            [1.0, 10.0, 100.0, 0.0, 5.0],
+            [3.0, 30.0, 300.0, 0.0, 15.0],
+            [2.0, 20.0, 200.0, 0.0, 10.0],
+        ];
+        let s = StandardScaler::fit(&rows);
+        assert!((s.mean[0] - 2.0).abs() < 1e-12);
+        // Constant feature gets std 1.
+        assert_eq!(s.std[3], 1.0);
+        let t = s.transform(&rows[0]);
+        let back = s.inverse_row(&t);
+        for (a, b) in back.iter().zip(&rows[0]) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn transformed_data_standardized() {
+        let rows: Vec<[f64; METRIC_DIM]> = (0..100)
+            .map(|i| {
+                let x = i as f64;
+                [x, 2.0 * x + 5.0, x * x, 1.0, -x]
+            })
+            .collect();
+        let s = StandardScaler::fit(&rows);
+        let transformed: Vec<[f64; METRIC_DIM]> = rows.iter().map(|r| s.transform(r)).collect();
+        for f in 0..METRIC_DIM {
+            let mean: f64 =
+                transformed.iter().map(|r| r[f]).sum::<f64>() / transformed.len() as f64;
+            assert!(mean.abs() < 1e-9, "feature {f} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let s = StandardScaler::identity();
+        let row = [5.0, -1.0, 2.0, 3.0, 4.0];
+        assert_eq!(s.transform(&row), row);
+    }
+
+    #[test]
+    fn empty_fit_is_finite() {
+        let s = StandardScaler::fit(&[]);
+        let t = s.transform(&[1.0; METRIC_DIM]);
+        assert!(t.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn minmax_roundtrip_and_range() {
+        let rows: Vec<[f64; METRIC_DIM]> = (0..50)
+            .map(|i| {
+                let x = i as f64;
+                [x, 2.0 * x + 5.0, 100.0 - x, 7.0, x * x]
+            })
+            .collect();
+        let s = MinMaxScaler::fit(&rows);
+        for row in &rows {
+            let t = s.transform(row);
+            // All features (incl. the constant one) land in [0, ~0.95].
+            assert!(t.iter().all(|&v| (-1e-9..=1.0).contains(&v)), "{t:?}");
+            let back = Scaler::inverse_row(&s, &t);
+            for (a, b) in back.iter().zip(row) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+        // Headroom: a value 5% above the max still maps below 1.
+        let mut above = rows[49];
+        above[0] *= 1.05;
+        assert!(s.transform(&above)[0] < 1.0);
+    }
+
+    #[test]
+    fn minmax_constant_feature_safe() {
+        let rows = vec![[3.0; METRIC_DIM]; 10];
+        let s = MinMaxScaler::fit(&rows);
+        let t = s.transform(&rows[0]);
+        assert!(t.iter().all(|v| v.is_finite()));
+        assert!((Scaler::inverse(&s, 0, t[0]) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn minmax_empty_fit_is_finite() {
+        let s = MinMaxScaler::fit(&[]);
+        assert!(s.transform(&[1.0; METRIC_DIM]).iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,178 @@
+//! Sliding-window dataset assembly for the LSTM: turns the metrics
+//! history file into `(window → next-row)` training pairs and builds the
+//! flattened f32 buffers the AOT artifacts expect.
+
+use super::Scaler;
+use crate::metrics::METRIC_DIM;
+use crate::util::rng::Pcg64;
+
+/// A supervised dataset of scaled windows.
+#[derive(Debug, Clone)]
+pub struct WindowDataset {
+    /// Flattened inputs: `n * seq_len * METRIC_DIM`.
+    pub xs: Vec<f32>,
+    /// Flattened targets: `n * METRIC_DIM`.
+    pub ys: Vec<f32>,
+    pub n: usize,
+    pub seq_len: usize,
+}
+
+impl WindowDataset {
+    /// Build all `(history[i-seq_len..i] → history[i])` pairs, scaled.
+    pub fn build<S: Scaler + ?Sized>(
+        history: &[[f64; METRIC_DIM]],
+        seq_len: usize,
+        scaler: &S,
+    ) -> Self {
+        let n = history.len().saturating_sub(seq_len);
+        let mut xs = Vec::with_capacity(n * seq_len * METRIC_DIM);
+        let mut ys = Vec::with_capacity(n * METRIC_DIM);
+        for i in seq_len..history.len() {
+            for row in &history[i - seq_len..i] {
+                let t = scaler.transform(row);
+                xs.extend(t.iter().map(|&v| v as f32));
+            }
+            let t = scaler.transform(&history[i]);
+            ys.extend(t.iter().map(|&v| v as f32));
+        }
+        WindowDataset {
+            xs,
+            ys,
+            n,
+            seq_len,
+        }
+    }
+
+    /// Assemble `k` minibatches of `batch` samples (with replacement when
+    /// the dataset is smaller than a batch; shuffled otherwise) into the
+    /// contiguous buffers `train_epoch` expects: `(k*batch*seq*dim)` /
+    /// `(k*batch*dim)`.
+    pub fn epoch_batches(
+        &self,
+        k: usize,
+        batch: usize,
+        rng: &mut Pcg64,
+    ) -> Option<(Vec<f32>, Vec<f32>)> {
+        if self.n == 0 {
+            return None;
+        }
+        let x_stride = self.seq_len * METRIC_DIM;
+        let mut xs = Vec::with_capacity(k * batch * x_stride);
+        let mut ys = Vec::with_capacity(k * batch * METRIC_DIM);
+
+        // Shuffled index pool, refilled as needed (sampling without
+        // replacement within a pass, with replacement across passes).
+        let mut pool: Vec<usize> = (0..self.n).collect();
+        let mut pos = pool.len(); // force shuffle on first use
+        for _ in 0..k * batch {
+            if pos == pool.len() {
+                // Fisher–Yates.
+                for i in (1..pool.len()).rev() {
+                    let j = rng.below(i as u64 + 1) as usize;
+                    pool.swap(i, j);
+                }
+                pos = 0;
+            }
+            let idx = pool[pos];
+            pos += 1;
+            xs.extend_from_slice(&self.xs[idx * x_stride..(idx + 1) * x_stride]);
+            ys.extend_from_slice(&self.ys[idx * METRIC_DIM..(idx + 1) * METRIC_DIM]);
+        }
+        Some((xs, ys))
+    }
+}
+
+/// The latest scaled window (model input for prediction), or `None` if
+/// history is shorter than `seq_len`.
+pub fn latest_window<S: Scaler + ?Sized>(
+    history: &[[f64; METRIC_DIM]],
+    seq_len: usize,
+    scaler: &S,
+) -> Option<Vec<f32>> {
+    if history.len() < seq_len {
+        return None;
+    }
+    let mut out = Vec::with_capacity(seq_len * METRIC_DIM);
+    for row in &history[history.len() - seq_len..] {
+        let t = scaler.transform(row);
+        out.extend(t.iter().map(|&v| v as f32));
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forecast::StandardScaler;
+
+    fn history(n: usize) -> Vec<[f64; METRIC_DIM]> {
+        (0..n)
+            .map(|i| {
+                let x = i as f64;
+                [x, x + 1.0, x + 2.0, x + 3.0, x + 4.0]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn builds_all_pairs() {
+        let h = history(10);
+        let ds = WindowDataset::build(&h, 3, &StandardScaler::identity());
+        assert_eq!(ds.n, 7);
+        assert_eq!(ds.xs.len(), 7 * 3 * METRIC_DIM);
+        assert_eq!(ds.ys.len(), 7 * METRIC_DIM);
+        // First pair: window rows 0..3, target row 3.
+        assert_eq!(ds.xs[0], 0.0);
+        assert_eq!(ds.ys[0], 3.0);
+        // Last pair targets row 9.
+        assert_eq!(ds.ys[(ds.n - 1) * METRIC_DIM], 9.0);
+    }
+
+    #[test]
+    fn short_history_yields_empty() {
+        let h = history(3);
+        let ds = WindowDataset::build(&h, 8, &StandardScaler::identity());
+        assert_eq!(ds.n, 0);
+        let mut rng = Pcg64::new(1, 0);
+        assert!(ds.epoch_batches(2, 4, &mut rng).is_none());
+    }
+
+    #[test]
+    fn epoch_batches_shapes() {
+        let h = history(50);
+        let ds = WindowDataset::build(&h, 4, &StandardScaler::identity());
+        let mut rng = Pcg64::new(1, 0);
+        let (xs, ys) = ds.epoch_batches(3, 8, &mut rng).unwrap();
+        assert_eq!(xs.len(), 3 * 8 * 4 * METRIC_DIM);
+        assert_eq!(ys.len(), 3 * 8 * METRIC_DIM);
+    }
+
+    #[test]
+    fn epoch_batches_with_replacement_small_dataset() {
+        let h = history(6); // n = 2 with seq_len 4
+        let ds = WindowDataset::build(&h, 4, &StandardScaler::identity());
+        assert_eq!(ds.n, 2);
+        let mut rng = Pcg64::new(2, 0);
+        let (xs, _ys) = ds.epoch_batches(1, 8, &mut rng).unwrap();
+        assert_eq!(xs.len(), 8 * 4 * METRIC_DIM);
+    }
+
+    #[test]
+    fn latest_window_is_suffix() {
+        let h = history(12);
+        let w = latest_window(&h, 3, &StandardScaler::identity()).unwrap();
+        assert_eq!(w.len(), 3 * METRIC_DIM);
+        assert_eq!(w[0], 9.0); // row 9 feature 0
+        assert_eq!(w[METRIC_DIM], 10.0);
+        assert!(latest_window(&h[..2], 3, &StandardScaler::identity()).is_none());
+    }
+
+    #[test]
+    fn scaling_applied() {
+        let h = history(20);
+        let scaler = StandardScaler::fit(&h);
+        let ds = WindowDataset::build(&h, 2, &scaler);
+        // Scaled values should be bounded (z-scores of a linear ramp).
+        assert!(ds.xs.iter().all(|&v| v.abs() < 3.0));
+    }
+}

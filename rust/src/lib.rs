@@ -1,0 +1,36 @@
+//! # ppa-edge — Proactive Pod Autoscaler for edge Kubernetes
+//!
+//! Full-system reproduction of *"Proactive Autoscaling for Edge Computing
+//! Systems with Kubernetes"* (Ju, Singh, Toor — UCC '21 Companion) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination system: a deterministic
+//!   discrete-event Kubernetes cluster simulator ([`cluster`], [`sim`]),
+//!   a Prometheus-style metrics pipeline ([`metrics`]), the example
+//!   two-tier edge application ([`app`]), workload generators
+//!   ([`workload`]), and the paper's contribution — the proactive pod
+//!   autoscaler ([`autoscaler::ppa`]) next to the reactive HPA baseline
+//!   ([`autoscaler::hpa`]).
+//! * **L2/L1 (build-time python)** — the LSTM forecaster (Pallas kernel +
+//!   JAX model) AOT-lowered to HLO text; loaded and executed from rust via
+//!   PJRT by [`runtime`]. Python is never on the control path.
+//!
+//! See `DESIGN.md` for the full inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod app;
+pub mod autoscaler;
+pub mod cluster;
+pub mod config;
+pub mod experiments;
+pub mod forecast;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

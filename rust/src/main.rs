@@ -1,0 +1,265 @@
+//! `ppa-edge` — CLI launcher for the PPA reproduction.
+//!
+//! ```text
+//! ppa-edge experiment <fig6|fig7|fig8|fig9-10|nasa|all> [--minutes N]
+//!          [--hours H] [--pretrain-hours H] [--seed S]
+//! ppa-edge run [--scaler hpa|ppa] [--model lstm|arma|naive]
+//!          [--minutes N] [--seed S]
+//! ppa-edge info
+//! ```
+//!
+//! (clap is unavailable in the offline crate set; argument parsing is a
+//! small hand-rolled matcher.)
+
+use anyhow::{bail, Context};
+use ppa_edge::app::{TaskCosts, TaskType};
+use ppa_edge::autoscaler::Hpa;
+use ppa_edge::experiments::{
+    self, fig6_trace, fig7_model_comparison, fig8_update_policies, fig9_fig10_key_metric,
+    nasa_eval, FigParams, ModelKind, NasaParams, SimWorld,
+};
+use ppa_edge::report;
+use ppa_edge::sim::MIN;
+use ppa_edge::stats::summarize;
+use ppa_edge::workload::{Generator, NasaTraceConfig, RandomAccessGen};
+
+/// Minimal flag parser: `--key value` pairs after positional args.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> anyhow::Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let value = argv
+                    .get(i + 1)
+                    .with_context(|| format!("flag --{key} needs a value"))?;
+                flags.push((key.to_string(), value.clone()));
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+}
+
+const USAGE: &str = "ppa-edge — Proactive Pod Autoscaler reproduction (UCC '21)
+
+USAGE:
+  ppa-edge experiment <fig6|fig7|fig8|fig9-10|nasa|all>
+           [--minutes N] [--hours H] [--pretrain-hours H] [--seed S]
+  ppa-edge run [--scaler hpa|ppa] [--model lstm|arma|naive]
+           [--minutes N] [--seed S]
+  ppa-edge info
+
+EXPERIMENTS (paper figures):
+  fig6     scaled NASA trace generation
+  fig7     ARMA vs LSTM prediction MSE
+  fig8     model-update policies 1/2/3
+  fig9-10  key metric: CPU vs request rate
+  nasa     the 48 h HPA-vs-PPA evaluation (figs 11-14)
+  all      everything above
+
+Artifacts must exist for LSTM experiments: run `make artifacts`.";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(argv)?;
+    match args.positional.first().map(String::as_str) {
+        Some("experiment") => cmd_experiment(&args),
+        Some("run") => cmd_run(&args),
+        Some("info") => cmd_info(),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("ppa-edge {}", env!("CARGO_PKG_VERSION"));
+    match ppa_edge::runtime::find_artifacts_dir() {
+        Some(dir) => {
+            let rt = ppa_edge::runtime::LstmRuntime::load(&dir)?;
+            let m = rt.manifest();
+            println!("artifacts: {}", dir.display());
+            println!(
+                "model: LSTM({}) in={} out={} seq_len={} batch={} params={}",
+                m.hidden_dim,
+                m.input_dim,
+                m.output_dim,
+                m.seq_len,
+                m.batch,
+                m.param_count()
+            );
+        }
+        None => println!("artifacts: NOT BUILT (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let params = FigParams {
+        minutes: args.get_u64("minutes", 200)?,
+        pretrain_hours: args.get_f64("pretrain-hours", 10.0)?,
+        seed: args.get_u64("seed", 2021)?,
+    };
+    let nasa_params = NasaParams {
+        hours: args.get_f64("hours", 48.0)?,
+        pretrain_hours: params.pretrain_hours,
+        seed: params.seed,
+        trace: NasaTraceConfig::default(),
+    };
+
+    let run_fig6 = || -> anyhow::Result<()> {
+        let counts = fig6_trace(&NasaTraceConfig::default())?;
+        let s = summarize(&counts);
+        println!(
+            "\n== Fig 6 — scaled NASA trace ==\n  {} minutes, mean {:.1} req/min, peak {:.0}, csv: target/experiments/fig6_nasa_trace.csv",
+            counts.len(),
+            s.mean,
+            s.max
+        );
+        Ok(())
+    };
+
+    match which {
+        "fig6" => run_fig6()?,
+        "fig7" => report::print_fig7(&fig7_model_comparison(&params)?),
+        "fig8" => report::print_fig8(&fig8_update_policies(&params)?),
+        "fig9-10" | "fig9" | "fig10" => {
+            report::print_fig9_10(&fig9_fig10_key_metric(&params)?)
+        }
+        "nasa" | "fig11" | "fig12" | "fig13" | "fig14" => {
+            report::print_nasa_eval(&nasa_eval(&nasa_params)?)
+        }
+        "all" => {
+            run_fig6()?;
+            report::print_fig7(&fig7_model_comparison(&params)?);
+            report::print_fig8(&fig8_update_policies(&params)?);
+            report::print_fig9_10(&fig9_fig10_key_metric(&params)?);
+            report::print_nasa_eval(&nasa_eval(&nasa_params)?);
+        }
+        other => bail!("unknown experiment '{other}'\n\n{USAGE}"),
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let minutes = args.get_u64("minutes", 30)?;
+    let seed = args.get_u64("seed", 7)?;
+    let scaler = args.get("scaler").unwrap_or("ppa");
+    let model = ModelKind::parse(args.get("model").unwrap_or("lstm"))?;
+
+    let cfg = ppa_edge::config::paper_cluster();
+    let mut world = SimWorld::build(&cfg, TaskCosts::default(), seed);
+    world.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
+    world.add_generator(Generator::RandomAccess(RandomAccessGen::new(2)));
+    let n_services = world.app.services.len();
+
+    match scaler {
+        "hpa" => {
+            for svc in 0..n_services {
+                world.add_scaler(Box::new(Hpa::with_defaults()), svc);
+            }
+        }
+        "ppa" => {
+            let runtime = if model == ModelKind::Lstm {
+                Some(
+                    experiments::try_runtime()
+                        .context("LSTM needs artifacts — run `make artifacts`")?,
+                )
+            } else {
+                None
+            };
+            println!("collecting pretraining data (1 h sim)...");
+            let (hist, _) = experiments::pretrain_histories(1.0, 20, seed);
+            for svc in 0..n_services {
+                let pre = if svc + 1 == n_services {
+                    hist.last().unwrap()
+                } else {
+                    &hist[0]
+                };
+                let forecaster =
+                    experiments::make_forecaster(model, runtime.as_ref(), pre, seed as u32)?;
+                let ppa = ppa_edge::autoscaler::Ppa::new(
+                    ppa_edge::autoscaler::PpaConfig::default(),
+                    forecaster,
+                );
+                world.add_scaler(Box::new(ppa), svc);
+            }
+        }
+        other => bail!("unknown scaler '{other}' (hpa|ppa)"),
+    }
+
+    println!(
+        "running {minutes} simulated minutes with {scaler} ({})...",
+        model.name()
+    );
+    let wall = std::time::Instant::now();
+    let events = world.run_until(minutes * MIN);
+    let elapsed = wall.elapsed();
+
+    let sort = summarize(&world.response_times(TaskType::Sort));
+    let eigen = summarize(&world.response_times(TaskType::Eigen));
+    let rirs: Vec<f64> = world.rir_log.iter().map(|s| s.rir).collect();
+    let rir = summarize(&rirs);
+    println!(
+        "done: {events} events in {:.2}s ({:.0}x real time)",
+        elapsed.as_secs_f64(),
+        minutes as f64 * 60.0 / elapsed.as_secs_f64()
+    );
+    println!(
+        "  sort  resp: {:.4} ± {:.4} s (n={})",
+        sort.mean, sort.std, sort.n
+    );
+    println!(
+        "  eigen resp: {:.3} ± {:.3} s (n={})",
+        eigen.mean, eigen.std, eigen.n
+    );
+    println!("  RIR: {:.3} ± {:.3}", rir.mean, rir.std);
+    Ok(())
+}

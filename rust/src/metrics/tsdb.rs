@@ -1,0 +1,128 @@
+//! Ring-buffer time-series store (the Prometheus TSDB stand-in).
+
+use crate::sim::Time;
+use std::collections::{HashMap, VecDeque};
+
+/// Default per-series retention cap (samples). At a 10 s scrape interval
+/// this holds > 48 h of history — enough for the NASA evaluation runs.
+const DEFAULT_CAPACITY: usize = 20_000;
+
+/// One named series: a bounded deque of (time, value).
+#[derive(Debug)]
+pub struct Series {
+    samples: VecDeque<(Time, f64)>,
+    capacity: usize,
+}
+
+impl Series {
+    fn new(capacity: usize) -> Self {
+        Series {
+            samples: VecDeque::with_capacity(capacity.min(1024)),
+            capacity,
+        }
+    }
+
+    fn push(&mut self, t: Time, v: f64) {
+        if self.samples.len() == self.capacity {
+            self.samples.pop_front();
+        }
+        self.samples.push_back((t, v));
+    }
+
+    pub fn latest(&self) -> Option<(Time, f64)> {
+        self.samples.back().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Samples with `from < t <= to` (inclusive upper bound).
+    pub fn range(&self, from: Time, to: Time) -> Vec<(Time, f64)> {
+        self.samples
+            .iter()
+            .copied()
+            .filter(|&(t, _)| t > from && t <= to)
+            .collect()
+    }
+}
+
+/// The store: series by name.
+#[derive(Debug, Default)]
+pub struct Tsdb {
+    series: HashMap<String, Series>,
+}
+
+impl Tsdb {
+    pub fn new() -> Self {
+        Tsdb::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Time, v: f64) {
+        self.series
+            .entry(name.to_string())
+            .or_insert_with(|| Series::new(DEFAULT_CAPACITY))
+            .push(t, v);
+    }
+
+    pub fn series(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    pub fn latest(&self, name: &str) -> Option<(Time, f64)> {
+        self.series.get(name).and_then(|s| s.latest())
+    }
+
+    pub fn range(&self, name: &str, from: Time, to: Time) -> Vec<(Time, f64)> {
+        self.series
+            .get(name)
+            .map(|s| s.range(from, to))
+            .unwrap_or_default()
+    }
+
+    pub fn series_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.series.keys().map(|s| s.as_str()).collect();
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_query() {
+        let mut db = Tsdb::new();
+        for t in 1..=5u64 {
+            db.insert("a.cpu", t * 10, t as f64);
+        }
+        assert_eq!(db.latest("a.cpu"), Some((50, 5.0)));
+        assert_eq!(db.range("a.cpu", 10, 40), vec![(20, 2.0), (30, 3.0), (40, 4.0)]);
+        assert!(db.range("missing", 0, 100).is_empty());
+        assert_eq!(db.latest("missing"), None);
+    }
+
+    #[test]
+    fn ring_buffer_caps() {
+        let mut s = Series::new(3);
+        for t in 0..10u64 {
+            s.push(t, t as f64);
+        }
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.latest(), Some((9, 9.0)));
+        assert_eq!(s.range(0, 100).len(), 3);
+    }
+
+    #[test]
+    fn series_names_sorted() {
+        let mut db = Tsdb::new();
+        db.insert("b", 1, 0.0);
+        db.insert("a", 1, 0.0);
+        assert_eq!(db.series_names(), vec!["a", "b"]);
+    }
+}

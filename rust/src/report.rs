@@ -1,0 +1,195 @@
+//! Console rendering of experiment results — prints the same rows the
+//! paper reports, with the paper's numbers alongside for comparison.
+
+use crate::experiments::{Fig7, Fig8, Fig9And10, NasaEval};
+use crate::stats::Summary;
+
+/// Simple fixed-width table printer.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (w, cell) in widths.iter_mut().zip(row) {
+            *w = (*w).max(cell.len());
+        }
+    }
+    let header_line: Vec<String> = headers
+        .iter()
+        .zip(&widths)
+        .map(|(h, w)| format!("{h:<w$}"))
+        .collect();
+    println!("  {}", header_line.join("  "));
+    let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+    println!("  {}", "-".repeat(total));
+    for row in rows {
+        let line: Vec<String> = row
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect();
+        println!("  {}", line.join("  "));
+    }
+}
+
+fn fmt_summary(s: &Summary) -> String {
+    format!("{:.4} ± {:.4} (n={})", s.mean, s.std, s.n)
+}
+
+fn fmt_p(p: f64) -> String {
+    if p < 1e-3 {
+        format!("{p:.2e} (< 1e-3 ✓)")
+    } else {
+        format!("{p:.4}")
+    }
+}
+
+pub fn print_fig7(fig: &Fig7) {
+    print_table(
+        "Fig 7 — predicting-model comparison (CPU-prediction MSE, lower is better)",
+        &["model", "measured MSE", "n", "paper MSE"],
+        &[
+            vec![
+                fig.lstm.model.clone(),
+                format!("{:.3}", fig.lstm.mse),
+                fig.lstm.n.to_string(),
+                "53240.972".into(),
+            ],
+            vec![
+                fig.arma.model.clone(),
+                format!("{:.3}", fig.arma.mse),
+                fig.arma.n.to_string(),
+                "96867.631".into(),
+            ],
+        ],
+    );
+    let verdict = if fig.lstm.mse < fig.arma.mse {
+        "LSTM < ARMA — matches the paper"
+    } else {
+        "LSTM >= ARMA — DOES NOT match the paper"
+    };
+    println!("  verdict: {verdict}");
+}
+
+pub fn print_fig8(fig: &Fig8) {
+    let paper = ["64769.882", "42180.437", "30994.449"];
+    let rows: Vec<Vec<String>> = fig
+        .policies
+        .iter()
+        .zip(paper)
+        .map(|(o, p)| {
+            vec![
+                o.model.clone(),
+                format!("{:.3}", o.mse),
+                o.n.to_string(),
+                p.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fig 8 — update-policy comparison (CPU-prediction MSE)",
+        &["policy", "measured MSE", "n", "paper MSE"],
+        &rows,
+    );
+    let best_last = fig.policies[2].mse <= fig.policies[0].mse
+        && fig.policies[2].mse <= fig.policies[1].mse;
+    println!(
+        "  verdict: policy 3 best = {} (paper: policy 3 best)",
+        if best_last { "yes ✓" } else { "NO" }
+    );
+}
+
+pub fn print_fig9_10(fig: &Fig9And10) {
+    print_table(
+        "Figs 9/10 — key-metric comparison (PPA keyed on CPU vs request rate)",
+        &["key", "response time (s)", "RIR"],
+        &[
+            vec![
+                fig.cpu.key.clone(),
+                fmt_summary(&fig.cpu.response),
+                fmt_summary(&fig.cpu.rir),
+            ],
+            vec![
+                fig.req_rate.key.clone(),
+                fmt_summary(&fig.req_rate.response),
+                fmt_summary(&fig.req_rate.rir),
+            ],
+        ],
+    );
+    println!(
+        "  response-time Welch p = {} (paper: not significant — equivalent keys)",
+        fmt_p(fig.response_welch.p)
+    );
+    println!(
+        "  RIR means: cpu {:.3} vs req_rate {:.3} (paper: 0.251 vs 0.317, cpu wins)",
+        fig.cpu.rir.mean, fig.req_rate.rir.mean
+    );
+}
+
+pub fn print_nasa_eval(eval: &NasaEval) {
+    print_table(
+        "Figs 11-14 — NASA 48 h evaluation: HPA vs PPA",
+        &["metric", "HPA", "PPA", "Welch p", "paper (HPA / PPA)"],
+        &[
+            vec![
+                "Sort resp (s)".into(),
+                fmt_summary(&eval.hpa.sort),
+                fmt_summary(&eval.ppa.sort),
+                fmt_p(eval.sort_welch.p),
+                "0.592±0.067 / 0.508±0.038".into(),
+            ],
+            vec![
+                "Eigen resp (s)".into(),
+                fmt_summary(&eval.hpa.eigen),
+                fmt_summary(&eval.ppa.eigen),
+                fmt_p(eval.eigen_welch.p),
+                "14.206±1.703 / 13.646±1.576".into(),
+            ],
+            vec![
+                "Edge idle CPU".into(),
+                fmt_summary(&eval.hpa.edge_rir),
+                fmt_summary(&eval.ppa.edge_rir),
+                fmt_p(eval.edge_rir_welch.p),
+                "0.3209±0.1079 / 0.2988±0.1026".into(),
+            ],
+            vec![
+                "Cloud idle CPU".into(),
+                fmt_summary(&eval.hpa.cloud_rir),
+                fmt_summary(&eval.ppa.cloud_rir),
+                fmt_p(eval.cloud_rir_welch.p),
+                "0.3373±0.1572 / 0.3098±0.1453".into(),
+            ],
+        ],
+    );
+    let wins = [
+        eval.ppa.sort.mean < eval.hpa.sort.mean,
+        eval.ppa.eigen.mean < eval.hpa.eigen.mean,
+        eval.ppa.edge_rir.mean < eval.hpa.edge_rir.mean,
+        eval.ppa.cloud_rir.mean < eval.hpa.cloud_rir.mean,
+    ];
+    println!(
+        "  PPA wins {}/4 comparisons (paper: 4/4); completed requests HPA={} PPA={}",
+        wins.iter().filter(|&&w| w).count(),
+        eval.hpa.completed,
+        eval.ppa.completed
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_prints_without_panic() {
+        print_table(
+            "t",
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+    }
+
+    #[test]
+    fn p_formatting() {
+        assert!(fmt_p(1e-5).contains("✓"));
+        assert!(!fmt_p(0.5).contains("✓"));
+    }
+}

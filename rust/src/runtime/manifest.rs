@@ -1,0 +1,139 @@
+//! `artifacts/manifest.json` — shapes and optimizer constants emitted by
+//! the AOT pipeline so the rust runtime can size buffers without parsing
+//! HLO.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context};
+use std::path::Path;
+
+/// Adam constants baked into the train artifacts (informational on the
+/// rust side; the artifact already contains them).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdamConfig {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub input_dim: usize,
+    pub hidden_dim: usize,
+    pub output_dim: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub epoch_batches: usize,
+    pub adam: AdamConfig,
+    /// `(name, shape)` in canonical flat parameter order (w, b, wd, bd).
+    pub param_shapes: Vec<(String, Vec<usize>)>,
+}
+
+/// Canonical parameter order — must match `model.PARAM_NAMES` in python.
+const PARAM_ORDER: [&str; 4] = ["w", "b", "wd", "bd"];
+
+impl Manifest {
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let doc = Json::parse(text)?;
+        let usize_field = |key: &str| -> crate::Result<usize> {
+            doc.get(key)
+                .as_usize()
+                .with_context(|| format!("manifest missing integer field '{key}'"))
+        };
+        let adam = AdamConfig {
+            lr: doc.get_path(&["adam", "lr"]).as_f64().context("adam.lr")?,
+            beta1: doc.get_path(&["adam", "beta1"]).as_f64().context("adam.beta1")?,
+            beta2: doc.get_path(&["adam", "beta2"]).as_f64().context("adam.beta2")?,
+            eps: doc.get_path(&["adam", "eps"]).as_f64().context("adam.eps")?,
+        };
+        let shapes_obj = doc
+            .get("param_shapes")
+            .as_obj()
+            .context("manifest missing param_shapes")?;
+        let mut param_shapes = Vec::with_capacity(PARAM_ORDER.len());
+        for name in PARAM_ORDER {
+            let arr = shapes_obj
+                .get(name)
+                .and_then(|v| v.as_arr())
+                .with_context(|| format!("param_shapes missing '{name}'"))?;
+            let shape: Option<Vec<usize>> = arr.iter().map(|d| d.as_usize()).collect();
+            let shape = shape.with_context(|| format!("bad shape for '{name}'"))?;
+            param_shapes.push((name.to_string(), shape));
+        }
+        let m = Manifest {
+            input_dim: usize_field("input_dim")?,
+            hidden_dim: usize_field("hidden_dim")?,
+            output_dim: usize_field("output_dim")?,
+            seq_len: usize_field("seq_len")?,
+            batch: usize_field("batch")?,
+            epoch_batches: usize_field("epoch_batches")?,
+            adam,
+            param_shapes,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> crate::Result<()> {
+        if self.input_dim == 0 || self.hidden_dim == 0 || self.output_dim == 0 {
+            bail!("manifest has zero model dimension");
+        }
+        if self.seq_len == 0 || self.batch == 0 || self.epoch_batches == 0 {
+            bail!("manifest has zero batch geometry");
+        }
+        let w = &self.param_shapes[0].1;
+        if w != &[self.input_dim + self.hidden_dim, 4 * self.hidden_dim] {
+            bail!("w shape {:?} inconsistent with dims", w);
+        }
+        Ok(())
+    }
+
+    /// Total parameter count (for reporting / VMEM estimates).
+    pub fn param_count(&self) -> usize {
+        self.param_shapes
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "input_dim": 5, "hidden_dim": 50, "output_dim": 5,
+      "seq_len": 8, "batch": 32, "epoch_batches": 16,
+      "adam": {"lr": 0.001, "beta1": 0.9, "beta2": 0.999, "eps": 1e-08},
+      "param_shapes": {"w": [55, 200], "b": [200], "wd": [50, 5], "bd": [5]},
+      "artifacts": ["lstm_init.hlo.txt"]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.hidden_dim, 50);
+        assert_eq!(m.param_shapes[0], ("w".to_string(), vec![55, 200]));
+        assert_eq!(m.param_count(), 55 * 200 + 200 + 250 + 5);
+        assert!((m.adam.lr - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_inconsistent_w_shape() {
+        let bad = SAMPLE.replace("[55, 200]", "[54, 200]");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_field() {
+        let bad = SAMPLE.replace("\"seq_len\": 8,", "");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,84 @@
+//! Deterministic discrete-event simulation core.
+//!
+//! Time is simulated microseconds (`Time`). The engine is a classic
+//! event-queue DES: a binary heap of `(time, seq, Event)` entries where
+//! `seq` breaks ties so identical-timestamp events dispatch in insertion
+//! order — this makes whole-cluster runs bit-reproducible for a given
+//! seed, which the paper-figure experiments rely on.
+
+mod queue;
+
+pub use queue::EventQueue;
+
+/// Simulated time in microseconds since simulation start.
+pub type Time = u64;
+
+pub const US: Time = 1;
+pub const MS: Time = 1_000;
+pub const SEC: Time = 1_000_000;
+pub const MIN: Time = 60 * SEC;
+pub const HOUR: Time = 60 * MIN;
+
+/// Convert simulated time to fractional seconds (for reporting).
+pub fn to_secs(t: Time) -> f64 {
+    t as f64 / SEC as f64
+}
+
+/// Convert fractional seconds to simulated time.
+pub fn from_secs(s: f64) -> Time {
+    debug_assert!(s >= 0.0);
+    (s * SEC as f64).round() as Time
+}
+
+/// Identifier types — plain indices into the world's slabs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PodId(pub u32);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+/// A service = one autoscaled deployment + its task queue (edge zone
+/// worker pools and the cloud worker pool).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ServiceId(pub u32);
+
+/// Simulation events. One enum for the whole world keeps dispatch flat
+/// and allocation-free on the hot path.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A client request enters the system at its origin zone.
+    RequestArrival { request_id: u64 },
+    /// A pod finished servicing a request.
+    ServiceComplete { pod: PodId, request_id: u64 },
+    /// A pod finished container init and is now Running.
+    PodRunning { pod: PodId },
+    /// A pod finished draining and is gone.
+    PodTerminated { pod: PodId },
+    /// Prometheus scrape tick (global).
+    Scrape,
+    /// An autoscaler control-loop tick.
+    AutoscaleTick { scaler: u32 },
+    /// A PPA model-update-loop tick.
+    ModelUpdateTick { scaler: u32 },
+    /// Workload generator wake-up (next arrival / phase switch).
+    WorkloadTick { generator: u32 },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_conversions_roundtrip() {
+        assert_eq!(to_secs(2 * SEC + 500 * MS), 2.5);
+        assert_eq!(from_secs(2.5), 2 * SEC + 500 * MS);
+        assert_eq!(from_secs(to_secs(123_456_789)), 123_456_789);
+    }
+
+    #[test]
+    fn unit_constants() {
+        assert_eq!(SEC, 1_000 * MS);
+        assert_eq!(MIN, 60 * SEC);
+        assert_eq!(HOUR, 3600 * SEC);
+    }
+}

@@ -1,0 +1,176 @@
+//! The event queue: a min-heap over `(time, seq)` with stable FIFO order
+//! for simultaneous events.
+
+use super::{Event, Time};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+#[derive(Debug)]
+struct Entry {
+    time: Time,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap semantics on BinaryHeap (a max-heap).
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic min-time event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+    now: Time,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::with_capacity(4096),
+            seq: 0,
+            now: 0,
+        }
+    }
+
+    /// Current simulated time (the timestamp of the last popped event).
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Schedule `event` at absolute time `at`. Events scheduled in the
+    /// past are clamped to `now` (dispatching immediately, in order).
+    pub fn schedule_at(&mut self, at: Time, event: Event) {
+        let time = at.max(self.now);
+        self.heap.push(Entry {
+            time,
+            seq: self.seq,
+            event,
+        });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` after a relative delay.
+    pub fn schedule_in(&mut self, delay: Time, event: Event) {
+        self.schedule_at(self.now.saturating_add(delay), event);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(Time, Event)> {
+        let entry = self.heap.pop()?;
+        debug_assert!(entry.time >= self.now, "time went backwards");
+        self.now = entry.time;
+        Some((entry.time, entry.event))
+    }
+
+    /// Time of the next pending event, if any.
+    pub fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SEC;
+
+    fn tick(g: u32) -> Event {
+        Event::WorkloadTick { generator: g }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(3 * SEC, tick(3));
+        q.schedule_at(1 * SEC, tick(1));
+        q.schedule_at(2 * SEC, tick(2));
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop())
+            .map(|(_, e)| match e {
+                Event::WorkloadTick { generator } => generator,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn simultaneous_events_fifo() {
+        let mut q = EventQueue::new();
+        for g in 0..50 {
+            q.schedule_at(5 * SEC, tick(g));
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop())
+            .map(|(_, e)| match e {
+                Event::WorkloadTick { generator } => generator,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule_at(10, tick(0));
+        q.schedule_at(5, tick(1));
+        let (t1, _) = q.pop().unwrap();
+        assert_eq!(t1, 5);
+        assert_eq!(q.now(), 5);
+        // Scheduling in the past clamps to now.
+        q.schedule_at(1, tick(2));
+        let (t2, e2) = q.pop().unwrap();
+        assert_eq!(t2, 5);
+        assert_eq!(e2, tick(2));
+        let (t3, _) = q.pop().unwrap();
+        assert_eq!(t3, 10);
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule_at(7, tick(0));
+        q.pop().unwrap();
+        q.schedule_in(3, tick(1));
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 10);
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.schedule_at(1, tick(0));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.peek_time(), Some(1));
+        q.pop();
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
+    }
+}

@@ -1,0 +1,329 @@
+//! Statistics for the experiment harness: summary moments, MSE, Welch's
+//! t-test (the paper reports p < 1e-3 on every evaluation comparison),
+//! percentiles and histograms. Special functions (log-gamma, regularized
+//! incomplete beta) are implemented from scratch — no stats crate offline.
+
+/// Summary of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    /// Sample standard deviation (n-1 denominator).
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Compute mean / sample-std / extrema.
+pub fn summarize(xs: &[f64]) -> Summary {
+    let n = xs.len();
+    if n == 0 {
+        return Summary {
+            n: 0,
+            mean: f64::NAN,
+            std: f64::NAN,
+            min: f64::NAN,
+            max: f64::NAN,
+        };
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: xs.iter().copied().fold(f64::INFINITY, f64::min),
+        max: xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Mean squared error between two equally long series (the paper's model
+/// comparison metric, Figs 7–8).
+pub fn mse(pred: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(pred.len(), actual.len(), "mse length mismatch");
+    if pred.is_empty() {
+        return f64::NAN;
+    }
+    pred.iter()
+        .zip(actual)
+        .map(|(p, a)| (p - a) * (p - a))
+        .sum::<f64>()
+        / pred.len() as f64
+}
+
+/// Result of a two-sample Welch t-test.
+#[derive(Debug, Clone, Copy)]
+pub struct WelchResult {
+    pub t: f64,
+    pub df: f64,
+    /// Two-tailed p-value.
+    pub p: f64,
+}
+
+/// Welch's unequal-variance t-test (two-tailed).
+pub fn welch_t_test(a: &[f64], b: &[f64]) -> WelchResult {
+    let sa = summarize(a);
+    let sb = summarize(b);
+    let va = sa.std * sa.std / sa.n as f64;
+    let vb = sb.std * sb.std / sb.n as f64;
+    let se = (va + vb).sqrt();
+    if se == 0.0 || sa.n < 2 || sb.n < 2 {
+        return WelchResult {
+            t: f64::NAN,
+            df: f64::NAN,
+            p: f64::NAN,
+        };
+    }
+    let t = (sa.mean - sb.mean) / se;
+    // Welch–Satterthwaite degrees of freedom.
+    let df = (va + vb) * (va + vb)
+        / (va * va / (sa.n as f64 - 1.0) + vb * vb / (sb.n as f64 - 1.0));
+    let p = 2.0 * student_t_sf(t.abs(), df);
+    WelchResult { t, df, p }
+}
+
+/// Survival function of Student's t: `P(T > t)` for `t >= 0`.
+pub fn student_t_sf(t: f64, df: f64) -> f64 {
+    if !t.is_finite() || !df.is_finite() || df <= 0.0 {
+        return f64::NAN;
+    }
+    let x = df / (df + t * t);
+    0.5 * inc_beta(0.5 * df, 0.5, x)
+}
+
+/// Log-gamma via the Lanczos approximation (g = 7, n = 9).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Regularized incomplete beta function `I_x(a, b)` via Lentz's continued
+/// fraction (Numerical Recipes `betai`).
+pub fn inc_beta(a: f64, b: f64, x: f64) -> f64 {
+    if !(0.0..=1.0).contains(&x) {
+        return f64::NAN;
+    }
+    if x == 0.0 {
+        return 0.0;
+    }
+    if x == 1.0 {
+        return 1.0;
+    }
+    let ln_front = ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln();
+    let front = ln_front.exp();
+    if x < (a + 1.0) / (a + b + 2.0) {
+        front * beta_cf(a, b, x) / a
+    } else {
+        1.0 - front * beta_cf(b, a, 1.0 - x) / b
+    }
+}
+
+fn beta_cf(a: f64, b: f64, x: f64) -> f64 {
+    const MAX_ITER: usize = 300;
+    const EPS: f64 = 1e-14;
+    const TINY: f64 = 1e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < TINY {
+        d = TINY;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_ITER {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        // Even step.
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < TINY {
+            d = TINY;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < TINY {
+            c = TINY;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        // Odd step.
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < TINY {
+            d = TINY;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < TINY {
+            c = TINY;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// p-th percentile (linear interpolation), p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Fixed-bin histogram over [min, max] (for the figure-style distribution
+/// outputs).
+pub fn histogram(xs: &[f64], bins: usize, min: f64, max: f64) -> Vec<(f64, usize)> {
+    assert!(bins > 0 && max > min);
+    let width = (max - min) / bins as f64;
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        if x < min || !x.is_finite() {
+            continue;
+        }
+        let idx = (((x - min) / width) as usize).min(bins - 1);
+        counts[idx] += 1;
+    }
+    counts
+        .into_iter()
+        .enumerate()
+        .map(|(i, c)| (min + (i as f64 + 0.5) * width, c))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!(summarize(&[]).mean.is_nan());
+    }
+
+    #[test]
+    fn mse_basics() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 4.0]), 2.0);
+        assert_eq!(mse(&[3.0], &[3.0]), 0.0);
+    }
+
+    #[test]
+    fn ln_gamma_matches_known_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(5)=24, Γ(0.5)=√π
+        assert!(ln_gamma(1.0).abs() < 1e-10);
+        assert!(ln_gamma(2.0).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-10);
+        assert!((ln_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn inc_beta_symmetry_and_bounds() {
+        assert_eq!(inc_beta(2.0, 3.0, 0.0), 0.0);
+        assert_eq!(inc_beta(2.0, 3.0, 1.0), 1.0);
+        // I_x(a,b) = 1 - I_{1-x}(b,a)
+        let v = inc_beta(2.5, 1.5, 0.3);
+        let w = 1.0 - inc_beta(1.5, 2.5, 0.7);
+        assert!((v - w).abs() < 1e-12);
+        // I_x(1,1) = x (uniform)
+        assert!((inc_beta(1.0, 1.0, 0.42) - 0.42).abs() < 1e-12);
+    }
+
+    #[test]
+    fn student_t_sf_known_values() {
+        // scipy.stats.t.sf(1.0, 10) = 0.17044656615103004
+        assert!((student_t_sf(1.0, 10.0) - 0.170446566).abs() < 1e-8);
+        // scipy.stats.t.sf(2.0, 30) = 0.027312522481491547
+        assert!((student_t_sf(2.0, 30.0) - 0.0273125225).abs() < 1e-6);
+        // Large df approaches the normal: t.sf(1.96, 1e6) ≈ 0.0250
+        assert!((student_t_sf(1.96, 1e6) - 0.025).abs() < 1e-4);
+    }
+
+    #[test]
+    fn welch_detects_difference() {
+        let mut rng = Pcg64::new(5, 0);
+        let a: Vec<f64> = (0..500).map(|_| rng.normal_ms(0.592, 0.067)).collect();
+        let b: Vec<f64> = (0..500).map(|_| rng.normal_ms(0.508, 0.038)).collect();
+        let r = welch_t_test(&a, &b);
+        assert!(r.p < 1e-3, "p={}", r.p);
+        assert!(r.t > 0.0);
+    }
+
+    #[test]
+    fn welch_no_difference() {
+        let mut rng = Pcg64::new(6, 0);
+        let a: Vec<f64> = (0..300).map(|_| rng.normal_ms(1.0, 0.1)).collect();
+        let b: Vec<f64> = (0..300).map(|_| rng.normal_ms(1.0, 0.1)).collect();
+        let r = welch_t_test(&a, &b);
+        assert!(r.p > 0.01, "identical populations should not differ: p={}", r.p);
+    }
+
+    #[test]
+    fn welch_degenerate_inputs() {
+        let r = welch_t_test(&[1.0], &[2.0, 3.0]);
+        assert!(r.p.is_nan());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = [0.1, 0.2, 0.5, 0.9, 1.5, f64::NAN];
+        let h = histogram(&xs, 2, 0.0, 1.0);
+        assert_eq!(h.len(), 2);
+        assert_eq!(h[0].1, 2); // 0.1, 0.2 in [0, 0.5)
+        assert_eq!(h[1].1, 3); // 0.5, 0.9 in [0.5, 1.0]; 1.5 clamps to last bin
+        assert!((h[0].0 - 0.25).abs() < 1e-12, "bin centers");
+    }
+}

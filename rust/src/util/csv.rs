@@ -1,0 +1,79 @@
+//! Tiny CSV writer for experiment outputs (plots are regenerated from
+//! these files; the bench harness also drops them under `target/exp/`).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Column-ordered CSV writer.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create the file (and parent dirs) and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            out,
+            cols: header.len(),
+        })
+    }
+
+    /// Write one row of f64 cells (must match header arity).
+    pub fn row(&mut self, cells: &[f64]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.cols, "csv row arity mismatch");
+        let mut line = String::with_capacity(cells.len() * 12);
+        for (i, c) in cells.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&format!("{c}"));
+        }
+        writeln!(self.out, "{line}")
+    }
+
+    /// Write one row of preformatted string cells.
+    pub fn row_str(&mut self, cells: &[String]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.cols, "csv row arity mismatch");
+        writeln!(self.out, "{}", cells.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("ppa_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&[1.0, 2.5]).unwrap();
+            w.row(&[3.0, 4.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\n3,4\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let dir = std::env::temp_dir().join("ppa_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        let _ = w.row(&[1.0]);
+    }
+}

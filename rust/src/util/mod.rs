@@ -1,0 +1,34 @@
+//! Small self-contained substrates: JSON parsing, deterministic RNG,
+//! CSV output, and a derivative-free optimizer.
+//!
+//! These exist because the build environment resolves crates offline from
+//! a fixed cache (the `xla` closure only) — no serde, no rand, no argmin.
+//! Each is implemented from scratch with its own tests.
+
+pub mod csv;
+pub mod json;
+pub mod nelder_mead;
+pub mod rng;
+
+/// Clamp helper for f64 that also guards NaN (returns `lo`); infinities
+/// clamp to the nearest bound.
+pub fn clamp_finite(x: f64, lo: f64, hi: f64) -> f64 {
+    if x.is_nan() {
+        return lo;
+    }
+    x.max(lo).min(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamp_finite_basics() {
+        assert_eq!(clamp_finite(0.5, 0.0, 1.0), 0.5);
+        assert_eq!(clamp_finite(-2.0, 0.0, 1.0), 0.0);
+        assert_eq!(clamp_finite(7.0, 0.0, 1.0), 1.0);
+        assert_eq!(clamp_finite(f64::NAN, 0.0, 1.0), 0.0);
+        assert_eq!(clamp_finite(f64::INFINITY, 0.0, 1.0), 1.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Derivative-free Nelder–Mead simplex minimizer.
+//!
+//! Used by [`crate::forecast::arma`] for conditional-sum-of-squares ARMA
+//! fitting (statsmodels does the same job in the paper's stack).
+
+/// Minimize `f` starting from `x0`. Returns (argmin, min value).
+///
+/// Standard coefficients (α=1, γ=2, ρ=0.5, σ=0.5); converges when the
+/// simplex's value spread falls below `tol` or `max_iter` is exhausted.
+pub fn minimize<F>(f: F, x0: &[f64], step: f64, tol: f64, max_iter: usize) -> (Vec<f64>, f64)
+where
+    F: Fn(&[f64]) -> f64,
+{
+    let n = x0.len();
+    assert!(n > 0);
+    // Initial simplex: x0 plus a perturbation along each axis.
+    let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(n + 1);
+    simplex.push((x0.to_vec(), f(x0)));
+    for i in 0..n {
+        let mut p = x0.to_vec();
+        p[i] += if p[i].abs() > 1e-12 { step * p[i].abs() } else { step };
+        let v = f(&p);
+        simplex.push((p, v));
+    }
+
+    for _ in 0..max_iter {
+        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+        let best = simplex[0].1;
+        let worst = simplex[n].1;
+        if (worst - best).abs() < tol * (1.0 + best.abs()) {
+            break;
+        }
+
+        // Centroid of all but the worst.
+        let mut centroid = vec![0.0; n];
+        for (p, _) in &simplex[..n] {
+            for (c, x) in centroid.iter_mut().zip(p) {
+                *c += x / n as f64;
+            }
+        }
+
+        let reflect: Vec<f64> = centroid
+            .iter()
+            .zip(&simplex[n].0)
+            .map(|(c, w)| c + (c - w))
+            .collect();
+        let fr = f(&reflect);
+
+        if fr < simplex[0].1 {
+            // Expand.
+            let expand: Vec<f64> = centroid
+                .iter()
+                .zip(&simplex[n].0)
+                .map(|(c, w)| c + 2.0 * (c - w))
+                .collect();
+            let fe = f(&expand);
+            simplex[n] = if fe < fr { (expand, fe) } else { (reflect, fr) };
+        } else if fr < simplex[n - 1].1 {
+            simplex[n] = (reflect, fr);
+        } else {
+            // Contract (outside if reflection helped over worst, else inside).
+            let towards = if fr < simplex[n].1 { &reflect } else { &simplex[n].0.clone() };
+            let contract: Vec<f64> = centroid
+                .iter()
+                .zip(towards)
+                .map(|(c, w)| c + 0.5 * (w - c))
+                .collect();
+            let fc = f(&contract);
+            if fc < simplex[n].1.min(fr) {
+                simplex[n] = (contract, fc);
+            } else {
+                // Shrink towards the best point.
+                let best_p = simplex[0].0.clone();
+                for entry in simplex.iter_mut().skip(1) {
+                    let p: Vec<f64> = best_p
+                        .iter()
+                        .zip(&entry.0)
+                        .map(|(b, x)| b + 0.5 * (x - b))
+                        .collect();
+                    let v = f(&p);
+                    *entry = (p, v);
+                }
+            }
+        }
+    }
+
+    simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+    simplex.swap_remove(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        let (x, v) = minimize(|p| (p[0] - 3.0).powi(2) + (p[1] + 1.0).powi(2), &[0.0, 0.0], 0.5, 1e-12, 500);
+        assert!((x[0] - 3.0).abs() < 1e-4, "{x:?}");
+        assert!((x[1] + 1.0).abs() < 1e-4, "{x:?}");
+        assert!(v < 1e-7);
+    }
+
+    #[test]
+    fn minimizes_rosenbrock() {
+        let rosen = |p: &[f64]| {
+            let (a, b) = (p[0], p[1]);
+            (1.0 - a).powi(2) + 100.0 * (b - a * a).powi(2)
+        };
+        let (x, _v) = minimize(rosen, &[-1.2, 1.0], 0.5, 1e-14, 5000);
+        assert!((x[0] - 1.0).abs() < 1e-3, "{x:?}");
+        assert!((x[1] - 1.0).abs() < 1e-3, "{x:?}");
+    }
+
+    #[test]
+    fn one_dimensional() {
+        let (x, _) = minimize(|p| (p[0] - 0.25).powi(2), &[10.0], 1.0, 1e-12, 300);
+        assert!((x[0] - 0.25).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,234 @@
+//! Deterministic PRNG streams for the simulator (no `rand` crate offline).
+//!
+//! PCG64 (XSL-RR 128/64) — the same generator family numpy defaults to.
+//! Every simulator subsystem takes its own seeded [`Pcg64`] stream so runs
+//! are reproducible and subsystems are statistically independent.
+
+/// PCG XSL-RR 128/64 generator.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const MUL: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and stream id. Different stream ids
+    /// yield statistically independent sequences for the same seed.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let initseq = ((stream as u128) << 64) | (stream as u128 ^ 0xda3e39cb94b95bdb);
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: (initseq << 1) | 1,
+        };
+        rng.step();
+        rng.state = rng.state.wrapping_add(seed as u128 ^ 0x5851f42d4c957f2d);
+        rng.step();
+        rng
+    }
+
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(MUL).wrapping_add(self.inc);
+    }
+
+    /// Next raw u64.
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi) (half-open), like `Range(lo, hi)`.
+    pub fn int_range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo, "empty int_range");
+        lo + self.below(hi - lo)
+    }
+
+    /// Bernoulli trial.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick a uniformly random element.
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.below(items.len() as u64) as usize]
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = loop {
+            let u = self.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with given mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Exponential with given rate (mean 1/rate). Used for Poisson arrivals.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0);
+        let u = loop {
+            let u = self.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / rate
+    }
+
+    /// Poisson-distributed count (Knuth for small lambda, normal approx above).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 50.0 {
+            let x = self.normal_ms(lambda, lambda.sqrt());
+            return x.max(0.0).round() as u64;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::new(7, 1);
+        let mut b = Pcg64::new(7, 1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(7, 1);
+        let mut b = Pcg64::new(7, 2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::new(3, 0);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_reasonable() {
+        let mut r = Pcg64::new(11, 0);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_unbiased_small_n() {
+        let mut r = Pcg64::new(5, 0);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.below(3) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn int_range_bounds() {
+        let mut r = Pcg64::new(9, 0);
+        for _ in 0..1000 {
+            let x = r.int_range(20, 200);
+            assert!((20..200).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(13, 0);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Pcg64::new(17, 0);
+        let n = 100_000;
+        let mean = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large_lambda() {
+        let mut r = Pcg64::new(19, 0);
+        for lambda in [0.5, 4.0, 80.0] {
+            let n = 20_000;
+            let mean = (0..n).map(|_| r.poisson(lambda) as f64).sum::<f64>() / n as f64;
+            assert!(
+                (mean - lambda).abs() < lambda.max(1.0) * 0.05,
+                "lambda={lambda} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn poisson_zero_lambda() {
+        let mut r = Pcg64::new(23, 0);
+        assert_eq!(r.poisson(0.0), 0);
+        assert_eq!(r.poisson(-1.0), 0);
+    }
+}

@@ -1,0 +1,343 @@
+//! Workload generation (paper §5.2): the *Random Access* generator
+//! (Algorithm 2) and the scaled *NASA* trace.
+//!
+//! Generators are event-driven: each owns a `WorkloadTick` stream in the
+//! DES and submits requests to the [`crate::app::App`] when woken.
+
+mod nasa;
+
+pub use nasa::{load_minute_counts, nasa_synthetic, NasaTraceConfig};
+
+use crate::app::{App, TaskType};
+use crate::sim::{Event, EventQueue, Time, MIN};
+use crate::util::rng::Pcg64;
+
+/// Fraction of requests that are cheap Sort tasks (Algorithm 2: 9/10).
+pub const SORT_PROBABILITY: f64 = 0.9;
+
+/// The three load phases of Random Access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadType {
+    Light,
+    Medium,
+    Heavy,
+}
+
+impl LoadType {
+    /// Inter-request sleep range in seconds (Algorithm 2).
+    pub fn sleep_range(self) -> (f64, f64) {
+        match self {
+            LoadType::Heavy => (0.1, 0.3),
+            LoadType::Medium => (0.5, 1.0),
+            LoadType::Light => (2.0, 5.0),
+        }
+    }
+}
+
+/// A workload generator bound to one origin zone.
+#[derive(Debug)]
+pub enum Generator {
+    RandomAccess(RandomAccessGen),
+    Trace(TraceGen),
+}
+
+impl Generator {
+    /// Schedule this generator's first tick.
+    pub fn start(&mut self, index: u32, queue: &mut EventQueue) {
+        queue.schedule_in(0, Event::WorkloadTick { generator: index });
+    }
+
+    /// Handle a `WorkloadTick`: submit request(s) and schedule the next
+    /// tick. Returns false when the generator is exhausted (trace end).
+    pub fn on_tick(
+        &mut self,
+        index: u32,
+        app: &mut App,
+        queue: &mut EventQueue,
+        rng: &mut Pcg64,
+    ) -> bool {
+        match self {
+            Generator::RandomAccess(g) => {
+                g.on_tick(index, app, queue, rng);
+                true
+            }
+            Generator::Trace(g) => g.on_tick(index, app, queue, rng),
+        }
+    }
+
+    pub fn zone(&self) -> u32 {
+        match self {
+            Generator::RandomAccess(g) => g.zone,
+            Generator::Trace(g) => g.zone,
+        }
+    }
+}
+
+/// Algorithm 2: infinite loop of bursts. Each burst picks a load type and
+/// a length `Random(20, 200)`, then submits that many requests with
+/// load-dependent sleeps; task type is Sort w.p. 0.9, Eigen w.p. 0.1.
+#[derive(Debug)]
+pub struct RandomAccessGen {
+    pub zone: u32,
+    load: LoadType,
+    remaining_in_burst: u32,
+}
+
+impl RandomAccessGen {
+    pub fn new(zone: u32) -> Self {
+        RandomAccessGen {
+            zone,
+            load: LoadType::Light,
+            remaining_in_burst: 0,
+        }
+    }
+
+    /// Current phase (exposed for tests/recorders).
+    pub fn load(&self) -> LoadType {
+        self.load
+    }
+
+    fn on_tick(&mut self, index: u32, app: &mut App, queue: &mut EventQueue, rng: &mut Pcg64) {
+        if self.remaining_in_burst == 0 {
+            self.load = *rng.pick(&[LoadType::Light, LoadType::Medium, LoadType::Heavy]);
+            self.remaining_in_burst = rng.int_range(20, 200) as u32;
+        }
+        let task = if rng.chance(SORT_PROBABILITY) {
+            TaskType::Sort
+        } else {
+            TaskType::Eigen
+        };
+        app.submit(task, self.zone, queue.now(), queue);
+        self.remaining_in_burst -= 1;
+
+        let (lo, hi) = self.load.sleep_range();
+        let sleep = crate::sim::from_secs(rng.range(lo, hi));
+        queue.schedule_in(sleep, Event::WorkloadTick { generator: index });
+    }
+}
+
+/// Replays a per-minute request-count trace (the scaled NASA dataset) as
+/// a piecewise-Poisson arrival process: during minute `m`, arrivals are
+/// exponential with rate `counts[m] * scale / 60` per second. Task mix is
+/// the same 0.9/0.1 Sort/Eigen split (paper §5.2.2).
+#[derive(Debug)]
+pub struct TraceGen {
+    pub zone: u32,
+    counts: std::sync::Arc<Vec<f64>>,
+    scale: f64,
+    started: bool,
+}
+
+impl TraceGen {
+    pub fn new(zone: u32, counts: std::sync::Arc<Vec<f64>>, scale: f64) -> Self {
+        TraceGen {
+            zone,
+            counts,
+            scale,
+            started: false,
+        }
+    }
+
+    /// Trace duration.
+    pub fn duration(&self) -> Time {
+        self.counts.len() as Time * MIN
+    }
+
+    fn rate_at(&self, now: Time) -> Option<f64> {
+        let minute = (now / MIN) as usize;
+        self.counts
+            .get(minute)
+            .map(|&c| (c * self.scale / 60.0).max(0.0))
+    }
+
+    fn on_tick(
+        &mut self,
+        index: u32,
+        app: &mut App,
+        queue: &mut EventQueue,
+        rng: &mut Pcg64,
+    ) -> bool {
+        let now = queue.now();
+        // First tick only schedules the first arrival.
+        if self.started {
+            let task = if rng.chance(SORT_PROBABILITY) {
+                TaskType::Sort
+            } else {
+                TaskType::Eigen
+            };
+            app.submit(task, self.zone, now, queue);
+        }
+        self.started = true;
+
+        // Next arrival: sample the gap from the current minute's rate; if
+        // the minute is silent, hop to the next minute boundary.
+        let mut t = now;
+        loop {
+            match self.rate_at(t) {
+                None => return false, // trace exhausted
+                Some(rate) if rate > 1e-9 => {
+                    let gap = crate::sim::from_secs(rng.exponential(rate)).max(1);
+                    let next = t + gap;
+                    // If the gap crosses into the next minute, re-sample
+                    // there (rate may differ) — thinning-free approximation
+                    // adequate for minute-resolution traces.
+                    let minute_end = (t / MIN + 1) * MIN;
+                    if next <= minute_end {
+                        queue.schedule_at(next, Event::WorkloadTick { generator: index });
+                        return true;
+                    }
+                    t = minute_end;
+                }
+                Some(_) => {
+                    t = (t / MIN + 1) * MIN;
+                }
+            }
+        }
+    }
+}
+
+/// Convenience: drive only workload ticks (no cluster) to count requests —
+/// used by tests and the fig6 experiment.
+pub fn replay_arrival_times(
+    counts: &std::sync::Arc<Vec<f64>>,
+    scale: f64,
+    seed: u64,
+) -> Vec<Time> {
+    use crate::app::TaskCosts;
+    use crate::cluster::{Cluster, Deployment, PodSpec, Selector, Tier};
+
+    let mut cluster = Cluster::new();
+    let edge = cluster.add_deployment(Deployment::new(
+        "edge",
+        Selector::new(Tier::Edge, Some(1)),
+        PodSpec::new(500, 256),
+        0,
+        1,
+    ));
+    let cloud = cluster.add_deployment(Deployment::new(
+        "cloud",
+        Selector::new(Tier::Cloud, None),
+        PodSpec::new(1000, 512),
+        0,
+        1,
+    ));
+    let mut app = App::new(TaskCosts::default(), &[(1, edge)], cloud);
+    let mut queue = EventQueue::new();
+    let mut rng = Pcg64::new(seed, 100);
+    let mut gen = Generator::Trace(TraceGen::new(1, counts.clone(), scale));
+    gen.start(0, &mut queue);
+
+    let mut arrivals = Vec::new();
+    while let Some((t, ev)) = queue.pop() {
+        match ev {
+            Event::WorkloadTick { generator } => {
+                if !gen.on_tick(generator, &mut app, &mut queue, &mut rng) {
+                    break;
+                }
+            }
+            Event::RequestArrival { .. } => arrivals.push(t),
+            _ => {}
+        }
+    }
+    arrivals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::TaskCosts;
+    use crate::cluster::{Cluster, Deployment, PodSpec, Selector, Tier};
+    use std::sync::Arc;
+
+    fn app() -> App {
+        let mut cluster = Cluster::new();
+        let edge = cluster.add_deployment(Deployment::new(
+            "edge",
+            Selector::new(Tier::Edge, Some(1)),
+            PodSpec::new(500, 256),
+            0,
+            1,
+        ));
+        let cloud = cluster.add_deployment(Deployment::new(
+            "cloud",
+            Selector::new(Tier::Cloud, None),
+            PodSpec::new(1000, 512),
+            0,
+            1,
+        ));
+        App::new(TaskCosts::default(), &[(1, edge)], cloud)
+    }
+
+    #[test]
+    fn random_access_generates_with_correct_mix() {
+        let mut a = app();
+        let mut q = EventQueue::new();
+        let mut rng = Pcg64::new(7, 0);
+        let mut gen = Generator::RandomAccess(RandomAccessGen::new(1));
+        gen.start(0, &mut q);
+
+        let mut sorts = 0usize;
+        let mut eigens = 0usize;
+        let mut n = 0usize;
+        while n < 5000 {
+            let Some((_, ev)) = q.pop() else { break };
+            match ev {
+                Event::WorkloadTick { generator } => {
+                    gen.on_tick(generator, &mut a, &mut q, &mut rng);
+                }
+                Event::RequestArrival { .. } => {
+                    n += 1;
+                }
+                _ => {}
+            }
+            // Count by service routing.
+            sorts = a.services[0].counters.arrivals as usize;
+            eigens = a.services[1].counters.arrivals as usize;
+        }
+        let frac = sorts as f64 / (sorts + eigens) as f64;
+        assert!((frac - SORT_PROBABILITY).abs() < 0.02, "sort frac {frac}");
+    }
+
+    #[test]
+    fn random_access_sleep_ranges_honoured() {
+        // Heavy phase: gaps in [0.1, 0.3] s.
+        let (lo, hi) = LoadType::Heavy.sleep_range();
+        assert_eq!((lo, hi), (0.1, 0.3));
+        assert_eq!(LoadType::Light.sleep_range(), (2.0, 5.0));
+        assert_eq!(LoadType::Medium.sleep_range(), (0.5, 1.0));
+    }
+
+    #[test]
+    fn trace_replay_matches_counts() {
+        // 3 minutes at 120/min then silence.
+        let counts = Arc::new(vec![120.0, 120.0, 120.0, 0.0, 0.0]);
+        let arrivals = replay_arrival_times(&counts, 1.0, 11);
+        let n = arrivals.len() as f64;
+        assert!((n - 360.0).abs() < 70.0, "expected ~360 arrivals, got {n}");
+        // All within the 5-minute horizon (+routing latency slack).
+        assert!(arrivals.iter().all(|&t| t <= 5 * MIN + crate::sim::SEC));
+    }
+
+    #[test]
+    fn trace_scale_factor_applies() {
+        let counts = Arc::new(vec![100.0; 10]);
+        let full = replay_arrival_times(&counts, 1.0, 3).len() as f64;
+        let half = replay_arrival_times(&counts, 0.5, 3).len() as f64;
+        assert!((half / full - 0.5).abs() < 0.12, "full={full} half={half}");
+    }
+
+    #[test]
+    fn trace_ends() {
+        let counts = Arc::new(vec![10.0, 0.0]);
+        let arrivals = replay_arrival_times(&counts, 1.0, 5);
+        assert!(arrivals.len() < 30);
+    }
+
+    #[test]
+    fn silent_minutes_are_skipped() {
+        let counts = Arc::new(vec![0.0, 0.0, 60.0, 0.0]);
+        let arrivals = replay_arrival_times(&counts, 1.0, 9);
+        assert!(!arrivals.is_empty());
+        assert!(arrivals.iter().all(|&t| t >= 2 * MIN), "{arrivals:?}");
+    }
+}

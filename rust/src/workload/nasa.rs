@@ -1,0 +1,186 @@
+//! The NASA-KSC trace substitute (paper §5.2.2, Fig 6).
+//!
+//! The paper replays a 2-day subset of the NASA Kennedy Space Center WWW
+//! logs (July 1995), bucketed per minute and scaled so the peak fits the
+//! edge testbed. That dataset is not redistributable here, so
+//! [`nasa_synthetic`] generates a trace with the same *shape*: two diurnal
+//! cycles with an afternoon peak, a deep overnight trough (day/night ratio
+//! ≈ 3.5x), short-timescale Poisson jitter, and occasional bursts — the
+//! properties that actually drive autoscaler behaviour. If you have the
+//! real logs, preprocess them to per-minute counts (one integer per line)
+//! and feed them through [`load_minute_counts`] instead.
+
+use crate::util::rng::Pcg64;
+use std::f64::consts::PI;
+use std::path::Path;
+
+/// Shape parameters for the synthetic NASA-like trace.
+#[derive(Debug, Clone, Copy)]
+pub struct NasaTraceConfig {
+    /// Trace length in minutes (paper: 2 days).
+    pub minutes: usize,
+    /// Peak requests/minute after scaling (paper: scaled so the peak does
+    /// not exceed the edge capacity).
+    pub peak_per_minute: f64,
+    /// Trough-to-peak ratio (NASA KSC shows ~0.25–0.35 overnight).
+    pub trough_ratio: f64,
+    /// Hour of the daily peak (local time; KSC logs peak mid-afternoon).
+    pub peak_hour: f64,
+    /// Relative short-term noise (std of multiplicative jitter).
+    pub noise: f64,
+    /// Expected number of burst events per day.
+    pub bursts_per_day: f64,
+    pub seed: u64,
+}
+
+impl Default for NasaTraceConfig {
+    fn default() -> Self {
+        NasaTraceConfig {
+            minutes: 2 * 24 * 60,
+            // Scaled so the peak sweeps the edge pools through their full
+            // replica range while the cloud Eigen pool stays at (but
+            // within) its Table-2 capacity — the paper's "adjusted to a
+            // proper scale so that the peak workload does not exceed
+            // resource limitations".
+            peak_per_minute: 260.0,
+            trough_ratio: 0.2,
+            peak_hour: 15.0,
+            noise: 0.10,
+            bursts_per_day: 3.0,
+            seed: 1995,
+        }
+    }
+}
+
+/// Generate per-minute request counts with the NASA trace's shape.
+pub fn nasa_synthetic(cfg: &NasaTraceConfig) -> Vec<f64> {
+    let mut rng = Pcg64::new(cfg.seed, 1995);
+    let mut counts = Vec::with_capacity(cfg.minutes);
+
+    // Pre-draw burst windows: (start_minute, length_minutes, amplitude).
+    let days = cfg.minutes as f64 / 1440.0;
+    let n_bursts = rng.poisson(cfg.bursts_per_day * days) as usize;
+    let bursts: Vec<(usize, usize, f64)> = (0..n_bursts)
+        .map(|_| {
+            let start = rng.below(cfg.minutes as u64) as usize;
+            let len = rng.int_range(5, 30) as usize;
+            let amp = rng.range(1.3, 2.0);
+            (start, len, amp)
+        })
+        .collect();
+
+    // Slow day-to-day drift (the two NASA days differ slightly).
+    let day_gain: Vec<f64> = (0..days.ceil() as usize + 1)
+        .map(|_| rng.range(0.9, 1.1))
+        .collect();
+
+    for m in 0..cfg.minutes {
+        let hour = (m as f64 / 60.0) % 24.0;
+        // Diurnal base: cosine dipped at (peak_hour + 12) mod 24.
+        let phase = (hour - cfg.peak_hour) / 24.0 * 2.0 * PI;
+        let diurnal = 0.5 * (1.0 + phase.cos()); // 1 at peak, 0 at trough
+        let base = cfg.trough_ratio + (1.0 - cfg.trough_ratio) * diurnal;
+
+        let mut v = cfg.peak_per_minute * base * day_gain[m / 1440];
+        for &(start, len, amp) in &bursts {
+            if m >= start && m < start + len {
+                v *= amp;
+            }
+        }
+        // Multiplicative jitter + Poisson integerization.
+        let jittered = (v * (1.0 + cfg.noise * rng.normal())).max(0.0);
+        counts.push(rng.poisson(jittered) as f64);
+    }
+    counts
+}
+
+/// Load per-minute counts from a preprocessed text file (one count per
+/// line, `#` comments allowed) — the path for users who have the real
+/// NASA logs.
+pub fn load_minute_counts(path: &Path) -> crate::Result<Vec<f64>> {
+    use anyhow::Context;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    let mut counts = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let v: f64 = line
+            .parse()
+            .with_context(|| format!("bad count on line {}", i + 1))?;
+        anyhow::ensure!(v >= 0.0 && v.is_finite(), "negative count on line {}", i + 1);
+        counts.push(v);
+    }
+    anyhow::ensure!(!counts.is_empty(), "empty trace file");
+    Ok(counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_has_diurnal_shape() {
+        let cfg = NasaTraceConfig::default();
+        let counts = nasa_synthetic(&cfg);
+        assert_eq!(counts.len(), 2880);
+
+        // Average around the configured peak hour vs the trough.
+        let hour_mean = |h: f64| -> f64 {
+            let m0 = (h * 60.0) as usize;
+            (0..60).map(|i| counts[m0 + i]).sum::<f64>() / 60.0
+        };
+        let peak_day1 = hour_mean(cfg.peak_hour);
+        let trough_day1 = hour_mean((cfg.peak_hour + 12.0) % 24.0);
+        assert!(
+            peak_day1 > 2.0 * trough_day1,
+            "peak {peak_day1} vs trough {trough_day1}"
+        );
+        // Peak roughly at configured scale.
+        assert!(peak_day1 > cfg.peak_per_minute * 0.6);
+    }
+
+    #[test]
+    fn synthetic_deterministic_per_seed() {
+        let cfg = NasaTraceConfig::default();
+        assert_eq!(nasa_synthetic(&cfg), nasa_synthetic(&cfg));
+        let other = NasaTraceConfig {
+            seed: 7,
+            ..NasaTraceConfig::default()
+        };
+        assert_ne!(nasa_synthetic(&cfg), nasa_synthetic(&other));
+    }
+
+    #[test]
+    fn synthetic_nonnegative() {
+        let counts = nasa_synthetic(&NasaTraceConfig::default());
+        assert!(counts.iter().all(|&c| c >= 0.0));
+    }
+
+    #[test]
+    fn loads_counts_file() {
+        let dir = std::env::temp_dir().join("ppa_nasa_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("counts.txt");
+        std::fs::write(&path, "# header\n10\n20\n\n30\n").unwrap();
+        let counts = load_minute_counts(&path).unwrap();
+        assert_eq!(counts, vec![10.0, 20.0, 30.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_file() {
+        let dir = std::env::temp_dir().join("ppa_nasa_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.txt");
+        std::fs::write(&path, "abc\n").unwrap();
+        assert!(load_minute_counts(&path).is_err());
+        std::fs::write(&path, "-5\n").unwrap();
+        assert!(load_minute_counts(&path).is_err());
+        std::fs::write(&path, "").unwrap();
+        assert!(load_minute_counts(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

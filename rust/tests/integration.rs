@@ -1,0 +1,192 @@
+//! Cross-module integration tests: full worlds, proactive-vs-reactive
+//! behaviour, failure injection, and paper-shape checks at reduced scale.
+
+use ppa_edge::app::{TaskCosts, TaskType};
+use ppa_edge::autoscaler::{Hpa, Ppa, PpaConfig};
+use ppa_edge::config::{paper_cluster, quickstart_cluster};
+use ppa_edge::experiments::{self, SimWorld};
+use ppa_edge::forecast::{Forecaster, NaiveForecaster, UpdatePolicy};
+use ppa_edge::metrics::METRIC_DIM;
+use ppa_edge::sim::{ServiceId, MIN};
+use ppa_edge::stats::summarize;
+use ppa_edge::workload::{Generator, NasaTraceConfig, RandomAccessGen, TraceGen};
+use std::sync::Arc;
+
+fn hpa_everywhere(world: &mut SimWorld) {
+    for svc in 0..world.app.services.len() {
+        world.add_scaler(Box::new(Hpa::with_defaults()), svc);
+    }
+}
+
+#[test]
+fn paper_cluster_serves_random_access_one_hour() {
+    let cfg = paper_cluster();
+    let mut world = SimWorld::build(&cfg, TaskCosts::default(), 101);
+    world.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
+    world.add_generator(Generator::RandomAccess(RandomAccessGen::new(2)));
+    hpa_everywhere(&mut world);
+    world.run_until(60 * MIN);
+
+    assert!(world.app.responses.len() > 1000, "{}", world.app.responses.len());
+    let sort = summarize(&world.response_times(TaskType::Sort));
+    let eigen = summarize(&world.response_times(TaskType::Eigen));
+    // Calibration shape: Sort sub-second-ish, Eigen >5 s (paper: 0.5/13.6).
+    assert!(sort.mean > 0.3 && sort.mean < 3.0, "sort mean {}", sort.mean);
+    assert!(eigen.mean > 4.0, "eigen mean {}", eigen.mean);
+    assert!(eigen.mean > 5.0 * sort.mean, "eigen must dominate sort");
+    // No metric ever exceeded physical capacity.
+    for &(_, svc, replicas) in &world.replica_log {
+        if svc == ServiceId(2) {
+            assert!(replicas <= 6, "cloud pods capped by 2x(2800/1000)");
+        } else {
+            assert!(replicas <= 6, "edge pods capped by 2x(1700/500)");
+        }
+    }
+}
+
+#[test]
+fn nasa_trace_replay_end_to_end() {
+    let counts = Arc::new(ppa_edge::workload::nasa_synthetic(&NasaTraceConfig {
+        minutes: 60,
+        ..NasaTraceConfig::default()
+    }));
+    let cfg = paper_cluster();
+    let mut world = SimWorld::build(&cfg, TaskCosts::default(), 55);
+    world.add_generator(Generator::Trace(TraceGen::new(1, counts.clone(), 0.5)));
+    world.add_generator(Generator::Trace(TraceGen::new(2, counts.clone(), 0.5)));
+    hpa_everywhere(&mut world);
+    world.run_until(60 * MIN);
+    assert!(world.app.responses.len() > 500);
+    // Arrivals should roughly match the trace total.
+    let total_trace: f64 = counts.iter().sum();
+    let served = world.app.responses.len() as f64;
+    assert!(
+        served > total_trace * 0.5 && served < total_trace * 1.3,
+        "served {served} vs trace {total_trace}"
+    );
+}
+
+#[test]
+fn ppa_naive_beats_or_matches_hpa_on_bursty_load() {
+    // The PPA's proactive scaling (20 s interval + trend following) should
+    // at minimum not lose to HPA on the same workload/seed.
+    let run = |use_ppa: bool| {
+        let cfg = quickstart_cluster();
+        let mut world = SimWorld::build(&cfg, TaskCosts::default(), 77);
+        world.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
+        for svc in 0..world.app.services.len() {
+            if use_ppa {
+                world.add_scaler(
+                    Box::new(Ppa::new(PpaConfig::default(), Box::new(NaiveForecaster))),
+                    svc,
+                );
+            } else {
+                world.add_scaler(Box::new(Hpa::with_defaults()), svc);
+            }
+        }
+        world.run_until(90 * MIN);
+        summarize(&world.response_times(TaskType::Sort)).mean
+    };
+    let hpa_mean = run(false);
+    let ppa_mean = run(true);
+    assert!(
+        ppa_mean < hpa_mean * 1.25,
+        "ppa {ppa_mean} should not lose badly to hpa {hpa_mean}"
+    );
+}
+
+#[test]
+fn model_update_failure_does_not_kill_the_world() {
+    /// A forecaster whose retrain always fails (corrupt model file).
+    struct CorruptModel;
+    impl Forecaster for CorruptModel {
+        fn name(&self) -> &str {
+            "corrupt"
+        }
+        fn predict(&mut self, h: &[[f64; METRIC_DIM]]) -> Option<[f64; METRIC_DIM]> {
+            h.last().copied()
+        }
+        fn retrain(
+            &mut self,
+            _h: &[[f64; METRIC_DIM]],
+            _p: UpdatePolicy,
+        ) -> anyhow::Result<()> {
+            anyhow::bail!("model file corrupted")
+        }
+    }
+
+    let cfg = quickstart_cluster();
+    let mut world = SimWorld::build(&cfg, TaskCosts::default(), 13);
+    world.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
+    let ppa = Ppa::new(
+        PpaConfig {
+            update_interval: 10 * MIN, // fail repeatedly within the run
+            ..PpaConfig::default()
+        },
+        Box::new(CorruptModel),
+    );
+    world.add_scaler(Box::new(ppa), 0);
+    world.add_scaler(Box::new(Hpa::with_defaults()), 1);
+    world.run_until(45 * MIN);
+    // The world survived several failed update loops and kept serving.
+    assert!(world.app.responses.len() > 100);
+}
+
+#[test]
+fn cluster_capacity_saturation_backpressure() {
+    // Flood a tiny cluster: queue grows, but completed responses keep
+    // flowing and replicas never exceed capacity.
+    let cfg = quickstart_cluster();
+    let mut world = SimWorld::build(&cfg, TaskCosts::default(), 99);
+    // Two generators on the same zone = double load.
+    world.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
+    world.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
+    hpa_everywhere(&mut world);
+    world.run_until(30 * MIN);
+    // The replica metric counts Pending pods too (K8s semantics); the
+    // schedulable bound is 3x500m per node, and HPA's Eq 1 caps desired
+    // at ceil(300/70)=5 even when the metric saturates.
+    let max_edge_replicas = world
+        .replica_log
+        .iter()
+        .filter(|&&(_, svc, _)| svc == ServiceId(0))
+        .map(|&(_, _, r)| r)
+        .max()
+        .unwrap();
+    assert!(max_edge_replicas <= 5, "bounded by Eq 1: {max_edge_replicas}");
+    // Physically running pods never exceeded node capacity.
+    let running = world
+        .cluster
+        .pods
+        .iter()
+        .filter(|p| p.phase == ppa_edge::cluster::PodPhase::Running)
+        .count();
+    assert!(running <= 6, "3 edge + 2 cloud slots: {running}");
+    assert!(world.app.responses.len() > 200);
+}
+
+#[test]
+fn pretraining_dataset_statistics() {
+    let (hist, _) = experiments::pretrain_histories(0.5, 20, 2021);
+    // Protocol vector sanity: CPU in [0, sum-bound], rates non-negative.
+    for row in &hist[0] {
+        assert!(row.iter().all(|v| v.is_finite() && *v >= 0.0), "{row:?}");
+    }
+}
+
+#[test]
+fn deterministic_nasa_world() {
+    let counts = Arc::new(ppa_edge::workload::nasa_synthetic(&NasaTraceConfig {
+        minutes: 30,
+        ..NasaTraceConfig::default()
+    }));
+    let run = || {
+        let cfg = paper_cluster();
+        let mut world = SimWorld::build(&cfg, TaskCosts::default(), 1);
+        world.add_generator(Generator::Trace(TraceGen::new(1, counts.clone(), 0.5)));
+        hpa_everywhere(&mut world);
+        world.run_until(30 * MIN);
+        (world.app.responses.len(), world.events_processed)
+    };
+    assert_eq!(run(), run());
+}

@@ -1,0 +1,317 @@
+//! Property-based tests (hand-rolled: the offline crate set has no
+//! proptest). Each property runs hundreds of seeded random cases; a
+//! failure prints the case seed for reproduction.
+
+use ppa_edge::cluster::{
+    Cluster, Deployment, NodeSpec, PodPhase, PodSpec, Selector, Tier,
+};
+use ppa_edge::forecast::{Scaler, StandardScaler};
+use ppa_edge::metrics::METRIC_DIM;
+use ppa_edge::sim::{Event, EventQueue};
+use ppa_edge::util::json::Json;
+use ppa_edge::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// Event queue: pops are globally time-ordered, FIFO within a timestamp.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_event_queue_total_order() {
+    for seed in 0..200 {
+        let mut rng = Pcg64::new(seed, 0);
+        let mut q = EventQueue::new();
+        let n = 1 + rng.below(500) as usize;
+        for i in 0..n {
+            q.schedule_at(rng.below(1000), Event::WorkloadTick { generator: i as u32 });
+        }
+        let mut last_t = 0;
+        let mut seen_at_t: Vec<u32> = Vec::new();
+        while let Some((t, ev)) = q.pop() {
+            assert!(t >= last_t, "seed {seed}: time went backwards");
+            let Event::WorkloadTick { generator } = ev else { unreachable!() };
+            if t != last_t {
+                seen_at_t.clear();
+            }
+            // FIFO within equal timestamps == strictly increasing ids
+            // among same-time events (they were scheduled in id order).
+            if let Some(&prev) = seen_at_t.last() {
+                assert!(generator > prev, "seed {seed}: FIFO violated at t={t}");
+            }
+            seen_at_t.push(generator);
+            last_t = t;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cluster: resource accounting stays consistent under random scaling.
+// ---------------------------------------------------------------------------
+
+fn check_invariants(c: &Cluster, seed: u64) {
+    // Node allocations equal the sum of bound, non-Gone pod requests.
+    for (ni, node) in c.nodes.iter().enumerate() {
+        let mut cpu = 0u32;
+        let mut ram = 0u32;
+        for &pid in &node.pods {
+            let p = c.pod(pid);
+            assert_ne!(p.phase, PodPhase::Gone, "seed {seed}: Gone pod bound to node {ni}");
+            cpu += p.spec.cpu_millis;
+            ram += p.spec.ram_mb;
+        }
+        assert_eq!(node.alloc_cpu, cpu, "seed {seed}: node {ni} cpu accounting");
+        assert_eq!(node.alloc_ram, ram, "seed {seed}: node {ni} ram accounting");
+        assert!(
+            node.alloc_cpu <= node.spec.allocatable_cpu(),
+            "seed {seed}: node {ni} over-allocated"
+        );
+    }
+    // Deployment pod lists contain no Gone pods and every non-Gone pod is
+    // listed exactly once.
+    for (di, dep) in c.deployments.iter().enumerate() {
+        for &pid in &dep.pods {
+            assert_ne!(
+                c.pod(pid).phase,
+                PodPhase::Gone,
+                "seed {seed}: dep {di} lists a Gone pod"
+            );
+        }
+    }
+    for pod in &c.pods {
+        if pod.phase != PodPhase::Gone {
+            let listed = c.deployments[pod.deployment.0 as usize]
+                .pods
+                .iter()
+                .filter(|&&p| p == pod.id)
+                .count();
+            assert_eq!(listed, 1, "seed {seed}: pod listed {listed} times");
+        }
+    }
+}
+
+#[test]
+fn prop_cluster_accounting_under_random_scaling() {
+    for seed in 0..60 {
+        let mut rng = Pcg64::new(seed, 1);
+        let mut c = Cluster::new();
+        for z in 1..=2 {
+            for i in 0..2 {
+                c.add_node(NodeSpec::new(
+                    &format!("e{z}-{i}"),
+                    Tier::Edge,
+                    z,
+                    1000 + 500 * rng.below(4) as u32,
+                    2048,
+                ));
+            }
+        }
+        let dep_a = c.add_deployment(Deployment::new(
+            "a",
+            Selector::new(Tier::Edge, Some(1)),
+            PodSpec::new(300, 128),
+            0,
+            50,
+        ));
+        let dep_b = c.add_deployment(Deployment::new(
+            "b",
+            Selector::new(Tier::Edge, None),
+            PodSpec::new(500, 256),
+            0,
+            50,
+        ));
+        let mut q = EventQueue::new();
+        for _step in 0..40 {
+            let dep = if rng.chance(0.5) { dep_a } else { dep_b };
+            let desired = rng.below(10) as usize;
+            c.reconcile(dep, desired, &mut q, &mut rng);
+            // Randomly deliver some pending lifecycle events.
+            for _ in 0..rng.below(6) {
+                match q.pop() {
+                    Some((_, Event::PodRunning { pod })) => {
+                        c.on_pod_running(pod);
+                    }
+                    Some((_, Event::PodTerminated { pod })) => c.on_pod_terminated(pod),
+                    Some(_) => {}
+                    None => break,
+                }
+            }
+            check_invariants(&c, seed);
+        }
+        // Drain and re-check.
+        while let Some((_, ev)) = q.pop() {
+            match ev {
+                Event::PodRunning { pod } => {
+                    c.on_pod_running(pod);
+                }
+                Event::PodTerminated { pod } => c.on_pod_terminated(pod),
+                _ => {}
+            }
+        }
+        check_invariants(&c, seed);
+    }
+}
+
+#[test]
+fn prop_max_replicas_is_schedulable() {
+    // Whatever max_replicas claims must actually schedule.
+    for seed in 0..40 {
+        let mut rng = Pcg64::new(seed, 2);
+        let mut c = Cluster::new();
+        let n_nodes = 1 + rng.below(4) as usize;
+        for i in 0..n_nodes {
+            c.add_node(NodeSpec::new(
+                &format!("n{i}"),
+                Tier::Edge,
+                1,
+                800 + 400 * rng.below(6) as u32,
+                1024 + 512 * rng.below(4) as u32,
+            ));
+        }
+        let dep = c.add_deployment(Deployment::new(
+            "d",
+            Selector::new(Tier::Edge, None),
+            PodSpec::new(
+                200 + 100 * rng.below(5) as u32,
+                128 + 64 * rng.below(4) as u32,
+            ),
+            0,
+            1000,
+        ));
+        let cap = c.max_replicas(dep);
+        let mut q = EventQueue::new();
+        c.reconcile(dep, cap, &mut q, &mut rng);
+        let pending = c.count_phase(dep, PodPhase::Pending);
+        assert_eq!(
+            pending, 0,
+            "seed {seed}: max_replicas={cap} but {pending} unschedulable"
+        );
+        // And one more must NOT fit.
+        if cap > 0 {
+            c.reconcile(dep, cap + 1, &mut q, &mut rng);
+            assert_eq!(
+                c.count_phase(dep, PodPhase::Pending),
+                1,
+                "seed {seed}: cap={cap} not tight"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scaler: transform/inverse roundtrip on arbitrary data.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_scaler_roundtrip() {
+    for seed in 0..100 {
+        let mut rng = Pcg64::new(seed, 3);
+        let n = 2 + rng.below(100) as usize;
+        let rows: Vec<[f64; METRIC_DIM]> = (0..n)
+            .map(|_| {
+                let mut r = [0.0; METRIC_DIM];
+                for v in &mut r {
+                    let mean = rng.range(-100.0, 100.0);
+                    let std = rng.range(0.0, 50.0);
+                    *v = rng.normal_ms(mean, std);
+                }
+                r
+            })
+            .collect();
+        let s = StandardScaler::fit(&rows);
+        for row in &rows {
+            let back = s.inverse_row(&s.transform(row));
+            for (a, b) in back.iter().zip(row) {
+                assert!(
+                    (a - b).abs() < 1e-6 * (1.0 + b.abs()),
+                    "seed {seed}: roundtrip {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON: print→parse roundtrip over random documents.
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+    if depth == 0 {
+        return match rng.below(4) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.normal() * 1e3).round() / 8.0),
+            _ => Json::Str(random_string(rng)),
+        };
+    }
+    match rng.below(6) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => Json::Num((rng.normal() * 1e6).round() / 16.0),
+        3 => Json::Str(random_string(rng)),
+        4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}_{}", random_string(rng)), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+fn random_string(rng: &mut Pcg64) -> String {
+    let chars = ['a', 'Z', '9', ' ', '"', '\\', '\n', '\t', 'é', '日', '😀', '\u{7}'];
+    (0..rng.below(10)).map(|_| *rng.pick(&chars)).collect()
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for seed in 0..300 {
+        let mut rng = Pcg64::new(seed, 4);
+        let doc = random_json(&mut rng, 3);
+        let text = doc.to_string();
+        let parsed = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: reparse failed: {e}\n{text}"));
+        assert_eq!(parsed, doc, "seed {seed}: roundtrip mismatch");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Eq 1 / HPA bounds.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_eq1_monotone_and_bounded() {
+    use ppa_edge::autoscaler::eq1_replicas;
+    for seed in 0..100 {
+        let mut rng = Pcg64::new(seed, 5);
+        let threshold = rng.range(1.0, 200.0);
+        let a = rng.range(0.0, 1000.0);
+        let b = a + rng.range(0.0, 1000.0);
+        assert!(
+            eq1_replicas(a, threshold) <= eq1_replicas(b, threshold),
+            "seed {seed}: monotonicity"
+        );
+        let r = eq1_replicas(a, threshold) as f64;
+        assert!(r * threshold >= a, "seed {seed}: enough capacity");
+        assert!((r - 1.0) * threshold < a || r == 0.0, "seed {seed}: no overshoot");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Statistics: Welch p-value sanity across random same/different samples.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_welch_p_uniform_under_null() {
+    // Under H0, p-values should be roughly uniform: count p<0.05 ≈ 5%.
+    let mut rejections = 0;
+    let trials = 400;
+    for seed in 0..trials {
+        let mut rng = Pcg64::new(seed as u64, 6);
+        let a: Vec<f64> = (0..80).map(|_| rng.normal_ms(10.0, 2.0)).collect();
+        let b: Vec<f64> = (0..80).map(|_| rng.normal_ms(10.0, 2.0)).collect();
+        if ppa_edge::stats::welch_t_test(&a, &b).p < 0.05 {
+            rejections += 1;
+        }
+    }
+    let rate = rejections as f64 / trials as f64;
+    assert!(rate > 0.01 && rate < 0.12, "null rejection rate {rate}");
+}
