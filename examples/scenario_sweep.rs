@@ -1,0 +1,55 @@
+//! Scenario-matrix driver: the `model_comparison`-style example for the
+//! parallel sweep harness. Runs PPA (ARMA, trained online, plus the naive
+//! last-value model) against HPA over the full preset scenario library —
+//! diurnal, flash-crowd, step-surge, multi-zone composite, Random Access
+//! and the scaled NASA trace — across several seeds, in parallel, and
+//! writes a JSON report.
+//!
+//! ```bash
+//! cargo run --release --example scenario_sweep            # 30 min cells, 4 seeds
+//! cargo run --release --example scenario_sweep -- 60 8    # 60 min cells, 8 seeds
+//! ```
+
+use ppa_edge::config::scenario_presets;
+use ppa_edge::experiments::{run_sweep, AutoscalerKind, SweepConfig};
+use ppa_edge::report;
+
+fn main() -> anyhow::Result<()> {
+    let minutes: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(30);
+    let n_seeds: u64 = std::env::args()
+        .nth(2)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(4);
+
+    let cfg = SweepConfig {
+        scenarios: scenario_presets(),
+        scalers: vec![
+            AutoscalerKind::Hpa,
+            AutoscalerKind::PpaArma,
+            AutoscalerKind::PpaNaive,
+        ],
+        seeds: (0..n_seeds).map(|i| 2021 + i).collect(),
+        minutes,
+        threads: 0, // one worker per core
+    };
+    println!(
+        "scenario sweep: {} scenarios x {} autoscalers x {} seeds ({} sim-minutes per cell)",
+        cfg.scenarios.len(),
+        cfg.scalers.len(),
+        cfg.seeds.len(),
+        minutes
+    );
+
+    let result = run_sweep(&cfg)?;
+    report::print_sweep(&result);
+
+    let out = std::path::Path::new("target/experiments/scenario_sweep.json");
+    result.write_json(out)?;
+    println!("json report: {}", out.display());
+    Ok(())
+}

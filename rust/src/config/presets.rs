@@ -1,7 +1,13 @@
-//! Presets mirroring the paper's testbed.
+//! Presets mirroring the paper's testbed, plus the workload scenario
+//! library the sweep harness runs against.
 
 use super::{ClusterConfig, DeploymentConfig, NodeConfig};
 use crate::cluster::Tier;
+use crate::sim::{HOUR, MIN};
+use crate::workload::{
+    nasa_synthetic, DiurnalConfig, FlashCrowdConfig, NasaTraceConfig, Scenario, StepSurgeConfig,
+};
+use std::sync::Arc;
 
 /// Table 2: 1 cloud control node (4000m/4GB), 2 cloud workers
 /// (3000m/3GB), 2 edge zones with 2 worker nodes each (2000m/2GB).
@@ -178,9 +184,96 @@ pub fn quickstart_cluster() -> ClusterConfig {
     }
 }
 
+/// The workload scenario library (sweep presets). Zones match the
+/// Table-2 cluster (edge zones 1 and 2). Analytic scenarios are scaled so
+/// their peaks sweep the edge pools through the full replica range
+/// without saturating the cloud Eigen pool (the paper's §5.2.2 rule).
+pub fn scenario_presets() -> Vec<(String, Scenario)> {
+    let nasa = Arc::new(nasa_synthetic(&NasaTraceConfig::default()));
+    // Time-compressed day: a full diurnal cycle inside one sweep hour,
+    // peaking mid-run of the default 30-minute cells.
+    let compressed_day = DiurnalConfig {
+        period: HOUR,
+        peak_hour: 6.0,
+        ..DiurnalConfig::default()
+    };
+    vec![
+        (
+            "random-access".to_string(),
+            Scenario::RandomAccess { zones: vec![1, 2] },
+        ),
+        (
+            "nasa-trace".to_string(),
+            Scenario::Trace {
+                counts: nasa,
+                scale: 0.5,
+                zones: vec![1, 2],
+                stagger: 0,
+            },
+        ),
+        (
+            "diurnal".to_string(),
+            Scenario::Diurnal {
+                cfg: compressed_day,
+                zones: vec![1, 2],
+            },
+        ),
+        (
+            "flash-crowd".to_string(),
+            Scenario::FlashCrowd {
+                cfg: FlashCrowdConfig::default(),
+                zones: vec![1, 2],
+                stagger: 5 * MIN,
+            },
+        ),
+        (
+            "step-surge".to_string(),
+            Scenario::StepSurge {
+                cfg: StepSurgeConfig::default(),
+                zones: vec![1, 2],
+            },
+        ),
+        (
+            "multi-zone-mix".to_string(),
+            Scenario::Composite {
+                parts: vec![
+                    Scenario::Diurnal {
+                        cfg: compressed_day,
+                        zones: vec![1],
+                    },
+                    Scenario::FlashCrowd {
+                        cfg: FlashCrowdConfig {
+                            // Surge hits zone 2 while zone 1 is climbing
+                            // toward its diurnal peak.
+                            spike_start: 12 * MIN,
+                            ..FlashCrowdConfig::default()
+                        },
+                        zones: vec![2],
+                        stagger: 0,
+                    },
+                ],
+            },
+        ),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn scenario_presets_build() {
+        let presets = scenario_presets();
+        assert_eq!(presets.len(), 6);
+        for (name, s) in &presets {
+            assert!(!name.is_empty());
+            assert!(!s.build_generators().is_empty(), "{name} builds nothing");
+        }
+        // The composite mixes families across zones.
+        let (_, mix) = presets.last().unwrap();
+        let zones: Vec<u32> = mix.build_generators().iter().map(|g| g.zone()).collect();
+        assert_eq!(zones, vec![1, 2]);
+    }
 
     #[test]
     fn paper_cluster_matches_table2() {

@@ -42,6 +42,12 @@ pub struct SimWorld {
     scrape_interval: Time,
     /// Events processed (perf counter).
     pub events_processed: u64,
+    /// Whether the initial periodic ticks have been armed. Guarding on
+    /// `events_processed == 0` is wrong: a first `run_until` that happens
+    /// to process zero events (empty window) would re-arm every initial
+    /// tick on the next call, duplicating the Scrape/AutoscaleTick/
+    /// WorkloadTick streams.
+    started: bool,
 }
 
 impl SimWorld {
@@ -88,6 +94,7 @@ impl SimWorld {
             rng_workload: Pcg64::new(seed, 3),
             scrape_interval: DEFAULT_SCRAPE_INTERVAL,
             events_processed: 0,
+            started: false,
         }
     }
 
@@ -130,7 +137,8 @@ impl SimWorld {
     /// processed. Subsequent calls continue from where the previous run
     /// stopped (periodic ticks keep self-rescheduling).
     pub fn run_until(&mut self, end: Time) -> u64 {
-        if self.events_processed == 0 {
+        if !self.started {
+            self.started = true;
             self.schedule_initial();
         }
         let mut processed = 0u64;
@@ -335,6 +343,30 @@ mod tests {
         w.run_until(4 * MIN);
         let n2 = w.app.responses.len();
         assert!(n2 > n1);
+    }
+
+    #[test]
+    fn zero_event_first_run_does_not_duplicate_ticks() {
+        // Regression: with no generator, the first event is the Scrape at
+        // t=10s, so run_until(5s) processes zero events. The old
+        // `events_processed == 0` guard then re-armed every initial tick
+        // on the next call, doubling the Scrape stream (and with it the
+        // replica/RIR logs).
+        let cfg = quickstart_cluster();
+        let mut w = SimWorld::build(&cfg, TaskCosts::default(), 21);
+        w.add_scaler(Box::new(Hpa::with_defaults()), 0);
+        w.add_scaler(Box::new(Hpa::with_defaults()), 1);
+        let first = w.run_until(5 * SEC);
+        assert_eq!(first, 0, "no event lands before the first scrape");
+        w.run_until(65 * SEC);
+        // Scrapes at 10..60 s inclusive: exactly 6 replica-log entries per
+        // service; a duplicated Scrape stream would double this.
+        let svc0 = w
+            .replica_log
+            .iter()
+            .filter(|&&(_, svc, _)| svc == ServiceId(0))
+            .count();
+        assert_eq!(svc0, 6, "duplicated initial ticks detected");
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Per-figure reproduction harnesses (paper §5–6). See DESIGN.md §5 for
-//! the experiment index; EXPERIMENTS.md records paper-vs-measured.
+//! Per-figure reproduction harnesses (paper §5–6). See DESIGN.md for the
+//! experiment index; each harness prints paper-vs-measured rows via
+//! [`crate::report`].
 
 use super::driver::SimWorld;
 use super::{make_forecaster, try_runtime, ModelKind};

@@ -9,10 +9,12 @@
 pub mod driver;
 pub mod figures;
 pub mod pretrain;
+pub mod sweep;
 
 pub use driver::{RirSample, ScalerBinding, SimWorld};
 pub use figures::*;
 pub use pretrain::pretrain_histories;
+pub use sweep::{run_sweep, AutoscalerKind, CellMetrics, CellResult, SweepConfig, SweepResult};
 
 use crate::forecast::Forecaster;
 use crate::metrics::METRIC_DIM;

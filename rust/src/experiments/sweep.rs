@@ -1,0 +1,578 @@
+//! Parallel scenario-sweep harness: fan a (scenario × autoscaler × seed)
+//! grid across worker threads, one independent deterministic [`SimWorld`]
+//! per cell, and aggregate RIR percentiles, response-time distributions,
+//! replica trajectories and prediction MSE into a JSON report.
+//!
+//! Determinism: a cell's result depends only on its (scenario, scaler,
+//! seed, minutes) tuple — cells share no mutable state — so per-cell
+//! results are bit-identical regardless of the worker-thread count
+//! (asserted by `determinism_across_thread_counts` below).
+
+use super::driver::SimWorld;
+use crate::app::{TaskCosts, TaskType};
+use crate::autoscaler::{Autoscaler, Hpa, Ppa, PpaConfig};
+use crate::config::paper_cluster;
+use crate::forecast::ArmaForecaster;
+use crate::forecast::NaiveForecaster;
+use crate::sim::{Time, MIN};
+use crate::stats::{percentile, summarize, Summary};
+use crate::util::json::Json;
+use crate::workload::Scenario;
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Model-update period used for sweep PPAs: short enough that the ARMA
+/// model trains from live history well inside a 30-minute cell.
+const SWEEP_UPDATE_INTERVAL: Time = 10 * MIN;
+
+/// Which autoscaler a sweep cell runs on every service.
+///
+/// The LSTM PPA is deliberately absent: its PJRT runtime handle is not
+/// `Send` (and needs artifacts); the sweep compares the thread-safe
+/// model-free and ARMA variants, which is the (PPA vs HPA) axis the
+/// related-work matrices use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AutoscalerKind {
+    /// Reactive baseline, full Kubernetes semantics.
+    Hpa,
+    /// PPA with the last-value persistence model.
+    PpaNaive,
+    /// PPA with the ARMA(1,1) model, trained online by the update loop.
+    PpaArma,
+}
+
+impl AutoscalerKind {
+    pub const ALL: [AutoscalerKind; 3] =
+        [AutoscalerKind::Hpa, AutoscalerKind::PpaNaive, AutoscalerKind::PpaArma];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AutoscalerKind::Hpa => "hpa",
+            AutoscalerKind::PpaNaive => "ppa-naive",
+            AutoscalerKind::PpaArma => "ppa-arma",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "hpa" => Ok(AutoscalerKind::Hpa),
+            "ppa-naive" | "naive" => Ok(AutoscalerKind::PpaNaive),
+            "ppa-arma" | "arma" => Ok(AutoscalerKind::PpaArma),
+            other => bail!("unknown autoscaler '{other}' (hpa|ppa-naive|ppa-arma)"),
+        }
+    }
+
+    /// Fresh autoscaler instance for one service of one cell.
+    fn build(&self) -> Box<dyn Autoscaler> {
+        let ppa_cfg = PpaConfig {
+            update_interval: SWEEP_UPDATE_INTERVAL,
+            ..PpaConfig::default()
+        };
+        match self {
+            AutoscalerKind::Hpa => Box::new(Hpa::with_defaults()),
+            AutoscalerKind::PpaNaive => Box::new(Ppa::new(ppa_cfg, Box::new(NaiveForecaster))),
+            // Starts model-less: Algorithm 1 falls back to the current
+            // metric until the first update loop fits an ARMA from the
+            // live history file — the cold-start path the paper's
+            // "Robust" property describes.
+            AutoscalerKind::PpaArma => {
+                Box::new(Ppa::new(ppa_cfg, Box::new(ArmaForecaster::new())))
+            }
+        }
+    }
+}
+
+/// The sweep grid.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Named scenarios (see [`crate::config::scenario_presets`]).
+    pub scenarios: Vec<(String, Scenario)>,
+    pub scalers: Vec<AutoscalerKind>,
+    pub seeds: Vec<u64>,
+    /// Simulated length of every cell.
+    pub minutes: u64,
+    /// Worker threads (0 = one per available core).
+    pub threads: usize,
+}
+
+/// Deterministic per-cell outcome (everything except wall-clock).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellMetrics {
+    pub scenario: String,
+    pub scaler: String,
+    pub seed: u64,
+    pub events: u64,
+    pub completed: usize,
+    pub sort: Summary,
+    pub sort_p50: f64,
+    pub sort_p95: f64,
+    pub sort_p99: f64,
+    pub eigen: Summary,
+    pub rir: Summary,
+    pub rir_p50: f64,
+    pub rir_p95: f64,
+    pub rir_p99: f64,
+    /// Mean/max of the replica trajectory across all services.
+    pub replicas_mean: f64,
+    pub replicas_max: usize,
+    /// Mean prediction MSE across PPA scalers that made predictions.
+    pub prediction_mse: Option<f64>,
+}
+
+impl CellMetrics {
+    /// Canonical text form of every deterministic field. Unlike a
+    /// `PartialEq` comparison this treats NaN (empty-sample summaries) as
+    /// equal to itself, so it is the right equality for determinism
+    /// checks and for diffing reports.
+    pub fn fingerprint(&self) -> String {
+        format!("{self:?}")
+    }
+}
+
+/// One grid cell: deterministic metrics + measured wall time.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub metrics: CellMetrics,
+    pub wall_secs: f64,
+}
+
+/// The whole sweep.
+#[derive(Debug)]
+pub struct SweepResult {
+    pub cells: Vec<CellResult>,
+    pub minutes: u64,
+    pub threads_used: usize,
+    pub wall_secs: f64,
+}
+
+/// Run one independent cell.
+pub fn run_cell(
+    scenario_name: &str,
+    scenario: &Scenario,
+    scaler: AutoscalerKind,
+    seed: u64,
+    minutes: u64,
+) -> CellResult {
+    let wall = std::time::Instant::now();
+    let cfg = paper_cluster();
+    let mut world = SimWorld::build(&cfg, TaskCosts::default(), seed);
+    for gen in scenario.build_generators() {
+        world.add_generator(gen);
+    }
+    let n_services = world.app.services.len();
+    for svc in 0..n_services {
+        world.add_scaler(scaler.build(), svc);
+    }
+    let events = world.run_until(minutes * MIN);
+
+    let sort = world.response_times(TaskType::Sort);
+    let eigen = world.response_times(TaskType::Eigen);
+    let rirs: Vec<f64> = world.rir_log.iter().map(|s| s.rir).collect();
+    let reps: Vec<f64> = world.replica_log.iter().map(|&(_, _, r)| r as f64).collect();
+    let replicas_max = world.replica_log.iter().map(|&(_, _, r)| r).max().unwrap_or(0);
+
+    let mut mses = Vec::new();
+    for binding in &world.scalers {
+        if let Some(ppa) = binding.autoscaler.as_any().downcast_ref::<Ppa>() {
+            if !ppa.prediction_log.is_empty() {
+                mses.push(ppa.prediction_mse());
+            }
+        }
+    }
+
+    let metrics = CellMetrics {
+        scenario: scenario_name.to_string(),
+        scaler: scaler.name().to_string(),
+        seed,
+        events,
+        completed: world.app.responses.len(),
+        sort: summarize(&sort),
+        sort_p50: percentile(&sort, 50.0),
+        sort_p95: percentile(&sort, 95.0),
+        sort_p99: percentile(&sort, 99.0),
+        eigen: summarize(&eigen),
+        rir: summarize(&rirs),
+        rir_p50: percentile(&rirs, 50.0),
+        rir_p95: percentile(&rirs, 95.0),
+        rir_p99: percentile(&rirs, 99.0),
+        replicas_mean: summarize(&reps).mean,
+        replicas_max,
+        prediction_mse: (!mses.is_empty()).then(|| summarize(&mses).mean),
+    };
+    CellResult {
+        metrics,
+        wall_secs: wall.elapsed().as_secs_f64(),
+    }
+}
+
+/// Run the full grid, fanning cells across `threads` workers.
+pub fn run_sweep(cfg: &SweepConfig) -> crate::Result<SweepResult> {
+    if cfg.scenarios.is_empty() || cfg.scalers.is_empty() || cfg.seeds.is_empty() {
+        bail!("sweep grid is empty (scenarios x scalers x seeds)");
+    }
+    // Validate zones against the paper cluster before spawning anything.
+    let edge_zones: Vec<u32> = paper_cluster()
+        .deployments
+        .iter()
+        .filter_map(|d| d.zone)
+        .collect();
+    for (name, scenario) in &cfg.scenarios {
+        for gen in scenario.build_generators() {
+            if !edge_zones.contains(&gen.zone()) {
+                bail!(
+                    "scenario '{name}' targets zone {} but the cluster only has zones {:?}",
+                    gen.zone(),
+                    edge_zones
+                );
+            }
+        }
+    }
+
+    let mut specs = Vec::new();
+    for (name, scenario) in &cfg.scenarios {
+        for &scaler in &cfg.scalers {
+            for &seed in &cfg.seeds {
+                specs.push((name.as_str(), scenario, scaler, seed));
+            }
+        }
+    }
+
+    let threads = if cfg.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        cfg.threads
+    };
+    let threads = threads.clamp(1, specs.len());
+
+    let wall = std::time::Instant::now();
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<CellResult>>> = Mutex::new(vec![None; specs.len()]);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= specs.len() {
+                    break;
+                }
+                let (name, scenario, scaler, seed) = specs[i];
+                let result = run_cell(name, scenario, scaler, seed, cfg.minutes);
+                slots.lock().unwrap()[i] = Some(result);
+            });
+        }
+    });
+
+    let cells: Vec<CellResult> = slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|c| c.expect("every cell claimed by a worker"))
+        .collect();
+    Ok(SweepResult {
+        cells,
+        minutes: cfg.minutes,
+        threads_used: threads,
+        wall_secs: wall.elapsed().as_secs_f64(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// JSON report
+// ---------------------------------------------------------------------------
+
+/// NaN/inf-safe number (JSON has no NaN; empty-sample stats become null).
+fn num(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn summary_json(s: &Summary) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("n".to_string(), Json::Num(s.n as f64));
+    o.insert("mean".to_string(), num(s.mean));
+    o.insert("std".to_string(), num(s.std));
+    o.insert("min".to_string(), num(s.min));
+    o.insert("max".to_string(), num(s.max));
+    Json::Obj(o)
+}
+
+impl CellResult {
+    pub fn to_json(&self) -> Json {
+        let m = &self.metrics;
+        let mut o = BTreeMap::new();
+        o.insert("scenario".to_string(), Json::Str(m.scenario.clone()));
+        o.insert("scaler".to_string(), Json::Str(m.scaler.clone()));
+        o.insert("seed".to_string(), Json::Num(m.seed as f64));
+        o.insert("events".to_string(), Json::Num(m.events as f64));
+        o.insert("completed".to_string(), Json::Num(m.completed as f64));
+        o.insert("sort_response".to_string(), summary_json(&m.sort));
+        o.insert("sort_p50".to_string(), num(m.sort_p50));
+        o.insert("sort_p95".to_string(), num(m.sort_p95));
+        o.insert("sort_p99".to_string(), num(m.sort_p99));
+        o.insert("eigen_response".to_string(), summary_json(&m.eigen));
+        o.insert("rir".to_string(), summary_json(&m.rir));
+        o.insert("rir_p50".to_string(), num(m.rir_p50));
+        o.insert("rir_p95".to_string(), num(m.rir_p95));
+        o.insert("rir_p99".to_string(), num(m.rir_p99));
+        o.insert("replicas_mean".to_string(), num(m.replicas_mean));
+        o.insert("replicas_max".to_string(), Json::Num(m.replicas_max as f64));
+        o.insert(
+            "prediction_mse".to_string(),
+            m.prediction_mse.map_or(Json::Null, num),
+        );
+        o.insert("wall_secs".to_string(), num(self.wall_secs));
+        Json::Obj(o)
+    }
+}
+
+impl SweepResult {
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("minutes".to_string(), Json::Num(self.minutes as f64));
+        root.insert("threads".to_string(), Json::Num(self.threads_used as f64));
+        root.insert("wall_secs".to_string(), num(self.wall_secs));
+        root.insert(
+            "cells".to_string(),
+            Json::Arr(self.cells.iter().map(CellResult::to_json).collect()),
+        );
+        Json::Obj(root)
+    }
+
+    /// Write the JSON report (creating parent directories).
+    pub fn write_json(&self, path: &std::path::Path) -> crate::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::scenario_presets;
+    use crate::sim::SEC;
+    use crate::workload::{FlashCrowdConfig, StepSurgeConfig};
+
+    /// A cheap 3-scenario grid for tests.
+    fn tiny_scenarios() -> Vec<(String, Scenario)> {
+        vec![
+            (
+                "step".to_string(),
+                Scenario::StepSurge {
+                    cfg: StepSurgeConfig {
+                        levels_rps: vec![0.5, 2.0],
+                        step: 2 * MIN,
+                    },
+                    zones: vec![1, 2],
+                },
+            ),
+            (
+                "flash".to_string(),
+                Scenario::FlashCrowd {
+                    cfg: FlashCrowdConfig {
+                        base_rps: 0.4,
+                        spike_rps: 3.0,
+                        spike_start: 2 * MIN,
+                        ramp: 20 * SEC,
+                        hold: 2 * MIN,
+                        decay: 30 * SEC,
+                    },
+                    zones: vec![1, 2],
+                    stagger: MIN,
+                },
+            ),
+            (
+                "diurnal".to_string(),
+                Scenario::Diurnal {
+                    cfg: crate::workload::DiurnalConfig {
+                        period: 10 * MIN, // whole day compressed into the cell
+                        peak_hour: 12.0,
+                        ..Default::default()
+                    },
+                    zones: vec![1, 2],
+                },
+            ),
+        ]
+    }
+
+    fn tiny_config(threads: usize) -> SweepConfig {
+        SweepConfig {
+            scenarios: tiny_scenarios(),
+            scalers: vec![AutoscalerKind::Hpa, AutoscalerKind::PpaNaive],
+            seeds: vec![1, 2],
+            minutes: 6,
+            threads,
+        }
+    }
+
+    fn fingerprints(r: &SweepResult) -> Vec<String> {
+        r.cells.iter().map(|c| c.metrics.fingerprint()).collect()
+    }
+
+    #[test]
+    fn grid_covers_every_combination() {
+        let cfg = tiny_config(2);
+        let result = run_sweep(&cfg).unwrap();
+        assert_eq!(result.cells.len(), 3 * 2 * 2);
+        for (name, _) in &cfg.scenarios {
+            for scaler in &cfg.scalers {
+                for seed in &cfg.seeds {
+                    assert!(
+                        result.cells.iter().any(|c| c.metrics.scenario == *name
+                            && c.metrics.scaler == scaler.name()
+                            && c.metrics.seed == *seed),
+                        "missing cell {name}/{}/{seed}",
+                        scaler.name()
+                    );
+                }
+            }
+        }
+        // Cells actually simulated something.
+        assert!(result.cells.iter().all(|c| c.metrics.events > 100));
+        assert!(result.cells.iter().all(|c| c.metrics.completed > 10));
+    }
+
+    #[test]
+    fn determinism_across_thread_counts() {
+        // The acceptance grid: >= 3 scenarios x 2 autoscalers x 4 seeds,
+        // serial vs parallel.
+        let grid = |threads| SweepConfig {
+            seeds: vec![1, 2, 3, 4],
+            minutes: 4,
+            threads,
+            ..tiny_config(threads)
+        };
+        let serial = run_sweep(&grid(1)).unwrap();
+        let parallel = run_sweep(&grid(4)).unwrap();
+        assert_eq!(serial.cells.len(), 3 * 2 * 4);
+        assert_eq!(serial.threads_used, 1);
+        assert!(parallel.threads_used > 1);
+        assert_eq!(
+            fingerprints(&serial),
+            fingerprints(&parallel),
+            "per-cell results must be bit-identical regardless of threads"
+        );
+    }
+
+    #[test]
+    fn same_config_reproduces_and_seeds_differ() {
+        let a = run_sweep(&tiny_config(2)).unwrap();
+        let b = run_sweep(&tiny_config(2)).unwrap();
+        assert_eq!(fingerprints(&a), fingerprints(&b));
+        // Within one run, the two seeds of the same (scenario, scaler)
+        // must not be identical worlds.
+        let c1 = &a.cells[0].metrics;
+        let c2 = &a.cells[1].metrics;
+        assert_eq!(
+            (c1.scenario.as_str(), c1.scaler.as_str()),
+            (c2.scenario.as_str(), c2.scaler.as_str())
+        );
+        assert_ne!(c1.seed, c2.seed);
+        assert_ne!(c1.fingerprint(), c2.fingerprint());
+    }
+
+    #[test]
+    fn ppa_arma_trains_online_and_reports_mse() {
+        // One 25-minute ARMA cell: the 10-min update loop must have fitted
+        // a model, so predictions (and an MSE) exist.
+        let cfg = SweepConfig {
+            scenarios: tiny_scenarios()[..1].to_vec(),
+            scalers: vec![AutoscalerKind::PpaArma],
+            seeds: vec![5],
+            minutes: 25,
+            threads: 1,
+        };
+        let result = run_sweep(&cfg).unwrap();
+        let cell = &result.cells[0].metrics;
+        assert!(
+            cell.prediction_mse.is_some(),
+            "ARMA PPA should be predicting after the first model update"
+        );
+        assert!(cell.prediction_mse.unwrap().is_finite());
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let result = run_sweep(&SweepConfig {
+            scenarios: tiny_scenarios()[..1].to_vec(),
+            scalers: vec![AutoscalerKind::Hpa],
+            seeds: vec![3],
+            minutes: 4,
+            threads: 1,
+        })
+        .unwrap();
+        let dir = std::env::temp_dir().join("ppa_sweep_test");
+        let path = dir.join("sweep.json");
+        result.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        let cells = doc.get("cells").as_arr().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].get("scaler").as_str(), Some("hpa"));
+        assert!(cells[0].get("rir").get("mean").as_f64().is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn presets_are_valid_sweep_inputs() {
+        // Every shipped preset must build generators on cluster zones and
+        // carry a unique name.
+        let presets = scenario_presets();
+        assert!(presets.len() >= 5, "library should be broad");
+        let mut names: Vec<&str> = presets.iter().map(|(n, _)| n.as_str()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), presets.len(), "duplicate preset names");
+        for (_, scenario) in &presets {
+            let gens = scenario.build_generators();
+            assert!(!gens.is_empty());
+            assert!(gens.iter().all(|g| (1..=2).contains(&g.zone())));
+        }
+    }
+
+    #[test]
+    fn empty_grid_rejected() {
+        let cfg = SweepConfig {
+            scenarios: vec![],
+            scalers: vec![AutoscalerKind::Hpa],
+            seeds: vec![1],
+            minutes: 1,
+            threads: 1,
+        };
+        assert!(run_sweep(&cfg).is_err());
+    }
+
+    #[test]
+    fn bad_zone_rejected() {
+        let cfg = SweepConfig {
+            scenarios: vec![(
+                "bad".to_string(),
+                Scenario::RandomAccess { zones: vec![9] },
+            )],
+            scalers: vec![AutoscalerKind::Hpa],
+            seeds: vec![1],
+            minutes: 1,
+            threads: 1,
+        };
+        let err = run_sweep(&cfg).unwrap_err();
+        assert!(format!("{err}").contains("zone 9"));
+    }
+
+    #[test]
+    fn autoscaler_kind_parse() {
+        assert_eq!(AutoscalerKind::parse("hpa").unwrap(), AutoscalerKind::Hpa);
+        assert_eq!(
+            AutoscalerKind::parse("arma").unwrap(),
+            AutoscalerKind::PpaArma
+        );
+        assert!(AutoscalerKind::parse("lstm").is_err());
+    }
+}

@@ -78,15 +78,72 @@ pub fn fit_arma(series: &[f64]) -> Option<ArmaParams> {
     params.mu.is_finite().then_some(params)
 }
 
+/// Incremental CSS-residual state for one series: everything the next
+/// one-step forecast needs, so the per-tick cost is O(new points) instead
+/// of re-walking the whole history (O(n²) over a run).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct ResidualCache {
+    /// History rows consumed so far.
+    len: usize,
+    /// Last observation seen (consistency check on reuse).
+    last_y: f64,
+    /// Residual at `len - 1`.
+    last_eps: f64,
+}
+
 /// Per-metric ARMA(1,1) forecaster.
 #[derive(Debug, Default)]
 pub struct ArmaForecaster {
     models: Option<[ArmaParams; METRIC_DIM]>,
+    /// Per-feature incremental residual state; invalidated on retrain and
+    /// whenever the history stops being an extension of what was cached
+    /// (e.g. the Updater cleared the history file).
+    caches: [Option<ResidualCache>; METRIC_DIM],
 }
 
 impl ArmaForecaster {
     pub fn new() -> Self {
-        ArmaForecaster { models: None }
+        ArmaForecaster {
+            models: None,
+            caches: [None; METRIC_DIM],
+        }
+    }
+
+    /// Advance (or rebuild) the residual recursion for feature `f` up to
+    /// the end of `history`, returning `(last_y, last_eps)`. Produces
+    /// bit-identical values to a full [`ArmaParams::residuals`] pass: the
+    /// recursion performs the same float operations in the same order.
+    fn last_residual(
+        cache: &mut Option<ResidualCache>,
+        params: &ArmaParams,
+        history: &[[f64; METRIC_DIM]],
+        f: usize,
+    ) -> (f64, f64) {
+        let n = history.len();
+        let (mut t, mut prev_y, mut prev_eps) = match *cache {
+            // Resume only if the cached prefix is still a prefix of the
+            // current history (same length bound and same tail sample).
+            Some(c) if c.len >= 1 && c.len <= n && history[c.len - 1][f] == c.last_y => {
+                (c.len, c.last_y, c.last_eps)
+            }
+            _ => {
+                let y0 = history[0][f];
+                (1, y0, y0 - params.mu)
+            }
+        };
+        while t < n {
+            let y = history[t][f];
+            let pred = params.mu + params.phi * (prev_y - params.mu) + params.theta * prev_eps;
+            prev_eps = y - pred;
+            prev_y = y;
+            t += 1;
+        }
+        *cache = Some(ResidualCache {
+            len: n,
+            last_y: prev_y,
+            last_eps: prev_eps,
+        });
+        (prev_y, prev_eps)
     }
 
     /// Pretrain on a seed history (the injected seed model).
@@ -113,11 +170,9 @@ impl Forecaster for ArmaForecaster {
         }
         let mut out = [0.0; METRIC_DIM];
         for f in 0..METRIC_DIM {
-            let series = Self::series(history, f);
-            let (eps, _) = models[f].residuals(&series);
-            out[f] = models[f]
-                .forecast(*series.last().unwrap(), *eps.last().unwrap())
-                .max(0.0); // metrics are non-negative
+            let (last_y, last_eps) =
+                Self::last_residual(&mut self.caches[f], &models[f], history, f);
+            out[f] = models[f].forecast(last_y, last_eps).max(0.0); // metrics are non-negative
         }
         Some(out)
     }
@@ -128,6 +183,12 @@ impl Forecaster for ArmaForecaster {
         policy: UpdatePolicy,
     ) -> crate::Result<()> {
         if policy == UpdatePolicy::KeepSeed && self.models.is_some() {
+            // The update loop clears the history file right after this
+            // call; the cached residual chains would otherwise be probed
+            // against an unrelated regrown history (a tail-sample
+            // coincidence — routine for constant series — would resume a
+            // stale chain). Drop them; predict() rebuilds in one O(n) pass.
+            self.caches = [None; METRIC_DIM];
             return Ok(());
         }
         // Both scratch and fine-tune re-run CSS (refitting IS the update
@@ -145,6 +206,8 @@ impl Forecaster for ArmaForecaster {
             }
         }
         self.models = Some(fitted);
+        // New parameters invalidate every incremental residual chain.
+        self.caches = [None; METRIC_DIM];
         Ok(())
     }
 }
@@ -256,6 +319,80 @@ mod tests {
         f.retrain(&series_hist, UpdatePolicy::RetrainScratch).unwrap();
         // scratch refits (may or may not equal; just must exist)
         assert!(f.models.is_some());
+    }
+
+    #[test]
+    fn incremental_residuals_match_full_recomputation() {
+        // The cached recursion must yield bit-identical forecasts to the
+        // original full-history recomputation, across a growing history
+        // (the control-loop pattern) and after cache invalidation.
+        let mut rng = Pcg64::new(17, 2);
+        let history: Vec<[f64; METRIC_DIM]> = (0..400)
+            .map(|i| {
+                let base = 80.0 + 30.0 * (i as f64 / 15.0).sin();
+                let mut row = [0.0; METRIC_DIM];
+                for (f, r) in row.iter_mut().enumerate() {
+                    *r = base * (f + 1) as f64 + rng.normal() * 3.0;
+                }
+                row
+            })
+            .collect();
+        let mut fc = ArmaForecaster::pretrained(&history[..200]);
+        let models = fc.models.unwrap();
+
+        for n in [2usize, 50, 200, 201, 250, 399, 400] {
+            let fast = fc.predict(&history[..n]).unwrap();
+            // Reference: full CSS pass per feature, exactly as the old
+            // implementation did.
+            for f in 0..METRIC_DIM {
+                let series: Vec<f64> = history[..n].iter().map(|r| r[f]).collect();
+                let (eps, _) = models[f].residuals(&series);
+                let slow = models[f]
+                    .forecast(*series.last().unwrap(), *eps.last().unwrap())
+                    .max(0.0);
+                assert_eq!(fast[f], slow, "n={n} feature={f}");
+            }
+        }
+
+        // A shrunk history (updater cleared the file) must rebuild, not
+        // resume from a stale chain.
+        let short = &history[100..140];
+        let fast = fc.predict(short).unwrap();
+        for f in 0..METRIC_DIM {
+            let series: Vec<f64> = short.iter().map(|r| r[f]).collect();
+            let (eps, _) = models[f].residuals(&series);
+            let slow = models[f]
+                .forecast(*series.last().unwrap(), *eps.last().unwrap())
+                .max(0.0);
+            assert_eq!(fast[f], slow, "shrunk history feature={f}");
+        }
+    }
+
+    #[test]
+    fn keep_seed_update_invalidates_residual_cache() {
+        // KeepSeed keeps the model but the update loop still clears the
+        // history file; the cached chain must not be resumed against a
+        // regrown history whose tail sample happens to coincide.
+        let a: Vec<[f64; METRIC_DIM]> = (0..60)
+            .map(|i| [((i % 7) as f64) + 1.0; METRIC_DIM])
+            .collect();
+        let mut f = ArmaForecaster::pretrained(&a);
+        let _ = f.predict(&a).unwrap(); // populate caches at len 60
+        f.retrain(&a, UpdatePolicy::KeepSeed).unwrap();
+        let models = f.models.unwrap();
+
+        // Regrown history: same length and same final sample as `a`
+        // (a[59] == 4.0), entirely different interior.
+        let b = vec![[4.0; METRIC_DIM]; 60];
+        let fast = f.predict(&b).unwrap();
+        for fi in 0..METRIC_DIM {
+            let series: Vec<f64> = b.iter().map(|r| r[fi]).collect();
+            let (eps, _) = models[fi].residuals(&series);
+            let slow = models[fi]
+                .forecast(*series.last().unwrap(), *eps.last().unwrap())
+                .max(0.0);
+            assert_eq!(fast[fi], slow, "stale chain resumed for feature {fi}");
+        }
     }
 
     #[test]

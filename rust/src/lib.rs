@@ -15,8 +15,10 @@
 //!   JAX model) AOT-lowered to HLO text; loaded and executed from rust via
 //!   PJRT by [`runtime`]. Python is never on the control path.
 //!
-//! See `DESIGN.md` for the full inventory and the per-figure experiment
-//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` (repo root) for the full module inventory, the
+//! per-figure experiment index, and the scenario-sweep subsystem; the
+//! experiment harnesses themselves print paper-vs-measured rows (run
+//! `ppa-edge experiment all`).
 
 pub mod app;
 pub mod autoscaler;

@@ -5,6 +5,8 @@
 //!          [--hours H] [--pretrain-hours H] [--seed S]
 //! ppa-edge run [--scaler hpa|ppa] [--model lstm|arma|naive]
 //!          [--minutes N] [--seed S]
+//! ppa-edge sweep [--minutes N] [--seeds K] [--threads T]
+//!          [--scenarios a,b,..] [--scalers hpa,ppa-arma,..] [--out FILE]
 //! ppa-edge info
 //! ```
 //!
@@ -16,7 +18,8 @@ use ppa_edge::app::{TaskCosts, TaskType};
 use ppa_edge::autoscaler::Hpa;
 use ppa_edge::experiments::{
     self, fig6_trace, fig7_model_comparison, fig8_update_policies, fig9_fig10_key_metric,
-    nasa_eval, FigParams, ModelKind, NasaParams, SimWorld,
+    nasa_eval, run_sweep, AutoscalerKind, FigParams, ModelKind, NasaParams, SimWorld,
+    SweepConfig,
 };
 use ppa_edge::report;
 use ppa_edge::sim::MIN;
@@ -80,6 +83,9 @@ USAGE:
            [--minutes N] [--hours H] [--pretrain-hours H] [--seed S]
   ppa-edge run [--scaler hpa|ppa] [--model lstm|arma|naive]
            [--minutes N] [--seed S]
+  ppa-edge sweep [--minutes N] [--seeds K] [--threads T]
+           [--scenarios a,b,..] [--scalers hpa,ppa-arma,ppa-naive]
+           [--out FILE]
   ppa-edge info
 
 EXPERIMENTS (paper figures):
@@ -89,6 +95,12 @@ EXPERIMENTS (paper figures):
   fig9-10  key metric: CPU vs request rate
   nasa     the 48 h HPA-vs-PPA evaluation (figs 11-14)
   all      everything above
+
+SWEEP (scenario matrix):
+  Fans a (scenario x autoscaler x seed) grid across worker threads and
+  writes a JSON report. Scenarios default to the full preset library
+  (random-access, nasa-trace, diurnal, flash-crowd, step-surge,
+  multi-zone-mix); autoscalers default to hpa,ppa-arma,ppa-naive.
 
 Artifacts must exist for LSTM experiments: run `make artifacts`.";
 
@@ -105,6 +117,7 @@ fn dispatch(argv: &[String]) -> anyhow::Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("experiment") => cmd_experiment(&args),
         Some("run") => cmd_run(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("info") => cmd_info(),
         Some("help") | None => {
             println!("{USAGE}");
@@ -188,11 +201,71 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let minutes = args.get_u64("minutes", 30)?;
+    let n_seeds = args.get_u64("seeds", 4)?;
+    let threads = args.get_u64("threads", 0)? as usize;
+    let out = args.get("out").unwrap_or("target/experiments/sweep.json");
+
+    let presets = ppa_edge::config::scenario_presets();
+    let scenarios = match args.get("scenarios") {
+        None => presets,
+        Some(list) => {
+            let names: Vec<String> = presets.iter().map(|(n, _)| n.clone()).collect();
+            let mut picked = Vec::new();
+            for name in list.split(',') {
+                let name = name.trim();
+                let found = presets
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .with_context(|| {
+                        format!("unknown scenario '{name}' (available: {})", names.join(", "))
+                    })?;
+                picked.push(found.clone());
+            }
+            picked
+        }
+    };
+    let scalers = match args.get("scalers") {
+        None => vec![
+            AutoscalerKind::Hpa,
+            AutoscalerKind::PpaArma,
+            AutoscalerKind::PpaNaive,
+        ],
+        Some(list) => list
+            .split(',')
+            .map(|s| AutoscalerKind::parse(s.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?,
+    };
+    let cfg = SweepConfig {
+        scenarios,
+        scalers,
+        seeds: (0..n_seeds).map(|i| 1000 + i).collect(),
+        minutes,
+        threads,
+    };
+
+    println!(
+        "sweeping {} scenarios x {} autoscalers x {} seeds, {} sim-minutes per cell...",
+        cfg.scenarios.len(),
+        cfg.scalers.len(),
+        cfg.seeds.len(),
+        minutes
+    );
+    let result = run_sweep(&cfg)?;
+    report::print_sweep(&result);
+    result.write_json(std::path::Path::new(out))?;
+    println!("json report: {out}");
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let minutes = args.get_u64("minutes", 30)?;
     let seed = args.get_u64("seed", 7)?;
     let scaler = args.get("scaler").unwrap_or("ppa");
-    let model = ModelKind::parse(args.get("model").unwrap_or("lstm"))?;
+    // Default to ARMA: it works in every build. LSTM additionally needs
+    // the `pjrt` cargo feature and `make artifacts`.
+    let model = ModelKind::parse(args.get("model").unwrap_or("arma"))?;
 
     let cfg = ppa_edge::config::paper_cluster();
     let mut world = SimWorld::build(&cfg, TaskCosts::default(), seed);
@@ -208,10 +281,11 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         }
         "ppa" => {
             let runtime = if model == ModelKind::Lstm {
-                Some(
-                    experiments::try_runtime()
-                        .context("LSTM needs artifacts — run `make artifacts`")?,
-                )
+                Some(experiments::try_runtime().context(
+                    "LSTM needs the PJRT runtime: add the `xla` dependency, \
+                     build with `--features pjrt`, and run `make artifacts` \
+                     (see rust/Cargo.toml). arma/naive models need neither.",
+                )?)
             } else {
                 None
             };

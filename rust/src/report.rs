@@ -1,8 +1,11 @@
 //! Console rendering of experiment results — prints the same rows the
-//! paper reports, with the paper's numbers alongside for comparison.
+//! paper reports, with the paper's numbers alongside for comparison, and
+//! the scenario-sweep tables.
 
+use crate::experiments::sweep::SweepResult;
 use crate::experiments::{Fig7, Fig8, Fig9And10, NasaEval};
-use crate::stats::Summary;
+use crate::stats::{summarize, Summary};
+use std::collections::BTreeMap;
 
 /// Simple fixed-width table printer.
 pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
@@ -174,6 +177,78 @@ pub fn print_nasa_eval(eval: &NasaEval) {
     );
 }
 
+/// Print the scenario sweep: per-cell rows, then per-(scenario, scaler)
+/// aggregates across seeds.
+pub fn print_sweep(result: &SweepResult) {
+    let fmt_opt = |v: Option<f64>| v.map_or_else(|| "-".to_string(), |x| format!("{x:.1}"));
+    let rows: Vec<Vec<String>> = result
+        .cells
+        .iter()
+        .map(|c| {
+            let m = &c.metrics;
+            vec![
+                m.scenario.clone(),
+                m.scaler.clone(),
+                m.seed.to_string(),
+                format!("{:.3}±{:.3}", m.sort.mean, m.sort.std),
+                format!("{:.3}", m.sort_p95),
+                format!("{:.3}", m.rir.mean),
+                format!("{:.3}", m.rir_p95),
+                format!("{:.1}/{}", m.replicas_mean, m.replicas_max),
+                fmt_opt(m.prediction_mse),
+                m.completed.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "Scenario sweep — per-cell results",
+        &[
+            "scenario", "scaler", "seed", "sort (s)", "p95", "RIR", "RIR p95", "repl μ/max",
+            "pred MSE", "served",
+        ],
+        &rows,
+    );
+
+    // Aggregate across seeds.
+    let mut groups: BTreeMap<(String, String), Vec<&crate::experiments::CellMetrics>> =
+        BTreeMap::new();
+    for c in &result.cells {
+        groups
+            .entry((c.metrics.scenario.clone(), c.metrics.scaler.clone()))
+            .or_default()
+            .push(&c.metrics);
+    }
+    let agg_rows: Vec<Vec<String>> = groups
+        .iter()
+        .map(|((scenario, scaler), cells)| {
+            let sort_means: Vec<f64> = cells.iter().map(|m| m.sort.mean).collect();
+            let rir_means: Vec<f64> = cells.iter().map(|m| m.rir.mean).collect();
+            let served: usize = cells.iter().map(|m| m.completed).sum();
+            let s = summarize(&sort_means);
+            let r = summarize(&rir_means);
+            vec![
+                scenario.clone(),
+                scaler.clone(),
+                cells.len().to_string(),
+                format!("{:.3}±{:.3}", s.mean, s.std),
+                format!("{:.3}±{:.3}", r.mean, r.std),
+                served.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "Scenario sweep — aggregated over seeds",
+        &["scenario", "scaler", "seeds", "sort mean (s)", "RIR mean", "served"],
+        &agg_rows,
+    );
+    println!(
+        "  {} cells on {} threads in {:.1}s",
+        result.cells.len(),
+        result.threads_used,
+        result.wall_secs
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,5 +266,38 @@ mod tests {
     fn p_formatting() {
         assert!(fmt_p(1e-5).contains("✓"));
         assert!(!fmt_p(0.5).contains("✓"));
+    }
+
+    #[test]
+    fn sweep_table_prints() {
+        use crate::experiments::sweep::{CellMetrics, CellResult, SweepResult};
+        let metrics = CellMetrics {
+            scenario: "step".into(),
+            scaler: "hpa".into(),
+            seed: 1,
+            events: 1000,
+            completed: 50,
+            sort: summarize(&[0.5, 0.6]),
+            sort_p50: 0.55,
+            sort_p95: 0.6,
+            sort_p99: 0.6,
+            eigen: summarize(&[]),
+            rir: summarize(&[0.3, 0.4]),
+            rir_p50: 0.35,
+            rir_p95: 0.4,
+            rir_p99: 0.4,
+            replicas_mean: 2.0,
+            replicas_max: 4,
+            prediction_mse: None,
+        };
+        print_sweep(&SweepResult {
+            cells: vec![CellResult {
+                metrics,
+                wall_secs: 0.1,
+            }],
+            minutes: 5,
+            threads_used: 1,
+            wall_secs: 0.2,
+        });
     }
 }

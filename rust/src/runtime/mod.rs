@@ -9,14 +9,27 @@
 //! Interchange is HLO text because jax ≥ 0.5 emits `HloModuleProto`s with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see DESIGN.md).
+//!
+//! The XLA bindings are only present behind the `pjrt` cargo feature (the
+//! default offline crate set has no `xla`); without it an API-identical
+//! stub reports the runtime as unavailable, so every LSTM code path and
+//! experiment degrades to its documented "artifacts not built" behaviour.
 
 mod manifest;
 
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+
 pub use manifest::Manifest;
 
-use anyhow::{bail, Context};
-use std::path::{Path, PathBuf};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+#[cfg(feature = "pjrt")]
+pub use pjrt::LstmRuntime;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::LstmRuntime;
+
+use std::path::PathBuf;
 
 /// Model parameters as host tensors, in the canonical flat order
 /// `(w, b, wd, bd)` mirrored from `python/compile/model.py`.
@@ -49,15 +62,6 @@ impl AdamState {
     }
 }
 
-/// Compiled forecaster: all four artifacts, ready to dispatch.
-pub struct LstmRuntime {
-    manifest: Manifest,
-    exe_init: PjRtLoadedExecutable,
-    exe_predict: PjRtLoadedExecutable,
-    exe_train_step: PjRtLoadedExecutable,
-    exe_train_epoch: PjRtLoadedExecutable,
-}
-
 /// Locate the artifacts directory: `$PPA_ARTIFACTS`, else `artifacts/`
 /// relative to the crate root (walking up from cwd as a fallback so tests
 /// and examples work from any working directory).
@@ -78,319 +82,25 @@ pub fn find_artifacts_dir() -> Option<PathBuf> {
     }
 }
 
-fn load_exe(client: &PjRtClient, dir: &Path, name: &str) -> crate::Result<PjRtLoadedExecutable> {
-    let path = dir.join(name);
-    let proto = HloModuleProto::from_text_file(
-        path.to_str().context("non-utf8 artifact path")?,
-    )
-    .with_context(|| format!("parsing HLO text {}", path.display()))?;
-    let comp = XlaComputation::from_proto(&proto);
-    client
-        .compile(&comp)
-        .with_context(|| format!("compiling {}", path.display()))
-}
-
-fn literal_f32(data: &[f32], dims: &[i64]) -> crate::Result<Literal> {
-    let expected: i64 = dims.iter().product();
-    if expected as usize != data.len() {
-        bail!("literal shape {:?} wants {} elems, got {}", dims, expected, data.len());
-    }
-    Ok(Literal::vec1(data).reshape(dims)?)
-}
-
-impl LstmRuntime {
-    /// Load and compile all artifacts from `dir`.
-    pub fn load(dir: &Path) -> crate::Result<Self> {
-        let manifest = Manifest::load(&dir.join("manifest.json"))?;
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let exe_init = load_exe(&client, dir, "lstm_init.hlo.txt")?;
-        let exe_predict = load_exe(&client, dir, "lstm_predict.hlo.txt")?;
-        let exe_train_step = load_exe(&client, dir, "lstm_train_step.hlo.txt")?;
-        let exe_train_epoch = load_exe(&client, dir, "lstm_train_epoch.hlo.txt")?;
-        Ok(LstmRuntime {
-            manifest,
-            exe_init,
-            exe_predict,
-            exe_train_step,
-            exe_train_epoch,
-        })
-    }
-
-    /// Load from the default artifact location.
-    pub fn load_default() -> crate::Result<Self> {
-        let dir = find_artifacts_dir()
-            .context("artifacts/ not found — run `make artifacts` first")?;
-        Self::load(&dir)
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    fn param_literals(&self, params: &LstmParams) -> crate::Result<Vec<Literal>> {
-        if params.tensors.len() != self.manifest.param_shapes.len() {
-            bail!(
-                "expected {} param tensors, got {}",
-                self.manifest.param_shapes.len(),
-                params.tensors.len()
-            );
-        }
-        params
-            .tensors
-            .iter()
-            .zip(&self.manifest.param_shapes)
-            .map(|(data, (_, shape))| {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                literal_f32(data, &dims)
-            })
-            .collect()
-    }
-
-    fn unpack(result: Literal, expect: usize) -> crate::Result<Vec<Vec<f32>>> {
-        let parts = result.to_tuple()?;
-        if parts.len() != expect {
-            bail!("artifact returned {}-tuple, expected {}", parts.len(), expect);
-        }
-        parts
-            .into_iter()
-            .map(|l| Ok(l.to_vec::<f32>()?))
-            .collect()
-    }
-
-    fn run(&self, exe: &PjRtLoadedExecutable, args: &[Literal]) -> crate::Result<Literal> {
-        let result = exe.execute::<Literal>(args)?;
-        Ok(result[0][0].to_literal_sync()?)
-    }
-
-    /// Seeded parameter initialization (same numbers as the python init).
-    pub fn init(&self, seed: u32) -> crate::Result<LstmParams> {
-        let out = self.run(&self.exe_init, &[Literal::scalar(seed)])?;
-        let tensors = Self::unpack(out, 4)?;
-        Ok(LstmParams { tensors })
-    }
-
-    /// Forecast the next metric vector from one scaled window.
-    ///
-    /// `window` is row-major `(seq_len, input_dim)`; returns `output_dim`
-    /// predictions.
-    pub fn predict(&self, params: &LstmParams, window: &[f32]) -> crate::Result<Vec<f32>> {
-        let m = &self.manifest;
-        let x = literal_f32(window, &[1, m.seq_len as i64, m.input_dim as i64])?;
-        let mut args = self.param_literals(params)?;
-        args.push(x);
-        let out = self.run(&self.exe_predict, &args)?;
-        let mut parts = Self::unpack(out, 1)?;
-        Ok(parts.pop().unwrap())
-    }
-
-    fn train_args(
-        &self,
-        params: &LstmParams,
-        opt: &AdamState,
-        xs: &[f32],
-        ys: &[f32],
-        x_dims: &[i64],
-        y_dims: &[i64],
-    ) -> crate::Result<Vec<Literal>> {
-        let mut args = self.param_literals(params)?;
-        for moments in [&opt.m, &opt.v] {
-            for (m_i, (_, shape)) in moments.iter().zip(&self.manifest.param_shapes) {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                args.push(literal_f32(m_i, &dims)?);
-            }
-        }
-        args.push(Literal::scalar(opt.t));
-        args.push(literal_f32(xs, x_dims)?);
-        args.push(literal_f32(ys, y_dims)?);
-        Ok(args)
-    }
-
-    fn apply_train_output(
-        out: Literal,
-        params: &mut LstmParams,
-        opt: &mut AdamState,
-    ) -> crate::Result<f32> {
-        // (4 params, 4 m, 4 v, t, loss) = 14 outputs.
-        let mut parts = Self::unpack(out, 14)?;
-        let loss = parts.pop().unwrap()[0];
-        let t = parts.pop().unwrap()[0];
-        let v: Vec<Vec<f32>> = parts.split_off(8);
-        let m: Vec<Vec<f32>> = parts.split_off(4);
-        params.tensors = parts;
-        opt.m = m;
-        opt.v = v;
-        opt.t = t;
-        Ok(loss)
-    }
-
-    /// One fused fwd+bwd+Adam step on a `(batch, seq_len, input_dim)`
-    /// minibatch. Updates `params`/`opt` in place; returns the loss.
-    pub fn train_step(
-        &self,
-        params: &mut LstmParams,
-        opt: &mut AdamState,
-        xb: &[f32],
-        yb: &[f32],
-    ) -> crate::Result<f32> {
-        let m = &self.manifest;
-        let x_dims = [m.batch as i64, m.seq_len as i64, m.input_dim as i64];
-        let y_dims = [m.batch as i64, m.output_dim as i64];
-        let args = self.train_args(params, opt, xb, yb, &x_dims, &y_dims)?;
-        let out = self.run(&self.exe_train_step, &args)?;
-        Self::apply_train_output(out, params, opt)
-    }
-
-    /// `epoch_batches` fused train steps in a single dispatch
-    /// (`(k, batch, seq_len, input_dim)` inputs). Returns the mean loss.
-    pub fn train_epoch(
-        &self,
-        params: &mut LstmParams,
-        opt: &mut AdamState,
-        xs: &[f32],
-        ys: &[f32],
-    ) -> crate::Result<f32> {
-        let m = &self.manifest;
-        let k = m.epoch_batches as i64;
-        let x_dims = [k, m.batch as i64, m.seq_len as i64, m.input_dim as i64];
-        let y_dims = [k, m.batch as i64, m.output_dim as i64];
-        let args = self.train_args(params, opt, xs, ys, &x_dims, &y_dims)?;
-        let out = self.run(&self.exe_train_epoch, &args)?;
-        Self::apply_train_output(out, params, opt)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    /// Runtime tests need `make artifacts` to have run; skip (with a
-    /// loud marker) when the artifacts are absent so plain `cargo test`
-    /// stays usable in a fresh checkout.
-    fn runtime() -> Option<LstmRuntime> {
-        let dir = find_artifacts_dir()?;
-        Some(LstmRuntime::load(&dir).expect("artifacts present but failed to load"))
-    }
-
     #[test]
-    fn init_is_deterministic_and_shaped() {
-        let Some(rt) = runtime() else {
-            eprintln!("SKIP: artifacts not built");
-            return;
-        };
-        let p1 = rt.init(42).unwrap();
-        let p2 = rt.init(42).unwrap();
-        assert_eq!(p1, p2);
-        let m = rt.manifest();
-        for (tensor, (name, shape)) in p1.tensors.iter().zip(&m.param_shapes) {
-            assert_eq!(
-                tensor.len(),
-                shape.iter().product::<usize>(),
-                "shape mismatch for {name}"
-            );
-        }
-        // unit forget bias: b[H..2H] == 1.0
-        let h = m.hidden_dim;
-        assert!(p1.tensors[1][h..2 * h].iter().all(|&x| x == 1.0));
-        assert!(p1.tensors[1][..h].iter().all(|&x| x == 0.0));
-    }
-
-    #[test]
-    fn predict_shape_and_nonnegative() {
-        let Some(rt) = runtime() else {
-            eprintln!("SKIP: artifacts not built");
-            return;
-        };
-        let m = rt.manifest();
-        let params = rt.init(1).unwrap();
-        let window = vec![0.3f32; m.seq_len * m.input_dim];
-        let y = rt.predict(&params, &window).unwrap();
-        assert_eq!(y.len(), m.output_dim);
-        assert!(y.iter().all(|&v| v >= 0.0), "{y:?}");
-    }
-
-    #[test]
-    fn train_step_reduces_loss_on_fixed_batch() {
-        let Some(rt) = runtime() else {
-            eprintln!("SKIP: artifacts not built");
-            return;
-        };
-        let m = rt.manifest();
-        let mut params = rt.init(0).unwrap();
-        let mut opt = AdamState::zeros(m);
-        // Learnable mapping: target = mean over window.
-        let mut rng = crate::util::rng::Pcg64::new(5, 0);
-        let xb: Vec<f32> = (0..m.batch * m.seq_len * m.input_dim)
-            .map(|_| rng.f64() as f32)
-            .collect();
-        let mut yb = vec![0f32; m.batch * m.output_dim];
-        for b in 0..m.batch {
-            for i in 0..m.input_dim {
-                let mut s = 0.0;
-                for t in 0..m.seq_len {
-                    s += xb[b * m.seq_len * m.input_dim + t * m.input_dim + i];
-                }
-                yb[b * m.output_dim + i] = s / m.seq_len as f32;
-            }
-        }
-        let first = rt.train_step(&mut params, &mut opt, &xb, &yb).unwrap();
-        let mut last = first;
-        for _ in 0..60 {
-            last = rt.train_step(&mut params, &mut opt, &xb, &yb).unwrap();
-        }
-        assert!(last < first * 0.6, "first={first} last={last}");
-        assert_eq!(opt.t, 61.0);
-    }
-
-    #[test]
-    fn train_epoch_matches_sequential_steps() {
-        let Some(rt) = runtime() else {
-            eprintln!("SKIP: artifacts not built");
-            return;
-        };
-        let m = rt.manifest();
-        let k = m.epoch_batches;
-        let mut rng = crate::util::rng::Pcg64::new(9, 0);
-        let xs: Vec<f32> = (0..k * m.batch * m.seq_len * m.input_dim)
-            .map(|_| rng.f64() as f32)
-            .collect();
-        let ys: Vec<f32> = (0..k * m.batch * m.output_dim)
-            .map(|_| rng.f64() as f32)
-            .collect();
-
-        let mut p_seq = rt.init(3).unwrap();
-        let mut o_seq = AdamState::zeros(m);
-        let step_len_x = m.batch * m.seq_len * m.input_dim;
-        let step_len_y = m.batch * m.output_dim;
-        let mut losses = Vec::new();
-        for i in 0..k {
-            let xb = &xs[i * step_len_x..(i + 1) * step_len_x];
-            let yb = &ys[i * step_len_y..(i + 1) * step_len_y];
-            losses.push(rt.train_step(&mut p_seq, &mut o_seq, xb, yb).unwrap());
-        }
-
-        let mut p_ep = rt.init(3).unwrap();
-        let mut o_ep = AdamState::zeros(m);
-        let mean = rt.train_epoch(&mut p_ep, &mut o_ep, &xs, &ys).unwrap();
-
-        let want: f32 = losses.iter().sum::<f32>() / k as f32;
-        assert!((mean - want).abs() < 1e-4, "mean={mean} want={want}");
-        for (a, b) in p_seq.tensors.iter().zip(&p_ep.tensors) {
-            let max_diff = a
-                .iter()
-                .zip(b)
-                .map(|(x, y)| (x - y).abs())
-                .fold(0f32, f32::max);
-            assert!(max_diff < 1e-4, "param divergence {max_diff}");
-        }
-    }
-
-    #[test]
-    fn predict_rejects_bad_window() {
-        let Some(rt) = runtime() else {
-            eprintln!("SKIP: artifacts not built");
-            return;
-        };
-        let params = rt.init(1).unwrap();
-        assert!(rt.predict(&params, &[0.0; 3]).is_err());
+    fn adam_state_shaped_like_manifest() {
+        let m = Manifest::parse(
+            r#"{
+              "input_dim": 5, "hidden_dim": 50, "output_dim": 5,
+              "seq_len": 8, "batch": 32, "epoch_batches": 16,
+              "adam": {"lr": 0.001, "beta1": 0.9, "beta2": 0.999, "eps": 1e-08},
+              "param_shapes": {"w": [55, 200], "b": [200], "wd": [50, 5], "bd": [5]}
+            }"#,
+        )
+        .unwrap();
+        let opt = AdamState::zeros(&m);
+        assert_eq!(opt.m.len(), 4);
+        assert_eq!(opt.m[0].len(), 55 * 200);
+        assert_eq!(opt.v[3].len(), 5);
+        assert_eq!(opt.t, 0.0);
     }
 }

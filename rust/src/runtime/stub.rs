@@ -1,0 +1,76 @@
+//! Offline stand-in for the PJRT runtime (built when the `pjrt` feature
+//! is off — the default, since the offline crate set has no `xla`).
+//!
+//! The API mirrors [`super::pjrt::LstmRuntime`] exactly so every caller
+//! typechecks; [`LstmRuntime::load`] always fails, which makes
+//! `experiments::try_runtime()` return `None` and every LSTM experiment
+//! take its documented "artifacts not built" skip path.
+
+use super::{AdamState, LstmParams, Manifest};
+use anyhow::bail;
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: built without the `pjrt` cargo feature (xla bindings absent)";
+
+/// Stub runtime — cannot be constructed; exists so LSTM code paths
+/// compile without the XLA bindings.
+pub struct LstmRuntime {
+    manifest: Manifest,
+}
+
+impl LstmRuntime {
+    /// Always fails in the stub build.
+    pub fn load(_dir: &Path) -> crate::Result<Self> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    /// Always fails in the stub build.
+    pub fn load_default() -> crate::Result<Self> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn init(&self, _seed: u32) -> crate::Result<LstmParams> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn predict(&self, _params: &LstmParams, _window: &[f32]) -> crate::Result<Vec<f32>> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn train_step(
+        &self,
+        _params: &mut LstmParams,
+        _opt: &mut AdamState,
+        _xb: &[f32],
+        _yb: &[f32],
+    ) -> crate::Result<f32> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn train_epoch(
+        &self,
+        _params: &mut LstmParams,
+        _opt: &mut AdamState,
+        _xs: &[f32],
+        _ys: &[f32],
+    ) -> crate::Result<f32> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_fails_gracefully() {
+        let err = LstmRuntime::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"));
+        assert!(LstmRuntime::load_default().is_err());
+    }
+}

@@ -1,12 +1,18 @@
 //! Workload generation (paper §5.2): the *Random Access* generator
-//! (Algorithm 2) and the scaled *NASA* trace.
+//! (Algorithm 2), the scaled *NASA* trace, and the scenario library
+//! ([`scenario`]: diurnal / flash-crowd / step-surge / composite behind
+//! the [`Scenario`] descriptor).
 //!
 //! Generators are event-driven: each owns a `WorkloadTick` stream in the
 //! DES and submits requests to the [`crate::app::App`] when woken.
 
 mod nasa;
+mod scenario;
 
 pub use nasa::{load_minute_counts, nasa_synthetic, NasaTraceConfig};
+pub use scenario::{
+    DiurnalConfig, FlashCrowdConfig, RateGen, RateProfile, Scenario, StepSurgeConfig,
+};
 
 use crate::app::{App, TaskType};
 use crate::sim::{Event, EventQueue, Time, MIN};
@@ -39,12 +45,19 @@ impl LoadType {
 pub enum Generator {
     RandomAccess(RandomAccessGen),
     Trace(TraceGen),
+    Rate(RateGen),
 }
 
 impl Generator {
-    /// Schedule this generator's first tick.
+    /// Schedule this generator's first tick (honouring any start delay, so
+    /// multi-zone sweeps can stagger their zones).
     pub fn start(&mut self, index: u32, queue: &mut EventQueue) {
-        queue.schedule_in(0, Event::WorkloadTick { generator: index });
+        let delay = match self {
+            Generator::RandomAccess(_) => 0,
+            Generator::Trace(g) => g.start_delay,
+            Generator::Rate(g) => g.start_delay,
+        };
+        queue.schedule_in(delay, Event::WorkloadTick { generator: index });
     }
 
     /// Handle a `WorkloadTick`: submit request(s) and schedule the next
@@ -62,6 +75,7 @@ impl Generator {
                 true
             }
             Generator::Trace(g) => g.on_tick(index, app, queue, rng),
+            Generator::Rate(g) => g.on_tick(index, app, queue, rng),
         }
     }
 
@@ -69,7 +83,17 @@ impl Generator {
         match self {
             Generator::RandomAccess(g) => g.zone,
             Generator::Trace(g) => g.zone,
+            Generator::Rate(g) => g.zone,
         }
+    }
+}
+
+/// Shared task-mix draw (Algorithm 2's 0.9/0.1 Sort/Eigen split).
+fn draw_task(rng: &mut Pcg64) -> TaskType {
+    if rng.chance(SORT_PROBABILITY) {
+        TaskType::Sort
+    } else {
+        TaskType::Eigen
     }
 }
 
@@ -102,12 +126,7 @@ impl RandomAccessGen {
             self.load = *rng.pick(&[LoadType::Light, LoadType::Medium, LoadType::Heavy]);
             self.remaining_in_burst = rng.int_range(20, 200) as u32;
         }
-        let task = if rng.chance(SORT_PROBABILITY) {
-            TaskType::Sort
-        } else {
-            TaskType::Eigen
-        };
-        app.submit(task, self.zone, queue.now(), queue);
+        app.submit(draw_task(rng), self.zone, queue.now(), queue);
         self.remaining_in_burst -= 1;
 
         let (lo, hi) = self.load.sleep_range();
@@ -125,7 +144,12 @@ pub struct TraceGen {
     pub zone: u32,
     counts: std::sync::Arc<Vec<f64>>,
     scale: f64,
-    started: bool,
+    /// Delay before the first tick (staggered multi-zone sweeps).
+    start_delay: Time,
+    /// Sim time of the first tick. Trace minutes are indexed relative to
+    /// this origin: indexing by absolute sim time would silently skip the
+    /// leading minutes of any trace started mid-simulation.
+    origin: Option<Time>,
 }
 
 impl TraceGen {
@@ -134,8 +158,16 @@ impl TraceGen {
             zone,
             counts,
             scale,
-            started: false,
+            start_delay: 0,
+            origin: None,
         }
+    }
+
+    /// Delay the trace start by `delay` (the trace still plays in full,
+    /// indexed from its own start).
+    pub fn with_start_delay(mut self, delay: Time) -> Self {
+        self.start_delay = delay;
+        self
     }
 
     /// Trace duration.
@@ -143,8 +175,10 @@ impl TraceGen {
         self.counts.len() as Time * MIN
     }
 
-    fn rate_at(&self, now: Time) -> Option<f64> {
-        let minute = (now / MIN) as usize;
+    /// Arrival rate (req/s) at `elapsed` time since the generator's first
+    /// tick; `None` once the trace is exhausted.
+    fn rate_at(&self, elapsed: Time) -> Option<f64> {
+        let minute = (elapsed / MIN) as usize;
         self.counts
             .get(minute)
             .map(|&c| (c * self.scale / 60.0).max(0.0))
@@ -158,20 +192,23 @@ impl TraceGen {
         rng: &mut Pcg64,
     ) -> bool {
         let now = queue.now();
-        // First tick only schedules the first arrival.
-        if self.started {
-            let task = if rng.chance(SORT_PROBABILITY) {
-                TaskType::Sort
-            } else {
-                TaskType::Eigen
-            };
-            app.submit(task, self.zone, now, queue);
-        }
-        self.started = true;
+        // First tick records the origin and only schedules the first
+        // arrival; later ticks are arrivals.
+        let origin = match self.origin {
+            Some(o) => {
+                app.submit(draw_task(rng), self.zone, now, queue);
+                o
+            }
+            None => {
+                self.origin = Some(now);
+                now
+            }
+        };
 
         // Next arrival: sample the gap from the current minute's rate; if
-        // the minute is silent, hop to the next minute boundary.
-        let mut t = now;
+        // the minute is silent, hop to the next minute boundary. All
+        // minute arithmetic is relative to the origin.
+        let mut t = now - origin;
         loop {
             match self.rate_at(t) {
                 None => return false, // trace exhausted
@@ -183,7 +220,7 @@ impl TraceGen {
                     // adequate for minute-resolution traces.
                     let minute_end = (t / MIN + 1) * MIN;
                     if next <= minute_end {
-                        queue.schedule_at(next, Event::WorkloadTick { generator: index });
+                        queue.schedule_at(origin + next, Event::WorkloadTick { generator: index });
                         return true;
                     }
                     t = minute_end;
@@ -331,6 +368,40 @@ mod tests {
         let counts = Arc::new(vec![10.0, 0.0]);
         let arrivals = replay_arrival_times(&counts, 1.0, 5);
         assert!(arrivals.len() < 30);
+    }
+
+    #[test]
+    fn staggered_trace_plays_in_full() {
+        // Regression: a trace whose first tick lands mid-simulation must
+        // replay from its own minute 0. The old absolute-time indexing
+        // (`now / MIN`) would read minutes 5.. — pure silence here — and
+        // emit nothing.
+        let counts = Arc::new(vec![60.0, 60.0, 60.0]);
+        let mut a = app();
+        let mut q = EventQueue::new();
+        let mut rng = Pcg64::new(31, 100);
+        let mut gen =
+            Generator::Trace(TraceGen::new(1, counts.clone(), 1.0).with_start_delay(5 * MIN));
+        gen.start(0, &mut q);
+
+        let mut arrivals = Vec::new();
+        while let Some((t, ev)) = q.pop() {
+            match ev {
+                Event::WorkloadTick { generator } => {
+                    if !gen.on_tick(generator, &mut a, &mut q, &mut rng) {
+                        break;
+                    }
+                }
+                Event::RequestArrival { .. } => arrivals.push(t),
+                _ => {}
+            }
+        }
+        let n = arrivals.len() as f64;
+        assert!((n - 180.0).abs() < 60.0, "expected ~180 arrivals, got {n}");
+        assert!(
+            arrivals.iter().all(|&t| t >= 5 * MIN && t <= 8 * MIN + crate::sim::SEC),
+            "arrivals must land in the staggered window"
+        );
     }
 
     #[test]

@@ -1,0 +1,603 @@
+//! Workload scenario library — the descriptor layer over the generators.
+//!
+//! The paper evaluates on exactly two workloads (Random Access and the
+//! scaled NASA trace). Related autoscaler studies (arXiv:2512.14290,
+//! arXiv:2510.10166) compare across whole *families* of bursty and
+//! diurnal workloads; this module adds those families behind a single
+//! [`Scenario`] descriptor so the sweep harness
+//! ([`crate::experiments::sweep`]) can fan a (scenario × autoscaler ×
+//! seed) grid across threads:
+//!
+//! * [`RateProfile::Diurnal`] — Gaussian-peak day/night cycle.
+//! * [`RateProfile::FlashCrowd`] — baseline with a sudden ramp/hold/decay
+//!   spike (the "flash crowd" every reactive autoscaler trails).
+//! * [`RateProfile::Step`] — a cycling staircase of arrival-rate levels.
+//! * [`Scenario::Composite`] — any mix of the above across zones, with
+//!   staggered starts.
+//!
+//! Analytic profiles are replayed piecewise-constant over 10 s segments
+//! by [`RateGen`], the exact sampling scheme [`super::TraceGen`] uses for
+//! minute-resolution traces.
+
+use super::{draw_task, Generator, RandomAccessGen, TraceGen};
+use crate::app::App;
+use crate::sim::{Event, EventQueue, Time, HOUR, MIN, SEC};
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// Piecewise-constant sampling resolution for analytic rate profiles.
+const SEGMENT: Time = 10 * SEC;
+
+/// Gaussian-peak diurnal cycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DiurnalConfig {
+    /// Overnight floor (req/s).
+    pub base_rps: f64,
+    /// Rate at the daily peak (req/s).
+    pub peak_rps: f64,
+    /// Virtual hour-of-day of the peak (0..24).
+    pub peak_hour: f64,
+    /// Gaussian width of the peak in virtual hours (σ).
+    pub width_hours: f64,
+    /// Wall length of one virtual day (24 h by default; shrink it to
+    /// time-compress a full day/night cycle into a short sweep window).
+    pub period: Time,
+}
+
+impl Default for DiurnalConfig {
+    fn default() -> Self {
+        DiurnalConfig {
+            base_rps: 0.3,
+            peak_rps: 3.0,
+            peak_hour: 15.0,
+            width_hours: 3.0,
+            period: 24 * HOUR,
+        }
+    }
+}
+
+/// A sudden surge: base → (linear ramp) → hold at spike → (linear decay)
+/// → base.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlashCrowdConfig {
+    pub base_rps: f64,
+    pub spike_rps: f64,
+    /// When the ramp starts, relative to generator start.
+    pub spike_start: Time,
+    pub ramp: Time,
+    pub hold: Time,
+    pub decay: Time,
+}
+
+impl Default for FlashCrowdConfig {
+    fn default() -> Self {
+        FlashCrowdConfig {
+            base_rps: 0.5,
+            spike_rps: 6.0,
+            spike_start: 10 * MIN,
+            ramp: MIN,
+            hold: 8 * MIN,
+            decay: 4 * MIN,
+        }
+    }
+}
+
+/// A cycling staircase of arrival-rate levels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepSurgeConfig {
+    /// Rate levels (req/s), visited in order, then repeated.
+    pub levels_rps: Vec<f64>,
+    /// Dwell time per level.
+    pub step: Time,
+}
+
+impl Default for StepSurgeConfig {
+    fn default() -> Self {
+        StepSurgeConfig {
+            levels_rps: vec![0.5, 2.0, 4.0, 1.0],
+            step: 8 * MIN,
+        }
+    }
+}
+
+/// An analytic arrival-rate curve, evaluated at time since generator
+/// start.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RateProfile {
+    Diurnal(DiurnalConfig),
+    FlashCrowd(FlashCrowdConfig),
+    Step(StepSurgeConfig),
+}
+
+impl RateProfile {
+    /// Arrival rate (req/s) at `elapsed` since the generator started.
+    pub fn rate_at(&self, elapsed: Time) -> f64 {
+        match self {
+            RateProfile::Diurnal(c) => {
+                let period = c.period.max(1);
+                let hour = (elapsed % period) as f64 / period as f64 * 24.0;
+                let dist = (hour - c.peak_hour).abs();
+                let dist = dist.min(24.0 - dist); // circular day
+                let sigma = c.width_hours.max(1e-6);
+                let bump = (-0.5 * (dist / sigma) * (dist / sigma)).exp();
+                (c.base_rps + (c.peak_rps - c.base_rps) * bump).max(0.0)
+            }
+            RateProfile::FlashCrowd(c) => {
+                if elapsed < c.spike_start {
+                    return c.base_rps.max(0.0);
+                }
+                let since = elapsed - c.spike_start;
+                let rate = if since < c.ramp {
+                    let f = since as f64 / c.ramp.max(1) as f64;
+                    c.base_rps + (c.spike_rps - c.base_rps) * f
+                } else if since < c.ramp + c.hold {
+                    c.spike_rps
+                } else if since < c.ramp + c.hold + c.decay {
+                    let f = (since - c.ramp - c.hold) as f64 / c.decay.max(1) as f64;
+                    c.spike_rps + (c.base_rps - c.spike_rps) * f
+                } else {
+                    c.base_rps
+                };
+                rate.max(0.0)
+            }
+            RateProfile::Step(c) => {
+                if c.levels_rps.is_empty() {
+                    return 0.0;
+                }
+                let idx = (elapsed / c.step.max(1)) as usize % c.levels_rps.len();
+                c.levels_rps[idx].max(0.0)
+            }
+        }
+    }
+
+    /// A contiguous silent scan of this length proves the profile is
+    /// silent forever after: one full cycle for the periodic profiles,
+    /// the whole transient (plus a segment) for the flash crowd.
+    fn silent_span(&self) -> Time {
+        match self {
+            RateProfile::Diurnal(c) => c.period.max(1) + SEGMENT,
+            RateProfile::FlashCrowd(c) => {
+                c.spike_start + c.ramp + c.hold + c.decay + SEGMENT
+            }
+            RateProfile::Step(c) => {
+                c.step.max(1).saturating_mul(c.levels_rps.len().max(1) as Time) + SEGMENT
+            }
+        }
+    }
+}
+
+/// Event-driven Poisson generator over an analytic [`RateProfile`] —
+/// the analytic-curve sibling of [`TraceGen`], with the same
+/// relative-to-origin indexing (staggered starts replay the full curve).
+#[derive(Debug)]
+pub struct RateGen {
+    pub zone: u32,
+    profile: RateProfile,
+    pub(super) start_delay: Time,
+    /// Stop generating after this much elapsed time (None = unbounded).
+    horizon: Option<Time>,
+    origin: Option<Time>,
+}
+
+impl RateGen {
+    pub fn new(zone: u32, profile: RateProfile) -> Self {
+        RateGen {
+            zone,
+            profile,
+            start_delay: 0,
+            horizon: None,
+            origin: None,
+        }
+    }
+
+    pub fn with_start_delay(mut self, delay: Time) -> Self {
+        self.start_delay = delay;
+        self
+    }
+
+    pub fn with_horizon(mut self, horizon: Time) -> Self {
+        self.horizon = Some(horizon);
+        self
+    }
+
+    pub(super) fn on_tick(
+        &mut self,
+        index: u32,
+        app: &mut App,
+        queue: &mut EventQueue,
+        rng: &mut Pcg64,
+    ) -> bool {
+        let now = queue.now();
+        let origin = match self.origin {
+            Some(o) => {
+                app.submit(draw_task(rng), self.zone, now, queue);
+                o
+            }
+            None => {
+                self.origin = Some(now);
+                now
+            }
+        };
+
+        // Piecewise-constant over SEGMENT: sample an exponential gap at
+        // the current rate; if it crosses a segment boundary, re-sample
+        // there (the rate may have moved). A contiguous silent scan
+        // longer than the profile's silent span proves the curve is zero
+        // forever (all-zero configs) — stop instead of hopping segments
+        // until overflow.
+        let silent_span = self.profile.silent_span();
+        let mut t = now - origin;
+        let mut silent_since = t;
+        loop {
+            if let Some(h) = self.horizon {
+                if t >= h {
+                    return false;
+                }
+            }
+            let rate = self.profile.rate_at(t);
+            if rate > 1e-9 {
+                let gap = crate::sim::from_secs(rng.exponential(rate)).max(1);
+                let seg_end = (t / SEGMENT + 1) * SEGMENT;
+                if t + gap <= seg_end {
+                    // The horizon bounds scheduled arrivals too, not just
+                    // the loop cursor (it may not be segment-aligned).
+                    if let Some(h) = self.horizon {
+                        if t + gap > h {
+                            return false;
+                        }
+                    }
+                    queue.schedule_at(origin + t + gap, Event::WorkloadTick { generator: index });
+                    return true;
+                }
+                t = seg_end;
+                silent_since = t;
+            } else {
+                t = (t / SEGMENT + 1) * SEGMENT;
+                if t - silent_since > silent_span {
+                    return false;
+                }
+            }
+        }
+    }
+}
+
+/// A named, buildable workload scenario: which generator family, on which
+/// zones, with what stagger. The sweep harness treats scenarios as data —
+/// one descriptor per grid row — and materializes fresh [`Generator`]s
+/// per cell so every cell is an independent deterministic world.
+#[derive(Debug, Clone)]
+pub enum Scenario {
+    /// The paper's Algorithm-2 bursty generator, one per zone.
+    RandomAccess { zones: Vec<u32> },
+    /// Per-minute trace replay (e.g. the scaled NASA trace), one per
+    /// zone, each delayed by `i * stagger`.
+    Trace {
+        counts: Arc<Vec<f64>>,
+        scale: f64,
+        zones: Vec<u32>,
+        stagger: Time,
+    },
+    /// Gaussian-peak diurnal cycle on every zone.
+    Diurnal { cfg: DiurnalConfig, zones: Vec<u32> },
+    /// Flash crowd on every zone (staggered per zone).
+    FlashCrowd {
+        cfg: FlashCrowdConfig,
+        zones: Vec<u32>,
+        stagger: Time,
+    },
+    /// Step staircase on every zone.
+    StepSurge { cfg: StepSurgeConfig, zones: Vec<u32> },
+    /// Any combination of the above (multi-zone mixed workloads).
+    Composite { parts: Vec<Scenario> },
+}
+
+impl Scenario {
+    /// Short kind tag (report labels).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Scenario::RandomAccess { .. } => "random-access",
+            Scenario::Trace { .. } => "trace",
+            Scenario::Diurnal { .. } => "diurnal",
+            Scenario::FlashCrowd { .. } => "flash-crowd",
+            Scenario::StepSurge { .. } => "step-surge",
+            Scenario::Composite { .. } => "composite",
+        }
+    }
+
+    /// Materialize fresh generators for one simulation cell.
+    pub fn build_generators(&self) -> Vec<Generator> {
+        match self {
+            Scenario::RandomAccess { zones } => zones
+                .iter()
+                .map(|&z| Generator::RandomAccess(RandomAccessGen::new(z)))
+                .collect(),
+            Scenario::Trace {
+                counts,
+                scale,
+                zones,
+                stagger,
+            } => zones
+                .iter()
+                .enumerate()
+                .map(|(i, &z)| {
+                    Generator::Trace(
+                        TraceGen::new(z, counts.clone(), *scale)
+                            .with_start_delay(i as Time * *stagger),
+                    )
+                })
+                .collect(),
+            Scenario::Diurnal { cfg, zones } => zones
+                .iter()
+                .map(|&z| Generator::Rate(RateGen::new(z, RateProfile::Diurnal(*cfg))))
+                .collect(),
+            Scenario::FlashCrowd {
+                cfg,
+                zones,
+                stagger,
+            } => zones
+                .iter()
+                .enumerate()
+                .map(|(i, &z)| {
+                    Generator::Rate(
+                        RateGen::new(z, RateProfile::FlashCrowd(*cfg))
+                            .with_start_delay(i as Time * *stagger),
+                    )
+                })
+                .collect(),
+            Scenario::StepSurge { cfg, zones } => zones
+                .iter()
+                .map(|&z| Generator::Rate(RateGen::new(z, RateProfile::Step(cfg.clone()))))
+                .collect(),
+            Scenario::Composite { parts } => {
+                parts.iter().flat_map(|p| p.build_generators()).collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::TaskCosts;
+    use crate::cluster::{Cluster, Deployment, PodSpec, Selector, Tier};
+
+    fn app() -> App {
+        let mut cluster = Cluster::new();
+        let edge = cluster.add_deployment(Deployment::new(
+            "edge",
+            Selector::new(Tier::Edge, Some(1)),
+            PodSpec::new(500, 256),
+            0,
+            1,
+        ));
+        let cloud = cluster.add_deployment(Deployment::new(
+            "cloud",
+            Selector::new(Tier::Cloud, None),
+            PodSpec::new(1000, 512),
+            0,
+            1,
+        ));
+        App::new(TaskCosts::default(), &[(1, edge)], cloud)
+    }
+
+    /// Pump a single generator until `end`, returning arrival times.
+    fn arrivals_until(mut gen: Generator, end: Time, seed: u64) -> Vec<Time> {
+        let mut a = app();
+        let mut q = EventQueue::new();
+        let mut rng = Pcg64::new(seed, 50);
+        gen.start(0, &mut q);
+        let mut arrivals = Vec::new();
+        while let Some(next) = q.peek_time() {
+            if next > end {
+                break;
+            }
+            let (t, ev) = q.pop().unwrap();
+            match ev {
+                Event::WorkloadTick { generator } => {
+                    if !gen.on_tick(generator, &mut a, &mut q, &mut rng) {
+                        break;
+                    }
+                }
+                Event::RequestArrival { .. } => arrivals.push(t),
+                _ => {}
+            }
+        }
+        arrivals
+    }
+
+    #[test]
+    fn diurnal_profile_peaks_at_peak_hour() {
+        let cfg = DiurnalConfig::default();
+        let p = RateProfile::Diurnal(cfg);
+        let at = |h: f64| p.rate_at((h * HOUR as f64) as Time);
+        assert!((at(cfg.peak_hour) - cfg.peak_rps).abs() < 1e-6);
+        // Trough (12 h away) sits near the base rate.
+        let trough = at((cfg.peak_hour + 12.0) % 24.0);
+        assert!(trough < cfg.base_rps * 1.1, "trough {trough}");
+        // Repeats daily.
+        assert!((at(cfg.peak_hour + 24.0) - cfg.peak_rps).abs() < 1e-6);
+        // Circular distance: 1 h before the peak == 1 h after.
+        assert!((at(cfg.peak_hour - 1.0) - at(cfg.peak_hour + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flash_crowd_profile_ramps_holds_decays() {
+        let cfg = FlashCrowdConfig::default();
+        let p = RateProfile::FlashCrowd(cfg);
+        assert_eq!(p.rate_at(0), cfg.base_rps);
+        assert_eq!(p.rate_at(cfg.spike_start + cfg.ramp), cfg.spike_rps);
+        assert_eq!(
+            p.rate_at(cfg.spike_start + cfg.ramp + cfg.hold / 2),
+            cfg.spike_rps
+        );
+        let after = cfg.spike_start + cfg.ramp + cfg.hold + cfg.decay + SEC;
+        assert_eq!(p.rate_at(after), cfg.base_rps);
+        // Mid-ramp is strictly between base and spike.
+        let mid = p.rate_at(cfg.spike_start + cfg.ramp / 2);
+        assert!(mid > cfg.base_rps && mid < cfg.spike_rps, "{mid}");
+    }
+
+    #[test]
+    fn step_profile_cycles_levels() {
+        let cfg = StepSurgeConfig {
+            levels_rps: vec![1.0, 3.0],
+            step: MIN,
+        };
+        let p = RateProfile::Step(cfg);
+        assert_eq!(p.rate_at(0), 1.0);
+        assert_eq!(p.rate_at(MIN + SEC), 3.0);
+        assert_eq!(p.rate_at(2 * MIN + SEC), 1.0, "cycles back");
+        let empty = RateProfile::Step(StepSurgeConfig {
+            levels_rps: vec![],
+            step: MIN,
+        });
+        assert_eq!(empty.rate_at(0), 0.0);
+    }
+
+    #[test]
+    fn permanently_silent_profiles_terminate() {
+        // All-zero profiles must stop the generator instead of hopping
+        // segments forever.
+        let empty_step = Generator::Rate(RateGen::new(
+            1,
+            RateProfile::Step(StepSurgeConfig {
+                levels_rps: vec![],
+                step: MIN,
+            }),
+        ));
+        assert!(arrivals_until(empty_step, 60 * MIN, 1).is_empty());
+
+        let dead_crowd = Generator::Rate(RateGen::new(
+            1,
+            RateProfile::FlashCrowd(FlashCrowdConfig {
+                base_rps: 0.0,
+                spike_rps: 0.0,
+                ..FlashCrowdConfig::default()
+            }),
+        ));
+        assert!(arrivals_until(dead_crowd, 60 * MIN, 2).is_empty());
+
+        // A zero-base flash crowd must still reach its late spike.
+        let late_spike = Generator::Rate(RateGen::new(
+            1,
+            RateProfile::FlashCrowd(FlashCrowdConfig {
+                base_rps: 0.0,
+                spike_rps: 4.0,
+                spike_start: 20 * MIN,
+                ramp: 10 * SEC,
+                hold: MIN,
+                decay: 10 * SEC,
+            }),
+        ));
+        let arrivals = arrivals_until(late_spike, 30 * MIN, 3);
+        assert!(!arrivals.is_empty(), "spike after long silence still fires");
+        assert!(arrivals.iter().all(|&t| t >= 20 * MIN));
+    }
+
+    #[test]
+    fn rate_gen_matches_constant_rate() {
+        // Constant 2 req/s for 10 minutes → ~1200 arrivals.
+        let cfg = StepSurgeConfig {
+            levels_rps: vec![2.0],
+            step: MIN,
+        };
+        let gen = Generator::Rate(RateGen::new(1, RateProfile::Step(cfg)));
+        let arrivals = arrivals_until(gen, 10 * MIN, 7);
+        let n = arrivals.len() as f64;
+        assert!((n - 1200.0).abs() < 150.0, "expected ~1200, got {n}");
+    }
+
+    #[test]
+    fn rate_gen_flash_crowd_spikes() {
+        let cfg = FlashCrowdConfig {
+            base_rps: 0.5,
+            spike_rps: 8.0,
+            spike_start: 5 * MIN,
+            ramp: 30 * SEC,
+            hold: 4 * MIN,
+            decay: 30 * SEC,
+        };
+        let gen = Generator::Rate(RateGen::new(1, RateProfile::FlashCrowd(cfg)));
+        let arrivals = arrivals_until(gen, 15 * MIN, 9);
+        let before = arrivals.iter().filter(|&&t| t < 5 * MIN).count() as f64;
+        let during = arrivals
+            .iter()
+            .filter(|&&t| t >= 6 * MIN && t < 9 * MIN)
+            .count() as f64;
+        // Per-minute rate during the spike must dwarf the baseline.
+        assert!(
+            during / 3.0 > 5.0 * (before / 5.0),
+            "spike {during}/3min vs base {before}/5min"
+        );
+    }
+
+    #[test]
+    fn rate_gen_horizon_stops() {
+        let cfg = StepSurgeConfig {
+            levels_rps: vec![5.0],
+            step: MIN,
+        };
+        let gen = Generator::Rate(
+            RateGen::new(1, RateProfile::Step(cfg)).with_horizon(2 * MIN),
+        );
+        let arrivals = arrivals_until(gen, 60 * MIN, 3);
+        assert!(!arrivals.is_empty());
+        assert!(arrivals.iter().all(|&t| t <= 2 * MIN + SEC));
+    }
+
+    #[test]
+    fn rate_gen_staggered_start_replays_curve() {
+        // Same flash-crowd curve, started 3 min late: the spike must move
+        // by exactly the stagger (relative-origin indexing).
+        let cfg = FlashCrowdConfig {
+            base_rps: 0.2,
+            spike_rps: 6.0,
+            spike_start: 2 * MIN,
+            ramp: 10 * SEC,
+            hold: 2 * MIN,
+            decay: 10 * SEC,
+        };
+        let gen = Generator::Rate(
+            RateGen::new(1, RateProfile::FlashCrowd(cfg)).with_start_delay(3 * MIN),
+        );
+        let arrivals = arrivals_until(gen, 10 * MIN, 13);
+        let in_spike = arrivals
+            .iter()
+            .filter(|&&t| t >= 5 * MIN && t <= 7 * MIN + 20 * SEC)
+            .count();
+        assert!(
+            in_spike as f64 > 0.7 * arrivals.len() as f64,
+            "spike must dominate and sit at 5–7 min ({in_spike}/{})",
+            arrivals.len()
+        );
+    }
+
+    #[test]
+    fn composite_builds_all_generators() {
+        let s = Scenario::Composite {
+            parts: vec![
+                Scenario::Diurnal {
+                    cfg: DiurnalConfig::default(),
+                    zones: vec![1],
+                },
+                Scenario::FlashCrowd {
+                    cfg: FlashCrowdConfig::default(),
+                    zones: vec![2],
+                    stagger: 5 * MIN,
+                },
+            ],
+        };
+        let gens = s.build_generators();
+        assert_eq!(gens.len(), 2);
+        assert_eq!(gens[0].zone(), 1);
+        assert_eq!(gens[1].zone(), 2);
+        assert_eq!(s.kind(), "composite");
+    }
+
+    #[test]
+    fn scenario_generators_are_fresh_each_build() {
+        let s = Scenario::RandomAccess { zones: vec![1, 2] };
+        assert_eq!(s.build_generators().len(), 2);
+        assert_eq!(s.build_generators().len(), 2, "descriptor is reusable");
+    }
+}

@@ -1,0 +1,211 @@
+//! Minimal offline drop-in for the subset of the `anyhow` API this
+//! workspace uses: `Error`, `Result`, `Context`, and the `anyhow!` /
+//! `bail!` / `ensure!` macros. The build environment resolves crates
+//! offline, so the real crate is unavailable; this shim keeps the same
+//! call-site syntax and `{:#}` context-chain formatting.
+
+use std::fmt;
+
+/// An error carrying a chain of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a single message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    fn from_std<E: std::error::Error>(error: E) -> Self {
+        let mut chain = vec![error.to_string()];
+        let mut source = error.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full context chain, anyhow-style.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::from_std(error)
+    }
+}
+
+/// Crate-wide result alias, matching `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod ext {
+    use super::{fmt, Error};
+
+    /// Sealed dispatch so `.context()` works both on std errors and on
+    /// `anyhow::Error` itself (mirrors anyhow's internal `ext::StdError`).
+    pub trait StdErrorExt {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> StdErrorExt for E {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error {
+            Error::from_std(self).context(context)
+        }
+    }
+
+    impl StdErrorExt for Error {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error {
+            self.context(context)
+        }
+    }
+}
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T, E>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: ext::StdErrorExt> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or a displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading config")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing file");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing there").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing there");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 2)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 2: missing file");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(n: u32) -> Result<()> {
+            ensure!(n < 10, "n too big: {n}");
+            if n == 5 {
+                bail!("five is right out");
+            }
+            Ok(())
+        }
+        assert!(fails(3).is_ok());
+        assert_eq!(format!("{}", fails(5).unwrap_err()), "five is right out");
+        assert_eq!(format!("{}", fails(20).unwrap_err()), "n too big: 20");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+}
