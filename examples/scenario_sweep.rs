@@ -1,16 +1,17 @@
 //! Scenario-matrix driver: the `model_comparison`-style example for the
 //! parallel sweep harness. Runs PPA (ARMA, trained online, plus the naive
-//! last-value model) against HPA over the full preset scenario library —
-//! diurnal, flash-crowd, step-surge, multi-zone composite, Random Access
-//! and the scaled NASA trace — across several seeds, in parallel, and
+//! last-value model) against HPA over a topology's full preset scenario
+//! library — the Table-2 presets on `paper`, the generated N-zone
+//! composites on `city-N[xW]` — across several seeds, in parallel, and
 //! writes a JSON report.
 //!
 //! ```bash
-//! cargo run --release --example scenario_sweep            # 30 min cells, 4 seeds
-//! cargo run --release --example scenario_sweep -- 60 8    # 60 min cells, 8 seeds
+//! cargo run --release --example scenario_sweep              # 30 min cells, 4 seeds, paper
+//! cargo run --release --example scenario_sweep -- 60 8      # 60 min cells, 8 seeds
+//! cargo run --release --example scenario_sweep -- 30 2 city-50   # city-scale grid
 //! ```
 
-use ppa_edge::config::scenario_presets;
+use ppa_edge::config::Topology;
 use ppa_edge::experiments::{run_sweep, AutoscalerKind, SweepConfig};
 use ppa_edge::report;
 
@@ -25,9 +26,14 @@ fn main() -> anyhow::Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(4);
+    let topology = match std::env::args().nth(3) {
+        Some(s) => Topology::parse(&s)?,
+        None => Topology::Paper,
+    };
 
     let cfg = SweepConfig {
-        scenarios: scenario_presets(),
+        topology,
+        scenarios: topology.scenario_presets(),
         scalers: vec![
             AutoscalerKind::Hpa,
             AutoscalerKind::PpaArma,
@@ -38,10 +44,11 @@ fn main() -> anyhow::Result<()> {
         threads: 0, // one worker per core
     };
     println!(
-        "scenario sweep: {} scenarios x {} autoscalers x {} seeds ({} sim-minutes per cell)",
+        "scenario sweep: {} scenarios x {} autoscalers x {} seeds on {} ({} sim-minutes per cell)",
         cfg.scenarios.len(),
         cfg.scalers.len(),
         cfg.seeds.len(),
+        topology.label(),
         minutes
     );
 

@@ -1,21 +1,32 @@
 //! Hot-path micro-benchmarks (L3 perf deliverable): the DES event loop,
-//! scheduler, metrics scrape, forecaster dispatches, and end-to-end
-//! simulation rate. Run with `cargo bench --bench hotpath`.
+//! scheduler, metrics scrape (interned handles vs the legacy string-keyed
+//! path), forecaster dispatches, end-to-end simulation rate and sweep
+//! cell throughput — including city-scale (50-zone) worlds. Run with
+//! `cargo bench --bench hotpath`.
+//!
+//! Emits a machine-readable `BENCH_hotpath.json` (events/sec, ns/scrape,
+//! cells/sec, scrape speedup vs legacy) so the perf trajectory is
+//! tracked across PRs.
 
 #[path = "bench_common.rs"]
 mod bench_common;
 use bench_common::{print_header, run};
 
-use ppa_edge::app::{TaskCosts, TaskType};
+use ppa_edge::app::{App, TaskCosts, TaskType};
 use ppa_edge::autoscaler::Hpa;
-use ppa_edge::cluster::{Cluster, Deployment, NodeSpec, PodSpec, Selector, Tier};
-use ppa_edge::config::{paper_cluster, quickstart_cluster};
-use ppa_edge::experiments::SimWorld;
+use ppa_edge::cluster::{Cluster, Deployment, NodeSpec, PodPhase, PodSpec, Selector, Tier};
+use ppa_edge::config::{
+    city_scenario_presets, paper_cluster, quickstart_cluster, ClusterConfig, Topology,
+};
+use ppa_edge::experiments::sweep::run_cell;
+use ppa_edge::experiments::{AutoscalerKind, SimWorld};
 use ppa_edge::forecast::{arma::fit_arma, Forecaster, LstmForecaster};
-use ppa_edge::metrics::METRIC_DIM;
-use ppa_edge::sim::{Event, EventQueue, MIN, SEC};
+use ppa_edge::metrics::{METRIC_DIM, METRIC_NAMES};
+use ppa_edge::sim::{Event, EventQueue, Time, MIN, SEC};
+use ppa_edge::util::json::Json;
 use ppa_edge::util::rng::Pcg64;
 use ppa_edge::workload::{Generator, RandomAccessGen};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::rc::Rc;
 
 fn bench_event_queue() {
@@ -54,20 +65,164 @@ fn bench_scheduler() {
     });
 }
 
-fn bench_scrape() {
-    print_header("metrics pipeline scrape (3 services, 12 pods)");
-    let cfg = paper_cluster();
-    let mut world = SimWorld::build(&cfg, TaskCosts::default(), 3);
+/// The old string-keyed store, reconstructed: `entry(name.to_string())`
+/// on every insert (one String allocation per series per tick), exactly
+/// what `Tsdb` did before the interner (the new `Tsdb::insert` resolves
+/// through the interner and would flatter the baseline).
+struct LegacyTsdb {
+    series: HashMap<String, VecDeque<(Time, f64)>>,
+}
+
+impl LegacyTsdb {
+    fn new() -> Self {
+        LegacyTsdb {
+            series: HashMap::new(),
+        }
+    }
+
+    fn insert(&mut self, name: &str, t: Time, v: f64) {
+        let s = self
+            .series
+            .entry(name.to_string())
+            .or_insert_with(|| VecDeque::with_capacity(1024));
+        if s.len() == 20_000 {
+            s.pop_front();
+        }
+        s.push_back((t, v));
+    }
+}
+
+/// The pre-interning scrape, reconstructed from public APIs with the same
+/// per-pod arithmetic (base-burn utilization, RAM model): clones each
+/// deployment's pod list, builds 8 `format!` keys per service per tick
+/// and writes through the string-keyed [`LegacyTsdb::insert`]. The
+/// baseline the interned hot path is measured against.
+fn legacy_scrape(
+    tsdb: &mut LegacyTsdb,
+    now: Time,
+    last: &mut Time,
+    cluster: &mut Cluster,
+    app: &mut App,
+    base_burn: f64,
+) {
+    let interval = now.saturating_sub(*last);
+    if interval == 0 {
+        return;
+    }
+    let interval_secs = ppa_edge::sim::to_secs(interval);
+    let counters = app.take_counters();
+    for (svc_idx, svc) in app.services.iter().enumerate() {
+        let dep = svc.deployment;
+        let mut cpu_sum_pct = 0.0;
+        let mut ram_sum_pct = 0.0;
+        let mut requested = 0.0;
+        let mut used = 0.0;
+        let mut replicas = 0usize;
+        let pod_ids: Vec<ppa_edge::sim::PodId> =
+            cluster.deployments[dep.0 as usize].pods.clone();
+        for pid in pod_ids {
+            let pod = cluster.pod_mut(pid);
+            match pod.phase {
+                PodPhase::Running | PodPhase::Terminating => {
+                    let busy_frac = (pod.take_busy(now) as f64 / interval as f64).min(1.0);
+                    let util = (base_burn + (1.0 - base_burn) * busy_frac).min(1.0);
+                    cpu_sum_pct += util * 100.0;
+                    ram_sum_pct += 30.0 + 55.0 * util;
+                    requested += pod.spec.cpu_millis as f64;
+                    used += util * pod.spec.cpu_millis as f64;
+                    replicas += 1;
+                }
+                PodPhase::Initializing | PodPhase::Pending => {
+                    requested += pod.spec.cpu_millis as f64;
+                    replicas += 1;
+                }
+                PodPhase::Gone => {}
+            }
+        }
+        let c = counters[svc_idx];
+        let vector = [
+            cpu_sum_pct,
+            ram_sum_pct,
+            c.net_in_bytes as f64 / 1000.0 / interval_secs,
+            c.net_out_bytes as f64 / 1000.0 / interval_secs,
+            c.arrivals as f64 / interval_secs,
+        ];
+        let name = &svc.name;
+        for (m, metric) in METRIC_NAMES.iter().enumerate() {
+            tsdb.insert(&format!("{name}.{metric}"), now, vector[m]);
+        }
+        tsdb.insert(&format!("{name}.replicas"), now, replicas as f64);
+        if requested > 0.0 {
+            tsdb.insert(&format!("{name}.rir"), now, (requested - used) / requested);
+        }
+        tsdb.insert(&format!("{name}.queue_depth"), now, svc.queue.len() as f64);
+    }
+    *last = now;
+}
+
+fn busy_world(cfg: &ClusterConfig, seed: u64) -> SimWorld {
+    let mut world = SimWorld::build(cfg, TaskCosts::default(), seed);
     world.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
     for svc in 0..world.app.services.len() {
         world.add_scaler(Box::new(Hpa::with_defaults()), svc);
     }
     world.run_until(5 * MIN);
+    world
+}
+
+/// Returns (interned ns/scrape, legacy ns/scrape, city-50 ns/scrape).
+fn bench_scrape() -> (f64, f64, f64) {
+    print_header("metrics pipeline scrape");
+    let mut world = busy_world(&paper_cluster(), 3);
     let mut t = 5 * MIN;
-    run("scrape tick", 5, 500, || {
+    let interned = run("paper world, interned handles", 5, 500, || {
         t += 10 * SEC;
         world.metrics.scrape(t, &mut world.cluster, &mut world.app);
     });
+
+    let mut world = busy_world(&paper_cluster(), 3);
+    let mut tsdb = LegacyTsdb::new();
+    let mut t = 5 * MIN;
+    let mut last = 0;
+    let burn = TaskCosts::default().base_burn_frac;
+    let legacy = run("paper world, legacy string keys", 5, 500, || {
+        t += 10 * SEC;
+        legacy_scrape(
+            &mut tsdb,
+            t,
+            &mut last,
+            &mut world.cluster,
+            &mut world.app,
+            burn,
+        );
+    });
+
+    let city = Topology::EdgeCity {
+        zones: 50,
+        workers_per_zone: 2,
+    };
+    let mut world = SimWorld::build(&city.cluster(), TaskCosts::default(), 7);
+    let presets = city_scenario_presets(50);
+    for gen in presets[2].1.build_generators() {
+        world.add_generator(gen);
+    }
+    for svc in 0..world.app.services.len() {
+        world.add_scaler(Box::new(Hpa::with_defaults()), svc);
+    }
+    world.run_until(5 * MIN);
+    let mut t = 5 * MIN;
+    let city_r = run("city-50 world (51 services), interned", 5, 200, || {
+        t += 10 * SEC;
+        world.metrics.scrape(t, &mut world.cluster, &mut world.app);
+    });
+
+    let speedup = legacy.mean_us / interned.mean_us;
+    println!("  -> interned scrape is {speedup:.1}x the legacy string-keyed path");
+    (
+        interned.mean_us * 1000.0,
+        legacy.mean_us * 1000.0,
+        city_r.mean_us * 1000.0,
+    )
 }
 
 fn bench_forecasters() {
@@ -104,7 +259,8 @@ fn bench_forecasters() {
     }
 }
 
-fn bench_end_to_end() {
+/// Returns measured end-to-end events/sec (quickstart world, HPA).
+fn bench_end_to_end() -> f64 {
     print_header("end-to-end simulation rate");
     let r = run("quickstart world, 60 sim-minutes (HPA)", 1, 5, || {
         let cfg = quickstart_cluster();
@@ -117,6 +273,18 @@ fn bench_end_to_end() {
     });
     let speedup = 3600.0 / (r.mean_us / 1e6);
     println!("  -> simulation speed ~{speedup:.0}x real time");
+
+    // Events/sec on one measured run.
+    let cfg = quickstart_cluster();
+    let mut world = SimWorld::build(&cfg, TaskCosts::default(), 9);
+    world.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
+    for svc in 0..world.app.services.len() {
+        world.add_scaler(Box::new(Hpa::with_defaults()), svc);
+    }
+    let wall = std::time::Instant::now();
+    let events = world.run_until(60 * MIN);
+    let events_per_sec = events as f64 / wall.elapsed().as_secs_f64();
+    println!("  -> {events_per_sec:.0} events/sec");
 
     // Request-to-completion throughput of the app model itself.
     let mut cluster = Cluster::new();
@@ -143,7 +311,7 @@ fn bench_end_to_end() {
             cluster.on_pod_running(pod);
         }
     }
-    let mut app = ppa_edge::app::App::new(TaskCosts::default(), &[(1, edge)], cloud);
+    let mut app = App::new(TaskCosts::default(), &[(1, edge)], cloud);
     run("submit+serve 100 sort requests", 2, 50, || {
         for _ in 0..100 {
             app.submit(TaskType::Sort, 1, q.now(), &mut q);
@@ -160,13 +328,61 @@ fn bench_end_to_end() {
             }
         }
     });
+    events_per_sec
+}
+
+/// Returns sweep cell throughput (cells/sec) on a city-8 topology.
+fn bench_sweep_cells() -> f64 {
+    print_header("sweep cell throughput (city-8, hpa, 5 sim-minutes)");
+    let topo = Topology::EdgeCity {
+        zones: 8,
+        workers_per_zone: 2,
+    };
+    let cluster = topo.cluster();
+    let label = topo.label();
+    let presets = city_scenario_presets(8);
+    let (name, scenario) = &presets[2]; // city8-step-carpet
+    let scaler = AutoscalerKind::Hpa;
+    let r = run("run_cell city-8 step-carpet", 1, 5, || {
+        let _ = run_cell(&label, &cluster, name, scenario, scaler, 3, 5);
+    });
+    let cells_per_sec = 1e6 / r.mean_us;
+    println!("  -> {cells_per_sec:.2} cells/sec (single thread)");
+    cells_per_sec
+}
+
+fn write_bench_json(entries: &[(&str, f64)]) {
+    let mut o = BTreeMap::new();
+    o.insert("schema".to_string(), Json::Num(1.0));
+    for &(k, v) in entries {
+        let value = if v.is_finite() { Json::Num(v) } else { Json::Null };
+        o.insert(k.to_string(), value);
+    }
+    // cargo bench runs with cwd = the package root (rust/); anchor the
+    // report at the workspace root where DESIGN.md documents it.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_hotpath.json");
+    match std::fs::write(&path, Json::Obj(o).to_string()) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
 }
 
 fn main() {
     println!("ppa-edge hot-path benchmarks");
     bench_event_queue();
     bench_scheduler();
-    bench_scrape();
+    let (scrape_ns, legacy_ns, city_ns) = bench_scrape();
     bench_forecasters();
-    bench_end_to_end();
+    let events_per_sec = bench_end_to_end();
+    let cells_per_sec = bench_sweep_cells();
+    write_bench_json(&[
+        ("events_per_sec", events_per_sec),
+        ("ns_per_scrape", scrape_ns),
+        ("ns_per_scrape_legacy", legacy_ns),
+        ("ns_per_scrape_city50", city_ns),
+        ("scrape_speedup_vs_legacy", legacy_ns / scrape_ns),
+        ("sweep_cells_per_sec", cells_per_sec),
+    ]);
 }

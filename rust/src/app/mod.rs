@@ -304,13 +304,9 @@ impl App {
                 created: req.created,
                 completed: now,
             });
-            let service = req.service;
-            if !draining {
-                self.dispatch(service, cluster, queue, rng);
-            } else {
-                // Someone else may still be idle.
-                self.dispatch(service, cluster, queue, rng);
-            }
+            // Keep the queue moving — even when this pod is draining,
+            // another pod may be idle.
+            self.dispatch(req.service, cluster, queue, rng);
         }
     }
 

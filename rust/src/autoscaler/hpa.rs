@@ -86,8 +86,7 @@ impl Autoscaler for Hpa {
         metrics: &MetricsPipeline,
         cluster: &Cluster,
     ) -> ScaleDecision {
-        let vector = metrics.latest_vector(service);
-        let key_value = vector[self.cfg.key_metric];
+        let key_value = metrics.latest_metric(service, self.cfg.key_metric);
         let current = cluster.live_replicas(target).max(1);
 
         // Tolerance band: skip action if the per-replica ratio is close

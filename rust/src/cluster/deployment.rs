@@ -21,7 +21,11 @@ impl Selector {
     }
 
     pub fn matches(&self, node: &NodeSpec) -> bool {
-        node.tier == self.tier && self.zone.map_or(true, |z| node.zone == z)
+        let zone_ok = match self.zone {
+            Some(z) => node.zone == z,
+            None => true,
+        };
+        node.tier == self.tier && zone_ok
     }
 }
 

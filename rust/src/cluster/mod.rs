@@ -70,6 +70,15 @@ impl Cluster {
         &self.deployments[id.0 as usize]
     }
 
+    /// Split borrow for exporters: the pods slab mutably (busy-time
+    /// accounting drains per-pod accumulators) alongside the deployment
+    /// table immutably (pod-id membership lists). Lets the metrics scrape
+    /// walk `deployment.pods` in place instead of cloning the list to
+    /// satisfy the borrow checker.
+    pub fn split_pods_deployments(&mut self) -> (&mut [Pod], &[Deployment]) {
+        (&mut self.pods, &self.deployments)
+    }
+
     /// Running pods of a deployment (the ones a service can dispatch to).
     pub fn running_pods(&self, dep: DeploymentId) -> impl Iterator<Item = &Pod> + '_ {
         self.deployments[dep.0 as usize]
@@ -197,8 +206,8 @@ impl Cluster {
         // Victim order: Pending, then Initializing, then newest Running idle,
         // then newest Running busy (drained).
         let mut victims: Vec<PodId> = Vec::with_capacity(n);
-        let dep_pods = self.deployments[dep.0 as usize].pods.clone();
-        let mut candidates: Vec<PodId> = dep_pods
+        let mut candidates: Vec<PodId> = self.deployments[dep.0 as usize]
+            .pods
             .iter()
             .copied()
             .filter(|&p| {

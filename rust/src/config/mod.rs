@@ -98,6 +98,84 @@ impl ClusterConfig {
     }
 }
 
+/// A named cluster-topology descriptor: copyable grid-axis data for the
+/// sweep harness (the way [`crate::workload::Scenario`] describes a
+/// workload). `parse` accepts `paper`, `city-<zones>` and
+/// `city-<zones>x<workers>`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// The Table-2 testbed: 2 edge zones of 2 workers.
+    Paper,
+    /// Generated city: `zones` edge zones × `workers_per_zone` nodes
+    /// (see [`edge_city`]).
+    EdgeCity { zones: u32, workers_per_zone: u32 },
+}
+
+impl Topology {
+    /// Default worker count per city zone (matches Table 2's 2/zone).
+    pub const DEFAULT_CITY_WORKERS: u32 = 2;
+
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        if s == "paper" {
+            return Ok(Topology::Paper);
+        }
+        if let Some(rest) = s.strip_prefix("city-") {
+            let (zones_str, workers_str) = match rest.split_once('x') {
+                Some((z, w)) => (z, Some(w)),
+                None => (rest, None),
+            };
+            let zones: u32 = zones_str
+                .parse()
+                .ok()
+                .filter(|&z| z >= 1)
+                .with_context(|| format!("bad zone count in topology '{s}'"))?;
+            let workers_per_zone: u32 = match workers_str {
+                Some(w) => w
+                    .parse()
+                    .ok()
+                    .filter(|&w| w >= 1)
+                    .with_context(|| format!("bad worker count in topology '{s}'"))?,
+                None => Self::DEFAULT_CITY_WORKERS,
+            };
+            return Ok(Topology::EdgeCity {
+                zones,
+                workers_per_zone,
+            });
+        }
+        bail!("unknown topology '{s}' (expected paper | city-<zones>[x<workers>])")
+    }
+
+    /// Report/JSON label.
+    pub fn label(&self) -> String {
+        match *self {
+            Topology::Paper => "paper".to_string(),
+            Topology::EdgeCity {
+                zones,
+                workers_per_zone,
+            } => format!("city-{zones}x{workers_per_zone}"),
+        }
+    }
+
+    /// Materializable cluster config.
+    pub fn cluster(&self) -> ClusterConfig {
+        match *self {
+            Topology::Paper => paper_cluster(),
+            Topology::EdgeCity {
+                zones,
+                workers_per_zone,
+            } => edge_city(zones, workers_per_zone),
+        }
+    }
+
+    /// The scenario preset library matched to this topology's zones.
+    pub fn scenario_presets(&self) -> Vec<(String, crate::workload::Scenario)> {
+        match *self {
+            Topology::Paper => scenario_presets(),
+            Topology::EdgeCity { zones, .. } => city_scenario_presets(zones),
+        }
+    }
+}
+
 /// PPA arguments — Table 4 of the paper.
 #[derive(Debug, Clone)]
 pub struct PpaArgs {
@@ -370,6 +448,41 @@ mod tests {
         assert!(PpaArgs::from_json(&doc).is_err());
         let doc = Json::parse(r#"{"ControlInterval": 0}"#).unwrap();
         assert!(PpaArgs::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn topology_parse_and_build() {
+        assert_eq!(Topology::parse("paper").unwrap(), Topology::Paper);
+        assert_eq!(
+            Topology::parse("city-50").unwrap(),
+            Topology::EdgeCity {
+                zones: 50,
+                workers_per_zone: 2
+            }
+        );
+        assert_eq!(
+            Topology::parse("city-12x3").unwrap(),
+            Topology::EdgeCity {
+                zones: 12,
+                workers_per_zone: 3
+            }
+        );
+        assert!(Topology::parse("city-0").is_err());
+        assert!(Topology::parse("city-5x0").is_err());
+        assert!(Topology::parse("mesh").is_err());
+        assert_eq!(Topology::parse("city-12x3").unwrap().label(), "city-12x3");
+
+        let city = Topology::parse("city-9").unwrap();
+        let cluster = city.cluster();
+        cluster.validate().unwrap();
+        assert_eq!(cluster.deployments.len(), 10);
+        let presets = city.scenario_presets();
+        assert!(presets.iter().all(|(n, _)| n.starts_with("city9-")));
+        // The paper topology keeps the Table-2 preset library.
+        assert_eq!(
+            Topology::Paper.scenario_presets().len(),
+            scenario_presets().len()
+        );
     }
 
     #[test]

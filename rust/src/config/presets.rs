@@ -86,6 +86,81 @@ pub fn paper_cluster() -> ClusterConfig {
     ClusterConfig { nodes, deployments }
 }
 
+/// Generated city-scale topology: `n_zones` edge zones of
+/// `workers_per_zone` Table-2-class worker nodes each (2000m/2GB,
+/// entrypoint+exporter reservation), one fully-reserved control node and
+/// a cloud worker pool that grows with the city (one 3000m/3GB node per
+/// two zones plus a floor of two, sized so the 10% Eigen forward traffic
+/// of ~2 req/s/zone peaks fits without saturating — §5.2.2's rule that
+/// peaks must not exceed resource limits). One autoscaled `edge-workers-z<zone>`
+/// deployment per zone plus the shared cloud Eigen pool — the same shape
+/// as [`paper_cluster`] (which is exactly `edge_city(2, 2)` plus Table 2
+/// naming), scaled to the many-zone matrices the related hybrid/SLA
+/// studies (arXiv:2512.14290, arXiv:2510.10166) evaluate on.
+pub fn edge_city(n_zones: u32, workers_per_zone: u32) -> ClusterConfig {
+    assert!(n_zones >= 1, "a city needs at least one zone");
+    assert!(workers_per_zone >= 1, "a zone needs at least one worker");
+    let mut nodes = vec![NodeConfig {
+        name: "cloud-control".into(),
+        tier: Tier::Cloud,
+        zone: 0,
+        cpu_millis: 4000,
+        ram_mb: 4096,
+        reserved_cpu_millis: 4000,
+        reserved_ram_mb: 4096,
+    }];
+    let cloud_workers = 2 + n_zones / 2;
+    for i in 1..=cloud_workers {
+        nodes.push(NodeConfig {
+            name: format!("cloud-worker-{i}"),
+            tier: Tier::Cloud,
+            zone: 0,
+            cpu_millis: 3000,
+            ram_mb: 3072,
+            reserved_cpu_millis: 200,
+            reserved_ram_mb: 256,
+        });
+    }
+    for zone in 1..=n_zones {
+        for i in 1..=workers_per_zone {
+            nodes.push(NodeConfig {
+                name: format!("edge-z{zone}-worker-{i}"),
+                tier: Tier::Edge,
+                zone,
+                cpu_millis: 2000,
+                ram_mb: 2048,
+                reserved_cpu_millis: 300,
+                reserved_ram_mb: 384,
+            });
+        }
+    }
+
+    let mut deployments: Vec<DeploymentConfig> = (1..=n_zones)
+        .map(|zone| DeploymentConfig {
+            name: format!("edge-workers-z{zone}"),
+            tier: Tier::Edge,
+            zone: Some(zone),
+            pod_cpu_millis: 500,
+            pod_ram_mb: 256,
+            min_replicas: 1,
+            max_replicas: 100,
+            initial_replicas: 1,
+        })
+        .collect();
+    deployments.push(DeploymentConfig {
+        name: "cloud-workers".into(),
+        tier: Tier::Cloud,
+        zone: None,
+        pod_cpu_millis: 1000,
+        pod_ram_mb: 512,
+        min_replicas: 1,
+        max_replicas: 100,
+        initial_replicas: 1,
+    });
+
+    ClusterConfig { nodes, deployments }
+}
+
 /// A single unconstrained node — the paper's pretraining setup (§5.3.1:
 /// "running the example application for 10 hours ... on a single
 /// unconstrained node").
@@ -257,6 +332,95 @@ pub fn scenario_presets() -> Vec<(String, Scenario)> {
     ]
 }
 
+/// City-scale composite scenario presets over `n_zones` edge zones.
+/// Per-zone rates are kept modest (the city's scale comes from zone
+/// count, not per-zone intensity), matching the paper's §5.2.2 rule of
+/// sweeping pools through their replica range without saturating them.
+pub fn city_scenario_presets(n_zones: u32) -> Vec<(String, Scenario)> {
+    assert!(n_zones >= 1);
+    let zones: Vec<u32> = (1..=n_zones).collect();
+    // One compressed virtual day per sweep hour (as in the Table-2
+    // presets), base/peak tuned for per-zone pools.
+    let city_day = DiurnalConfig {
+        base_rps: 0.1,
+        peak_rps: 2.0,
+        peak_hour: 6.0,
+        width_hours: 2.0,
+        period: HOUR,
+    };
+    // The diurnal peak rolls across the city: zone i peaks 24/n virtual
+    // hours after zone i-1 (commuter wave).
+    let wave: Vec<Scenario> = zones
+        .iter()
+        .enumerate()
+        .map(|(i, &z)| Scenario::Diurnal {
+            cfg: DiurnalConfig {
+                peak_hour: (i as f64 * 24.0 / n_zones as f64 + 3.0) % 24.0,
+                ..city_day
+            },
+            zones: vec![z],
+        })
+        .collect();
+    vec![
+        (
+            format!("city{n_zones}-diurnal-wave"),
+            Scenario::Composite { parts: wave },
+        ),
+        (
+            format!("city{n_zones}-flash-mosaic"),
+            // A flash crowd sweeps zone to zone, 20 s apart: at any
+            // instant a dozen zones are mid-spike while the rest idle.
+            Scenario::FlashCrowd {
+                cfg: FlashCrowdConfig {
+                    base_rps: 0.1,
+                    spike_rps: 2.0,
+                    spike_start: 4 * MIN,
+                    ramp: 30 * crate::sim::SEC,
+                    hold: 2 * MIN,
+                    decay: MIN,
+                },
+                zones: zones.clone(),
+                stagger: 20 * crate::sim::SEC,
+            },
+        ),
+        (
+            format!("city{n_zones}-step-carpet"),
+            // Every zone steps through the same staircase in lockstep —
+            // the whole-city load shifts the control plane must track.
+            Scenario::StepSurge {
+                cfg: StepSurgeConfig {
+                    levels_rps: vec![0.2, 1.0, 2.0, 0.5],
+                    step: 6 * MIN,
+                },
+                zones: zones.clone(),
+            },
+        ),
+        (
+            format!("city{n_zones}-rush-hour"),
+            // City-wide diurnal climb with a flash crowd hitting the
+            // first zone mid-ramp.
+            Scenario::Composite {
+                parts: vec![
+                    Scenario::Diurnal {
+                        cfg: city_day,
+                        zones,
+                    },
+                    Scenario::FlashCrowd {
+                        cfg: FlashCrowdConfig {
+                            base_rps: 0.0,
+                            spike_rps: 4.0,
+                            spike_start: 12 * MIN,
+                            ..FlashCrowdConfig::default()
+                        },
+                        zones: vec![1],
+                        stagger: 0,
+                    },
+                ],
+            },
+        ),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,5 +463,55 @@ mod tests {
     fn unconstrained_has_huge_capacity() {
         let (cluster, ids) = unconstrained_cluster().build();
         assert!(cluster.max_replicas(ids[0]) >= 100);
+    }
+
+    #[test]
+    fn edge_city_scales_with_zones() {
+        let cfg = edge_city(50, 2);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.deployments.len(), 51, "50 zone pools + cloud");
+        let edge_nodes = cfg.nodes.iter().filter(|n| n.tier == Tier::Edge).count();
+        assert_eq!(edge_nodes, 100, "2 workers per zone");
+        let cloud_nodes = cfg.nodes.iter().filter(|n| n.tier == Tier::Cloud).count();
+        assert_eq!(cloud_nodes, 1 + 2 + 50 / 2, "control + scaled cloud pool");
+        let (cluster, ids) = cfg.build();
+        assert_eq!(ids.len(), 51);
+        // Each zone pool can host (2000-300)/500 = 3 pods per worker.
+        assert_eq!(cluster.max_replicas(ids[0]), 6);
+        // Bigger workers-per-zone grows per-zone headroom.
+        let (wide, wide_ids) = edge_city(4, 5).build();
+        assert_eq!(wide.max_replicas(wide_ids[0]), 15);
+    }
+
+    #[test]
+    fn city_presets_cover_all_zones() {
+        let presets = city_scenario_presets(10);
+        assert_eq!(presets.len(), 4);
+        for (name, s) in &presets {
+            assert!(name.starts_with("city10-"), "{name}");
+            let gens = s.build_generators();
+            assert!(!gens.is_empty(), "{name} builds nothing");
+            let mut zones: Vec<u32> = gens.iter().map(|g| g.zone()).collect();
+            zones.sort();
+            zones.dedup();
+            assert_eq!(zones, (1..=10).collect::<Vec<u32>>(), "{name} zone cover");
+        }
+    }
+
+    #[test]
+    fn city_diurnal_wave_staggers_peaks() {
+        let presets = city_scenario_presets(8);
+        let (_, wave) = &presets[0];
+        let Scenario::Composite { parts } = wave else {
+            panic!("wave is a composite")
+        };
+        assert_eq!(parts.len(), 8);
+        let peak_of = |s: &Scenario| match s {
+            Scenario::Diurnal { cfg, .. } => cfg.peak_hour,
+            _ => panic!("wave parts are diurnal"),
+        };
+        // Consecutive zones peak 24/8 = 3 virtual hours apart.
+        let delta = (peak_of(&parts[1]) - peak_of(&parts[0]) + 24.0) % 24.0;
+        assert!((delta - 3.0).abs() < 1e-9, "delta={delta}");
     }
 }

@@ -67,11 +67,10 @@ impl SimWorld {
             .collect();
         let cloud = *dep_ids.last().unwrap();
         let app = App::new(costs, &edge, cloud);
-        let metrics = MetricsPipeline::with_base_burn(
-            DEFAULT_SCRAPE_INTERVAL,
-            app.services.len(),
-            costs.base_burn_frac,
-        );
+        // Handle bundles are interned under the real service names here,
+        // so every later scrape is a pure handle-push (no allocation).
+        let burn = costs.base_burn_frac;
+        let metrics = MetricsPipeline::for_app(DEFAULT_SCRAPE_INTERVAL, &app, burn);
 
         let mut queue = EventQueue::new();
         let mut rng_cluster = Pcg64::new(seed, 1);

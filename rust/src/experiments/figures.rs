@@ -136,6 +136,27 @@ fn ppa_at(world: &SimWorld, idx: usize) -> &Ppa {
         .expect("scaler is a PPA")
 }
 
+/// Dump every service's replica trajectory straight from the TSDB via the
+/// interned [`crate::metrics::ServiceSeries`] handles — the adapter's
+/// handle-query path, no string keys.
+fn write_replica_csv(name: &str, world: &SimWorld) -> crate::Result<()> {
+    let mut w = CsvWriter::create(
+        experiments_dir().join(name),
+        &["time_s", "service", "replicas"],
+    )?;
+    for svc_idx in 0..world.app.services.len() {
+        let id = world
+            .metrics
+            .service_series(crate::sim::ServiceId(svc_idx as u32))
+            .replicas;
+        for (t, v) in world.metrics.tsdb.series_by_id(id).iter() {
+            w.row(&[crate::sim::to_secs(t), svc_idx as f64, v])?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
 fn write_prediction_csv(name: &str, records: &[PredictionRecord]) -> crate::Result<()> {
     let mut w = CsvWriter::create(
         experiments_dir().join(name),
@@ -493,6 +514,10 @@ pub fn nasa_eval(params: &NasaParams) -> crate::Result<NasaEval> {
     }
     ppa_world.run_until(end);
     let ppa = eval_outcome(&ppa_world, "ppa", n_services);
+
+    // Replica trajectories (handle-based TSDB reads).
+    write_replica_csv("fig11_14_replicas_hpa.csv", &hpa_world)?;
+    write_replica_csv("fig11_14_replicas_ppa.csv", &ppa_world)?;
 
     // CSV dumps per figure.
     for (name, a, b) in [

@@ -1,17 +1,19 @@
 //! Parallel scenario-sweep harness: fan a (scenario × autoscaler × seed)
-//! grid across worker threads, one independent deterministic [`SimWorld`]
-//! per cell, and aggregate RIR percentiles, response-time distributions,
-//! replica trajectories and prediction MSE into a JSON report.
+//! grid over a chosen [`Topology`] across worker threads, one independent
+//! deterministic [`SimWorld`] per cell, and aggregate RIR percentiles,
+//! response-time distributions, replica trajectories and prediction MSE
+//! into a JSON report.
 //!
-//! Determinism: a cell's result depends only on its (scenario, scaler,
-//! seed, minutes) tuple — cells share no mutable state — so per-cell
-//! results are bit-identical regardless of the worker-thread count
-//! (asserted by `determinism_across_thread_counts` below).
+//! Determinism: a cell's result depends only on its (topology, scenario,
+//! scaler, seed, minutes) tuple — cells share no mutable state — so
+//! per-cell results are bit-identical regardless of the worker-thread
+//! count (asserted by `determinism_across_thread_counts` and the
+//! city-scale determinism tests below).
 
 use super::driver::SimWorld;
 use crate::app::{TaskCosts, TaskType};
 use crate::autoscaler::{Autoscaler, Hpa, Ppa, PpaConfig};
-use crate::config::paper_cluster;
+use crate::config::{ClusterConfig, Topology};
 use crate::forecast::ArmaForecaster;
 use crate::forecast::NaiveForecaster;
 use crate::sim::{Time, MIN};
@@ -87,7 +89,10 @@ impl AutoscalerKind {
 /// The sweep grid.
 #[derive(Debug, Clone)]
 pub struct SweepConfig {
-    /// Named scenarios (see [`crate::config::scenario_presets`]).
+    /// Cluster topology every cell runs on (Table 2 or a generated city).
+    pub topology: Topology,
+    /// Named scenarios (see [`crate::config::scenario_presets`] and
+    /// [`crate::config::city_scenario_presets`]).
     pub scenarios: Vec<(String, Scenario)>,
     pub scalers: Vec<AutoscalerKind>,
     pub seeds: Vec<u64>,
@@ -100,6 +105,7 @@ pub struct SweepConfig {
 /// Deterministic per-cell outcome (everything except wall-clock).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CellMetrics {
+    pub topology: String,
     pub scenario: String,
     pub scaler: String,
     pub seed: u64,
@@ -141,14 +147,17 @@ pub struct CellResult {
 /// The whole sweep.
 #[derive(Debug)]
 pub struct SweepResult {
+    pub topology: String,
     pub cells: Vec<CellResult>,
     pub minutes: u64,
     pub threads_used: usize,
     pub wall_secs: f64,
 }
 
-/// Run one independent cell.
+/// Run one independent cell on `cluster` (a materialized topology).
 pub fn run_cell(
+    topology_label: &str,
+    cluster: &ClusterConfig,
     scenario_name: &str,
     scenario: &Scenario,
     scaler: AutoscalerKind,
@@ -156,8 +165,7 @@ pub fn run_cell(
     minutes: u64,
 ) -> CellResult {
     let wall = std::time::Instant::now();
-    let cfg = paper_cluster();
-    let mut world = SimWorld::build(&cfg, TaskCosts::default(), seed);
+    let mut world = SimWorld::build(cluster, TaskCosts::default(), seed);
     for gen in scenario.build_generators() {
         world.add_generator(gen);
     }
@@ -183,6 +191,7 @@ pub fn run_cell(
     }
 
     let metrics = CellMetrics {
+        topology: topology_label.to_string(),
         scenario: scenario_name.to_string(),
         scaler: scaler.name().to_string(),
         seed,
@@ -212,19 +221,21 @@ pub fn run_sweep(cfg: &SweepConfig) -> crate::Result<SweepResult> {
     if cfg.scenarios.is_empty() || cfg.scalers.is_empty() || cfg.seeds.is_empty() {
         bail!("sweep grid is empty (scenarios x scalers x seeds)");
     }
-    // Validate zones against the paper cluster before spawning anything.
-    let edge_zones: Vec<u32> = paper_cluster()
-        .deployments
-        .iter()
-        .filter_map(|d| d.zone)
-        .collect();
+    // Materialize the topology once; cells share it read-only.
+    let topology_label = cfg.topology.label();
+    let cluster = cfg.topology.cluster();
+    cluster.validate()?;
+    // Validate scenario zones against the chosen topology before
+    // spawning anything.
+    let edge_zones: Vec<u32> = cluster.deployments.iter().filter_map(|d| d.zone).collect();
     for (name, scenario) in &cfg.scenarios {
         for gen in scenario.build_generators() {
             if !edge_zones.contains(&gen.zone()) {
                 bail!(
-                    "scenario '{name}' targets zone {} but the cluster only has zones {:?}",
+                    "scenario '{name}' targets zone {} but topology '{topology_label}' \
+                     only has {} zones",
                     gen.zone(),
-                    edge_zones
+                    edge_zones.len()
                 );
             }
         }
@@ -257,7 +268,15 @@ pub fn run_sweep(cfg: &SweepConfig) -> crate::Result<SweepResult> {
                     break;
                 }
                 let (name, scenario, scaler, seed) = specs[i];
-                let result = run_cell(name, scenario, scaler, seed, cfg.minutes);
+                let result = run_cell(
+                    &topology_label,
+                    &cluster,
+                    name,
+                    scenario,
+                    scaler,
+                    seed,
+                    cfg.minutes,
+                );
                 slots.lock().unwrap()[i] = Some(result);
             });
         }
@@ -270,6 +289,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> crate::Result<SweepResult> {
         .map(|c| c.expect("every cell claimed by a worker"))
         .collect();
     Ok(SweepResult {
+        topology: topology_label,
         cells,
         minutes: cfg.minutes,
         threads_used: threads,
@@ -304,6 +324,7 @@ impl CellResult {
     pub fn to_json(&self) -> Json {
         let m = &self.metrics;
         let mut o = BTreeMap::new();
+        o.insert("topology".to_string(), Json::Str(m.topology.clone()));
         o.insert("scenario".to_string(), Json::Str(m.scenario.clone()));
         o.insert("scaler".to_string(), Json::Str(m.scaler.clone()));
         o.insert("seed".to_string(), Json::Num(m.seed as f64));
@@ -332,6 +353,7 @@ impl CellResult {
 impl SweepResult {
     pub fn to_json(&self) -> Json {
         let mut root = BTreeMap::new();
+        root.insert("topology".to_string(), Json::Str(self.topology.clone()));
         root.insert("minutes".to_string(), Json::Num(self.minutes as f64));
         root.insert("threads".to_string(), Json::Num(self.threads_used as f64));
         root.insert("wall_secs".to_string(), num(self.wall_secs));
@@ -405,6 +427,7 @@ mod tests {
 
     fn tiny_config(threads: usize) -> SweepConfig {
         SweepConfig {
+            topology: Topology::Paper,
             scenarios: tiny_scenarios(),
             scalers: vec![AutoscalerKind::Hpa, AutoscalerKind::PpaNaive],
             seeds: vec![1, 2],
@@ -484,6 +507,7 @@ mod tests {
         // One 25-minute ARMA cell: the 10-min update loop must have fitted
         // a model, so predictions (and an MSE) exist.
         let cfg = SweepConfig {
+            topology: Topology::Paper,
             scenarios: tiny_scenarios()[..1].to_vec(),
             scalers: vec![AutoscalerKind::PpaArma],
             seeds: vec![5],
@@ -502,6 +526,7 @@ mod tests {
     #[test]
     fn json_report_roundtrips() {
         let result = run_sweep(&SweepConfig {
+            topology: Topology::Paper,
             scenarios: tiny_scenarios()[..1].to_vec(),
             scalers: vec![AutoscalerKind::Hpa],
             seeds: vec![3],
@@ -541,6 +566,7 @@ mod tests {
     #[test]
     fn empty_grid_rejected() {
         let cfg = SweepConfig {
+            topology: Topology::Paper,
             scenarios: vec![],
             scalers: vec![AutoscalerKind::Hpa],
             seeds: vec![1],
@@ -553,6 +579,7 @@ mod tests {
     #[test]
     fn bad_zone_rejected() {
         let cfg = SweepConfig {
+            topology: Topology::Paper,
             scenarios: vec![(
                 "bad".to_string(),
                 Scenario::RandomAccess { zones: vec![9] },
@@ -564,6 +591,88 @@ mod tests {
         };
         let err = run_sweep(&cfg).unwrap_err();
         assert!(format!("{err}").contains("zone 9"));
+    }
+
+    #[test]
+    fn city_cell_is_deterministic_at_50_zones() {
+        // One 50-zone city cell run twice must be bit-identical: same
+        // event count and the same response-time stream (the strongest
+        // per-cell signal — every float in it).
+        let topo = Topology::EdgeCity {
+            zones: 50,
+            workers_per_zone: 2,
+        };
+        let cluster = topo.cluster();
+        let presets = crate::config::city_scenario_presets(50);
+        let (name, scenario) = &presets[1]; // city50-flash-mosaic
+        let run = || {
+            let mut world = SimWorld::build(&cluster, TaskCosts::default(), 77);
+            for gen in scenario.build_generators() {
+                world.add_generator(gen);
+            }
+            for svc in 0..world.app.services.len() {
+                world.add_scaler(AutoscalerKind::Hpa.build(), svc);
+            }
+            let events = world.run_until(3 * MIN);
+            let responses: Vec<f64> = world
+                .app
+                .responses
+                .iter()
+                .map(|r| r.response_secs())
+                .collect();
+            (events, responses)
+        };
+        let (events_a, responses_a) = run();
+        let (events_b, responses_b) = run();
+        assert!(events_a > 500, "{name}: city should be busy ({events_a})");
+        assert!(!responses_a.is_empty());
+        assert_eq!(events_a, events_b, "event counts must be bit-identical");
+        assert_eq!(responses_a, responses_b, "responses must be bit-identical");
+    }
+
+    #[test]
+    fn city_grid_determinism_across_thread_counts() {
+        // A small city grid, serial vs parallel: per-cell fingerprints
+        // (every deterministic field, incl. topology) must match.
+        let grid = |threads| SweepConfig {
+            topology: Topology::EdgeCity {
+                zones: 8,
+                workers_per_zone: 2,
+            },
+            scenarios: crate::config::city_scenario_presets(8)[..2].to_vec(),
+            scalers: vec![AutoscalerKind::Hpa, AutoscalerKind::PpaArma],
+            seeds: vec![1, 2],
+            minutes: 4,
+            threads,
+        };
+        let serial = run_sweep(&grid(1)).unwrap();
+        let parallel = run_sweep(&grid(4)).unwrap();
+        assert_eq!(serial.cells.len(), 2 * 2 * 2);
+        assert_eq!(serial.topology, "city-8x2");
+        assert!(serial
+            .cells
+            .iter()
+            .all(|c| c.metrics.topology == "city-8x2"));
+        assert_eq!(
+            fingerprints(&serial),
+            fingerprints(&parallel),
+            "city cells must be bit-identical regardless of threads"
+        );
+    }
+
+    #[test]
+    fn city_scenarios_rejected_on_paper_topology() {
+        // 50-zone scenarios cannot run on the 2-zone Table-2 cluster.
+        let cfg = SweepConfig {
+            topology: Topology::Paper,
+            scenarios: crate::config::city_scenario_presets(50),
+            scalers: vec![AutoscalerKind::Hpa],
+            seeds: vec![1],
+            minutes: 1,
+            threads: 1,
+        };
+        let err = run_sweep(&cfg).unwrap_err();
+        assert!(format!("{err}").contains("topology 'paper'"), "{err}");
     }
 
     #[test]

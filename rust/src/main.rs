@@ -6,7 +6,8 @@
 //! ppa-edge run [--scaler hpa|ppa] [--model lstm|arma|naive]
 //!          [--minutes N] [--seed S]
 //! ppa-edge sweep [--minutes N] [--seeds K] [--threads T]
-//!          [--scenarios a,b,..] [--scalers hpa,ppa-arma,..] [--out FILE]
+//!          [--topology paper|city-N[xW]] [--scenarios a,b,..]
+//!          [--scalers hpa,ppa-arma,..] [--out FILE]
 //! ppa-edge info
 //! ```
 //!
@@ -84,8 +85,8 @@ USAGE:
   ppa-edge run [--scaler hpa|ppa] [--model lstm|arma|naive]
            [--minutes N] [--seed S]
   ppa-edge sweep [--minutes N] [--seeds K] [--threads T]
-           [--scenarios a,b,..] [--scalers hpa,ppa-arma,ppa-naive]
-           [--out FILE]
+           [--topology paper|city-N[xW]] [--scenarios a,b,..]
+           [--scalers hpa,ppa-arma,ppa-naive] [--out FILE]
   ppa-edge info
 
 EXPERIMENTS (paper figures):
@@ -98,9 +99,16 @@ EXPERIMENTS (paper figures):
 
 SWEEP (scenario matrix):
   Fans a (scenario x autoscaler x seed) grid across worker threads and
-  writes a JSON report. Scenarios default to the full preset library
-  (random-access, nasa-trace, diurnal, flash-crowd, step-surge,
-  multi-zone-mix); autoscalers default to hpa,ppa-arma,ppa-naive.
+  writes a JSON report. --topology selects the cluster: 'paper' (Table 2)
+  or a generated city, e.g. 'city-50' (50 edge zones x 2 workers) or
+  'city-50x4'. Scenarios default to the topology's preset library:
+  Table-2 presets (random-access, nasa-trace, diurnal, flash-crowd,
+  step-surge, multi-zone-mix) on 'paper'; N-zone composites
+  (cityN-diurnal-wave, cityN-flash-mosaic, cityN-step-carpet,
+  cityN-rush-hour) on 'city-N'. Autoscalers default to
+  hpa,ppa-arma,ppa-naive.
+  City-scale example:
+    ppa-edge sweep --topology city-50 --scalers hpa,ppa-arma --seeds 2
 
 Artifacts must exist for LSTM experiments: run `make artifacts`.";
 
@@ -206,8 +214,11 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let n_seeds = args.get_u64("seeds", 4)?;
     let threads = args.get_u64("threads", 0)? as usize;
     let out = args.get("out").unwrap_or("target/experiments/sweep.json");
+    let topology = ppa_edge::config::Topology::parse(args.get("topology").unwrap_or("paper"))?;
 
-    let presets = ppa_edge::config::scenario_presets();
+    // The preset library follows the topology: Table-2 scenarios on
+    // `paper`, generated N-zone `cityN-*` composites on `city-N[xW]`.
+    let presets = topology.scenario_presets();
     let scenarios = match args.get("scenarios") {
         None => presets,
         Some(list) => {
@@ -238,6 +249,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             .collect::<anyhow::Result<Vec<_>>>()?,
     };
     let cfg = SweepConfig {
+        topology,
         scenarios,
         scalers,
         seeds: (0..n_seeds).map(|i| 1000 + i).collect(),
@@ -246,10 +258,12 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     };
 
     println!(
-        "sweeping {} scenarios x {} autoscalers x {} seeds, {} sim-minutes per cell...",
+        "sweeping {} scenarios x {} autoscalers x {} seeds on topology {}, \
+         {} sim-minutes per cell...",
         cfg.scenarios.len(),
         cfg.scalers.len(),
         cfg.seeds.len(),
+        topology.label(),
         minutes
     );
     let result = run_sweep(&cfg)?;

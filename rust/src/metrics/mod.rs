@@ -7,10 +7,17 @@
 //! CPU is the *sum* of per-pod utilization percentages (the paper's key
 //! metric for Eq 1), RAM the summed per-pod RAM %, network rates in KB/s
 //! and the custom metric is the request arrival rate (req/s).
+//!
+//! The control path is allocation-free at steady state: every series a
+//! service exports is interned into a [`ServiceSeries`] handle bundle
+//! when the pipeline is built, and [`MetricsPipeline::scrape`] walks each
+//! deployment's pod list in place (no clone) and writes samples through
+//! [`SeriesId`] handles (no `format!`, no hash lookup). The guard test
+//! `tests/alloc_guard.rs` pins this with a counting global allocator.
 
 mod tsdb;
 
-pub use tsdb::{Series, Tsdb};
+pub use tsdb::{Series, SeriesId, Tsdb};
 
 use crate::app::App;
 use crate::cluster::{Cluster, PodPhase};
@@ -52,6 +59,36 @@ impl ServiceSnapshot {
     }
 }
 
+/// The interned series handles of one service — everything a scrape
+/// writes, pre-registered at pipeline build so the hot path is pure
+/// handle pushes.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceSeries {
+    /// One handle per protocol-vector metric (`<svc>.<metric>`).
+    pub metrics: [SeriesId; METRIC_DIM],
+    /// `<svc>.replicas`
+    pub replicas: SeriesId,
+    /// `<svc>.rir`
+    pub rir: SeriesId,
+    /// `<svc>.queue_depth`
+    pub queue_depth: SeriesId,
+}
+
+impl ServiceSeries {
+    fn register(tsdb: &mut Tsdb, service_name: &str) -> Self {
+        let mut metrics = [SeriesId(0); METRIC_DIM];
+        for (m, metric) in METRIC_NAMES.iter().enumerate() {
+            metrics[m] = tsdb.register(&format!("{service_name}.{metric}"));
+        }
+        ServiceSeries {
+            metrics,
+            replicas: tsdb.register(&format!("{service_name}.replicas")),
+            rir: tsdb.register(&format!("{service_name}.rir")),
+            queue_depth: tsdb.register(&format!("{service_name}.queue_depth")),
+        }
+    }
+}
+
 /// The pipeline: scrape loop + TSDB + adapter queries.
 #[derive(Debug)]
 pub struct MetricsPipeline {
@@ -60,47 +97,82 @@ pub struct MetricsPipeline {
     last_scrape: Time,
     /// Latest snapshot per service (adapter "current value" cache).
     latest: Vec<ServiceSnapshot>,
+    /// Per-service interned handle bundles, index-aligned with services.
+    service_series: Vec<ServiceSeries>,
     /// Constant per-pod CPU fraction burned while Running (interpreter /
     /// broker polling / sidecars — see `TaskCosts::base_burn_frac`).
     base_burn: f64,
 }
 
 impl MetricsPipeline {
+    /// Anonymous-service constructor (tests/benches): series are interned
+    /// under `svc<i>.*` names.
     pub fn new(scrape_interval: Time, n_services: usize) -> Self {
         Self::with_base_burn(scrape_interval, n_services, 0.0)
     }
 
     pub fn with_base_burn(scrape_interval: Time, n_services: usize, base_burn: f64) -> Self {
+        let names: Vec<String> = (0..n_services).map(|i| format!("svc{i}")).collect();
+        let names = names.iter().map(String::as_str);
+        Self::with_service_names(scrape_interval, names, base_burn)
+    }
+
+    /// Build over an [`App`]'s services: one handle bundle per service,
+    /// interned under the real service names.
+    pub fn for_app(scrape_interval: Time, app: &App, base_burn: f64) -> Self {
+        Self::with_service_names(
+            scrape_interval,
+            app.services.iter().map(|s| s.name.as_str()),
+            base_burn,
+        )
+    }
+
+    fn with_service_names<'a>(
+        scrape_interval: Time,
+        names: impl Iterator<Item = &'a str>,
+        base_burn: f64,
+    ) -> Self {
+        let mut tsdb = Tsdb::new();
+        let service_series: Vec<ServiceSeries> = names
+            .map(|name| ServiceSeries::register(&mut tsdb, name))
+            .collect();
         MetricsPipeline {
-            tsdb: Tsdb::new(),
+            tsdb,
             scrape_interval,
             last_scrape: 0,
-            latest: vec![ServiceSnapshot::default(); n_services],
+            latest: vec![ServiceSnapshot::default(); service_series.len()],
+            service_series,
             base_burn: base_burn.clamp(0.0, 1.0),
         }
     }
 
     /// Pull metrics from every exporter (node + app) — the `Scrape` event
-    /// handler. Writes one sample per series into the TSDB.
+    /// handler. Writes one sample per series into the TSDB through the
+    /// pre-registered handles; the steady-state path performs zero heap
+    /// allocations (no key formatting, no pod-list clone, no counter Vec).
     pub fn scrape(&mut self, now: Time, cluster: &mut Cluster, app: &mut App) {
         let interval = now.saturating_sub(self.last_scrape);
         if interval == 0 {
             return;
         }
         let interval_secs = crate::sim::to_secs(interval);
-        let counters = app.take_counters();
+        debug_assert_eq!(self.service_series.len(), app.services.len());
 
-        for (svc_idx, svc) in app.services.iter().enumerate() {
+        // Split the cluster borrow: the deployment's pod-id list is read
+        // while the pods slab is written (`take_busy`) — disjoint fields,
+        // so no clone of the pod list is needed.
+        let (pods, deployments) = cluster.split_pods_deployments();
+
+        for svc_idx in 0..app.services.len() {
+            let svc = &mut app.services[svc_idx];
             let dep = svc.deployment;
             let mut cpu_sum_pct = 0.0;
             let mut ram_sum_pct = 0.0;
             let mut requested = 0.0;
             let mut used = 0.0;
             let mut replicas = 0usize;
-            let pod_ids: Vec<crate::sim::PodId> =
-                cluster.deployments[dep.0 as usize].pods.clone();
-            for pid in pod_ids {
-                let pod = cluster.pod_mut(pid);
+            for &pid in &deployments[dep.0 as usize].pods {
+                let pod = &mut pods[pid.0 as usize];
                 match pod.phase {
                     PodPhase::Running | PodPhase::Terminating => {
                         let busy_frac =
@@ -125,7 +197,7 @@ impl MetricsPipeline {
                     PodPhase::Gone => {}
                 }
             }
-            let c = counters[svc_idx];
+            let c = std::mem::take(&mut svc.counters);
             let vector = [
                 cpu_sum_pct,
                 ram_sum_pct,
@@ -141,17 +213,16 @@ impl MetricsPipeline {
             };
             self.latest[svc_idx] = snap;
 
-            let name = &svc.name;
-            for (m, metric) in METRIC_NAMES.iter().enumerate() {
-                self.tsdb.insert(&format!("{name}.{metric}"), now, vector[m]);
+            let handles = self.service_series[svc_idx];
+            for (m, &id) in handles.metrics.iter().enumerate() {
+                self.tsdb.push(id, now, vector[m]);
             }
-            self.tsdb
-                .insert(&format!("{name}.replicas"), now, replicas as f64);
+            self.tsdb.push(handles.replicas, now, replicas as f64);
             if let Some(rir) = snap.rir() {
-                self.tsdb.insert(&format!("{name}.rir"), now, rir);
+                self.tsdb.push(handles.rir, now, rir);
             }
             self.tsdb
-                .insert(&format!("{name}.queue_depth"), now, svc.queue.len() as f64);
+                .push(handles.queue_depth, now, svc.queue.len() as f64);
         }
         self.last_scrape = now;
     }
@@ -161,12 +232,34 @@ impl MetricsPipeline {
         self.latest[svc.0 as usize].vector
     }
 
+    /// Adapter: the latest value of one protocol-vector metric.
+    pub fn latest_metric(&self, svc: ServiceId, metric: usize) -> f64 {
+        self.latest[svc.0 as usize].vector[metric]
+    }
+
     /// Adapter: the latest full snapshot.
     pub fn latest_snapshot(&self, svc: ServiceId) -> ServiceSnapshot {
         self.latest[svc.0 as usize]
     }
 
-    /// Adapter: range query over a named series.
+    /// The interned handle bundle of a service.
+    pub fn service_series(&self, svc: ServiceId) -> &ServiceSeries {
+        &self.service_series[svc.0 as usize]
+    }
+
+    /// Adapter: allocation-free range query through a handle
+    /// (`now - window < t <= now`).
+    pub fn range_of(
+        &self,
+        id: SeriesId,
+        window: Time,
+        now: Time,
+    ) -> impl Iterator<Item = (Time, f64)> + '_ {
+        self.tsdb.range_by_id(id, now.saturating_sub(window), now)
+    }
+
+    /// Adapter: range query over a named series (debug/report only — use
+    /// [`Self::range_of`] on the hot path).
     pub fn range(&self, series: &str, window: Time, now: Time) -> Vec<(Time, f64)> {
         self.tsdb.range(series, now.saturating_sub(window), now)
     }
@@ -219,7 +312,7 @@ mod tests {
             8,
         ));
         let app = App::new(TaskCosts::default(), &[(1, edge)], cloud);
-        let pipeline = MetricsPipeline::new(DEFAULT_SCRAPE_INTERVAL, app.services.len());
+        let pipeline = MetricsPipeline::for_app(DEFAULT_SCRAPE_INTERVAL, &app, 0.0);
         (app, cluster, EventQueue::new(), Pcg64::new(3, 3), pipeline)
     }
 
@@ -285,6 +378,60 @@ mod tests {
         }
         let reps = mp.range("edge-workers-z1.replicas", 60 * SEC, 20 * SEC);
         assert_eq!(reps.len(), 2);
+    }
+
+    #[test]
+    fn handle_queries_match_legacy_string_queries() {
+        // Golden equivalence: the interned-handle query path must return
+        // exactly the samples the legacy string-keyed path returns, for
+        // every series a service exports.
+        let (mut app, mut cluster, mut q, mut rng, mut mp) = world();
+        cluster.reconcile(DeploymentId(0), 2, &mut q, &mut rng);
+        while let Some((_, ev)) = q.pop() {
+            if let Event::PodRunning { pod } = ev {
+                cluster.on_pod_running(pod);
+            }
+        }
+        for tick in 1..=6u64 {
+            mp.scrape(tick * 10 * SEC, &mut cluster, &mut app);
+        }
+        for svc_idx in 0..app.services.len() {
+            let svc = ServiceId(svc_idx as u32);
+            let name = app.services[svc_idx].name.clone();
+            let handles = *mp.service_series(svc);
+            for (m, metric) in METRIC_NAMES.iter().enumerate() {
+                let by_name = mp.range(&format!("{name}.{metric}"), 60 * SEC, 60 * SEC);
+                let by_id: Vec<(Time, f64)> =
+                    mp.range_of(handles.metrics[m], 60 * SEC, 60 * SEC).collect();
+                assert_eq!(by_name, by_id, "{name}.{metric}");
+                assert!(!by_id.is_empty(), "{name}.{metric} never written");
+            }
+            for (id, suffix) in [
+                (handles.replicas, "replicas"),
+                (handles.rir, "rir"),
+                (handles.queue_depth, "queue_depth"),
+            ] {
+                let by_name = mp.range(&format!("{name}.{suffix}"), 60 * SEC, 60 * SEC);
+                let by_id: Vec<(Time, f64)> = mp.range_of(id, 60 * SEC, 60 * SEC).collect();
+                assert_eq!(by_name, by_id, "{name}.{suffix}");
+                assert_eq!(mp.tsdb.name(id), format!("{name}.{suffix}"));
+            }
+        }
+    }
+
+    #[test]
+    fn scrape_interns_no_new_series() {
+        // Every series is registered at build; scraping must only append
+        // samples, never grow the interner (the structural guarantee that
+        // makes the per-scrape `to_string` regression impossible).
+        let (mut app, mut cluster, mut q, mut rng, mut mp) = world();
+        cluster.reconcile(DeploymentId(0), 1, &mut q, &mut rng);
+        let before = mp.tsdb.series_count();
+        assert_eq!(before, app.services.len() * (METRIC_DIM + 3));
+        for tick in 1..=20u64 {
+            mp.scrape(tick * 10 * SEC, &mut cluster, &mut app);
+        }
+        assert_eq!(mp.tsdb.series_count(), before);
     }
 
     #[test]

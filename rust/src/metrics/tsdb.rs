@@ -1,4 +1,12 @@
 //! Ring-buffer time-series store (the Prometheus TSDB stand-in).
+//!
+//! Series are *interned*: every series is registered once (allocating its
+//! name and a [`SeriesId`]) and thereafter addressed by the copyable id —
+//! the scrape→query hot path never touches a string or a hash map. The
+//! string-keyed API ([`Tsdb::insert`], [`Tsdb::series`], [`Tsdb::range`])
+//! is kept as a debug/report convenience and resolves through the
+//! interner, so even the legacy path allocates only on the first sighting
+//! of a name.
 
 use crate::sim::Time;
 use std::collections::{HashMap, VecDeque};
@@ -7,7 +15,17 @@ use std::collections::{HashMap, VecDeque};
 /// this holds > 48 h of history — enough for the NASA evaluation runs.
 const DEFAULT_CAPACITY: usize = 20_000;
 
-/// One named series: a bounded deque of (time, value).
+/// Interned handle to one series — the hot-path address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SeriesId(pub(crate) u32);
+
+impl SeriesId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One series: a bounded deque of (time, value), chronological.
 #[derive(Debug)]
 pub struct Series {
     samples: VecDeque<(Time, f64)>,
@@ -23,6 +41,9 @@ impl Series {
     }
 
     fn push(&mut self, t: Time, v: f64) {
+        if let Some(&(last, _)) = self.samples.back() {
+            debug_assert!(t >= last, "samples must be appended in time order");
+        }
         if self.samples.len() == self.capacity {
             self.samples.pop_front();
         }
@@ -41,20 +62,33 @@ impl Series {
         self.samples.is_empty()
     }
 
+    /// All samples, oldest first (CSV dumps, debug).
+    pub fn iter(&self) -> impl Iterator<Item = (Time, f64)> + '_ {
+        self.samples.iter().copied()
+    }
+
     /// Samples with `from < t <= to` (inclusive upper bound).
     pub fn range(&self, from: Time, to: Time) -> Vec<(Time, f64)> {
-        self.samples
-            .iter()
-            .copied()
-            .filter(|&(t, _)| t > from && t <= to)
-            .collect()
+        self.range_iter(from, to).collect()
+    }
+
+    /// Allocation-free variant of [`Series::range`]: samples are stored
+    /// chronologically, so both bounds are found by `partition_point`
+    /// binary search — O(log n + k) instead of the old full-deque scan.
+    pub fn range_iter(&self, from: Time, to: Time) -> impl Iterator<Item = (Time, f64)> + '_ {
+        let start = self.samples.partition_point(|&(t, _)| t <= from);
+        let end = self.samples.partition_point(|&(t, _)| t <= to);
+        self.samples.range(start..end.max(start)).copied()
     }
 }
 
-/// The store: series by name.
+/// The store: a slab of series addressed by [`SeriesId`], with a name
+/// index used only at registration time and by the debug/report API.
 #[derive(Debug, Default)]
 pub struct Tsdb {
-    series: HashMap<String, Series>,
+    series: Vec<Series>,
+    names: Vec<String>,
+    by_name: HashMap<String, SeriesId>,
 }
 
 impl Tsdb {
@@ -62,30 +96,83 @@ impl Tsdb {
         Tsdb::default()
     }
 
+    /// Intern `name`, creating the series on first sight. Idempotent:
+    /// re-registering an existing name returns its id without allocating.
+    pub fn register(&mut self, name: &str) -> SeriesId {
+        if let Some(&id) = self.by_name.get(name) {
+            return id;
+        }
+        let id = SeriesId(self.series.len() as u32);
+        self.series.push(Series::new(DEFAULT_CAPACITY));
+        self.names.push(name.to_string());
+        self.by_name.insert(name.to_string(), id);
+        id
+    }
+
+    /// Resolve a name without creating anything.
+    pub fn id(&self, name: &str) -> Option<SeriesId> {
+        self.by_name.get(name).copied()
+    }
+
+    /// The interned name of a series.
+    pub fn name(&self, id: SeriesId) -> &str {
+        &self.names[id.index()]
+    }
+
+    pub fn series_count(&self) -> usize {
+        self.series.len()
+    }
+
+    /// Hot path: append a sample through a handle. No allocation, no
+    /// hashing — a bounds-checked slab index.
+    pub fn push(&mut self, id: SeriesId, t: Time, v: f64) {
+        self.series[id.index()].push(t, v);
+    }
+
+    pub fn series_by_id(&self, id: SeriesId) -> &Series {
+        &self.series[id.index()]
+    }
+
+    pub fn latest_by_id(&self, id: SeriesId) -> Option<(Time, f64)> {
+        self.series[id.index()].latest()
+    }
+
+    /// Allocation-free handle-based range query (`from < t <= to`).
+    pub fn range_by_id(
+        &self,
+        id: SeriesId,
+        from: Time,
+        to: Time,
+    ) -> impl Iterator<Item = (Time, f64)> + '_ {
+        self.series[id.index()].range_iter(from, to)
+    }
+
+    // -- string-keyed debug/report conveniences -----------------------------
+
+    /// Insert by name: interner lookup + push. Allocates only when the
+    /// series does not exist yet (the old implementation paid a
+    /// `to_string` on *every* call).
     pub fn insert(&mut self, name: &str, t: Time, v: f64) {
-        self.series
-            .entry(name.to_string())
-            .or_insert_with(|| Series::new(DEFAULT_CAPACITY))
-            .push(t, v);
+        let id = self.register(name);
+        self.push(id, t, v);
     }
 
     pub fn series(&self, name: &str) -> Option<&Series> {
-        self.series.get(name)
+        self.id(name).map(|id| self.series_by_id(id))
     }
 
     pub fn latest(&self, name: &str) -> Option<(Time, f64)> {
-        self.series.get(name).and_then(|s| s.latest())
+        self.series(name).and_then(|s| s.latest())
     }
 
     pub fn range(&self, name: &str, from: Time, to: Time) -> Vec<(Time, f64)> {
-        self.series
-            .get(name)
+        self.series(name)
             .map(|s| s.range(from, to))
             .unwrap_or_default()
     }
 
     pub fn series_names(&self) -> Vec<&str> {
-        let mut names: Vec<&str> = self.series.keys().map(|s| s.as_str()).collect();
+        let mut names: Vec<&str> = self.names.iter().map(|s| s.as_str()).collect();
         names.sort();
         names
     }
@@ -124,5 +211,69 @@ mod tests {
         db.insert("b", 1, 0.0);
         db.insert("a", 1, 0.0);
         assert_eq!(db.series_names(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn interner_reuses_ids() {
+        // Regression guard for the old per-insert `name.to_string()`:
+        // repeated registration/insert of an existing name must resolve to
+        // the same slab slot and never grow the store.
+        let mut db = Tsdb::new();
+        let a = db.register("a.cpu");
+        let b = db.register("b.cpu");
+        assert_ne!(a, b);
+        for t in 0..100u64 {
+            db.insert("a.cpu", t, 1.0);
+            assert_eq!(db.register("a.cpu"), a);
+        }
+        assert_eq!(db.series_count(), 2);
+        assert_eq!(db.id("a.cpu"), Some(a));
+        assert_eq!(db.name(b), "b.cpu");
+        assert_eq!(db.series_by_id(a).len(), 100);
+    }
+
+    #[test]
+    fn handle_and_string_queries_agree() {
+        let mut db = Tsdb::new();
+        let id = db.register("svc.cpu");
+        for t in 1..=50u64 {
+            db.push(id, t * 7, t as f64);
+        }
+        let by_name = db.range("svc.cpu", 70, 280);
+        let by_id: Vec<(Time, f64)> = db.range_by_id(id, 70, 280).collect();
+        assert_eq!(by_name, by_id);
+        assert_eq!(db.latest("svc.cpu"), db.latest_by_id(id));
+    }
+
+    #[test]
+    fn range_pins_half_open_bound_semantics() {
+        // The adapter contract is `(from, to]`: the sample AT `from` is
+        // excluded, the sample AT `to` is included — binary search must
+        // preserve exactly what the old linear scan returned.
+        let mut s = Series::new(100);
+        for t in [10u64, 20, 20, 30, 40] {
+            s.push(t, t as f64);
+        }
+        assert_eq!(s.range(10, 30), vec![(20, 20.0), (20, 20.0), (30, 30.0)]);
+        assert_eq!(s.range(0, 10), vec![(10, 10.0)]);
+        assert_eq!(s.range(40, 100), vec![]);
+        assert_eq!(s.range(35, 35), vec![]);
+        assert_eq!(s.range(0, u64::MAX).len(), 5);
+        // Degenerate inverted window is empty, not a panic.
+        assert_eq!(s.range(30, 10), vec![]);
+    }
+
+    #[test]
+    fn range_matches_linear_scan_reference() {
+        let mut s = Series::new(1000);
+        for t in 0..200u64 {
+            s.push(t * 3, (t as f64).sin());
+        }
+        let reference = |from: Time, to: Time| -> Vec<(Time, f64)> {
+            s.iter().filter(|&(t, _)| t > from && t <= to).collect()
+        };
+        for (from, to) in [(0, 0), (0, 599), (1, 2), (100, 400), (598, 700)] {
+            assert_eq!(s.range(from, to), reference(from, to), "window ({from}, {to}]");
+        }
     }
 }

@@ -242,7 +242,8 @@ pub fn print_sweep(result: &SweepResult) {
         &agg_rows,
     );
     println!(
-        "  {} cells on {} threads in {:.1}s",
+        "  topology {}: {} cells on {} threads in {:.1}s",
+        result.topology,
         result.cells.len(),
         result.threads_used,
         result.wall_secs
@@ -272,6 +273,7 @@ mod tests {
     fn sweep_table_prints() {
         use crate::experiments::sweep::{CellMetrics, CellResult, SweepResult};
         let metrics = CellMetrics {
+            topology: "paper".into(),
             scenario: "step".into(),
             scaler: "hpa".into(),
             seed: 1,
@@ -291,6 +293,7 @@ mod tests {
             prediction_mse: None,
         };
         print_sweep(&SweepResult {
+            topology: "paper".into(),
             cells: vec![CellResult {
                 metrics,
                 wall_secs: 0.1,
