@@ -7,7 +7,7 @@
 //! cargo run --release --example calibrate -- 120     # longer runs (min)
 //! ```
 
-use ppa_edge::app::{TaskCosts, TaskType};
+use ppa_edge::app::TaskCosts;
 use ppa_edge::autoscaler::Hpa;
 use ppa_edge::config::paper_cluster;
 use ppa_edge::experiments::SimWorld;
@@ -24,8 +24,8 @@ fn run(costs: TaskCosts, minutes: u64, seed: u64) -> (f64, f64, f64, f64, f64) {
         world.add_scaler(Box::new(Hpa::with_defaults()), svc);
     }
     world.run_until(minutes * MIN);
-    let sort = summarize(&world.response_times(TaskType::Sort));
-    let eigen = summarize(&world.response_times(TaskType::Eigen));
+    let sort = world.app.stats.sort.summary();
+    let eigen = world.app.stats.eigen.summary();
     let rirs: Vec<f64> = world.rir_log.iter().map(|s| s.rir).collect();
     (
         sort.mean,

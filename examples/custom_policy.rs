@@ -11,7 +11,7 @@
 //! cargo run --release --example custom_policy
 //! ```
 
-use ppa_edge::app::{TaskCosts, TaskType};
+use ppa_edge::app::TaskCosts;
 use ppa_edge::autoscaler::ppa::StaticPolicy;
 use ppa_edge::autoscaler::{eq1_replicas, Ppa, PpaConfig};
 use ppa_edge::config::quickstart_cluster;
@@ -19,7 +19,6 @@ use ppa_edge::experiments::SimWorld;
 use ppa_edge::forecast::{Forecaster, UpdatePolicy};
 use ppa_edge::metrics::METRIC_DIM;
 use ppa_edge::sim::MIN;
-use ppa_edge::stats::summarize;
 use ppa_edge::workload::{Generator, RandomAccessGen};
 
 /// A user-supplied model: exponentially weighted moving average with a
@@ -121,7 +120,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     let events = world.run_until(40 * MIN);
-    let sort = summarize(&world.response_times(TaskType::Sort));
+    let sort = world.app.stats.sort.summary();
     println!("custom model + custom policy run: {events} events");
     println!(
         "sort response: {:.3} ± {:.3} s over {} requests",

@@ -6,7 +6,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use ppa_edge::app::{TaskCosts, TaskType};
+use ppa_edge::app::TaskCosts;
 use ppa_edge::autoscaler::{Hpa, Ppa, PpaConfig};
 use ppa_edge::config::quickstart_cluster;
 use ppa_edge::experiments::SimWorld;
@@ -33,19 +33,27 @@ fn main() -> anyhow::Result<()> {
     // 4. Run 30 simulated minutes.
     let events = world.run_until(30 * MIN);
 
-    // 5. Report.
-    let sort = summarize(&world.response_times(TaskType::Sort));
-    let eigen = summarize(&world.response_times(TaskType::Eigen));
+    // 5. Report — straight from the app's streaming response stats
+    //    (constant-memory Welford moments + log-histogram percentiles;
+    //    no per-request log is kept).
+    let sort = world.app.stats.sort.summary();
+    let eigen = world.app.stats.eigen.summary();
     let rirs: Vec<f64> = world.rir_log.iter().map(|s| s.rir).collect();
     println!("events processed : {events}");
-    println!("requests served  : {}", world.app.responses.len());
+    println!("requests served  : {}", world.app.completed());
     println!(
-        "sort  response   : {:.3} ± {:.3} s (n={})",
-        sort.mean, sort.std, sort.n
+        "sort  response   : {:.3} ± {:.3} s (n={}, p95 ≈ {:.3})",
+        sort.mean,
+        sort.std,
+        sort.n,
+        world.app.stats.sort.quantile(95.0)
     );
     println!(
-        "eigen response   : {:.2} ± {:.2} s (n={})",
-        eigen.mean, eigen.std, eigen.n
+        "eigen response   : {:.2} ± {:.2} s (n={}, p95 ≈ {:.2})",
+        eigen.mean,
+        eigen.std,
+        eigen.n,
+        world.app.stats.eigen.quantile(95.0)
     );
     println!("mean RIR         : {:.3}", summarize(&rirs).mean);
     let max_replicas = world

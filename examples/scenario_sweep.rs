@@ -14,6 +14,7 @@
 use ppa_edge::config::Topology;
 use ppa_edge::experiments::{run_sweep, AutoscalerKind, SweepConfig};
 use ppa_edge::report;
+use ppa_edge::sim::CoreKind;
 
 fn main() -> anyhow::Result<()> {
     let minutes: u64 = std::env::args()
@@ -42,6 +43,7 @@ fn main() -> anyhow::Result<()> {
         seeds: (0..n_seeds).map(|i| 2021 + i).collect(),
         minutes,
         threads: 0, // one worker per core
+        core: CoreKind::Calendar,
     };
     println!(
         "scenario sweep: {} scenarios x {} autoscalers x {} seeds on {} ({} sim-minutes per cell)",

@@ -9,7 +9,7 @@
 //! response + system RIR. Run with `cargo bench --bench ablations`
 //! (scale via PPA_ABLATION_HOURS, default 4).
 
-use ppa_edge::app::{TaskCosts, TaskType};
+use ppa_edge::app::TaskCosts;
 use ppa_edge::autoscaler::ppa::{ConservativeCeilPolicy, HpaCeilPolicy, StaticPolicy};
 use ppa_edge::autoscaler::{Autoscaler, Hpa, Ppa, PpaConfig};
 use ppa_edge::config::paper_cluster;
@@ -44,8 +44,8 @@ fn run_world(
     }
     let wall = std::time::Instant::now();
     world.run_until((hours * HOUR as f64) as Time);
-    let sort = summarize(&world.response_times(TaskType::Sort));
-    let eigen = summarize(&world.response_times(TaskType::Eigen));
+    let sort = world.app.stats.sort.summary();
+    let eigen = world.app.stats.eigen.summary();
     let rirs: Vec<f64> = world.rir_log.iter().map(|s| s.rir).collect();
     Cell {
         label: label.to_string(),

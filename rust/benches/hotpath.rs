@@ -1,12 +1,14 @@
-//! Hot-path micro-benchmarks (L3 perf deliverable): the DES event loop,
-//! scheduler, metrics scrape (interned handles vs the legacy string-keyed
-//! path), forecaster dispatches, end-to-end simulation rate and sweep
-//! cell throughput — including city-scale (50-zone) worlds. Run with
-//! `cargo bench --bench hotpath`.
+//! Hot-path micro-benchmarks (L3 perf deliverable): the DES event queue
+//! (calendar vs the heap reference core), scheduler, metrics scrape
+//! (interned handles vs the legacy string-keyed path), forecaster
+//! dispatches, end-to-end simulation rate and sweep-cell throughput —
+//! including the city-50 cell on both event cores, with peak-resident
+//! (live-heap high-water) tracking via a counting global allocator. Run
+//! with `cargo bench --bench hotpath`.
 //!
-//! Emits a machine-readable `BENCH_hotpath.json` (events/sec, ns/scrape,
-//! cells/sec, scrape speedup vs legacy) so the perf trajectory is
-//! tracked across PRs.
+//! Emits a machine-readable `BENCH_hotpath.json` (events/sec per core,
+//! ns/scrape, cells/sec, peak-alloc bytes, speedups) so the perf
+//! trajectory is tracked across PRs.
 
 #[path = "bench_common.rs"]
 mod bench_common;
@@ -22,26 +24,137 @@ use ppa_edge::experiments::sweep::run_cell;
 use ppa_edge::experiments::{AutoscalerKind, SimWorld};
 use ppa_edge::forecast::{arma::fit_arma, Forecaster, LstmForecaster};
 use ppa_edge::metrics::{METRIC_DIM, METRIC_NAMES};
-use ppa_edge::sim::{Event, EventQueue, Time, MIN, SEC};
+use ppa_edge::sim::{CoreKind, Event, EventQueue, Time, MIN, SEC};
 use ppa_edge::util::json::Json;
 use ppa_edge::util::rng::Pcg64;
 use ppa_edge::workload::{Generator, RandomAccessGen};
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
-fn bench_event_queue() {
-    print_header("DES event queue");
-    let mut rng = Pcg64::new(1, 0);
-    run("queue push+pop, 10k events", 3, 30, || {
-        let mut q = EventQueue::new();
-        for i in 0..10_000u64 {
-            q.schedule_at(
-                rng.below(1_000_000),
-                Event::WorkloadTick { generator: i as u32 },
-            );
+// ---------------------------------------------------------------------------
+// Peak-resident tracking: a counting global allocator that keeps the
+// live-byte high-water mark, so benches can report memory deltas (e.g.
+// streaming response stats vs the opt-in full log) deterministically,
+// without OS RSS noise.
+// ---------------------------------------------------------------------------
+
+struct PeakAlloc;
+
+static LIVE_BYTES: AtomicUsize = AtomicUsize::new(0);
+static PEAK_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+fn note_alloc(size: usize) {
+    let live = LIVE_BYTES.fetch_add(size, Ordering::Relaxed) + size;
+    PEAK_BYTES.fetch_max(live, Ordering::Relaxed);
+}
+
+unsafe impl GlobalAlloc for PeakAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let ptr = System.alloc(layout);
+        if !ptr.is_null() {
+            note_alloc(layout.size());
         }
-        while q.pop().is_some() {}
-    });
+        ptr
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE_BYTES.fetch_sub(layout.size(), Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let ptr = System.alloc_zeroed(layout);
+        if !ptr.is_null() {
+            note_alloc(layout.size());
+        }
+        ptr
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let new_ptr = System.realloc(ptr, layout, new_size);
+        if !new_ptr.is_null() {
+            LIVE_BYTES.fetch_sub(layout.size(), Ordering::Relaxed);
+            note_alloc(new_size);
+        }
+        new_ptr
+    }
+}
+
+#[global_allocator]
+static GLOBAL: PeakAlloc = PeakAlloc;
+
+/// Reset the high-water mark to the current live size.
+fn reset_peak() {
+    PEAK_BYTES.store(LIVE_BYTES.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+/// Peak live-heap bytes since the last [`reset_peak`].
+fn peak_bytes() -> usize {
+    PEAK_BYTES.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// DES event queue: calendar vs heap reference.
+// ---------------------------------------------------------------------------
+
+/// Returns events/sec for (calendar, heap) on the mixed-horizon
+/// schedule+pop workload.
+fn bench_event_queue() -> (f64, f64) {
+    print_header("DES event queue (calendar vs heap reference)");
+    let mut rates = Vec::new();
+    for core in CoreKind::ALL {
+        // Uniform near-term times (the old bench's workload).
+        let mut rng = Pcg64::new(1, 0);
+        run(&format!("{}: push+pop 10k uniform 1s", core.name()), 3, 30, || {
+            let mut q = EventQueue::with_core(core);
+            for i in 0..10_000u64 {
+                q.schedule_at(
+                    rng.below(1_000_000),
+                    Event::WorkloadTick { generator: i as u32 },
+                );
+            }
+            while q.pop().is_some() {}
+        });
+
+        // Steady-state mix resembling a live world: mostly short service
+        // delays, periodic 10 s ticks, occasional beyond-horizon (>36
+        // min) model-update ticks exercising the overflow path.
+        let mut rng = Pcg64::new(2, 0);
+        let r = run(
+            &format!("{}: 50k-event steady-state mix", core.name()),
+            2,
+            10,
+            || {
+                let mut q = EventQueue::with_core(core);
+                q.schedule_at(0, Event::WorkloadTick { generator: 0 });
+                let mut popped = 0u32;
+                while q.pop().is_some() {
+                    popped += 1;
+                    if popped >= 50_000 {
+                        break;
+                    }
+                    // Keep ~32 events in flight.
+                    while q.len() < 32 {
+                        let delay = match rng.below(100) {
+                            0..=79 => rng.below(2 * SEC),
+                            80..=97 => 10 * SEC,
+                            _ => 45 * MIN + rng.below(30 * MIN),
+                        };
+                        q.schedule_in(delay, Event::WorkloadTick { generator: popped });
+                    }
+                }
+            },
+        );
+        rates.push(50_000.0 / (r.mean_us / 1e6));
+    }
+    let (calendar, heap) = (rates[0], rates[1]);
+    println!(
+        "  -> calendar {calendar:.0} ev/s vs heap {heap:.0} ev/s ({:.2}x)",
+        calendar / heap
+    );
+    (calendar, heap)
 }
 
 fn bench_scheduler() {
@@ -344,16 +457,84 @@ fn bench_sweep_cells() -> f64 {
     let (name, scenario) = &presets[2]; // city8-step-carpet
     let scaler = AutoscalerKind::Hpa;
     let r = run("run_cell city-8 step-carpet", 1, 5, || {
-        let _ = run_cell(&label, &cluster, name, scenario, scaler, 3, 5);
+        let _ = run_cell(
+            &label,
+            &cluster,
+            name,
+            scenario,
+            scaler,
+            3,
+            5,
+            CoreKind::Calendar,
+        );
     });
     let cells_per_sec = 1e6 / r.mean_us;
     println!("  -> {cells_per_sec:.2} cells/sec (single thread)");
     cells_per_sec
 }
 
+/// The acceptance cell: one city-50 sweep cell, old (heap) vs new
+/// (calendar) core. Returns events/sec and peak-alloc bytes per core,
+/// plus the peak when the cell is re-run with the opt-in full response
+/// log (the memory the streaming stats avoid).
+fn bench_city50_cell() -> (f64, f64, usize, usize, usize) {
+    print_header("city-50 sweep cell: calendar vs heap core (3 sim-minutes)");
+    let topo = Topology::EdgeCity {
+        zones: 50,
+        workers_per_zone: 2,
+    };
+    let cluster = topo.cluster();
+    let label = topo.label();
+    let presets = city_scenario_presets(50);
+    let (name, scenario) = &presets[1]; // city50-flash-mosaic
+
+    let mut rates = Vec::new();
+    let mut peaks = Vec::new();
+    for core in CoreKind::ALL {
+        // Timed runs.
+        let mut events = 0u64;
+        let r = run(&format!("run_cell city-50 on {}", core.name()), 1, 3, || {
+            let cell = run_cell(&label, &cluster, name, scenario, AutoscalerKind::Hpa, 3, 3, core);
+            events = cell.metrics.events;
+        });
+        rates.push(events as f64 / (r.mean_us / 1e6));
+        // Peak-resident probe (single fresh run, streaming stats only).
+        reset_peak();
+        let _ = run_cell(&label, &cluster, name, scenario, AutoscalerKind::Hpa, 3, 3, core);
+        peaks.push(peak_bytes());
+    }
+
+    // Same world with the opt-in full per-request log, for the
+    // streaming-vs-log peak-resident delta.
+    reset_peak();
+    {
+        let mut world = SimWorld::build(&cluster, TaskCosts::default(), 3);
+        world.record_responses();
+        for gen in scenario.build_generators() {
+            world.add_generator(gen);
+        }
+        for svc in 0..world.app.services.len() {
+            world.add_scaler(Box::new(Hpa::with_defaults()), svc);
+        }
+        world.run_until(3 * MIN);
+    }
+    let peak_full_log = peak_bytes();
+
+    let (calendar, heap) = (rates[0], rates[1]);
+    println!(
+        "  -> calendar {calendar:.0} ev/s vs heap {heap:.0} ev/s ({:.2}x); \
+         peak alloc {:.1} MiB vs {:.1} MiB (full log: {:.1} MiB)",
+        calendar / heap,
+        peaks[0] as f64 / (1024.0 * 1024.0),
+        peaks[1] as f64 / (1024.0 * 1024.0),
+        peak_full_log as f64 / (1024.0 * 1024.0),
+    );
+    (calendar, heap, peaks[0], peaks[1], peak_full_log)
+}
+
 fn write_bench_json(entries: &[(&str, f64)]) {
     let mut o = BTreeMap::new();
-    o.insert("schema".to_string(), Json::Num(1.0));
+    o.insert("schema".to_string(), Json::Num(2.0));
     for &(k, v) in entries {
         let value = if v.is_finite() { Json::Num(v) } else { Json::Null };
         o.insert(k.to_string(), value);
@@ -371,18 +552,29 @@ fn write_bench_json(entries: &[(&str, f64)]) {
 
 fn main() {
     println!("ppa-edge hot-path benchmarks");
-    bench_event_queue();
+    let (queue_cal, queue_heap) = bench_event_queue();
     bench_scheduler();
     let (scrape_ns, legacy_ns, city_ns) = bench_scrape();
     bench_forecasters();
     let events_per_sec = bench_end_to_end();
     let cells_per_sec = bench_sweep_cells();
+    let (cell50_cal, cell50_heap, cell50_peak, cell50_peak_heap, cell50_peak_log) =
+        bench_city50_cell();
     write_bench_json(&[
         ("events_per_sec", events_per_sec),
+        ("queue_events_per_sec_calendar", queue_cal),
+        ("queue_events_per_sec_heap", queue_heap),
+        ("queue_core_speedup", queue_cal / queue_heap),
         ("ns_per_scrape", scrape_ns),
         ("ns_per_scrape_legacy", legacy_ns),
         ("ns_per_scrape_city50", city_ns),
         ("scrape_speedup_vs_legacy", legacy_ns / scrape_ns),
         ("sweep_cells_per_sec", cells_per_sec),
+        ("cell50_events_per_sec_calendar", cell50_cal),
+        ("cell50_events_per_sec_heap", cell50_heap),
+        ("cell50_core_speedup", cell50_cal / cell50_heap),
+        ("cell50_peak_alloc_bytes_calendar", cell50_peak as f64),
+        ("cell50_peak_alloc_bytes_heap", cell50_peak_heap as f64),
+        ("cell50_peak_alloc_bytes_full_log", cell50_peak_log as f64),
     ]);
 }

@@ -1,0 +1,173 @@
+//! Generational slab arena for in-flight requests.
+//!
+//! The arrival→complete hot path used to go through a
+//! `HashMap<u64, Request>`: a hash + probe per lookup and re-hashing
+//! growth pauses at city scale. [`RequestArena`] replaces it with a
+//! slab indexed directly by [`RequestId::index`] — no hashing, no
+//! per-request allocation at steady state (freed slots are recycled
+//! through a LIFO free list, so the slab grows only to the peak
+//! in-flight count).
+//!
+//! # Generation rules
+//!
+//! * A slot's `generation` counts how many requests have *completed* in
+//!   it: it starts at 0 and is bumped once on every [`RequestArena::remove`].
+//! * [`RequestArena::insert`] stamps the slot's current generation into
+//!   the returned [`RequestId`]; lookups succeed only while the handle's
+//!   generation matches the slot's.
+//! * A stale handle (its request completed, slot possibly reused)
+//!   therefore resolves to `None` — it can never alias a newer request.
+//!
+//! The free list is deterministic (LIFO), so identical event sequences
+//! produce identical `RequestId` streams — part of the simulator's
+//! bit-reproducibility contract.
+
+use super::Request;
+use crate::sim::RequestId;
+
+#[derive(Debug)]
+struct Slot {
+    generation: u32,
+    value: Option<Request>,
+}
+
+/// Generational slab of in-flight [`Request`]s (see the module docs).
+#[derive(Debug, Default)]
+pub struct RequestArena {
+    slots: Vec<Slot>,
+    /// Free slot indices, reused LIFO.
+    free: Vec<u32>,
+}
+
+impl RequestArena {
+    pub fn new() -> Self {
+        RequestArena {
+            slots: Vec::new(),
+            free: Vec::new(),
+        }
+    }
+
+    /// Number of live (in-flight) requests.
+    pub fn len(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total slots ever allocated (== peak in-flight count).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Store `req`, returning its generational handle.
+    pub fn insert(&mut self, req: Request) -> RequestId {
+        match self.free.pop() {
+            Some(index) => {
+                let slot = &mut self.slots[index as usize];
+                debug_assert!(slot.value.is_none(), "free list pointed at a live slot");
+                slot.value = Some(req);
+                RequestId::new(index, slot.generation)
+            }
+            None => {
+                let index = self.slots.len() as u32;
+                self.slots.push(Slot {
+                    generation: 0,
+                    value: Some(req),
+                });
+                RequestId::new(index, 0)
+            }
+        }
+    }
+
+    /// Look up a live request; `None` for stale or unknown handles.
+    pub fn get(&self, id: RequestId) -> Option<&Request> {
+        self.slots
+            .get(id.index as usize)
+            .filter(|s| s.generation == id.generation)
+            .and_then(|s| s.value.as_ref())
+    }
+
+    /// Remove a live request, bumping the slot's generation so the
+    /// handle (and any copies of it) goes stale.
+    pub fn remove(&mut self, id: RequestId) -> Option<Request> {
+        let slot = self.slots.get_mut(id.index as usize)?;
+        if slot.generation != id.generation {
+            return None;
+        }
+        let req = slot.value.take()?;
+        slot.generation = slot.generation.wrapping_add(1);
+        self.free.push(id.index);
+        Some(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::TaskType;
+    use crate::sim::ServiceId;
+
+    fn req(zone: u32) -> Request {
+        Request {
+            task: TaskType::Sort,
+            origin_zone: zone,
+            service: ServiceId(0),
+            created: 0,
+        }
+    }
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut a = RequestArena::new();
+        let id = a.insert(req(1));
+        assert_eq!(id, RequestId::new(0, 0));
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.get(id).unwrap().origin_zone, 1);
+        let out = a.remove(id).unwrap();
+        assert_eq!(out.origin_zone, 1);
+        assert!(a.is_empty());
+        assert_eq!(a.get(id), None, "handle is stale after remove");
+        assert_eq!(a.remove(id), None, "double-remove misses");
+    }
+
+    #[test]
+    fn slot_reuse_bumps_generation() {
+        let mut a = RequestArena::new();
+        let first = a.insert(req(1));
+        a.remove(first).unwrap();
+        let second = a.insert(req(2));
+        // Same slot, next generation: the stale handle cannot alias it.
+        assert_eq!(second.index, first.index);
+        assert_eq!(second.generation, first.generation + 1);
+        assert_eq!(a.get(first), None);
+        assert_eq!(a.get(second).unwrap().origin_zone, 2);
+        assert_eq!(a.capacity(), 1, "slot recycled, not grown");
+    }
+
+    #[test]
+    fn free_list_is_lifo_and_deterministic() {
+        let mut a = RequestArena::new();
+        let ids: Vec<RequestId> = (0..4).map(|z| a.insert(req(z))).collect();
+        a.remove(ids[1]).unwrap();
+        a.remove(ids[3]).unwrap();
+        // LIFO: slot 3 comes back first, then slot 1.
+        assert_eq!(a.insert(req(10)).index, 3);
+        assert_eq!(a.insert(req(11)).index, 1);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.capacity(), 4);
+    }
+
+    #[test]
+    fn steady_state_never_grows() {
+        let mut a = RequestArena::new();
+        for round in 0..100u32 {
+            let id = a.insert(req(round));
+            assert_eq!(id.index, 0);
+            assert_eq!(id.generation, round);
+            a.remove(id).unwrap();
+        }
+        assert_eq!(a.capacity(), 1);
+    }
+}

@@ -6,13 +6,34 @@
 //! tasks (expensive, `n³`) are forwarded to the cloud worker pool. Each
 //! worker pool is one autoscaled deployment plus a shared FIFO task queue
 //! (the Celery broker); worker pods are single-slot (Celery concurrency 1).
+//!
+//! # Hot-path data structures
+//!
+//! The arrival→complete path is allocation- and hash-free at steady
+//! state:
+//!
+//! * **In-flight requests** live in a [`RequestArena`] — a generational
+//!   slab addressed by [`RequestId`] (slot index + generation). Events
+//!   carry the copyable handle; a handle goes stale the moment its
+//!   request completes, so late/duplicate events miss instead of
+//!   aliasing a recycled slot (see the `arena` module docs for the
+//!   generation rules).
+//! * **Completed requests** stream into [`ResponseStats`] — per-task
+//!   Welford moments + log-histogram quantiles
+//!   ([`crate::stats::StreamingStats`]) in constant memory. The
+//!   unbounded per-request log is **opt-in** via
+//!   [`App::retain_responses`]; only the paper-figure harnesses (which
+//!   need exact traces for Welch tests and CSV dumps) enable it.
 
+mod arena;
 mod request;
 
+pub use arena::RequestArena;
 pub use request::{Request, ResponseRecord, TaskType};
 
 use crate::cluster::{Cluster, PodPhase};
-use crate::sim::{Event, EventQueue, PodId, ServiceId, Time, MS};
+use crate::sim::{Event, EventQueue, PodId, RequestId, ServiceId, Time, MS};
+use crate::stats::StreamingStats;
 use crate::util::rng::Pcg64;
 use std::collections::{HashMap, VecDeque};
 
@@ -85,7 +106,7 @@ pub struct Service {
     pub id: ServiceId,
     pub name: String,
     pub deployment: crate::cluster::DeploymentId,
-    pub queue: VecDeque<u64>,
+    pub queue: VecDeque<RequestId>,
     pub counters: TrafficCounters,
 }
 
@@ -95,7 +116,43 @@ const SORT_OUT: u64 = 24_000;
 const EIGEN_IN: u64 = 8_000_000; // 1000x1000 f64
 const EIGEN_OUT: u64 = 16_000;
 
-/// The application: services, in-flight requests, response log.
+/// Streaming per-task response statistics: what every consumer that
+/// only needs counts / moments / quantiles reads instead of a full
+/// per-request log. Constant memory, deterministic (see
+/// [`crate::stats::StreamingStats`]).
+#[derive(Debug, Clone, Default)]
+pub struct ResponseStats {
+    pub sort: StreamingStats,
+    pub eigen: StreamingStats,
+}
+
+impl ResponseStats {
+    fn record(&mut self, task: TaskType, secs: f64) {
+        match task {
+            TaskType::Sort => self.sort.record(secs),
+            TaskType::Eigen => self.eigen.record(secs),
+        }
+    }
+
+    /// Total completed requests across task types.
+    pub fn completed(&self) -> usize {
+        self.sort.n() + self.eigen.n()
+    }
+
+    /// Bit-exact digest of both task streams — equal iff two runs
+    /// completed the same requests with the same timings in the same
+    /// order (the determinism-test comparison primitive).
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "sort[{}] eigen[{}]",
+            self.sort.fingerprint(),
+            self.eigen.fingerprint()
+        )
+    }
+}
+
+/// The application: services, the in-flight request arena, streaming
+/// response statistics (plus the opt-in exact log).
 #[derive(Debug)]
 pub struct App {
     pub services: Vec<Service>,
@@ -103,10 +160,12 @@ pub struct App {
     /// zone index -> edge service handling that zone's Sort tasks.
     edge_service_by_zone: HashMap<u32, ServiceId>,
     cloud_service: ServiceId,
-    in_flight: HashMap<u64, Request>,
-    next_id: u64,
-    /// Completed-request log (the experiments' response-time source).
-    pub responses: Vec<ResponseRecord>,
+    in_flight: RequestArena,
+    /// Streaming per-task response statistics (always on, O(1) memory).
+    pub stats: ResponseStats,
+    /// Exact completed-request log — `None` (off) by default; enabled by
+    /// [`App::retain_responses`] for harnesses that need full traces.
+    response_log: Option<Vec<ResponseRecord>>,
 }
 
 impl App {
@@ -143,10 +202,35 @@ impl App {
             costs,
             edge_service_by_zone,
             cloud_service,
-            in_flight: HashMap::new(),
-            next_id: 0,
-            responses: Vec::new(),
+            in_flight: RequestArena::new(),
+            stats: ResponseStats::default(),
+            response_log: None,
         }
+    }
+
+    /// Turn on the exact per-request log (unbounded memory — for the
+    /// paper-figure harnesses and trace dumps; sweeps stay streaming).
+    pub fn retain_responses(&mut self) {
+        if self.response_log.is_none() {
+            self.response_log = Some(Vec::new());
+        }
+    }
+
+    /// The exact completed-request log, if [`App::retain_responses`] was
+    /// called before the run.
+    pub fn response_log(&self) -> Option<&[ResponseRecord]> {
+        self.response_log.as_deref()
+    }
+
+    /// Total completed requests (from the streaming stats — always
+    /// available, log or no log).
+    pub fn completed(&self) -> usize {
+        self.stats.completed()
+    }
+
+    /// Number of requests currently in flight (arena occupancy).
+    pub fn in_flight_len(&self) -> usize {
+        self.in_flight.len()
     }
 
     pub fn service(&self, id: ServiceId) -> &Service {
@@ -160,16 +244,14 @@ impl App {
 
     /// A client submits a task from `zone` at `now`. Routes per the paper:
     /// Sort → that zone's edge pool; Eigen → the cloud pool (with forward
-    /// latency). Returns the request id.
+    /// latency). Returns the request's generational handle.
     pub fn submit(
         &mut self,
         task: TaskType,
         zone: u32,
         now: Time,
         queue: &mut EventQueue,
-    ) -> u64 {
-        let id = self.next_id;
-        self.next_id += 1;
+    ) -> RequestId {
         let (service, latency, bytes_in) = match task {
             TaskType::Sort => {
                 let svc = *self
@@ -184,16 +266,12 @@ impl App {
                 EIGEN_IN,
             ),
         };
-        self.in_flight.insert(
-            id,
-            Request {
-                id,
-                task,
-                origin_zone: zone,
-                service,
-                created: now,
-            },
-        );
+        let id = self.in_flight.insert(Request {
+            task,
+            origin_zone: zone,
+            service,
+            created: now,
+        });
         self.services[service.0 as usize].counters.arrivals += 1;
         self.services[service.0 as usize].counters.net_in_bytes += bytes_in;
         queue.schedule_in(latency, Event::RequestArrival { request_id: id });
@@ -201,16 +279,18 @@ impl App {
     }
 
     /// `RequestArrival` handler: enqueue at the service and try dispatch.
+    /// Stale handles (generation mismatch — the request was cancelled or
+    /// already completed) are dropped silently.
     pub fn on_arrival(
         &mut self,
-        request_id: u64,
+        request_id: RequestId,
         cluster: &mut Cluster,
         queue: &mut EventQueue,
         rng: &mut Pcg64,
     ) {
-        let service = match self.in_flight.get(&request_id) {
+        let service = match self.in_flight.get(request_id) {
             Some(r) => r.service,
-            None => return, // cancelled
+            None => return, // stale handle
         };
         self.services[service.0 as usize].queue.push_back(request_id);
         self.dispatch(service, cluster, queue, rng);
@@ -229,22 +309,24 @@ impl App {
             if self.services[service.0 as usize].queue.is_empty() {
                 return;
             }
-            // Deterministic idle-pod choice: lowest pod id.
-            let idle: Option<PodId> = {
-                let mut ids: Vec<PodId> = cluster
-                    .running_pods(dep)
-                    .filter(|p| p.current_request.is_none())
-                    .map(|p| p.id)
-                    .collect();
-                ids.sort();
-                ids.first().copied()
-            };
+            // Deterministic idle-pod choice: lowest pod id (min over the
+            // iterator — no Vec, no sort; same pod the old collect+sort
+            // picked).
+            let idle: Option<PodId> = cluster
+                .running_pods(dep)
+                .filter(|p| p.current_request.is_none())
+                .map(|p| p.id)
+                .min();
             let Some(pid) = idle else { return };
             let req_id = self.services[service.0 as usize]
                 .queue
                 .pop_front()
                 .unwrap();
-            let task = self.in_flight[&req_id].task;
+            let task = self
+                .in_flight
+                .get(req_id)
+                .expect("queued request is live")
+                .task;
             let pod = cluster.pod_mut(pid);
             pod.start_service(req_id, queue.now());
             let service_time = self.service_time(task, pod.spec.cpu_millis, rng);
@@ -270,12 +352,14 @@ impl App {
         self.costs.overhead + crate::sim::from_secs(core_secs / cores * jitter)
     }
 
-    /// `ServiceComplete` handler: record the response, free (or drain) the
-    /// pod, and keep the queue moving.
+    /// `ServiceComplete` handler: stream the response into the stats
+    /// (and the exact log when retained), free (or drain) the pod, and
+    /// keep the queue moving. Removing the request from the arena bumps
+    /// its slot generation, so the handle goes stale here.
     pub fn on_complete(
         &mut self,
         pid: PodId,
-        request_id: u64,
+        request_id: RequestId,
         cluster: &mut Cluster,
         queue: &mut EventQueue,
         rng: &mut Pcg64,
@@ -292,18 +376,22 @@ impl App {
             );
         }
 
-        if let Some(req) = self.in_flight.remove(&request_id) {
+        if let Some(req) = self.in_flight.remove(request_id) {
             let out = match req.task {
                 TaskType::Sort => SORT_OUT,
                 TaskType::Eigen => EIGEN_OUT,
             };
             self.services[req.service.0 as usize].counters.net_out_bytes += out;
-            self.responses.push(ResponseRecord {
+            let record = ResponseRecord {
                 task: req.task,
                 origin_zone: req.origin_zone,
                 created: req.created,
                 completed: now,
-            });
+            };
+            self.stats.record(req.task, record.response_secs());
+            if let Some(log) = &mut self.response_log {
+                log.push(record);
+            }
             // Keep the queue moving — even when this pod is draining,
             // another pod may be idle.
             self.dispatch(req.service, cluster, queue, rng);
@@ -343,7 +431,9 @@ mod tests {
             1,
             8,
         ));
-        let app = App::new(TaskCosts::default(), &[(1, edge_dep)], cloud_dep);
+        let mut app = App::new(TaskCosts::default(), &[(1, edge_dep)], cloud_dep);
+        // Tests inspect individual responses, so keep the exact log too.
+        app.retain_responses();
         (app, cluster, EventQueue::new(), Pcg64::new(42, 7))
     }
 
@@ -377,6 +467,10 @@ mod tests {
         }
     }
 
+    fn log(app: &App) -> &[ResponseRecord] {
+        app.response_log().expect("test worlds retain the log")
+    }
+
     #[test]
     fn sort_request_completes_with_expected_latency() {
         let (mut app, mut cluster, mut q, mut rng) = world();
@@ -384,12 +478,15 @@ mod tests {
         cluster.reconcile(DeploymentId(1), 1, &mut q, &mut rng);
         app.submit(TaskType::Sort, 1, 0, &mut q);
         run(&mut app, &mut cluster, &mut q, &mut rng);
-        assert_eq!(app.responses.len(), 1);
-        let r = &app.responses[0];
+        assert_eq!(app.completed(), 1);
+        let r = &log(&app)[0];
         // 0.2 core-sec on 500m = 0.4 s (+80 ms overhead + init wait).
         let resp = r.response_secs();
         assert!(resp > 0.4 && resp < 15.0, "resp={resp}");
         assert_eq!(r.task, TaskType::Sort);
+        // Streaming stats saw the same response.
+        assert_eq!(app.stats.sort.n(), 1);
+        assert!((app.stats.sort.mean() - resp).abs() < 1e-12);
     }
 
     #[test]
@@ -399,10 +496,11 @@ mod tests {
         cluster.reconcile(DeploymentId(1), 1, &mut q, &mut rng);
         app.submit(TaskType::Eigen, 1, 0, &mut q);
         run(&mut app, &mut cluster, &mut q, &mut rng);
-        assert_eq!(app.responses.len(), 1);
+        assert_eq!(app.completed(), 1);
         // 5.5 core-sec on 1000m ≈ 5.5 s service.
-        let resp = app.responses[0].response_secs();
+        let resp = log(&app)[0].response_secs();
         assert!(resp > 5.0, "resp={resp}");
+        assert_eq!(app.stats.eigen.n(), 1);
         // Cloud service counted the arrival.
         assert_eq!(app.services[1].counters.arrivals, 1);
         assert!(app.services[1].counters.net_in_bytes >= EIGEN_IN);
@@ -416,9 +514,9 @@ mod tests {
             app.submit(TaskType::Sort, 1, 0, &mut q);
         }
         run(&mut app, &mut cluster, &mut q, &mut rng);
-        assert_eq!(app.responses.len(), 3);
+        assert_eq!(app.completed(), 3);
         // Sequential service: responses strictly increasing.
-        let times: Vec<f64> = app.responses.iter().map(|r| r.response_secs()).collect();
+        let times: Vec<f64> = log(&app).iter().map(|r| r.response_secs()).collect();
         assert!(times.windows(2).all(|w| w[1] > w[0]), "{times:?}");
     }
 
@@ -433,13 +531,7 @@ mod tests {
                 app.submit(TaskType::Sort, 1, q.now(), &mut q);
             }
             run(&mut app, &mut cluster, &mut q, &mut rng);
-            let mean: f64 = app
-                .responses
-                .iter()
-                .map(|r| r.response_secs())
-                .sum::<f64>()
-                / app.responses.len() as f64;
-            mean
+            app.stats.sort.mean()
         };
         let slow = measure(1);
         let fast = measure(3);
@@ -470,7 +562,7 @@ mod tests {
         cluster.reconcile(DeploymentId(0), 0, &mut q, &mut rng);
         assert_eq!(cluster.count_phase(DeploymentId(0), PodPhase::Terminating), 1);
         run(&mut app, &mut cluster, &mut q, &mut rng);
-        assert_eq!(app.responses.len(), 1, "in-flight request must finish");
+        assert_eq!(app.completed(), 1, "in-flight request must finish");
         assert_eq!(cluster.live_replicas(DeploymentId(0)), 0);
     }
 
@@ -498,5 +590,56 @@ mod tests {
             "compute on 500m should be ~4x slower than 2000m: {t_small} vs {t_big}"
         );
         let _ = SEC;
+    }
+
+    #[test]
+    fn stale_arrival_is_dropped() {
+        let (mut app, mut cluster, mut q, mut rng) = world();
+        cluster.reconcile(DeploymentId(0), 1, &mut q, &mut rng);
+        let id = app.submit(TaskType::Sort, 1, 0, &mut q);
+        run(&mut app, &mut cluster, &mut q, &mut rng);
+        assert_eq!(app.completed(), 1);
+        // The handle is stale now (slot generation bumped on complete):
+        // replaying its arrival must be a no-op, not a double-enqueue.
+        app.on_arrival(id, &mut cluster, &mut q, &mut rng);
+        assert_eq!(app.queued_total(), 0);
+        assert!(q.is_empty());
+        assert_eq!(app.completed(), 1);
+    }
+
+    #[test]
+    fn arena_recycles_slots_at_steady_state() {
+        let (mut app, mut cluster, mut q, mut rng) = world();
+        cluster.reconcile(DeploymentId(0), 1, &mut q, &mut rng);
+        // Sequential rounds: each request completes before the next is
+        // submitted, so the arena never holds more than one live slot.
+        for _ in 0..20 {
+            app.submit(TaskType::Sort, 1, q.now(), &mut q);
+            run(&mut app, &mut cluster, &mut q, &mut rng);
+        }
+        assert_eq!(app.completed(), 20);
+        assert_eq!(app.in_flight_len(), 0);
+    }
+
+    #[test]
+    fn streaming_stats_match_retained_log() {
+        let (mut app, mut cluster, mut q, mut rng) = world();
+        cluster.reconcile(DeploymentId(0), 2, &mut q, &mut rng);
+        cluster.reconcile(DeploymentId(1), 1, &mut q, &mut rng);
+        for i in 0..12 {
+            let task = if i % 4 == 0 { TaskType::Eigen } else { TaskType::Sort };
+            app.submit(task, 1, 0, &mut q);
+        }
+        run(&mut app, &mut cluster, &mut q, &mut rng);
+        let sorts: Vec<f64> = log(&app)
+            .iter()
+            .filter(|r| r.task == TaskType::Sort)
+            .map(|r| r.response_secs())
+            .collect();
+        let batch = crate::stats::summarize(&sorts);
+        assert_eq!(app.stats.sort.n(), batch.n);
+        assert!((app.stats.sort.mean() - batch.mean).abs() < 1e-9);
+        assert_eq!(app.stats.sort.max(), batch.max);
+        assert_eq!(app.stats.completed(), log(&app).len());
     }
 }

@@ -20,10 +20,12 @@ impl TaskType {
     }
 }
 
-/// An in-flight request.
-#[derive(Debug, Clone, Copy)]
+/// An in-flight request, stored in the app's
+/// [`RequestArena`](super::RequestArena) and addressed by the
+/// generational [`crate::sim::RequestId`] (the handle *is* the
+/// identity — the payload carries no id of its own).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
-    pub id: u64,
     pub task: TaskType,
     pub origin_zone: u32,
     pub service: ServiceId,

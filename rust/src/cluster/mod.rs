@@ -436,7 +436,7 @@ mod tests {
         // Mark both busy.
         let pods: Vec<PodId> = c.deployments[0].pods.clone();
         for &p in &pods {
-            c.pod_mut(p).current_request = Some(7);
+            c.pod_mut(p).current_request = Some(crate::sim::RequestId::new(7, 0));
         }
         c.reconcile(DeploymentId(0), 1, &mut q, &mut rng);
         // No PodTerminated scheduled yet (busy drain).

@@ -2,7 +2,7 @@
 //! accounting (the source of the CPU-utilization metric).
 
 use super::DeploymentId;
-use crate::sim::{NodeId, PodId, Time};
+use crate::sim::{NodeId, PodId, RequestId, Time};
 
 /// Pod lifecycle. `Gone` marks a free slab slot.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,8 +42,9 @@ pub struct Pod {
     pub spec: PodSpec,
     pub created: Time,
     /// Request currently being serviced (workers are single-slot, like a
-    /// Celery worker with concurrency 1).
-    pub current_request: Option<u64>,
+    /// Celery worker with concurrency 1). The generational handle goes
+    /// stale once the request completes in the arena.
+    pub current_request: Option<RequestId>,
     /// Busy-time accumulator since the last metrics scrape.
     busy_accum: Time,
     /// When the current service period started (None if idle).
@@ -66,14 +67,14 @@ impl Pod {
     }
 
     /// Mark the pod busy on `request_id` starting at `now`.
-    pub fn start_service(&mut self, request_id: u64, now: Time) {
+    pub fn start_service(&mut self, request_id: RequestId, now: Time) {
         debug_assert!(self.current_request.is_none(), "pod already busy");
         self.current_request = Some(request_id);
         self.busy_since = Some(now);
     }
 
     /// Mark the current request finished at `now`.
-    pub fn finish_service(&mut self, now: Time) -> Option<u64> {
+    pub fn finish_service(&mut self, now: Time) -> Option<RequestId> {
         let req = self.current_request.take();
         if let Some(since) = self.busy_since.take() {
             self.busy_accum += now.saturating_sub(since);
@@ -108,14 +109,18 @@ mod tests {
         Pod::new(PodId(0), DeploymentId(0), PodSpec::new(500, 256), 0)
     }
 
+    fn rid(index: u32) -> RequestId {
+        RequestId::new(index, 0)
+    }
+
     #[test]
     fn busy_accounting_across_scrapes() {
         let mut p = pod();
-        p.start_service(1, 2 * SEC);
+        p.start_service(rid(1), 2 * SEC);
         // Scrape at t=5s: busy 3s, still in flight.
         assert_eq!(p.take_busy(5 * SEC), 3 * SEC);
         // Finish at t=7s; busy 2s more.
-        assert_eq!(p.finish_service(7 * SEC), Some(1));
+        assert_eq!(p.finish_service(7 * SEC), Some(rid(1)));
         assert_eq!(p.take_busy(10 * SEC), 2 * SEC);
         // Idle after.
         assert_eq!(p.take_busy(12 * SEC), 0);
@@ -124,9 +129,9 @@ mod tests {
     #[test]
     fn busy_accumulates_multiple_requests() {
         let mut p = pod();
-        p.start_service(1, 0);
+        p.start_service(rid(1), 0);
         p.finish_service(SEC);
-        p.start_service(2, 2 * SEC);
+        p.start_service(rid(2), 2 * SEC);
         p.finish_service(3 * SEC);
         assert_eq!(p.take_busy(4 * SEC), 2 * SEC);
     }
@@ -136,7 +141,7 @@ mod tests {
         let mut p = pod();
         p.phase = PodPhase::Running;
         assert!(p.is_idle_running());
-        p.start_service(5, 0);
+        p.start_service(rid(5), 0);
         assert!(!p.is_idle_running());
     }
 }

@@ -6,7 +6,7 @@ use crate::autoscaler::Autoscaler;
 use crate::cluster::{Cluster, DeploymentId};
 use crate::config::ClusterConfig;
 use crate::metrics::{MetricsPipeline, DEFAULT_SCRAPE_INTERVAL};
-use crate::sim::{Event, EventQueue, ServiceId, Time};
+use crate::sim::{CoreKind, Event, EventQueue, ServiceId, Time};
 use crate::util::rng::Pcg64;
 use crate::workload::Generator;
 
@@ -53,8 +53,22 @@ pub struct SimWorld {
 impl SimWorld {
     /// Build from a cluster config. Deployment order in the config maps
     /// to services: all edge deployments (each with its zone), then the
-    /// last deployment as the cloud Eigen pool.
+    /// last deployment as the cloud Eigen pool. Runs on the default
+    /// calendar event core; see [`SimWorld::build_with_core`].
     pub fn build(cfg: &ClusterConfig, costs: TaskCosts, seed: u64) -> Self {
+        SimWorld::build_with_core(cfg, costs, seed, CoreKind::Calendar)
+    }
+
+    /// [`SimWorld::build`] on an explicit event-queue core. The heap
+    /// core is the golden reference: for equal `(cfg, costs, seed)` both
+    /// cores produce bit-identical runs (asserted by the
+    /// core-equivalence tests here and in the sweep harness).
+    pub fn build_with_core(
+        cfg: &ClusterConfig,
+        costs: TaskCosts,
+        seed: u64,
+        core: CoreKind,
+    ) -> Self {
         let (mut cluster, dep_ids) = cfg.build();
         assert!(
             dep_ids.len() >= 2,
@@ -72,7 +86,7 @@ impl SimWorld {
         let burn = costs.base_burn_frac;
         let metrics = MetricsPipeline::for_app(DEFAULT_SCRAPE_INTERVAL, &app, burn);
 
-        let mut queue = EventQueue::new();
+        let mut queue = EventQueue::with_core(core);
         let mut rng_cluster = Pcg64::new(seed, 1);
         // Initial replicas.
         for (dcfg, &id) in cfg.deployments.iter().zip(&dep_ids) {
@@ -100,6 +114,14 @@ impl SimWorld {
     /// Register a workload generator (started by [`Self::run_until`]).
     pub fn add_generator(&mut self, gen: Generator) {
         self.generators.push(gen);
+    }
+
+    /// Turn on the exact per-request response log (unbounded memory).
+    /// The streaming [`crate::app::ResponseStats`] are always on; only
+    /// harnesses that need full traces (paper figures, CSV dumps,
+    /// [`Self::response_times`]) should call this before running.
+    pub fn record_responses(&mut self) {
+        self.app.retain_responses();
     }
 
     /// Bind an autoscaler to service index `service_idx` (== deployment
@@ -141,11 +163,10 @@ impl SimWorld {
             self.schedule_initial();
         }
         let mut processed = 0u64;
-        while let Some(next_t) = self.queue.peek_time() {
-            if next_t > end {
-                break;
-            }
-            let (now, event) = self.queue.pop().unwrap();
+        // `pop_due` is the single run-loop primitive: it pops only
+        // events due at or before `end`, without the separate peek scan
+        // a peek-then-pop loop would repeat on the calendar core.
+        while let Some((now, event)) = self.queue.pop_due(end) {
             processed += 1;
             match event {
                 Event::RequestArrival { request_id } => {
@@ -261,10 +282,14 @@ impl SimWorld {
             .collect()
     }
 
-    /// Response times (seconds) filtered by task type.
+    /// Exact response times (seconds) filtered by task type. Needs the
+    /// opt-in log ([`Self::record_responses`] before the run); consumers
+    /// that only need counts / moments / quantiles should read the
+    /// always-on streaming `self.app.stats` instead.
     pub fn response_times(&self, task: crate::app::TaskType) -> Vec<f64> {
         self.app
-            .responses
+            .response_log()
+            .expect("response log is off — call record_responses() first, or use app.stats")
             .iter()
             .filter(|r| r.task == task)
             .map(|r| r.response_secs())
@@ -275,19 +300,22 @@ impl SimWorld {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::app::TaskType;
     use crate::autoscaler::Hpa;
     use crate::config::quickstart_cluster;
     use crate::sim::{MIN, SEC};
     use crate::workload::{Generator, RandomAccessGen};
 
-    fn hpa_world(seed: u64) -> SimWorld {
+    fn hpa_world_on(seed: u64, core: CoreKind) -> SimWorld {
         let cfg = quickstart_cluster();
-        let mut w = SimWorld::build(&cfg, TaskCosts::default(), seed);
+        let mut w = SimWorld::build_with_core(&cfg, TaskCosts::default(), seed, core);
         w.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
         w.add_scaler(Box::new(Hpa::with_defaults()), 0);
         w.add_scaler(Box::new(Hpa::with_defaults()), 1);
         w
+    }
+
+    fn hpa_world(seed: u64) -> SimWorld {
+        hpa_world_on(seed, CoreKind::Calendar)
     }
 
     #[test]
@@ -296,12 +324,12 @@ mod tests {
         let events = w.run_until(10 * MIN);
         assert!(events > 100, "world should be busy: {events} events");
         assert!(
-            w.app.responses.len() > 50,
+            w.app.completed() > 50,
             "requests completed: {}",
-            w.app.responses.len()
+            w.app.completed()
         );
-        // Both task types present (0.9/0.1 mix).
-        assert!(!w.response_times(TaskType::Sort).is_empty());
+        // Both task types present (0.9/0.1 mix) in the streaming stats.
+        assert!(w.app.stats.sort.n() > 0);
         assert!(!w.rir_log.is_empty());
         // Replica counts stayed within physical bounds.
         assert!(w
@@ -316,11 +344,15 @@ mod tests {
         let mut b = hpa_world(42);
         a.run_until(5 * MIN);
         b.run_until(5 * MIN);
-        assert_eq!(a.app.responses.len(), b.app.responses.len());
+        assert_eq!(a.app.completed(), b.app.completed());
         assert_eq!(a.events_processed, b.events_processed);
-        let ra: Vec<f64> = a.app.responses.iter().map(|r| r.response_secs()).collect();
-        let rb: Vec<f64> = b.app.responses.iter().map(|r| r.response_secs()).collect();
-        assert_eq!(ra, rb, "bit-identical runs for equal seeds");
+        // The streaming digest covers every response time bit-exactly —
+        // no per-run Vec re-collection needed.
+        assert_eq!(
+            a.app.stats.fingerprint(),
+            b.app.stats.fingerprint(),
+            "bit-identical runs for equal seeds"
+        );
     }
 
     #[test]
@@ -329,18 +361,35 @@ mod tests {
         let mut b = hpa_world(2);
         a.run_until(5 * MIN);
         b.run_until(5 * MIN);
-        let ra: Vec<f64> = a.app.responses.iter().map(|r| r.response_secs()).collect();
-        let rb: Vec<f64> = b.app.responses.iter().map(|r| r.response_secs()).collect();
-        assert_ne!(ra, rb);
+        assert_ne!(a.app.stats.fingerprint(), b.app.stats.fingerprint());
+    }
+
+    #[test]
+    fn calendar_and_heap_cores_are_bit_identical() {
+        // The golden-equivalence contract at world level: same seed on
+        // both event cores → same event count, same response stream.
+        let mut cal = hpa_world_on(42, CoreKind::Calendar);
+        let mut heap = hpa_world_on(42, CoreKind::Heap);
+        cal.run_until(8 * MIN);
+        heap.run_until(8 * MIN);
+        assert!(cal.events_processed > 100);
+        assert_eq!(cal.events_processed, heap.events_processed);
+        assert_eq!(
+            cal.app.stats.fingerprint(),
+            heap.app.stats.fingerprint(),
+            "calendar core must reproduce the heap reference bit-for-bit"
+        );
+        assert_eq!(cal.app.completed(), heap.app.completed());
+        assert_eq!(cal.rir_log.len(), heap.rir_log.len());
     }
 
     #[test]
     fn run_can_continue() {
         let mut w = hpa_world(3);
         w.run_until(2 * MIN);
-        let n1 = w.app.responses.len();
+        let n1 = w.app.completed();
         w.run_until(4 * MIN);
-        let n2 = w.app.responses.len();
+        let n2 = w.app.completed();
         assert!(n2 > n1);
     }
 

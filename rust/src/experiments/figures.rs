@@ -72,6 +72,9 @@ pub fn experiments_dir() -> std::path::PathBuf {
 fn world_random_access(seed: u64) -> SimWorld {
     let cfg = paper_cluster();
     let mut w = SimWorld::build(&cfg, TaskCosts::default(), seed);
+    // Figure harnesses need exact traces (Welch tests, CSV dumps), so
+    // they opt into the full response log on top of the streaming stats.
+    w.record_responses();
     w.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
     w.add_generator(Generator::RandomAccess(RandomAccessGen::new(2)));
     w
@@ -80,6 +83,7 @@ fn world_random_access(seed: u64) -> SimWorld {
 fn world_nasa(seed: u64, counts: &Arc<Vec<f64>>) -> SimWorld {
     let cfg = paper_cluster();
     let mut w = SimWorld::build(&cfg, TaskCosts::default(), seed);
+    w.record_responses();
     w.add_generator(Generator::Trace(TraceGen::new(1, counts.clone(), 0.5)));
     w.add_generator(Generator::Trace(TraceGen::new(2, counts.clone(), 0.5)));
     w
@@ -371,14 +375,9 @@ pub fn fig9_fig10_key_metric(params: &FigParams) -> crate::Result<Fig9And10> {
         }
         world.run_until(params.minutes * MIN);
 
-        // All-request response times; system-wide RIR across services.
-        let responses: Vec<f64> = world
-            .app
-            .responses
-            .iter()
-            .filter(|r| r.task == TaskType::Sort)
-            .map(|r| r.response_secs())
-            .collect();
+        // Sort response times (exact, from the retained log); system-wide
+        // RIR across services.
+        let responses: Vec<f64> = world.response_times(TaskType::Sort);
         let rirs: Vec<f64> = world.rir_log.iter().map(|s| s.rir).collect();
 
         let mut w = CsvWriter::create(
@@ -455,7 +454,7 @@ fn eval_outcome(world: &SimWorld, scaler: &str, n_services: usize) -> EvalOutcom
         eigen: summarize(&eigen_responses),
         edge_rir: summarize(&edge_rirs),
         cloud_rir: summarize(&cloud_rirs),
-        completed: world.app.responses.len(),
+        completed: world.app.completed(),
         sort_responses,
         eigen_responses,
         edge_rirs,

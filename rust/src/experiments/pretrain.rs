@@ -95,7 +95,7 @@ pub fn pretrain_histories(
                 .clone()
         })
         .collect();
-    (histories, world.app.responses.len())
+    (histories, world.app.completed())
 }
 
 #[cfg(test)]

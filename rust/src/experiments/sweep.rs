@@ -8,15 +8,20 @@
 //! scaler, seed, minutes) tuple — cells share no mutable state — so
 //! per-cell results are bit-identical regardless of the worker-thread
 //! count (asserted by `determinism_across_thread_counts` and the
-//! city-scale determinism tests below).
+//! city-scale determinism tests below) *and* of the event-queue core
+//! ([`CoreKind`], asserted by the `golden_core_equivalence_*` tests).
+//!
+//! Memory stays flat per cell: response statistics are streamed
+//! ([`crate::app::ResponseStats`] — Welford moments + log-histogram
+//! percentiles), never collected into a per-request log.
 
 use super::driver::SimWorld;
-use crate::app::{TaskCosts, TaskType};
+use crate::app::TaskCosts;
 use crate::autoscaler::{Autoscaler, Hpa, Ppa, PpaConfig};
 use crate::config::{ClusterConfig, Topology};
 use crate::forecast::ArmaForecaster;
 use crate::forecast::NaiveForecaster;
-use crate::sim::{Time, MIN};
+use crate::sim::{CoreKind, Time, MIN};
 use crate::stats::{percentile, summarize, Summary};
 use crate::util::json::Json;
 use crate::workload::Scenario;
@@ -100,6 +105,11 @@ pub struct SweepConfig {
     pub minutes: u64,
     /// Worker threads (0 = one per available core).
     pub threads: usize,
+    /// Event-queue core every cell runs on. [`CoreKind::Calendar`] is
+    /// the fast default; [`CoreKind::Heap`] is the golden reference —
+    /// per-cell results are bit-identical either way (asserted by
+    /// `golden_core_equivalence_*` below).
+    pub core: CoreKind,
 }
 
 /// Deterministic per-cell outcome (everything except wall-clock).
@@ -111,7 +121,12 @@ pub struct CellMetrics {
     pub seed: u64,
     pub events: u64,
     pub completed: usize,
+    /// Streaming per-task response summaries (Welford moments — see
+    /// [`crate::stats::StreamingStats`]; cells never retain the full
+    /// per-request log).
     pub sort: Summary,
+    /// Response percentiles are log-histogram estimates (geometric bin
+    /// centers, ≤ ~1.1% relative error), not exact order statistics.
     pub sort_p50: f64,
     pub sort_p95: f64,
     pub sort_p99: f64,
@@ -148,6 +163,8 @@ pub struct CellResult {
 #[derive(Debug)]
 pub struct SweepResult {
     pub topology: String,
+    /// Event-queue core the cells ran on.
+    pub core: CoreKind,
     pub cells: Vec<CellResult>,
     pub minutes: u64,
     pub threads_used: usize,
@@ -155,6 +172,10 @@ pub struct SweepResult {
 }
 
 /// Run one independent cell on `cluster` (a materialized topology).
+/// Response statistics come from the app's always-on streaming stats —
+/// the cell never accumulates a per-request log, so memory stays flat
+/// however long (or busy) the cell runs.
+#[allow(clippy::too_many_arguments)]
 pub fn run_cell(
     topology_label: &str,
     cluster: &ClusterConfig,
@@ -163,9 +184,10 @@ pub fn run_cell(
     scaler: AutoscalerKind,
     seed: u64,
     minutes: u64,
+    core: CoreKind,
 ) -> CellResult {
     let wall = std::time::Instant::now();
-    let mut world = SimWorld::build(cluster, TaskCosts::default(), seed);
+    let mut world = SimWorld::build_with_core(cluster, TaskCosts::default(), seed, core);
     for gen in scenario.build_generators() {
         world.add_generator(gen);
     }
@@ -175,8 +197,6 @@ pub fn run_cell(
     }
     let events = world.run_until(minutes * MIN);
 
-    let sort = world.response_times(TaskType::Sort);
-    let eigen = world.response_times(TaskType::Eigen);
     let rirs: Vec<f64> = world.rir_log.iter().map(|s| s.rir).collect();
     let reps: Vec<f64> = world.replica_log.iter().map(|&(_, _, r)| r as f64).collect();
     let replicas_max = world.replica_log.iter().map(|&(_, _, r)| r).max().unwrap_or(0);
@@ -190,18 +210,19 @@ pub fn run_cell(
         }
     }
 
+    let stats = &world.app.stats;
     let metrics = CellMetrics {
         topology: topology_label.to_string(),
         scenario: scenario_name.to_string(),
         scaler: scaler.name().to_string(),
         seed,
         events,
-        completed: world.app.responses.len(),
-        sort: summarize(&sort),
-        sort_p50: percentile(&sort, 50.0),
-        sort_p95: percentile(&sort, 95.0),
-        sort_p99: percentile(&sort, 99.0),
-        eigen: summarize(&eigen),
+        completed: world.app.completed(),
+        sort: stats.sort.summary(),
+        sort_p50: stats.sort.quantile(50.0),
+        sort_p95: stats.sort.quantile(95.0),
+        sort_p99: stats.sort.quantile(99.0),
+        eigen: stats.eigen.summary(),
         rir: summarize(&rirs),
         rir_p50: percentile(&rirs, 50.0),
         rir_p95: percentile(&rirs, 95.0),
@@ -276,6 +297,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> crate::Result<SweepResult> {
                     scaler,
                     seed,
                     cfg.minutes,
+                    cfg.core,
                 );
                 slots.lock().unwrap()[i] = Some(result);
             });
@@ -290,6 +312,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> crate::Result<SweepResult> {
         .collect();
     Ok(SweepResult {
         topology: topology_label,
+        core: cfg.core,
         cells,
         minutes: cfg.minutes,
         threads_used: threads,
@@ -354,6 +377,7 @@ impl SweepResult {
     pub fn to_json(&self) -> Json {
         let mut root = BTreeMap::new();
         root.insert("topology".to_string(), Json::Str(self.topology.clone()));
+        root.insert("core".to_string(), Json::Str(self.core.name().to_string()));
         root.insert("minutes".to_string(), Json::Num(self.minutes as f64));
         root.insert("threads".to_string(), Json::Num(self.threads_used as f64));
         root.insert("wall_secs".to_string(), num(self.wall_secs));
@@ -433,6 +457,7 @@ mod tests {
             seeds: vec![1, 2],
             minutes: 6,
             threads,
+            core: CoreKind::Calendar,
         }
     }
 
@@ -513,6 +538,7 @@ mod tests {
             seeds: vec![5],
             minutes: 25,
             threads: 1,
+            core: CoreKind::Calendar,
         };
         let result = run_sweep(&cfg).unwrap();
         let cell = &result.cells[0].metrics;
@@ -532,6 +558,7 @@ mod tests {
             seeds: vec![3],
             minutes: 4,
             threads: 1,
+            core: CoreKind::Calendar,
         })
         .unwrap();
         let dir = std::env::temp_dir().join("ppa_sweep_test");
@@ -572,6 +599,7 @@ mod tests {
             seeds: vec![1],
             minutes: 1,
             threads: 1,
+            core: CoreKind::Calendar,
         };
         assert!(run_sweep(&cfg).is_err());
     }
@@ -588,6 +616,7 @@ mod tests {
             seeds: vec![1],
             minutes: 1,
             threads: 1,
+            core: CoreKind::Calendar,
         };
         let err = run_sweep(&cfg).unwrap_err();
         assert!(format!("{err}").contains("zone 9"));
@@ -605,8 +634,9 @@ mod tests {
         let cluster = topo.cluster();
         let presets = crate::config::city_scenario_presets(50);
         let (name, scenario) = &presets[1]; // city50-flash-mosaic
-        let run = || {
-            let mut world = SimWorld::build(&cluster, TaskCosts::default(), 77);
+        let run = |core: CoreKind| {
+            let mut world =
+                SimWorld::build_with_core(&cluster, TaskCosts::default(), 77, core);
             for gen in scenario.build_generators() {
                 world.add_generator(gen);
             }
@@ -614,20 +644,21 @@ mod tests {
                 world.add_scaler(AutoscalerKind::Hpa.build(), svc);
             }
             let events = world.run_until(3 * MIN);
-            let responses: Vec<f64> = world
-                .app
-                .responses
-                .iter()
-                .map(|r| r.response_secs())
-                .collect();
-            (events, responses)
+            // The streaming digest covers every response time bit-exactly.
+            (events, world.app.completed(), world.app.stats.fingerprint())
         };
-        let (events_a, responses_a) = run();
-        let (events_b, responses_b) = run();
+        let (events_a, completed_a, digest_a) = run(CoreKind::Calendar);
+        let (events_b, completed_b, digest_b) = run(CoreKind::Calendar);
         assert!(events_a > 500, "{name}: city should be busy ({events_a})");
-        assert!(!responses_a.is_empty());
+        assert!(completed_a > 0);
         assert_eq!(events_a, events_b, "event counts must be bit-identical");
-        assert_eq!(responses_a, responses_b, "responses must be bit-identical");
+        assert_eq!(completed_a, completed_b);
+        assert_eq!(digest_a, digest_b, "responses must be bit-identical");
+        // And the heap reference core reproduces the same world.
+        let (events_h, completed_h, digest_h) = run(CoreKind::Heap);
+        assert_eq!(events_a, events_h, "calendar vs heap event count");
+        assert_eq!(completed_a, completed_h);
+        assert_eq!(digest_a, digest_h, "calendar vs heap response stream");
     }
 
     #[test]
@@ -644,6 +675,7 @@ mod tests {
             seeds: vec![1, 2],
             minutes: 4,
             threads,
+            core: CoreKind::Calendar,
         };
         let serial = run_sweep(&grid(1)).unwrap();
         let parallel = run_sweep(&grid(4)).unwrap();
@@ -661,6 +693,54 @@ mod tests {
     }
 
     #[test]
+    fn golden_core_equivalence_paper_grid() {
+        // The acceptance contract: sweep results on the calendar core
+        // are bit-identical to the heap-based reference core on the
+        // paper (Table-2) grid — every deterministic field, fingerprint
+        // for fingerprint.
+        let grid = |core| SweepConfig {
+            seeds: vec![1, 2],
+            minutes: 4,
+            core,
+            ..tiny_config(2)
+        };
+        let calendar = run_sweep(&grid(CoreKind::Calendar)).unwrap();
+        let heap = run_sweep(&grid(CoreKind::Heap)).unwrap();
+        assert_eq!(calendar.core, CoreKind::Calendar);
+        assert_eq!(heap.core, CoreKind::Heap);
+        assert!(calendar.cells.iter().all(|c| c.metrics.completed > 0));
+        assert_eq!(
+            fingerprints(&calendar),
+            fingerprints(&heap),
+            "calendar core must reproduce the heap reference on the paper grid"
+        );
+    }
+
+    #[test]
+    fn golden_core_equivalence_city8_grid() {
+        let grid = |core| SweepConfig {
+            topology: Topology::EdgeCity {
+                zones: 8,
+                workers_per_zone: 2,
+            },
+            scenarios: crate::config::city_scenario_presets(8)[..2].to_vec(),
+            scalers: vec![AutoscalerKind::Hpa, AutoscalerKind::PpaArma],
+            seeds: vec![7],
+            minutes: 3,
+            threads: 2,
+            core,
+        };
+        let calendar = run_sweep(&grid(CoreKind::Calendar)).unwrap();
+        let heap = run_sweep(&grid(CoreKind::Heap)).unwrap();
+        assert!(calendar.cells.iter().all(|c| c.metrics.events > 100));
+        assert_eq!(
+            fingerprints(&calendar),
+            fingerprints(&heap),
+            "calendar core must reproduce the heap reference on the city-8 grid"
+        );
+    }
+
+    #[test]
     fn city_scenarios_rejected_on_paper_topology() {
         // 50-zone scenarios cannot run on the 2-zone Table-2 cluster.
         let cfg = SweepConfig {
@@ -670,6 +750,7 @@ mod tests {
             seeds: vec![1],
             minutes: 1,
             threads: 1,
+            core: CoreKind::Calendar,
         };
         let err = run_sweep(&cfg).unwrap_err();
         assert!(format!("{err}").contains("topology 'paper'"), "{err}");

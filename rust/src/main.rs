@@ -7,15 +7,19 @@
 //!          [--minutes N] [--seed S]
 //! ppa-edge sweep [--minutes N] [--seeds K] [--threads T]
 //!          [--topology paper|city-N[xW]] [--scenarios a,b,..]
-//!          [--scalers hpa,ppa-arma,..] [--out FILE]
+//!          [--scalers hpa,ppa-arma,..] [--core calendar|heap]
+//!          [--out FILE]
 //! ppa-edge info
 //! ```
+//!
+//! Every subcommand and flag is documented in `docs/CLI.md` (repo
+//! root); `ppa-edge --help` prints the same usage text.
 //!
 //! (clap is unavailable in the offline crate set; argument parsing is a
 //! small hand-rolled matcher.)
 
 use anyhow::{bail, Context};
-use ppa_edge::app::{TaskCosts, TaskType};
+use ppa_edge::app::TaskCosts;
 use ppa_edge::autoscaler::Hpa;
 use ppa_edge::experiments::{
     self, fig6_trace, fig7_model_comparison, fig8_update_policies, fig9_fig10_key_metric,
@@ -86,8 +90,10 @@ USAGE:
            [--minutes N] [--seed S]
   ppa-edge sweep [--minutes N] [--seeds K] [--threads T]
            [--topology paper|city-N[xW]] [--scenarios a,b,..]
-           [--scalers hpa,ppa-arma,ppa-naive] [--out FILE]
+           [--scalers hpa,ppa-arma,ppa-naive] [--core calendar|heap]
+           [--out FILE]
   ppa-edge info
+  ppa-edge help | --help | -h
 
 EXPERIMENTS (paper figures):
   fig6     scaled NASA trace generation
@@ -106,10 +112,13 @@ SWEEP (scenario matrix):
   step-surge, multi-zone-mix) on 'paper'; N-zone composites
   (cityN-diurnal-wave, cityN-flash-mosaic, cityN-step-carpet,
   cityN-rush-hour) on 'city-N'. Autoscalers default to
-  hpa,ppa-arma,ppa-naive.
+  hpa,ppa-arma,ppa-naive. --core selects the DES event queue: the fast
+  'calendar' bucket queue (default) or the 'heap' reference core —
+  results are bit-identical either way.
   City-scale example:
     ppa-edge sweep --topology city-50 --scalers hpa,ppa-arma --seeds 2
 
+Full flag reference: docs/CLI.md (including the sweep JSON schema).
 Artifacts must exist for LSTM experiments: run `make artifacts`.";
 
 fn main() {
@@ -121,6 +130,12 @@ fn main() {
 }
 
 fn dispatch(argv: &[String]) -> anyhow::Result<()> {
+    // `--help`/`-h` anywhere prints usage (before flag parsing, which
+    // would otherwise demand a value for `--help`).
+    if argv.iter().any(|a| a == "--help" || a == "-h") {
+        println!("{USAGE}");
+        return Ok(());
+    }
     let args = Args::parse(argv)?;
     match args.positional.first().map(String::as_str) {
         Some("experiment") => cmd_experiment(&args),
@@ -215,6 +230,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let threads = args.get_u64("threads", 0)? as usize;
     let out = args.get("out").unwrap_or("target/experiments/sweep.json");
     let topology = ppa_edge::config::Topology::parse(args.get("topology").unwrap_or("paper"))?;
+    let core = ppa_edge::sim::CoreKind::parse(args.get("core").unwrap_or("calendar"))?;
 
     // The preset library follows the topology: Table-2 scenarios on
     // `paper`, generated N-zone `cityN-*` composites on `city-N[xW]`.
@@ -255,6 +271,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         seeds: (0..n_seeds).map(|i| 1000 + i).collect(),
         minutes,
         threads,
+        core,
     };
 
     println!(
@@ -331,8 +348,11 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let events = world.run_until(minutes * MIN);
     let elapsed = wall.elapsed();
 
-    let sort = summarize(&world.response_times(TaskType::Sort));
-    let eigen = summarize(&world.response_times(TaskType::Eigen));
+    // Response stats stream in constant memory (Welford moments +
+    // log-histogram percentiles) — no per-request log is retained.
+    let stats = &world.app.stats;
+    let sort = stats.sort.summary();
+    let eigen = stats.eigen.summary();
     let rirs: Vec<f64> = world.rir_log.iter().map(|s| s.rir).collect();
     let rir = summarize(&rirs);
     println!(
@@ -341,12 +361,18 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         minutes as f64 * 60.0 / elapsed.as_secs_f64()
     );
     println!(
-        "  sort  resp: {:.4} ± {:.4} s (n={})",
-        sort.mean, sort.std, sort.n
+        "  sort  resp: {:.4} ± {:.4} s (n={}, p95 ≈ {:.4})",
+        sort.mean,
+        sort.std,
+        sort.n,
+        stats.sort.quantile(95.0)
     );
     println!(
-        "  eigen resp: {:.3} ± {:.3} s (n={})",
-        eigen.mean, eigen.std, eigen.n
+        "  eigen resp: {:.3} ± {:.3} s (n={}, p95 ≈ {:.3})",
+        eigen.mean,
+        eigen.std,
+        eigen.n,
+        stats.eigen.quantile(95.0)
     );
     println!("  RIR: {:.3} ± {:.3}", rir.mean, rir.std);
     Ok(())

@@ -294,6 +294,7 @@ mod tests {
         };
         print_sweep(&SweepResult {
             topology: "paper".into(),
+            core: crate::sim::CoreKind::Calendar,
             cells: vec![CellResult {
                 metrics,
                 wall_secs: 0.1,

@@ -1,8 +1,9 @@
 //! Offline stand-in for the PJRT runtime (built when the `pjrt` feature
 //! is off — the default, since the offline crate set has no `xla`).
 //!
-//! The API mirrors [`super::pjrt::LstmRuntime`] exactly so every caller
-//! typechecks; [`LstmRuntime::load`] always fails, which makes
+//! The API mirrors the `pjrt` module's `LstmRuntime` exactly (that
+//! module only exists behind the `pjrt` feature, so no doc link) so
+//! every caller typechecks; [`LstmRuntime::load`] always fails, which makes
 //! `experiments::try_runtime()` return `None` and every LSTM experiment
 //! take its documented "artifacts not built" skip path.
 

@@ -1,14 +1,31 @@
 //! Deterministic discrete-event simulation core.
 //!
-//! Time is simulated microseconds (`Time`). The engine is a classic
-//! event-queue DES: a binary heap of `(time, seq, Event)` entries where
-//! `seq` breaks ties so identical-timestamp events dispatch in insertion
-//! order — this makes whole-cluster runs bit-reproducible for a given
-//! seed, which the paper-figure experiments rely on.
+//! Time is simulated microseconds ([`Time`]). The engine is a classic
+//! event-queue DES built on [`EventQueue`] — by default a calendar
+//! (bucket) queue, with a `BinaryHeap` reference core retained behind
+//! [`CoreKind::Heap`] for golden-equivalence tests and benchmarks.
+//!
+//! # Determinism contract
+//!
+//! Every queued event carries a global schedule counter `seq`; events
+//! pop in strictly ascending `(time, seq)` order, so identical-timestamp
+//! events dispatch in insertion (FIFO) order. Past-time schedules clamp
+//! to `now`. Both queue cores honor the same contract, which makes
+//! whole-cluster runs bit-reproducible for a given seed — the
+//! paper-figure experiments and the sweep harness rely on this.
+//!
+//! # Identifier types
+//!
+//! [`PodId`], [`NodeId`] and [`ServiceId`] are plain indices into the
+//! world's slabs. [`RequestId`] is a *generational* handle into the
+//! request arena (`crate::app::RequestArena`): the `index` addresses a
+//! slot, the `generation` must match the slot's current generation, so
+//! handles to completed (freed-and-reused) requests miss instead of
+//! aliasing a new request.
 
 mod queue;
 
-pub use queue::EventQueue;
+pub use queue::{CoreKind, EventQueue};
 
 /// Simulated time in microseconds since simulation start.
 pub type Time = u64;
@@ -42,14 +59,35 @@ pub struct NodeId(pub u32);
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ServiceId(pub u32);
 
+/// Generational handle to an in-flight request in the app's request
+/// arena (`crate::app::RequestArena`).
+///
+/// `index` is the arena slot; `generation` is the slot's generation at
+/// insertion time. The arena bumps a slot's generation when the request
+/// completes, so a stale handle (e.g. an event referring to an already
+/// freed request) fails the generation check and resolves to `None`
+/// instead of aliasing whatever request reuses the slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId {
+    pub index: u32,
+    pub generation: u32,
+}
+
+impl RequestId {
+    pub fn new(index: u32, generation: u32) -> Self {
+        RequestId { index, generation }
+    }
+}
+
 /// Simulation events. One enum for the whole world keeps dispatch flat
-/// and allocation-free on the hot path.
+/// and allocation-free on the hot path: request events carry copyable
+/// [`RequestId`] handles, never owned payloads.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
     /// A client request enters the system at its origin zone.
-    RequestArrival { request_id: u64 },
+    RequestArrival { request_id: RequestId },
     /// A pod finished servicing a request.
-    ServiceComplete { pod: PodId, request_id: u64 },
+    ServiceComplete { pod: PodId, request_id: RequestId },
     /// A pod finished container init and is now Running.
     PodRunning { pod: PodId },
     /// A pod finished draining and is gone.
@@ -80,5 +118,13 @@ mod tests {
         assert_eq!(SEC, 1_000 * MS);
         assert_eq!(MIN, 60 * SEC);
         assert_eq!(HOUR, 3600 * SEC);
+    }
+
+    #[test]
+    fn request_ids_compare_by_index_then_generation() {
+        let a = RequestId::new(1, 0);
+        assert_eq!(a, RequestId::new(1, 0));
+        assert_ne!(a, RequestId::new(1, 1));
+        assert_ne!(a, RequestId::new(2, 0));
     }
 }

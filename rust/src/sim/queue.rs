@@ -1,9 +1,81 @@
-//! The event queue: a min-heap over `(time, seq)` with stable FIFO order
-//! for simultaneous events.
+//! The event queue: a deterministic calendar (bucket) queue with a
+//! retained binary-heap reference backend.
+//!
+//! # Ordering contract
+//!
+//! Both backends pop events in strictly ascending `(time, seq)` order,
+//! where `seq` is the global schedule counter: simultaneous events
+//! dispatch in insertion (FIFO) order. This is the determinism contract
+//! the whole simulator rests on — swapping backends never changes a
+//! run's event order, which is asserted by
+//! `prop_calendar_queue_matches_heap_reference` (tests/properties.rs)
+//! and by the golden core-equivalence sweep tests.
+//!
+//! # Calendar queue layout
+//!
+//! The default [`CoreKind::Calendar`] backend is a near-future time
+//! wheel over fixed-width buckets plus a sorted overflow map:
+//!
+//! * **Wheel** — `NUM_BUCKETS` (4096) slots of `2^BUCKET_SHIFT` µs
+//!   (≈0.52 s) each, covering a ≈36-minute horizon past the cursor.
+//!   Scheduling into the wheel is an O(1) unsorted push; a bucket is
+//!   sorted once, when the cursor reaches it.
+//! * **Current bucket** — entries at or before the cursor, kept sorted
+//!   descending by `(time, seq)` so the minimum pops from the back.
+//!   Events scheduled at (or clamped to) `now` binary-search into this
+//!   run, preserving FIFO order within a timestamp.
+//! * **Overflow** — a `BTreeMap<(Time, seq), Event>` for events beyond
+//!   the wheel horizon (e.g. hour-scale model-update ticks). Invariant:
+//!   every overflow entry is later than every wheel entry; entries are
+//!   drained into wheel slots as the cursor advances and the horizon
+//!   grows, so each entry moves at most once.
+//!
+//! Past-time schedules are clamped to `now` (dispatching next, in FIFO
+//! order) — identical under both backends.
 
 use super::{Event, Time};
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use anyhow::bail;
+use std::cell::Cell;
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeMap, BinaryHeap};
+use std::mem;
+
+/// Which event-queue backend a simulation core runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CoreKind {
+    /// The calendar/bucket queue (the fast default).
+    #[default]
+    Calendar,
+    /// The `BinaryHeap` reference core, retained for golden-equivalence
+    /// tests and old-vs-new benchmarks.
+    Heap,
+}
+
+impl CoreKind {
+    pub const ALL: [CoreKind; 2] = [CoreKind::Calendar, CoreKind::Heap];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CoreKind::Calendar => "calendar",
+            CoreKind::Heap => "heap",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "calendar" => Ok(CoreKind::Calendar),
+            "heap" => Ok(CoreKind::Heap),
+            other => bail!("unknown core '{other}' (calendar|heap)"),
+        }
+    }
+}
+
+/// Wheel-bucket width: `2^19` µs ≈ 0.52 s.
+const BUCKET_SHIFT: u32 = 19;
+/// Wheel size (power of two); horizon = `NUM_BUCKETS << BUCKET_SHIFT`
+/// ≈ 36 simulated minutes past the cursor.
+const NUM_BUCKETS: usize = 4096;
+const BUCKET_MASK: u64 = NUM_BUCKETS as u64 - 1;
 
 #[derive(Debug)]
 struct Entry {
@@ -27,7 +99,7 @@ impl PartialOrd for Entry {
 
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse for min-heap semantics on BinaryHeap (a max-heap).
+        // Reverse for min-time semantics on BinaryHeap (a max-heap).
         other
             .time
             .cmp(&self.time)
@@ -35,20 +107,194 @@ impl Ord for Entry {
     }
 }
 
-/// Deterministic min-time event queue.
-#[derive(Debug, Default)]
+/// The calendar backend. See the module docs for the layout invariants.
+#[derive(Debug)]
+struct CalendarQueue {
+    /// Wheel slot `i` holds (unsorted) entries of the unique absolute
+    /// bucket `b` with `b & BUCKET_MASK == i` and
+    /// `cursor < b < cursor + NUM_BUCKETS`.
+    slots: Vec<Vec<Entry>>,
+    /// Entries of buckets at or before the cursor, sorted descending by
+    /// `(time, seq)`: the global minimum is `current.last()`.
+    current: Vec<Entry>,
+    /// Absolute bucket index the cursor is on (monotonically advancing).
+    cursor: u64,
+    /// Number of entries across all wheel slots.
+    wheel_len: usize,
+    /// Beyond-horizon entries, ordered by `(time, seq)`.
+    overflow: BTreeMap<(Time, u64), Event>,
+    /// Scan accelerator. Invariant: no wheel slot holds an entry of a
+    /// bucket `b` with `cursor < b < scan_hint` — so peeks and cursor
+    /// advances may start at `max(cursor + 1, scan_hint)` instead of
+    /// walking every empty slot. Lowered on wheel inserts
+    /// (schedule/refill), tightened by peek scans (`Cell`: peeking is
+    /// `&self`). A stale-low hint only costs scan time, never order.
+    scan_hint: Cell<u64>,
+}
+
+impl CalendarQueue {
+    fn new() -> Self {
+        CalendarQueue {
+            slots: (0..NUM_BUCKETS).map(|_| Vec::new()).collect(),
+            current: Vec::new(),
+            cursor: 0,
+            wheel_len: 0,
+            overflow: BTreeMap::new(),
+            scan_hint: Cell::new(0),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.current.len() + self.wheel_len + self.overflow.len()
+    }
+
+    fn schedule(&mut self, entry: Entry) {
+        let bucket = entry.time >> BUCKET_SHIFT;
+        if bucket <= self.cursor {
+            // At-or-before the cursor (now-clamped or current-bucket
+            // events): keep `current` sorted. The entry's fresh `seq` is
+            // the largest ever issued, so among equal timestamps it lands
+            // closest to the front — popping last, preserving FIFO.
+            let key = (entry.time, entry.seq);
+            let idx = self.current.partition_point(|e| (e.time, e.seq) > key);
+            self.current.insert(idx, entry);
+        } else if bucket < self.cursor + NUM_BUCKETS as u64 {
+            self.slots[(bucket & BUCKET_MASK) as usize].push(entry);
+            self.wheel_len += 1;
+            self.scan_hint.set(self.scan_hint.get().min(bucket));
+        } else {
+            self.overflow.insert((entry.time, entry.seq), entry.event);
+        }
+    }
+
+    /// Move overflow entries that now fit under the wheel horizon into
+    /// their slots. Called whenever the cursor advances.
+    fn refill_from_overflow(&mut self) {
+        let horizon = self.cursor + NUM_BUCKETS as u64;
+        while let Some((&(time, _), _)) = self.overflow.first_key_value() {
+            if time >> BUCKET_SHIFT >= horizon {
+                break;
+            }
+            let ((time, seq), event) = self.overflow.pop_first().unwrap();
+            let bucket = time >> BUCKET_SHIFT;
+            self.slots[(bucket & BUCKET_MASK) as usize].push(Entry { time, seq, event });
+            self.wheel_len += 1;
+            self.scan_hint.set(self.scan_hint.get().min(bucket));
+        }
+    }
+
+    /// Advance the cursor to the next non-empty bucket and sort it into
+    /// `current`. Returns false when the queue is empty.
+    fn advance(&mut self) -> bool {
+        debug_assert!(self.current.is_empty());
+        loop {
+            if self.wheel_len == 0 {
+                // Jump straight to the first overflow bucket (skipping a
+                // potentially huge run of empty wheel rotations).
+                let Some((&(time, _), _)) = self.overflow.first_key_value() else {
+                    return false;
+                };
+                self.cursor = time >> BUCKET_SHIFT;
+            } else {
+                // By the scan-hint invariant there is nothing between
+                // cursor and the hint — skip the empty run in one step.
+                self.cursor = (self.cursor + 1).max(self.scan_hint.get());
+            }
+            self.refill_from_overflow();
+            let slot = &mut self.slots[(self.cursor & BUCKET_MASK) as usize];
+            if !slot.is_empty() {
+                // Swap rather than take: the drained slot inherits the
+                // old `current`'s capacity, recycling allocations.
+                mem::swap(&mut self.current, slot);
+                self.wheel_len -= self.current.len();
+                self.current
+                    .sort_unstable_by_key(|e| Reverse((e.time, e.seq)));
+                return true;
+            }
+        }
+    }
+
+    /// Pop the next entry if its time is `<= limit`.
+    fn pop_due(&mut self, limit: Time) -> Option<Entry> {
+        loop {
+            if let Some(e) = self.current.last() {
+                if e.time > limit {
+                    return None;
+                }
+                return self.current.pop();
+            }
+            if !self.advance() {
+                return None;
+            }
+        }
+    }
+
+    fn peek_time(&self) -> Option<Time> {
+        if let Some(e) = self.current.last() {
+            return Some(e.time);
+        }
+        if self.wheel_len > 0 {
+            // Start at the hint (nothing lives below it) and tighten it
+            // to the first non-empty bucket, so repeated peeks are O(1).
+            let start = self.scan_hint.get().max(self.cursor + 1);
+            for bucket in start..self.cursor + NUM_BUCKETS as u64 {
+                let slot = &self.slots[(bucket & BUCKET_MASK) as usize];
+                if let Some(t) = slot.iter().map(|e| e.time).min() {
+                    self.scan_hint.set(bucket);
+                    return Some(t);
+                }
+            }
+        }
+        self.overflow.keys().next().map(|&(t, _)| t)
+    }
+}
+
+#[derive(Debug)]
+enum Backend {
+    Calendar(CalendarQueue),
+    Heap(BinaryHeap<Entry>),
+}
+
+/// Deterministic min-time event queue (see the module docs for the
+/// ordering contract and the calendar layout).
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Entry>,
+    backend: Backend,
     seq: u64,
     now: Time,
 }
 
+impl Default for EventQueue {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
 impl EventQueue {
+    /// A queue on the default calendar core.
     pub fn new() -> Self {
+        EventQueue::with_core(CoreKind::Calendar)
+    }
+
+    /// A queue on an explicit core (the heap core is the golden
+    /// reference for equivalence tests and benchmarks).
+    pub fn with_core(core: CoreKind) -> Self {
+        let backend = match core {
+            CoreKind::Calendar => Backend::Calendar(CalendarQueue::new()),
+            CoreKind::Heap => Backend::Heap(BinaryHeap::with_capacity(4096)),
+        };
         EventQueue {
-            heap: BinaryHeap::with_capacity(4096),
+            backend,
             seq: 0,
             now: 0,
+        }
+    }
+
+    /// Which backend this queue runs on.
+    pub fn core(&self) -> CoreKind {
+        match self.backend {
+            Backend::Calendar(_) => CoreKind::Calendar,
+            Backend::Heap(_) => CoreKind::Heap,
         }
     }
 
@@ -61,12 +307,16 @@ impl EventQueue {
     /// past are clamped to `now` (dispatching immediately, in order).
     pub fn schedule_at(&mut self, at: Time, event: Event) {
         let time = at.max(self.now);
-        self.heap.push(Entry {
+        let entry = Entry {
             time,
             seq: self.seq,
             event,
-        });
+        };
         self.seq += 1;
+        match &mut self.backend {
+            Backend::Calendar(c) => c.schedule(entry),
+            Backend::Heap(h) => h.push(entry),
+        }
     }
 
     /// Schedule `event` after a relative delay.
@@ -76,7 +326,23 @@ impl EventQueue {
 
     /// Pop the next event, advancing the clock.
     pub fn pop(&mut self) -> Option<(Time, Event)> {
-        let entry = self.heap.pop()?;
+        self.pop_due(Time::MAX)
+    }
+
+    /// Pop the next event only if it is due at or before `limit`
+    /// (leaving the queue untouched otherwise). This is the run-loop
+    /// primitive: it avoids the separate peek scan `pop` would repeat.
+    pub fn pop_due(&mut self, limit: Time) -> Option<(Time, Event)> {
+        let entry = match &mut self.backend {
+            Backend::Calendar(c) => c.pop_due(limit)?,
+            Backend::Heap(h) => {
+                if h.peek().is_some_and(|e| e.time <= limit) {
+                    h.pop()?
+                } else {
+                    return None;
+                }
+            }
+        };
         debug_assert!(entry.time >= self.now, "time went backwards");
         self.now = entry.time;
         Some((entry.time, entry.event))
@@ -84,93 +350,209 @@ impl EventQueue {
 
     /// Time of the next pending event, if any.
     pub fn peek_time(&self) -> Option<Time> {
-        self.heap.peek().map(|e| e.time)
+        match &self.backend {
+            Backend::Calendar(c) => c.peek_time(),
+            Backend::Heap(h) => h.peek().map(|e| e.time),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.backend {
+            Backend::Calendar(c) => c.len(),
+            Backend::Heap(h) => h.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::SEC;
+    use crate::sim::{HOUR, MIN, SEC};
 
     fn tick(g: u32) -> Event {
         Event::WorkloadTick { generator: g }
     }
 
+    /// Run `f` against a fresh queue on each core.
+    fn on_each_core(f: impl Fn(EventQueue)) {
+        for core in CoreKind::ALL {
+            f(EventQueue::with_core(core));
+        }
+    }
+
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.schedule_at(3 * SEC, tick(3));
-        q.schedule_at(1 * SEC, tick(1));
-        q.schedule_at(2 * SEC, tick(2));
-        let order: Vec<u32> = std::iter::from_fn(|| q.pop())
-            .map(|(_, e)| match e {
-                Event::WorkloadTick { generator } => generator,
-                _ => unreachable!(),
-            })
-            .collect();
-        assert_eq!(order, vec![1, 2, 3]);
+        on_each_core(|mut q| {
+            q.schedule_at(3 * SEC, tick(3));
+            q.schedule_at(SEC, tick(1));
+            q.schedule_at(2 * SEC, tick(2));
+            let order: Vec<u32> = std::iter::from_fn(|| q.pop())
+                .map(|(_, e)| match e {
+                    Event::WorkloadTick { generator } => generator,
+                    _ => unreachable!(),
+                })
+                .collect();
+            assert_eq!(order, vec![1, 2, 3]);
+        });
     }
 
     #[test]
     fn simultaneous_events_fifo() {
-        let mut q = EventQueue::new();
-        for g in 0..50 {
-            q.schedule_at(5 * SEC, tick(g));
-        }
-        let order: Vec<u32> = std::iter::from_fn(|| q.pop())
-            .map(|(_, e)| match e {
-                Event::WorkloadTick { generator } => generator,
-                _ => unreachable!(),
-            })
-            .collect();
-        assert_eq!(order, (0..50).collect::<Vec<_>>());
+        on_each_core(|mut q| {
+            for g in 0..50 {
+                q.schedule_at(5 * SEC, tick(g));
+            }
+            let order: Vec<u32> = std::iter::from_fn(|| q.pop())
+                .map(|(_, e)| match e {
+                    Event::WorkloadTick { generator } => generator,
+                    _ => unreachable!(),
+                })
+                .collect();
+            assert_eq!(order, (0..50).collect::<Vec<_>>());
+        });
     }
 
     #[test]
     fn clock_advances_monotonically() {
-        let mut q = EventQueue::new();
-        q.schedule_at(10, tick(0));
-        q.schedule_at(5, tick(1));
-        let (t1, _) = q.pop().unwrap();
-        assert_eq!(t1, 5);
-        assert_eq!(q.now(), 5);
-        // Scheduling in the past clamps to now.
-        q.schedule_at(1, tick(2));
-        let (t2, e2) = q.pop().unwrap();
-        assert_eq!(t2, 5);
-        assert_eq!(e2, tick(2));
-        let (t3, _) = q.pop().unwrap();
-        assert_eq!(t3, 10);
+        on_each_core(|mut q| {
+            q.schedule_at(10, tick(0));
+            q.schedule_at(5, tick(1));
+            let (t1, _) = q.pop().unwrap();
+            assert_eq!(t1, 5);
+            assert_eq!(q.now(), 5);
+            // Scheduling in the past clamps to now.
+            q.schedule_at(1, tick(2));
+            let (t2, e2) = q.pop().unwrap();
+            assert_eq!(t2, 5);
+            assert_eq!(e2, tick(2));
+            let (t3, _) = q.pop().unwrap();
+            assert_eq!(t3, 10);
+        });
     }
 
     #[test]
     fn schedule_in_is_relative() {
-        let mut q = EventQueue::new();
-        q.schedule_at(7, tick(0));
-        q.pop().unwrap();
-        q.schedule_in(3, tick(1));
-        let (t, _) = q.pop().unwrap();
-        assert_eq!(t, 10);
+        on_each_core(|mut q| {
+            q.schedule_at(7, tick(0));
+            q.pop().unwrap();
+            q.schedule_in(3, tick(1));
+            let (t, _) = q.pop().unwrap();
+            assert_eq!(t, 10);
+        });
     }
 
     #[test]
     fn len_and_empty() {
-        let mut q = EventQueue::new();
-        assert!(q.is_empty());
-        q.schedule_at(1, tick(0));
-        assert_eq!(q.len(), 1);
-        assert_eq!(q.peek_time(), Some(1));
-        q.pop();
-        assert!(q.is_empty());
-        assert_eq!(q.peek_time(), None);
+        on_each_core(|mut q| {
+            assert!(q.is_empty());
+            q.schedule_at(1, tick(0));
+            assert_eq!(q.len(), 1);
+            assert_eq!(q.peek_time(), Some(1));
+            q.pop();
+            assert!(q.is_empty());
+            assert_eq!(q.peek_time(), None);
+        });
+    }
+
+    #[test]
+    fn pop_due_respects_limit() {
+        on_each_core(|mut q| {
+            q.schedule_at(5 * SEC, tick(0));
+            q.schedule_at(15 * SEC, tick(1));
+            assert_eq!(q.pop_due(4 * SEC), None);
+            assert_eq!(q.len(), 2, "declined pop must not lose events");
+            // Inclusive limit.
+            assert_eq!(q.pop_due(5 * SEC), Some((5 * SEC, tick(0))));
+            assert_eq!(q.pop_due(10 * SEC), None);
+            // Scheduling after a declined pop_due stays ordered.
+            q.schedule_at(8 * SEC, tick(2));
+            assert_eq!(q.pop_due(20 * SEC), Some((8 * SEC, tick(2))));
+            assert_eq!(q.pop_due(20 * SEC), Some((15 * SEC, tick(1))));
+            assert!(q.is_empty());
+        });
+    }
+
+    #[test]
+    fn far_future_overflow_roundtrips() {
+        // Events far past the wheel horizon (≈36 min) live in overflow
+        // and still pop in global order, including at the boundary.
+        on_each_core(|mut q| {
+            q.schedule_at(3 * HOUR, tick(3));
+            q.schedule_at(10 * SEC, tick(0));
+            q.schedule_at(50 * MIN, tick(2));
+            q.schedule_at(40 * MIN, tick(1));
+            assert_eq!(q.peek_time(), Some(10 * SEC));
+            let order: Vec<(Time, u32)> = std::iter::from_fn(|| q.pop())
+                .map(|(t, e)| match e {
+                    Event::WorkloadTick { generator } => (t, generator),
+                    _ => unreachable!(),
+                })
+                .collect();
+            assert_eq!(
+                order,
+                vec![
+                    (10 * SEC, 0),
+                    (40 * MIN, 1),
+                    (50 * MIN, 2),
+                    (3 * HOUR, 3)
+                ]
+            );
+        });
+    }
+
+    #[test]
+    fn wheel_wraps_across_many_rotations() {
+        // Periodic rescheduling far beyond one wheel rotation: the slot
+        // indices wrap (mod NUM_BUCKETS) without ever colliding.
+        on_each_core(|mut q| {
+            q.schedule_at(0, tick(0));
+            let mut pops = 0u32;
+            let mut last = 0;
+            while let Some((t, _)) = q.pop() {
+                assert!(t >= last);
+                last = t;
+                pops += 1;
+                if pops < 500 {
+                    // 90 s steps cross bucket boundaries; 500 steps cross
+                    // the 36-minute horizon ~20 times.
+                    q.schedule_in(90 * SEC, tick(pops));
+                }
+            }
+            assert_eq!(pops, 500);
+            assert_eq!(last, 499 * 90 * SEC);
+        });
+    }
+
+    #[test]
+    fn same_timestamp_burst_interleaved_with_pops() {
+        on_each_core(|mut q| {
+            q.schedule_at(SEC, tick(0));
+            q.schedule_at(SEC, tick(1));
+            assert_eq!(q.pop(), Some((SEC, tick(0))));
+            // now == 1 s; a past schedule clamps to 1 s and must pop
+            // after the already-queued tick(1) (FIFO by seq).
+            q.schedule_at(0, tick(2));
+            q.schedule_at(SEC, tick(3));
+            assert_eq!(q.pop(), Some((SEC, tick(1))));
+            assert_eq!(q.pop(), Some((SEC, tick(2))));
+            assert_eq!(q.pop(), Some((SEC, tick(3))));
+        });
+    }
+
+    #[test]
+    fn core_kind_parse_and_names() {
+        assert_eq!(CoreKind::parse("calendar").unwrap(), CoreKind::Calendar);
+        assert_eq!(CoreKind::parse("heap").unwrap(), CoreKind::Heap);
+        assert!(CoreKind::parse("btree").is_err());
+        assert_eq!(CoreKind::default().name(), "calendar");
+        assert_eq!(EventQueue::new().core(), CoreKind::Calendar);
+        assert_eq!(
+            EventQueue::with_core(CoreKind::Heap).core(),
+            CoreKind::Heap
+        );
     }
 }

@@ -2,6 +2,24 @@
 //! t-test (the paper reports p < 1e-3 on every evaluation comparison),
 //! percentiles and histograms. Special functions (log-gamma, regularized
 //! incomplete beta) are implemented from scratch — no stats crate offline.
+//!
+//! Two families live here:
+//!
+//! * **Batch** — [`summarize`], [`percentile`], [`histogram`],
+//!   [`welch_t_test`] over collected `&[f64]` samples; used by the
+//!   paper-figure harnesses, which retain exact traces.
+//! * **Streaming** — [`StreamingStats`]/[`LogHistogram`]
+//!   (`streaming` module): single-pass Welford moments plus fixed-bin
+//!   log-histogram quantiles in constant memory. This is what the DES
+//!   hot path records completed requests into, so city-scale sweep
+//!   cells never accumulate an unbounded response log. See the
+//!   `streaming` module docs for the binning and determinism rules.
+
+mod streaming;
+
+pub use streaming::{
+    LogHistogram, StreamingStats, LOG_HIST_BINS_PER_OCTAVE, LOG_HIST_MIN, LOG_HIST_OCTAVES,
+};
 
 /// Summary of a sample.
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -1,0 +1,411 @@
+//! Streaming (single-pass, bounded-memory) statistics: Welford moments
+//! plus a fixed-bin log-scale histogram for quantile estimates.
+//!
+//! The DES used to keep every completed request in an unbounded
+//! `Vec<ResponseRecord>` and re-collect/sort it for each summary.
+//! [`StreamingStats`] replaces that on the hot path: O(1) state per
+//! sample, constant memory, and deterministic results — recording the
+//! same value sequence always produces bit-identical state, which the
+//! core-equivalence tests lean on via [`StreamingStats::fingerprint`].
+//!
+//! # Histogram binning
+//!
+//! [`LogHistogram`] covers `[LOG_HIST_MIN, LOG_HIST_MIN * 2^LOG_HIST_OCTAVES)`
+//! (1 ms to ~1049 s with the defaults) with
+//! [`LOG_HIST_BINS_PER_OCTAVE`] bins per octave: bin `i` spans
+//! `[MIN * 2^(i/BPO), MIN * 2^((i+1)/BPO))`. With 32 bins/octave each
+//! bin is a factor of `2^(1/32) ≈ 1.022` wide, so quantile estimates
+//! (reported at the geometric bin center) carry ≤ ~1.1% relative error.
+//! Samples below the range (or non-finite) count in an underflow
+//! bucket, samples at/above the top in an overflow bucket; totals are
+//! never lost.
+
+use super::Summary;
+use std::fmt::Write as _;
+
+/// Lower edge of the histogram range (seconds): 1 ms.
+pub const LOG_HIST_MIN: f64 = 1e-3;
+/// Bins per octave (factor-of-two span).
+pub const LOG_HIST_BINS_PER_OCTAVE: usize = 32;
+/// Octaves covered: `1e-3 * 2^20 ≈ 1049` seconds at the top.
+pub const LOG_HIST_OCTAVES: usize = 20;
+const NUM_BINS: usize = LOG_HIST_BINS_PER_OCTAVE * LOG_HIST_OCTAVES;
+
+/// Fixed-bin log-scale histogram (see the module docs for the binning).
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    total: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: vec![0; NUM_BINS],
+            underflow: 0,
+            overflow: 0,
+            total: 0,
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, x: f64) {
+        self.total += 1;
+        // NaN and sub-range values (including 0 and negatives) land in
+        // the underflow bucket.
+        if x.is_nan() || x < LOG_HIST_MIN {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((x / LOG_HIST_MIN).log2() * LOG_HIST_BINS_PER_OCTAVE as f64) as usize;
+        if idx >= NUM_BINS {
+            self.overflow += 1;
+        } else {
+            self.counts[idx] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    /// Raw bin counts (for reports and fingerprints).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// `[lower, upper)` edges of bin `i`.
+    pub fn bin_bounds(i: usize) -> (f64, f64) {
+        let lo = LOG_HIST_MIN * 2f64.powf(i as f64 / LOG_HIST_BINS_PER_OCTAVE as f64);
+        let hi = LOG_HIST_MIN * 2f64.powf((i + 1) as f64 / LOG_HIST_BINS_PER_OCTAVE as f64);
+        (lo, hi)
+    }
+
+    /// Estimated p-th percentile, `p` in `[0, 100]` (nearest-rank over
+    /// the bins, reported at the geometric bin center — ≤ ~1.1%
+    /// relative error with the default 32 bins/octave). NaN when empty.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let p = p.clamp(0.0, 100.0);
+        let rank = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut cum = self.underflow;
+        if rank <= cum {
+            return LOG_HIST_MIN;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if rank <= cum {
+                let center = (i as f64 + 0.5) / LOG_HIST_BINS_PER_OCTAVE as f64;
+                return LOG_HIST_MIN * 2f64.powf(center);
+            }
+        }
+        // Overflow bucket: report the range's upper edge.
+        LOG_HIST_MIN * 2f64.powf(LOG_HIST_OCTAVES as f64)
+    }
+}
+
+/// Single-pass count / mean / std / extrema (Welford) plus a
+/// [`LogHistogram`] for quantiles. The streaming replacement for
+/// collecting samples into a `Vec` and calling [`super::summarize`] /
+/// [`super::percentile`].
+#[derive(Debug, Clone)]
+pub struct StreamingStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    hist: LogHistogram,
+}
+
+impl Default for StreamingStats {
+    fn default() -> Self {
+        StreamingStats::new()
+    }
+}
+
+impl StreamingStats {
+    pub fn new() -> Self {
+        StreamingStats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            hist: LogHistogram::new(),
+        }
+    }
+
+    /// Record one sample (Welford update + histogram).
+    pub fn record(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        self.hist.record(x);
+    }
+
+    /// Fold `other` into `self` (Chan et al. parallel-Welford merge).
+    pub fn merge(&mut self, other: &StreamingStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let d = other.mean - self.mean;
+        let n = na + nb;
+        self.mean += d * nb / n;
+        self.m2 += other.m2 + d * d * na * nb / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (a, b) in self.hist.counts.iter_mut().zip(&other.hist.counts) {
+            *a += b;
+        }
+        self.hist.underflow += other.hist.underflow;
+        self.hist.overflow += other.hist.overflow;
+        self.hist.total += other.hist.total;
+    }
+
+    pub fn n(&self) -> usize {
+        self.n as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Mean (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Sample standard deviation, n-1 denominator (0 for n = 1, NaN when
+    /// empty) — the same conventions as [`super::summarize`].
+    pub fn std(&self) -> f64 {
+        match self.n {
+            0 => f64::NAN,
+            1 => 0.0,
+            n => (self.m2 / (n - 1) as f64).sqrt(),
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Estimated p-th percentile from the log histogram, `p` in
+    /// `[0, 100]`.
+    pub fn quantile(&self, p: f64) -> f64 {
+        self.hist.quantile(p)
+    }
+
+    pub fn histogram(&self) -> &LogHistogram {
+        &self.hist
+    }
+
+    /// The [`Summary`] view (for reports that already speak `Summary`).
+    pub fn summary(&self) -> Summary {
+        Summary {
+            n: self.n(),
+            mean: self.mean(),
+            std: self.std(),
+            min: self.min(),
+            max: self.max(),
+        }
+    }
+
+    /// Bit-exact digest of the full state (floats rendered as raw bits,
+    /// plus every non-empty histogram bin). Two runs are event-for-event
+    /// identical iff their digests match — the comparison primitive for
+    /// determinism and core-equivalence tests.
+    pub fn fingerprint(&self) -> String {
+        let mut s = format!(
+            "n={} mean={:016x} m2={:016x} min={:016x} max={:016x} under={} over={}",
+            self.n,
+            self.mean.to_bits(),
+            self.m2.to_bits(),
+            self.min.to_bits(),
+            self.max.to_bits(),
+            self.hist.underflow,
+            self.hist.overflow,
+        );
+        for (i, &c) in self.hist.counts.iter().enumerate() {
+            if c != 0 {
+                let _ = write!(s, " b{i}={c}");
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::summarize;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn matches_summarize_on_small_sample() {
+        let xs = [0.5, 1.25, 0.75, 2.0, 0.5];
+        let mut s = StreamingStats::new();
+        for &x in &xs {
+            s.record(x);
+        }
+        let batch = summarize(&xs);
+        assert_eq!(s.n(), batch.n);
+        assert!((s.mean() - batch.mean).abs() < 1e-12);
+        assert!((s.std() - batch.std).abs() < 1e-12);
+        assert_eq!(s.min(), batch.min);
+        assert_eq!(s.max(), batch.max);
+        let sum = s.summary();
+        assert_eq!(sum.n, 5);
+        assert!((sum.mean - batch.mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_are_nan_like_summarize() {
+        let s = StreamingStats::new();
+        assert_eq!(s.n(), 0);
+        assert!(s.is_empty());
+        assert!(s.mean().is_nan());
+        assert!(s.std().is_nan());
+        assert!(s.min().is_nan());
+        assert!(s.max().is_nan());
+        assert!(s.quantile(50.0).is_nan());
+    }
+
+    #[test]
+    fn single_sample_std_is_zero() {
+        let mut s = StreamingStats::new();
+        s.record(3.0);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.mean(), 3.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_approximate_exact_percentiles() {
+        let mut rng = Pcg64::new(9, 0);
+        // Lognormal-ish response times around 0.5 s.
+        let xs: Vec<f64> = (0..20_000)
+            .map(|_| (0.5 * (1.0 + 0.3 * rng.normal()).abs()).max(1e-3))
+            .collect();
+        let mut s = StreamingStats::new();
+        for &x in &xs {
+            s.record(x);
+        }
+        for p in [50.0, 95.0, 99.0] {
+            let exact = crate::stats::percentile(&xs, p);
+            let est = s.quantile(p);
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < 0.03, "p{p}: est {est} vs exact {exact} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn bin_bounds_partition_the_range() {
+        let (lo0, hi0) = LogHistogram::bin_bounds(0);
+        assert!((lo0 - LOG_HIST_MIN).abs() < 1e-15);
+        let (lo1, _) = LogHistogram::bin_bounds(1);
+        assert_eq!(hi0, lo1);
+        // One octave = LOG_HIST_BINS_PER_OCTAVE bins = a factor of 2.
+        let (lo32, _) = LogHistogram::bin_bounds(LOG_HIST_BINS_PER_OCTAVE);
+        assert!((lo32 / lo0 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn under_and_overflow_are_counted() {
+        let mut h = LogHistogram::new();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(f64::NAN);
+        h.record(1e9);
+        h.record(0.5);
+        assert_eq!(h.total(), 5);
+        assert_eq!(h.underflow(), 3);
+        assert_eq!(h.overflow(), 1);
+        assert_eq!(h.counts().iter().sum::<u64>(), 1);
+        // All-underflow quantile pins to the range floor.
+        assert!(h.quantile(10.0) >= LOG_HIST_MIN);
+    }
+
+    #[test]
+    fn merge_equals_sequential_recording() {
+        let mut rng = Pcg64::new(4, 2);
+        let xs: Vec<f64> = (0..500).map(|_| rng.range(0.01, 30.0)).collect();
+        let mut whole = StreamingStats::new();
+        let mut a = StreamingStats::new();
+        let mut b = StreamingStats::new();
+        for (i, &x) in xs.iter().enumerate() {
+            whole.record(x);
+            if i < 200 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.n(), whole.n());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.std() - whole.std()).abs() < 1e-9);
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        assert_eq!(a.quantile(95.0), whole.quantile(95.0));
+    }
+
+    #[test]
+    fn fingerprint_is_sequence_sensitive() {
+        let mut a = StreamingStats::new();
+        let mut b = StreamingStats::new();
+        for x in [0.5, 0.7, 0.9] {
+            a.record(x);
+            b.record(x);
+        }
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.record(0.9000001);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+}

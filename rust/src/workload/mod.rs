@@ -1,6 +1,6 @@
 //! Workload generation (paper §5.2): the *Random Access* generator
 //! (Algorithm 2), the scaled *NASA* trace, and the scenario library
-//! ([`scenario`]: diurnal / flash-crowd / step-surge / composite behind
+//! (`scenario.rs`: diurnal / flash-crowd / step-surge / composite behind
 //! the [`Scenario`] descriptor).
 //!
 //! Generators are event-driven: each owns a `WorkloadTick` stream in the

@@ -1,14 +1,13 @@
 //! Cross-module integration tests: full worlds, proactive-vs-reactive
 //! behaviour, failure injection, and paper-shape checks at reduced scale.
 
-use ppa_edge::app::{TaskCosts, TaskType};
+use ppa_edge::app::TaskCosts;
 use ppa_edge::autoscaler::{Hpa, Ppa, PpaConfig};
 use ppa_edge::config::{paper_cluster, quickstart_cluster};
 use ppa_edge::experiments::{self, SimWorld};
 use ppa_edge::forecast::{Forecaster, NaiveForecaster, UpdatePolicy};
 use ppa_edge::metrics::METRIC_DIM;
 use ppa_edge::sim::{ServiceId, MIN};
-use ppa_edge::stats::summarize;
 use ppa_edge::workload::{Generator, NasaTraceConfig, RandomAccessGen, TraceGen};
 use std::sync::Arc;
 
@@ -27,9 +26,9 @@ fn paper_cluster_serves_random_access_one_hour() {
     hpa_everywhere(&mut world);
     world.run_until(60 * MIN);
 
-    assert!(world.app.responses.len() > 1000, "{}", world.app.responses.len());
-    let sort = summarize(&world.response_times(TaskType::Sort));
-    let eigen = summarize(&world.response_times(TaskType::Eigen));
+    assert!(world.app.completed() > 1000, "{}", world.app.completed());
+    let sort = world.app.stats.sort.summary();
+    let eigen = world.app.stats.eigen.summary();
     // Calibration shape: Sort sub-second-ish, Eigen >5 s (paper: 0.5/13.6).
     assert!(sort.mean > 0.3 && sort.mean < 3.0, "sort mean {}", sort.mean);
     assert!(eigen.mean > 4.0, "eigen mean {}", eigen.mean);
@@ -76,10 +75,10 @@ fn nasa_trace_replay_end_to_end() {
     world.add_generator(Generator::Trace(TraceGen::new(2, counts.clone(), 0.5)));
     hpa_everywhere(&mut world);
     world.run_until(60 * MIN);
-    assert!(world.app.responses.len() > 500);
+    assert!(world.app.completed() > 500);
     // Arrivals should roughly match the trace total.
     let total_trace: f64 = counts.iter().sum();
-    let served = world.app.responses.len() as f64;
+    let served = world.app.completed() as f64;
     assert!(
         served > total_trace * 0.5 && served < total_trace * 1.3,
         "served {served} vs trace {total_trace}"
@@ -105,7 +104,7 @@ fn ppa_naive_beats_or_matches_hpa_on_bursty_load() {
             }
         }
         world.run_until(90 * MIN);
-        summarize(&world.response_times(TaskType::Sort)).mean
+        world.app.stats.sort.mean()
     };
     let hpa_mean = run(false);
     let ppa_mean = run(true);
@@ -149,7 +148,7 @@ fn model_update_failure_does_not_kill_the_world() {
     world.add_scaler(Box::new(Hpa::with_defaults()), 1);
     world.run_until(45 * MIN);
     // The world survived several failed update loops and kept serving.
-    assert!(world.app.responses.len() > 100);
+    assert!(world.app.completed() > 100);
 }
 
 #[test]
@@ -182,7 +181,7 @@ fn cluster_capacity_saturation_backpressure() {
         .filter(|p| p.phase == ppa_edge::cluster::PodPhase::Running)
         .count();
     assert!(running <= 6, "3 edge + 2 cloud slots: {running}");
-    assert!(world.app.responses.len() > 200);
+    assert!(world.app.completed() > 200);
 }
 
 #[test]
@@ -206,7 +205,11 @@ fn deterministic_nasa_world() {
         world.add_generator(Generator::Trace(TraceGen::new(1, counts.clone(), 0.5)));
         hpa_everywhere(&mut world);
         world.run_until(30 * MIN);
-        (world.app.responses.len(), world.events_processed)
+        (
+            world.app.completed(),
+            world.events_processed,
+            world.app.stats.fingerprint(),
+        )
     };
     assert_eq!(run(), run());
 }

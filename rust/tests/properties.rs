@@ -7,7 +7,7 @@ use ppa_edge::cluster::{
 };
 use ppa_edge::forecast::{Scaler, StandardScaler};
 use ppa_edge::metrics::METRIC_DIM;
-use ppa_edge::sim::{Event, EventQueue};
+use ppa_edge::sim::{CoreKind, Event, EventQueue, HOUR, MIN, SEC};
 use ppa_edge::util::json::Json;
 use ppa_edge::util::rng::Pcg64;
 
@@ -39,6 +39,68 @@ fn prop_event_queue_total_order() {
             }
             seen_at_t.push(generator);
             last_t = t;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Calendar queue vs the BinaryHeap reference: random interleaved
+// schedule/pop sequences — past-time clamping, same-timestamp bursts,
+// beyond-horizon (overflow) schedules, bounded pops — produce identical
+// pop order, lengths, and peek times on both cores.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_calendar_queue_matches_heap_reference() {
+    for seed in 0..120 {
+        let mut rng = Pcg64::new(seed, 7);
+        let mut cal = EventQueue::with_core(CoreKind::Calendar);
+        let mut heap = EventQueue::with_core(CoreKind::Heap);
+        let ops = 200 + rng.below(400);
+        let mut next_id = 0u32;
+        for step in 0..ops {
+            let roll = rng.below(100);
+            if roll < 55 {
+                // Schedule a burst at one target time drawn from a mix of
+                // regimes (past times clamp to `now` on both cores).
+                let at = match rng.below(6) {
+                    0 => cal.now().saturating_sub(rng.below(10 * SEC)),
+                    1 => cal.now(), // same-timestamp burst at the clock
+                    2 => cal.now() + rng.below(2 * SEC),
+                    3 => cal.now() + rng.below(5 * MIN),
+                    4 => cal.now() + rng.below(60 * MIN), // around the wheel horizon
+                    _ => cal.now() + 2 * HOUR + rng.below(HOUR), // deep overflow
+                };
+                for _ in 0..1 + rng.below(4) {
+                    let ev = Event::WorkloadTick { generator: next_id };
+                    next_id += 1;
+                    cal.schedule_at(at, ev.clone());
+                    heap.schedule_at(at, ev);
+                }
+            } else if roll < 85 {
+                let (a, b) = (cal.pop(), heap.pop());
+                assert_eq!(a, b, "seed {seed} step {step}: pop order diverged");
+            } else {
+                // Bounded pop: both cores must agree on due-ness too.
+                let limit = cal.now() + rng.below(10 * MIN);
+                let (a, b) = (cal.pop_due(limit), heap.pop_due(limit));
+                assert_eq!(a, b, "seed {seed} step {step}: pop_due diverged");
+            }
+            assert_eq!(cal.len(), heap.len(), "seed {seed} step {step}: len");
+            assert_eq!(cal.now(), heap.now(), "seed {seed} step {step}: now");
+            assert_eq!(
+                cal.peek_time(),
+                heap.peek_time(),
+                "seed {seed} step {step}: peek_time"
+            );
+        }
+        // Drain to exhaustion: the full remaining streams must match.
+        loop {
+            let (a, b) = (cal.pop(), heap.pop());
+            assert_eq!(a, b, "seed {seed}: drain diverged");
+            if a.is_none() {
+                break;
+            }
         }
     }
 }
