@@ -7,10 +7,11 @@
 //! ```
 
 use ppa_edge::app::TaskCosts;
-use ppa_edge::autoscaler::{Hpa, Ppa, PpaConfig};
+use ppa_edge::autoscaler::{Hpa, MetricSpec, Ppa, PpaConfig};
 use ppa_edge::config::quickstart_cluster;
 use ppa_edge::experiments::SimWorld;
 use ppa_edge::forecast::NaiveForecaster;
+use ppa_edge::metrics::{M_CPU, M_REQ_RATE};
 use ppa_edge::sim::MIN;
 use ppa_edge::stats::summarize;
 use ppa_edge::workload::{Generator, RandomAccessGen};
@@ -23,14 +24,27 @@ fn main() -> anyhow::Result<()> {
     // 2. Clients at edge zone 1 follow the paper's Random Access pattern.
     world.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
 
-    // 3. Autoscalers: a PPA (naive last-value model — see
+    // 3. Autoscalers: a multi-metric PPA (naive last-value model — see
     //    examples/model_comparison.rs for the LSTM) on the edge pool and
-    //    the stock HPA on the cloud pool.
-    let ppa = Ppa::new(PpaConfig::default(), Box::new(NaiveForecaster));
+    //    the stock HPA on the cloud pool. The PPA scales on whichever
+    //    metric demands more pods: forecast CPU at the paper's 70%
+    //    target, or forecast arrival rate at 1.5 req/s per pod.
+    let ppa = Ppa::new(
+        PpaConfig {
+            specs: vec![
+                MetricSpec::forecast(M_CPU, 70.0),
+                MetricSpec::forecast(M_REQ_RATE, 1.5),
+            ],
+            ..PpaConfig::default()
+        },
+        Box::new(NaiveForecaster),
+    );
     world.add_scaler(Box::new(ppa), 0);
     world.add_scaler(Box::new(Hpa::with_defaults()), 1);
 
-    // 4. Run 30 simulated minutes.
+    // 4. Run 30 simulated minutes, retaining the structured decision
+    //    log (opt-in, like the exact response log).
+    world.record_decisions();
     let events = world.run_until(30 * MIN);
 
     // 5. Report — straight from the app's streaming response stats
@@ -63,5 +77,20 @@ fn main() -> anyhow::Result<()> {
         .max()
         .unwrap_or(0);
     println!("max replicas seen: {max_replicas}");
+
+    // 6. The structured decision log records every scaler decision with
+    //    per-metric provenance — which spec drove each scale-up.
+    let driven_by_rate = world
+        .decision_log
+        .iter()
+        .filter(|d| {
+            d.recommendations.len() == 2
+                && d.recommendations[1].desired > d.recommendations[0].desired
+        })
+        .count();
+    println!(
+        "decisions        : {} total, {driven_by_rate} led by the req_rate spec",
+        world.decision_log.len()
+    );
     Ok(())
 }

@@ -9,8 +9,11 @@
 //! cargo run --release --example scenario_sweep              # 30 min cells, 4 seeds, paper
 //! cargo run --release --example scenario_sweep -- 60 8      # 60 min cells, 8 seeds
 //! cargo run --release --example scenario_sweep -- 30 2 city-50   # city-scale grid
+//! cargo run --release --example scenario_sweep -- 30 2 city-8 cpu:70,req_rate:1.5
+//! #   ^ every cell scales its fleet on BOTH metrics (max wins)
 //! ```
 
+use ppa_edge::autoscaler::{MetricSource, MetricSpec, ScalerPolicy, ScalerRegistry};
 use ppa_edge::config::Topology;
 use ppa_edge::experiments::{run_sweep, AutoscalerKind, SweepConfig};
 use ppa_edge::report;
@@ -31,6 +34,22 @@ fn main() -> anyhow::Result<()> {
         Some(s) => Topology::parse(&s)?,
         None => Topology::Paper,
     };
+    // Optional 4th arg: comma-separated metric specs for a uniform
+    // fleet, e.g. `cpu:70,req_rate:1.5`.
+    let fleet = match std::env::args().nth(4) {
+        Some(list) => {
+            let specs = list
+                .split(',')
+                .map(|s| MetricSpec::parse(s.trim(), MetricSource::Forecast))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            // Metric-only policy: each scaler kind keeps its stock
+            // behavior (HPA 5-min / PPA 2-min down window).
+            let policy = ScalerPolicy::from_specs(specs);
+            println!("fleet policy: {}", policy.label());
+            Some(ScalerRegistry::uniform(policy))
+        }
+        None => None,
+    };
 
     let cfg = SweepConfig {
         topology,
@@ -44,6 +63,7 @@ fn main() -> anyhow::Result<()> {
         minutes,
         threads: 0, // one worker per core
         core: CoreKind::Calendar,
+        fleet,
     };
     println!(
         "scenario sweep: {} scenarios x {} autoscalers x {} seeds on {} ({} sim-minutes per cell)",

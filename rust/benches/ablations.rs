@@ -11,7 +11,7 @@
 
 use ppa_edge::app::TaskCosts;
 use ppa_edge::autoscaler::ppa::{ConservativeCeilPolicy, HpaCeilPolicy, StaticPolicy};
-use ppa_edge::autoscaler::{Autoscaler, Hpa, Ppa, PpaConfig};
+use ppa_edge::autoscaler::{Autoscaler, Hpa, Ppa, PpaConfig, ScalingBehavior};
 use ppa_edge::config::paper_cluster;
 use ppa_edge::experiments::{make_forecaster, pretrain_histories, try_runtime, ModelKind, SimWorld};
 use ppa_edge::forecast::UpdatePolicy;
@@ -107,7 +107,7 @@ fn main() -> anyhow::Result<()> {
         let forecaster = make_forecaster(model, Some(&runtime), pre, 2021).unwrap();
         let cfg = PpaConfig {
             update_policy: UpdatePolicy::FineTune,
-            downscale_stabilization: stab,
+            behavior: ScalingBehavior::stabilize_down(stab),
             ..PpaConfig::default()
         };
         Box::new(Ppa::new(cfg, forecaster).with_policy(policy))

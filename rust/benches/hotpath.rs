@@ -463,6 +463,7 @@ fn bench_sweep_cells() -> f64 {
             name,
             scenario,
             scaler,
+            None,
             3,
             5,
             CoreKind::Calendar,
@@ -494,13 +495,33 @@ fn bench_city50_cell() -> (f64, f64, usize, usize, usize) {
         // Timed runs.
         let mut events = 0u64;
         let r = run(&format!("run_cell city-50 on {}", core.name()), 1, 3, || {
-            let cell = run_cell(&label, &cluster, name, scenario, AutoscalerKind::Hpa, 3, 3, core);
+            let cell = run_cell(
+                &label,
+                &cluster,
+                name,
+                scenario,
+                AutoscalerKind::Hpa,
+                None,
+                3,
+                3,
+                core,
+            );
             events = cell.metrics.events;
         });
         rates.push(events as f64 / (r.mean_us / 1e6));
         // Peak-resident probe (single fresh run, streaming stats only).
         reset_peak();
-        let _ = run_cell(&label, &cluster, name, scenario, AutoscalerKind::Hpa, 3, 3, core);
+        let _ = run_cell(
+            &label,
+            &cluster,
+            name,
+            scenario,
+            AutoscalerKind::Hpa,
+            None,
+            3,
+            3,
+            core,
+        );
         peaks.push(peak_bytes());
     }
 

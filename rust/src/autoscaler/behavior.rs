@@ -1,0 +1,572 @@
+//! The shared scaling-behavior stage — Kubernetes `behavior:` semantics
+//! as control-plane policy, applied to every autoscaler's combined
+//! recommendation (the stage both [`super::Hpa`] and [`super::Ppa`] run
+//! after the per-metric combine).
+//!
+//! Mirrors the HPA v2 `behavior` block: per-direction stabilization
+//! windows (scale-down takes the **max** recommendation over the window,
+//! scale-up the **min** — a drop/spike must persist for the whole window
+//! to act), optional rate limits (at most N pods and/or P percent of the
+//! period-start count per period), and a select policy choosing the most
+//! (`Max`) or least (`Min`) permissive configured limit, or disabling
+//! the direction outright.
+//!
+//! Config ([`ScalingBehavior`]) is plain copyable data; the mutable
+//! window/rate histories live in a per-scaler [`BehaviorState`].
+
+use crate::sim::Time;
+use anyhow::{bail, Context};
+use std::collections::VecDeque;
+
+/// Which configured rate limit wins when several apply (K8s
+/// `selectPolicy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectPolicy {
+    /// The limit allowing the **most** change (K8s default).
+    Max,
+    /// The limit allowing the **least** change.
+    Min,
+    /// Scaling in this direction is disabled entirely.
+    Disabled,
+}
+
+/// Optional per-direction rate limits. `None` everywhere = unlimited.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RateLimits {
+    /// At most this many pods added/removed per period: `(pods, period)`.
+    pub pods: Option<(u32, Time)>,
+    /// At most this percent of the period-start replica count per
+    /// period: `(percent, period)`.
+    pub percent: Option<(f64, Time)>,
+}
+
+impl RateLimits {
+    fn is_unlimited(&self) -> bool {
+        self.pods.is_none() && self.percent.is_none()
+    }
+
+    fn max_period(&self) -> Time {
+        let p = self.pods.map_or(0, |(_, t)| t);
+        let q = self.percent.map_or(0, |(_, t)| t);
+        p.max(q)
+    }
+}
+
+/// One direction's rules (K8s `scaleUp:` / `scaleDown:` block).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScalingRules {
+    /// Recommendation-stabilization window (0 = off).
+    pub stabilization_window: Time,
+    pub limits: RateLimits,
+    pub select: SelectPolicy,
+}
+
+impl ScalingRules {
+    /// No rate limits; stabilize over `window`.
+    pub fn unlimited(window: Time) -> Self {
+        ScalingRules {
+            stabilization_window: window,
+            limits: RateLimits::default(),
+            select: SelectPolicy::Max,
+        }
+    }
+
+    /// This direction never scales.
+    pub fn disabled() -> Self {
+        ScalingRules {
+            stabilization_window: 0,
+            limits: RateLimits::default(),
+            select: SelectPolicy::Disabled,
+        }
+    }
+}
+
+/// The full two-direction behavior config.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScalingBehavior {
+    pub scale_up: ScalingRules,
+    pub scale_down: ScalingRules,
+}
+
+impl ScalingBehavior {
+    /// The legacy control-plane policy: immediate scale-up, scale-down
+    /// stabilized over `window`, no rate limits. `stabilize_down(5 min)`
+    /// is the stock-HPA default; the PPA default uses 2 min (its
+    /// predictions already filter transient dips).
+    pub fn stabilize_down(window: Time) -> Self {
+        ScalingBehavior {
+            scale_up: ScalingRules::unlimited(0),
+            scale_down: ScalingRules::unlimited(window),
+        }
+    }
+
+    /// Upstream Kubernetes defaults: scale-up min(not limited below)
+    /// 4 pods or 100 %/15 s (whichever allows more), no up window;
+    /// scale-down 100 %/15 s under a 5-minute window.
+    pub fn k8s_default() -> Self {
+        use crate::sim::{MIN, SEC};
+        ScalingBehavior {
+            scale_up: ScalingRules {
+                stabilization_window: 0,
+                limits: RateLimits {
+                    pods: Some((4, 15 * SEC)),
+                    percent: Some((100.0, 15 * SEC)),
+                },
+                select: SelectPolicy::Max,
+            },
+            scale_down: ScalingRules {
+                stabilization_window: 5 * MIN,
+                limits: RateLimits {
+                    percent: Some((100.0, 15 * SEC)),
+                    ..RateLimits::default()
+                },
+                select: SelectPolicy::Max,
+            },
+        }
+    }
+
+    /// Parse the CLI `--behavior` syntax: a comma-separated list of
+    /// `key=value` entries over defaults of [`Self::stabilize_down`]
+    /// with the given fallback window. Keys:
+    ///
+    /// * `k8s` — load the full upstream defaults ([`Self::k8s_default`],
+    ///   incl. the stock rate limits) as the base; later entries
+    ///   override
+    /// * `up-window=DUR` / `down-window=DUR` — stabilization windows
+    /// * `up-pods=N/DUR` / `down-pods=N/DUR` — pod rate limits
+    /// * `up-percent=P/DUR` / `down-percent=P/DUR` — percent rate limits
+    /// * `up-select=max|min|disabled` / `down-select=…`
+    ///
+    /// Durations are seconds by default; `s`/`m` suffixes accepted
+    /// (`300s`, `5m`, `120`).
+    pub fn parse(s: &str, default_down_window: Time) -> crate::Result<Self> {
+        let mut b = ScalingBehavior::stabilize_down(default_down_window);
+        for entry in s.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            if entry == "k8s" {
+                b = ScalingBehavior::k8s_default();
+                continue;
+            }
+            let (key, value) = entry
+                .split_once('=')
+                .with_context(|| format!("behavior entry '{entry}' must be key=value"))?;
+            let (dir, field) = key
+                .trim()
+                .split_once('-')
+                .with_context(|| format!("behavior key '{key}' must be up-* or down-*"))?;
+            let rules = match dir {
+                "up" => &mut b.scale_up,
+                "down" => &mut b.scale_down,
+                other => bail!("behavior key '{key}': unknown direction '{other}' (up|down)"),
+            };
+            let value = value.trim();
+            match field {
+                "window" => rules.stabilization_window = parse_duration(value)?,
+                "pods" => {
+                    let (n, period) = value
+                        .split_once('/')
+                        .with_context(|| format!("'{entry}' must be N/period, e.g. 4/15s"))?;
+                    let n: u32 = n
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("'{entry}': pod count must be an integer"))?;
+                    rules.limits.pods = Some((n, parse_duration(period)?));
+                }
+                "percent" => {
+                    let (p, period) = value
+                        .split_once('/')
+                        .with_context(|| format!("'{entry}' must be P/period, e.g. 100/15s"))?;
+                    let p: f64 = p
+                        .trim()
+                        .parse()
+                        .ok()
+                        .filter(|p: &f64| p.is_finite() && *p >= 0.0)
+                        .with_context(|| format!("'{entry}': percent must be >= 0"))?;
+                    rules.limits.percent = Some((p, parse_duration(period)?));
+                }
+                "select" => {
+                    rules.select = match value {
+                        "max" => SelectPolicy::Max,
+                        "min" => SelectPolicy::Min,
+                        "disabled" => SelectPolicy::Disabled,
+                        other => bail!("'{entry}': unknown select '{other}' (max|min|disabled)"),
+                    }
+                }
+                other => bail!("behavior key '{key}': unknown field '{other}'"),
+            }
+        }
+        Ok(b)
+    }
+
+    fn max_window(&self) -> Time {
+        self.scale_up
+            .stabilization_window
+            .max(self.scale_down.stabilization_window)
+    }
+
+    fn max_period(&self) -> Time {
+        self.scale_up
+            .limits
+            .max_period()
+            .max(self.scale_down.limits.max_period())
+    }
+}
+
+/// Parse a simulated duration: plain seconds, or with an `s`/`m` suffix.
+pub fn parse_duration(s: &str) -> crate::Result<Time> {
+    use crate::sim::{MIN, SEC};
+    let s = s.trim();
+    let (num, unit) = match s.strip_suffix('s') {
+        Some(n) => (n, SEC),
+        None => match s.strip_suffix('m') {
+            Some(n) => (n, MIN),
+            None => (s, SEC),
+        },
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .ok()
+        .filter(|v: &f64| v.is_finite() && *v >= 0.0)
+        .with_context(|| format!("bad duration '{s}' (e.g. 300s, 5m, 120)"))?;
+    Ok((v * unit as f64) as Time)
+}
+
+/// The mutable half of the behavior stage: recommendation history for
+/// the stabilization windows and applied-decision history for the rate
+/// limits. One per scaler instance.
+#[derive(Debug, Default)]
+pub struct BehaviorState {
+    /// `(time, combined recommendation)` — pre-behavior values, the
+    /// stabilization-window input.
+    recent: VecDeque<(Time, usize)>,
+    /// `(time, current replicas observed at that decision)` — the rate
+    /// limits' period-start base. Recording the *observed* count (not
+    /// the decision output) makes one period's budget absolute: a burst
+    /// of decisions inside the period cannot ratchet the base.
+    observed: VecDeque<(Time, usize)>,
+}
+
+impl BehaviorState {
+    pub fn new() -> Self {
+        BehaviorState::default()
+    }
+
+    /// Run the behavior stage on one combined recommendation against
+    /// `current` replicas; returns the clamped decision. Deterministic:
+    /// depends only on the sequence of `(now, recommendation, current)`
+    /// calls and the (fixed) config.
+    pub fn apply(
+        &mut self,
+        now: Time,
+        recommendation: usize,
+        current: usize,
+        behavior: &ScalingBehavior,
+    ) -> usize {
+        // Window histories.
+        let max_window = behavior.max_window();
+        if max_window > 0 {
+            self.recent.push_back((now, recommendation));
+            let cutoff = now.saturating_sub(max_window);
+            while matches!(self.recent.front(), Some(&(t, _)) if t < cutoff) {
+                self.recent.pop_front();
+            }
+        }
+
+        // Stabilization: a scale-down must be the max recommendation of
+        // the down window (legacy `recent_desired` semantics, bit-exact);
+        // a scale-up the min of the up window.
+        let mut desired = recommendation;
+        let down_window = behavior.scale_down.stabilization_window;
+        if down_window > 0 && desired < current {
+            let cutoff = now.saturating_sub(down_window);
+            let stabilized = self
+                .recent
+                .iter()
+                .filter(|&&(t, _)| t >= cutoff)
+                .map(|&(_, d)| d)
+                .max()
+                .unwrap_or(desired);
+            desired = stabilized.min(current);
+        }
+        let up_window = behavior.scale_up.stabilization_window;
+        if up_window > 0 && desired > current {
+            let cutoff = now.saturating_sub(up_window);
+            let stabilized = self
+                .recent
+                .iter()
+                .filter(|&&(t, _)| t >= cutoff)
+                .map(|&(_, d)| d)
+                .min()
+                .unwrap_or(desired);
+            desired = stabilized.max(current);
+        }
+
+        // Rate limits + select policy.
+        if desired > current {
+            desired = match behavior.scale_up.select {
+                SelectPolicy::Disabled => current,
+                select => {
+                    let allowed = self.allowed_up(now, current, &behavior.scale_up.limits, select);
+                    desired.min(allowed.max(current))
+                }
+            };
+        } else if desired < current {
+            desired = match behavior.scale_down.select {
+                SelectPolicy::Disabled => current,
+                select => {
+                    let floor =
+                        self.allowed_down(now, current, &behavior.scale_down.limits, select);
+                    desired.max(floor.min(current))
+                }
+            };
+        }
+
+        // Observed-replica history (rate-limit base for later calls).
+        if behavior.max_period() > 0 {
+            self.observed.push_back((now, current));
+            let cutoff = now.saturating_sub(behavior.max_period());
+            while matches!(self.observed.front(), Some(&(t, _)) if t < cutoff) {
+                self.observed.pop_front();
+            }
+        }
+        desired
+    }
+
+    /// Period-start base for an up limit: the lowest replica count
+    /// observed within the period (or `current` alone when none).
+    fn base_up(&self, now: Time, current: usize, period: Time) -> usize {
+        let cutoff = now.saturating_sub(period);
+        self.observed
+            .iter()
+            .filter(|&&(t, _)| t >= cutoff)
+            .map(|&(_, d)| d)
+            .min()
+            .unwrap_or(current)
+            .min(current)
+    }
+
+    /// Period-start base for a down limit (mirror: highest in window).
+    fn base_down(&self, now: Time, current: usize, period: Time) -> usize {
+        let cutoff = now.saturating_sub(period);
+        self.observed
+            .iter()
+            .filter(|&&(t, _)| t >= cutoff)
+            .map(|&(_, d)| d)
+            .max()
+            .unwrap_or(current)
+            .max(current)
+    }
+
+    /// Highest replica count the up limits allow right now.
+    fn allowed_up(
+        &self,
+        now: Time,
+        current: usize,
+        limits: &RateLimits,
+        select: SelectPolicy,
+    ) -> usize {
+        if limits.is_unlimited() {
+            return usize::MAX;
+        }
+        let mut candidates: [Option<usize>; 2] = [None, None];
+        if let Some((pods, period)) = limits.pods {
+            candidates[0] = Some(self.base_up(now, current, period) + pods as usize);
+        }
+        if let Some((pct, period)) = limits.percent {
+            let base = self.base_up(now, current, period);
+            candidates[1] = Some((base as f64 * (1.0 + pct / 100.0)).ceil() as usize);
+        }
+        let it = candidates.iter().flatten().copied();
+        match select {
+            SelectPolicy::Max => it.max().unwrap(),
+            _ => it.min().unwrap(),
+        }
+    }
+
+    /// Lowest replica count the down limits allow right now.
+    fn allowed_down(
+        &self,
+        now: Time,
+        current: usize,
+        limits: &RateLimits,
+        select: SelectPolicy,
+    ) -> usize {
+        if limits.is_unlimited() {
+            return 0;
+        }
+        let mut candidates: [Option<usize>; 2] = [None, None];
+        if let Some((pods, period)) = limits.pods {
+            let base = self.base_down(now, current, period);
+            candidates[0] = Some(base.saturating_sub(pods as usize));
+        }
+        if let Some((pct, period)) = limits.percent {
+            let base = self.base_down(now, current, period);
+            candidates[1] = Some((base as f64 * (1.0 - pct / 100.0)).floor().max(0.0) as usize);
+        }
+        let it = candidates.iter().flatten().copied();
+        match select {
+            // Max = most change = lowest floor; Min = least change.
+            SelectPolicy::Max => it.min().unwrap(),
+            _ => it.max().unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{MIN, SEC};
+
+    #[test]
+    fn no_behavior_passes_through() {
+        let b = ScalingBehavior::stabilize_down(0);
+        let mut s = BehaviorState::new();
+        assert_eq!(s.apply(0, 7, 2, &b), 7);
+        assert_eq!(s.apply(15 * SEC, 1, 7, &b), 1);
+        assert!(s.recent.is_empty() && s.observed.is_empty(), "no state kept");
+    }
+
+    #[test]
+    fn down_window_holds_max_of_recommendations() {
+        // The legacy `recent_desired` semantics: a scale-down is held at
+        // the window max, capped at current.
+        let b = ScalingBehavior::stabilize_down(5 * MIN);
+        let mut s = BehaviorState::new();
+        assert_eq!(s.apply(0, 5, 4, &b), 5, "scale-up unaffected");
+        assert_eq!(s.apply(MIN, 1, 4, &b), 4, "held: window max 5, min current");
+        assert_eq!(s.apply(7 * MIN, 1, 4, &b), 1, "window expired, down proceeds");
+    }
+
+    #[test]
+    fn up_window_holds_min_of_recommendations() {
+        let b = ScalingBehavior {
+            scale_up: ScalingRules::unlimited(2 * MIN),
+            scale_down: ScalingRules::unlimited(0),
+        };
+        let mut s = BehaviorState::new();
+        assert_eq!(s.apply(0, 2, 2, &b), 2);
+        // A spike must persist for the whole up window: min(2, 8) = 2.
+        assert_eq!(s.apply(MIN, 8, 2, &b), 2, "one-tick spike filtered");
+        assert_eq!(s.apply(4 * MIN, 8, 2, &b), 8, "old low reading expired");
+    }
+
+    #[test]
+    fn pods_rate_limit_caps_per_period() {
+        let b = ScalingBehavior {
+            scale_up: ScalingRules {
+                stabilization_window: 0,
+                limits: RateLimits {
+                    pods: Some((2, MIN)),
+                    percent: None,
+                },
+                select: SelectPolicy::Max,
+            },
+            scale_down: ScalingRules::unlimited(0),
+        };
+        let mut s = BehaviorState::new();
+        // Want 10, have 1: at most +2 per minute.
+        assert_eq!(s.apply(0, 10, 1, &b), 3);
+        // Same period: base is still the 1 observed at t=0 → the +2
+        // budget is spent, no further growth.
+        assert_eq!(s.apply(30 * SEC, 10, 3, &b), 3);
+        // Next period: the t=0 observation expired; base = 3 → 5.
+        assert_eq!(s.apply(61 * SEC, 10, 3, &b), 5);
+    }
+
+    #[test]
+    fn percent_rate_limit_and_select_min() {
+        let limits = RateLimits {
+            pods: Some((10, MIN)),
+            percent: Some((50.0, MIN)),
+        };
+        let mk = |select| ScalingBehavior {
+            scale_up: ScalingRules {
+                stabilization_window: 0,
+                limits,
+                select,
+            },
+            scale_down: ScalingRules::unlimited(0),
+        };
+        // From 4: pods allows 14, percent allows ceil(4*1.5)=6.
+        let mut s = BehaviorState::new();
+        assert_eq!(s.apply(0, 20, 4, &mk(SelectPolicy::Max)), 14);
+        let mut s = BehaviorState::new();
+        assert_eq!(s.apply(0, 20, 4, &mk(SelectPolicy::Min)), 6);
+    }
+
+    #[test]
+    fn down_rate_limit_floors_per_period() {
+        let b = ScalingBehavior {
+            scale_up: ScalingRules::unlimited(0),
+            scale_down: ScalingRules {
+                stabilization_window: 0,
+                limits: RateLimits {
+                    pods: Some((1, MIN)),
+                    percent: None,
+                },
+                select: SelectPolicy::Max,
+            },
+        };
+        let mut s = BehaviorState::new();
+        assert_eq!(s.apply(0, 1, 8, &b), 7, "at most -1 per minute");
+        assert_eq!(s.apply(30 * SEC, 1, 7, &b), 7, "base still 8 → floor 7");
+        assert_eq!(s.apply(90 * SEC, 1, 7, &b), 6, "new period");
+    }
+
+    #[test]
+    fn disabled_direction_freezes() {
+        let b = ScalingBehavior {
+            scale_up: ScalingRules::unlimited(0),
+            scale_down: ScalingRules::disabled(),
+        };
+        let mut s = BehaviorState::new();
+        assert_eq!(s.apply(0, 1, 5, &b), 5, "scale-down disabled");
+        assert_eq!(s.apply(0, 9, 5, &b), 9, "scale-up still free");
+    }
+
+    #[test]
+    fn parse_behavior_syntax() {
+        let b = ScalingBehavior::parse(
+            "down-window=5m, up-pods=4/15s, up-percent=100/15s, down-select=min",
+            2 * MIN,
+        )
+        .unwrap();
+        assert_eq!(b.scale_down.stabilization_window, 5 * MIN);
+        assert_eq!(b.scale_up.limits.pods, Some((4, 15 * SEC)));
+        assert_eq!(b.scale_up.limits.percent, Some((100.0, 15 * SEC)));
+        assert_eq!(b.scale_down.select, SelectPolicy::Min);
+        // Defaults untouched elsewhere.
+        assert_eq!(b.scale_up.stabilization_window, 0);
+
+        assert!(ScalingBehavior::parse("sideways-window=5m", 0).is_err());
+        assert!(ScalingBehavior::parse("down-pods=4", 0).is_err());
+        assert!(ScalingBehavior::parse("down-select=sometimes", 0).is_err());
+        assert!(ScalingBehavior::parse("window=5m", 0).is_err());
+    }
+
+    #[test]
+    fn parse_k8s_shorthand_loads_upstream_defaults() {
+        let b = ScalingBehavior::parse("k8s", 0).unwrap();
+        assert_eq!(b, ScalingBehavior::k8s_default());
+        assert_eq!(b.scale_up.limits.pods, Some((4, 15 * SEC)));
+        assert_eq!(b.scale_down.stabilization_window, 5 * MIN);
+        // Later entries override the loaded base.
+        let b = ScalingBehavior::parse("k8s, down-window=1m", 0).unwrap();
+        assert_eq!(b.scale_down.stabilization_window, MIN);
+        assert_eq!(b.scale_down.limits.percent, Some((100.0, 15 * SEC)));
+    }
+
+    #[test]
+    fn parse_duration_forms() {
+        assert_eq!(parse_duration("120").unwrap(), 120 * SEC);
+        assert_eq!(parse_duration("300s").unwrap(), 300 * SEC);
+        assert_eq!(parse_duration("5m").unwrap(), 5 * MIN);
+        assert_eq!(parse_duration("0").unwrap(), 0);
+        assert!(parse_duration("-3").is_err());
+        assert!(parse_duration("fast").is_err());
+    }
+}

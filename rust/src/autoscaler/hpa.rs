@@ -1,37 +1,40 @@
 //! The reactive Horizontal Pod Autoscaler baseline — Kubernetes' default
-//! semantics: Eq 1 on the *current* metric, a ±10% tolerance band, and a
-//! scale-down stabilization window (the max of recent desired counts),
-//! mirroring `--horizontal-pod-autoscaler-downscale-stabilization`.
+//! semantics on the shared decision pipeline: Eq 1 per [`MetricSpec`] on
+//! the *current* metric values with a ±10% tolerance band, the max
+//! recommendation across metrics, and the [`ScalingBehavior`] stage
+//! (default: a 5-minute scale-down stabilization window, mirroring
+//! `--horizontal-pod-autoscaler-downscale-stabilization`).
 
-use super::{eq1_replicas, Autoscaler, ScaleDecision};
+use super::behavior::{BehaviorState, ScalingBehavior};
+use super::spec::{MetricSource, MetricSpec, Recommendation};
+use super::{combine_recommendations, eq1_replicas, Autoscaler, ScaleDecision};
 use crate::cluster::{Cluster, DeploymentId};
 use crate::metrics::MetricsPipeline;
 use crate::sim::{ServiceId, Time, MIN, SEC};
-use std::collections::VecDeque;
 
 /// HPA configuration (defaults match upstream Kubernetes).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct HpaConfig {
-    /// Key-metric index into the protocol vector (HPA: CPU).
-    pub key_metric: usize,
-    /// Eq 1 denominator (summed per-pod % — 70 ≈ the common 70% target).
-    pub threshold: f64,
+    /// Metric targets, combined max-wins. The HPA is reactive: every
+    /// spec is read from the current scrape regardless of its
+    /// [`MetricSpec::source`].
+    pub specs: Vec<MetricSpec>,
     /// Control-loop period (upstream sync period: 15 s).
     pub sync_period: Time,
-    /// No action when the ratio is within ±tolerance of 1 (upstream 0.1).
+    /// Per metric, no action when the ratio is within ±tolerance of 1
+    /// (upstream 0.1).
     pub tolerance: f64,
-    /// Scale-down stabilization window (upstream default 5 min).
-    pub stabilization_window: Time,
+    /// Scaling behavior (upstream default: 5-min scale-down window).
+    pub behavior: ScalingBehavior,
 }
 
 impl Default for HpaConfig {
     fn default() -> Self {
         HpaConfig {
-            key_metric: crate::metrics::M_CPU,
-            threshold: 70.0,
+            specs: vec![MetricSpec::current(crate::metrics::M_CPU, 70.0)],
             sync_period: 15 * SEC,
             tolerance: 0.1,
-            stabilization_window: 5 * MIN,
+            behavior: ScalingBehavior::stabilize_down(5 * MIN),
         }
     }
 }
@@ -40,15 +43,15 @@ impl Default for HpaConfig {
 #[derive(Debug)]
 pub struct Hpa {
     cfg: HpaConfig,
-    /// (time, desired) history for the stabilization window.
-    recent_desired: VecDeque<(Time, usize)>,
+    state: BehaviorState,
 }
 
 impl Hpa {
     pub fn new(cfg: HpaConfig) -> Self {
+        assert!(!cfg.specs.is_empty(), "HPA needs >= 1 metric spec");
         Hpa {
             cfg,
-            recent_desired: VecDeque::new(),
+            state: BehaviorState::new(),
         }
     }
 
@@ -56,15 +59,15 @@ impl Hpa {
         Self::new(HpaConfig::default())
     }
 
-    /// Paper-faithful variant: pure Eq 1, no stabilization (used by the
-    /// ablation bench to quantify what stabilization contributes).
+    /// Paper-faithful variant: pure Eq 1 on one metric, no tolerance, no
+    /// behavior clamps (used by the ablation bench to quantify what
+    /// stabilization contributes).
     pub fn pure_eq1(threshold: f64, sync_period: Time) -> Self {
         Self::new(HpaConfig {
-            threshold,
+            specs: vec![MetricSpec::current(crate::metrics::M_CPU, threshold)],
             sync_period,
             tolerance: 0.0,
-            stabilization_window: 0,
-            ..HpaConfig::default()
+            behavior: ScalingBehavior::stabilize_down(0),
         })
     }
 }
@@ -78,6 +81,10 @@ impl Autoscaler for Hpa {
         self.cfg.sync_period
     }
 
+    fn specs(&self) -> &[MetricSpec] {
+        &self.cfg.specs
+    }
+
     fn evaluate(
         &mut self,
         now: Time,
@@ -86,42 +93,42 @@ impl Autoscaler for Hpa {
         metrics: &MetricsPipeline,
         cluster: &Cluster,
     ) -> ScaleDecision {
-        let key_value = metrics.latest_metric(service, self.cfg.key_metric);
         let current = cluster.live_replicas(target).max(1);
 
-        // Tolerance band: skip action if the per-replica ratio is close
-        // to target (upstream behaviour).
-        let ratio = key_value / (self.cfg.threshold * current as f64);
-        let mut desired = if (ratio - 1.0).abs() <= self.cfg.tolerance {
-            current
-        } else {
-            eq1_replicas(key_value, self.cfg.threshold).max(1)
-        };
-
-        // Scale-down stabilization: never drop below the max desired in
-        // the recent window.
-        if self.cfg.stabilization_window > 0 {
-            self.recent_desired.push_back((now, desired));
-            let cutoff = now.saturating_sub(self.cfg.stabilization_window);
-            while matches!(self.recent_desired.front(), Some(&(t, _)) if t < cutoff) {
-                self.recent_desired.pop_front();
-            }
-            if desired < current {
-                let stabilized = self
-                    .recent_desired
-                    .iter()
-                    .map(|&(_, d)| d)
-                    .max()
-                    .unwrap_or(desired);
-                desired = stabilized.min(current);
-            }
+        // Stage 1: one recommendation per spec, always from the current
+        // scrape, with the upstream tolerance band applied per metric.
+        let mut recommendations = Vec::with_capacity(self.cfg.specs.len());
+        for spec in &self.cfg.specs {
+            let value = metrics.latest_metric(service, spec.metric);
+            let ratio = value / (spec.target * current as f64);
+            let desired = if (ratio - 1.0).abs() <= self.cfg.tolerance {
+                current
+            } else {
+                eq1_replicas(value, spec.target).max(1)
+            };
+            recommendations.push(Recommendation {
+                metric: spec.metric,
+                target: spec.target,
+                value,
+                source: MetricSource::Current,
+                predicted: None,
+                desired,
+            });
         }
+
+        // Stage 2: max over metrics, min-replica floor.
+        let combined =
+            combine_recommendations(&recommendations, cluster.min_replicas(target), None);
+
+        // Stage 3: shared behavior clamp.
+        let desired = self.state.apply(now, combined, current, &self.cfg.behavior);
 
         ScaleDecision {
             desired,
-            key_value,
+            key_value: recommendations[0].value,
             predicted: None,
             used_fallback: false,
+            recommendations,
         }
     }
 
@@ -135,18 +142,22 @@ mod tests {
     use super::*;
     use crate::app::{App, TaskCosts};
     use crate::cluster::{Deployment, NodeSpec, PodSpec, Selector, Tier};
-    use crate::metrics::{MetricsPipeline, M_CPU, METRIC_DIM};
+    use crate::metrics::{MetricsPipeline, M_CPU, M_REQ_RATE, METRIC_DIM};
     use crate::sim::{EventQueue, ServiceId};
     use crate::util::rng::Pcg64;
 
-    fn world_with_cpu(cpu_sum: f64, replicas: usize) -> (Cluster, MetricsPipeline) {
+    fn world_with_min(
+        cpu_sum: f64,
+        replicas: usize,
+        min_replicas: usize,
+    ) -> (Cluster, MetricsPipeline) {
         let mut cluster = Cluster::new();
         cluster.add_node(NodeSpec::new("e", Tier::Edge, 1, 8000, 8192));
         let dep = cluster.add_deployment(Deployment::new(
             "edge",
             Selector::new(Tier::Edge, None),
             PodSpec::new(500, 256),
-            1,
+            min_replicas,
             16,
         ));
         let cloud = cluster.add_deployment(Deployment::new(
@@ -169,21 +180,12 @@ mod tests {
         // Inject a synthetic latest vector.
         let mut v = [0.0; METRIC_DIM];
         v[M_CPU] = cpu_sum;
-        mp_inject(&mut mp, ServiceId(0), v, replicas);
+        mp.test_set_latest(ServiceId(0), v, replicas);
         (cluster, mp)
     }
 
-    /// Test helper: force a latest snapshot.
-    fn mp_inject(
-        mp: &mut MetricsPipeline,
-        svc: ServiceId,
-        vector: [f64; METRIC_DIM],
-        replicas: usize,
-    ) {
-        // MetricsPipeline has no public injection; emulate a scrape by
-        // writing through its internals via scrape of an empty world is
-        // complex — instead use the test-only setter.
-        mp.test_set_latest(svc, vector, replicas);
+    fn world_with_cpu(cpu_sum: f64, replicas: usize) -> (Cluster, MetricsPipeline) {
+        world_with_min(cpu_sum, replicas, 1)
     }
 
     #[test]
@@ -192,6 +194,9 @@ mod tests {
         let mut hpa = Hpa::with_defaults();
         let d = hpa.evaluate(0, ServiceId(0), DeploymentId(0), &mp, &cluster);
         assert_eq!(d.desired, 5); // ceil(350/70)
+        assert_eq!(d.recommendations.len(), 1);
+        assert_eq!(d.recommendations[0].desired, 5);
+        assert_eq!(d.recommendations[0].source, MetricSource::Current);
     }
 
     #[test]
@@ -233,5 +238,42 @@ mod tests {
         let mut hpa = Hpa::pure_eq1(70.0, 20 * SEC);
         let d = hpa.evaluate(0, ServiceId(0), DeploymentId(0), &mp, &cluster);
         assert_eq!(d.desired, 1);
+    }
+
+    #[test]
+    fn dead_metric_clamped_to_min_replicas() {
+        // Regression (scale-to-zero leak): NaN/zero metrics recommend 0;
+        // the combine stage must respect the deployment's replica floor.
+        let (cluster, mut mp) = world_with_min(0.0, 2, 2);
+        let mut v = [f64::NAN; METRIC_DIM];
+        v[M_CPU] = f64::NAN;
+        mp.test_set_latest(ServiceId(0), v, 2);
+        let mut hpa = Hpa::pure_eq1(70.0, 20 * SEC);
+        let d = hpa.evaluate(0, ServiceId(0), DeploymentId(0), &mp, &cluster);
+        assert_eq!(d.desired, 2, "min_replicas floor, not 0 or 1");
+    }
+
+    #[test]
+    fn multi_metric_takes_max() {
+        // cpu alone wants 1 replica; req_rate alone wants 4 — max wins.
+        let (cluster, mut mp) = world_with_cpu(70.0, 2);
+        let mut v = [0.0; METRIC_DIM];
+        v[M_CPU] = 70.0;
+        v[M_REQ_RATE] = 8.0;
+        mp.test_set_latest(ServiceId(0), v, 2);
+        let mut hpa = Hpa::new(HpaConfig {
+            specs: vec![
+                MetricSpec::current(M_CPU, 70.0),
+                MetricSpec::current(M_REQ_RATE, 2.0),
+            ],
+            behavior: ScalingBehavior::stabilize_down(0),
+            tolerance: 0.0,
+            ..HpaConfig::default()
+        });
+        let d = hpa.evaluate(0, ServiceId(0), DeploymentId(0), &mp, &cluster);
+        assert_eq!(d.recommendations[0].desired, 1);
+        assert_eq!(d.recommendations[1].desired, 4);
+        assert_eq!(d.desired, 4, "combined max over metrics");
+        assert_eq!(d.key_value, 70.0, "primary metric value reported");
     }
 }

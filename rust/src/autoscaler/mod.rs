@@ -1,32 +1,60 @@
 //! Autoscalers: the reactive Kubernetes HPA baseline and the paper's
-//! Proactive Pod Autoscaler (PPA).
+//! Proactive Pod Autoscaler (PPA), both on one decision pipeline.
 //!
-//! Both implement [`Autoscaler`]; the experiment driver ticks them on
-//! their control interval and applies the returned desired-replica count
-//! through [`crate::cluster::Cluster::reconcile`] — exactly the paper's
-//! "make requests for scaling decisions to the Kubernetes master" flow.
+//! The pipeline (DESIGN.md §7) has three stages:
+//!
+//! 1. **Specs → recommendations** — every [`MetricSpec`] (metric,
+//!    Eq-1 target, current-or-forecast source) is evaluated into one
+//!    [`Recommendation`] carrying the per-metric desired replica count
+//!    and its provenance.
+//! 2. **Combine** — K8s-HPA style: the **max** desired count across
+//!    metrics wins ([`combine_recommendations`]), clamped to the
+//!    deployment's `min_replicas` floor (and, for the PPA, Algorithm 1's
+//!    resource-limited max).
+//! 3. **Behavior** — the shared [`ScalingBehavior`] stage (stabilization
+//!    windows, rate limits, select policies) clamps the combined value
+//!    against the live replica count.
+//!
+//! The experiment driver ticks each [`Autoscaler`] on its control
+//! interval and applies the returned [`ScaleDecision`] through
+//! [`crate::cluster::Cluster::reconcile`] — exactly the paper's "make
+//! requests for scaling decisions to the Kubernetes master" flow. A
+//! [`ScalerRegistry`] binds per-target [`ScalerPolicy`] entries so one
+//! harness can drive a heterogeneous fleet.
 
+pub mod behavior;
 pub mod hpa;
 pub mod ppa;
+pub mod registry;
+pub mod spec;
 
-pub use hpa::Hpa;
+pub use behavior::{BehaviorState, RateLimits, ScalingBehavior, ScalingRules, SelectPolicy};
+pub use hpa::{Hpa, HpaConfig};
 pub use ppa::{Ppa, PpaConfig};
+pub use registry::{ScalerPolicy, ScalerRegistry};
+pub use spec::{specs_label, MetricSource, MetricSpec, Recommendation};
 
 use crate::cluster::{Cluster, DeploymentId};
 use crate::metrics::MetricsPipeline;
 use crate::sim::{ServiceId, Time};
 
-/// One control-loop decision (with provenance, for the experiment logs).
-#[derive(Debug, Clone, Copy)]
+/// One control-loop decision with full provenance: the behavior-clamped
+/// desired count plus the per-metric recommendations it was combined
+/// from (the structured experiment logs record these).
+#[derive(Debug, Clone)]
 pub struct ScaleDecision {
     pub desired: usize,
-    /// The key-metric value the decision was computed from.
+    /// The primary (first-spec) metric value the decision was computed
+    /// from.
     pub key_value: f64,
-    /// The model's prediction for the *next* interval, if one was made.
+    /// The model's prediction of the primary metric for the *next*
+    /// interval, if one was made.
     pub predicted: Option<f64>,
     /// True when Algorithm 1 fell back to current metrics (invalid model
     /// or low confidence).
     pub used_fallback: bool,
+    /// One entry per [`MetricSpec`], in spec order.
+    pub recommendations: Vec<Recommendation>,
 }
 
 /// A pod autoscaler bound to one target service/deployment.
@@ -39,6 +67,11 @@ pub trait Autoscaler {
     /// The model-update-loop period (proactive autoscalers only).
     fn update_interval(&self) -> Option<Time> {
         None
+    }
+
+    /// The metric specs this scaler evaluates (empty for harness stubs).
+    fn specs(&self) -> &[MetricSpec] {
+        &[]
     }
 
     /// One control-loop evaluation: read metrics via the adapter, decide
@@ -71,6 +104,27 @@ pub fn eq1_replicas(metric_value: f64, predefined: f64) -> usize {
     (metric_value / predefined).ceil() as usize
 }
 
+/// The combine stage: max desired across per-metric recommendations,
+/// optionally capped (Algorithm 1's resource-limited max), floored at
+/// the deployment's `min_replicas` (never below 1 — this closes the
+/// scale-to-zero leak where a non-positive/NaN metric made
+/// [`eq1_replicas`] return 0 with nothing clamping back up).
+pub fn combine_recommendations(
+    recommendations: &[Recommendation],
+    min_replicas: usize,
+    cap: Option<usize>,
+) -> usize {
+    let mut desired = recommendations
+        .iter()
+        .map(|r| r.desired)
+        .max()
+        .unwrap_or(0);
+    if let Some(cap) = cap {
+        desired = desired.min(cap);
+    }
+    desired.max(min_replicas.max(1))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,5 +137,41 @@ mod tests {
         assert_eq!(eq1_replicas(70.1, 70.0), 2);
         assert_eq!(eq1_replicas(350.0, 70.0), 5);
         assert_eq!(eq1_replicas(f64::NAN, 70.0), 0);
+    }
+
+    fn rec(metric: usize, desired: usize) -> Recommendation {
+        Recommendation {
+            metric,
+            target: 70.0,
+            value: desired as f64 * 70.0,
+            source: MetricSource::Current,
+            predicted: None,
+            desired,
+        }
+    }
+
+    #[test]
+    fn combine_takes_max_over_metrics() {
+        let recs = [rec(0, 2), rec(4, 5), rec(1, 1)];
+        assert_eq!(combine_recommendations(&recs, 1, None), 5);
+    }
+
+    #[test]
+    fn combine_caps_then_floors() {
+        let recs = [rec(0, 9)];
+        assert_eq!(combine_recommendations(&recs, 1, Some(4)), 4);
+        // Cap below the floor: min_replicas wins (the floor is the outer
+        // clamp, matching the legacy `.min(cap).max(1)` order).
+        assert_eq!(combine_recommendations(&recs, 3, Some(2)), 3);
+    }
+
+    #[test]
+    fn combine_clamps_scale_to_zero_leak() {
+        // A dead metric (0/NaN) recommends 0 replicas; the combine stage
+        // must hold the deployment's min_replicas floor.
+        let recs = [rec(0, 0)];
+        assert_eq!(combine_recommendations(&recs, 1, None), 1);
+        assert_eq!(combine_recommendations(&recs, 2, None), 2);
+        assert_eq!(combine_recommendations(&[], 0, None), 1, "floor never 0");
     }
 }

@@ -1,46 +1,45 @@
-//! The Evaluator — paper Algorithm 1.
+//! The Evaluator — paper Algorithm 1, generalized to multiple
+//! user-defined metrics.
 //!
 //! ```text
 //! Get current_metrics;
 //! Calculate max_replicas limited by system resources;
 //! model <- Load(model_file);
 //! if model.isValid():
-//!     key_metric <- Predict(model, current_metrics)
+//!     prediction <- Predict(model, current_metrics)
 //!     if model.isBayesian() and confidence < threshold:
-//!         key_metric <- current_key_metric
-//! else:
-//!     key_metric <- current_key_metric
-//! num_replicas <- Static_Policies(key_metric)
+//!         prediction <- invalid            // fall back to current
+//! for spec in metric_specs:               // multi-metric extension
+//!     value <- prediction[spec] if spec.source = Forecast and valid
+//!              else current[spec]
+//!     replicas[spec] <- Static_Policies(value)
+//! num_replicas <- max(replicas)           // K8s combine
 //! num_replicas <- min(num_replicas, max_replicas)
 //! ```
+//!
+//! The model predicts the whole protocol vector once per loop (the §4.2.2
+//! protocol: "the model should predict all input variables"); each
+//! `Forecast` spec reads its own component of that prediction.
 
+use super::super::{combine_recommendations, ScaleDecision};
 use super::policy::{ConservativeCeilPolicy, StaticPolicy};
-use super::super::ScaleDecision;
+use crate::autoscaler::spec::{MetricSource, MetricSpec, Recommendation};
 use crate::cluster::{Cluster, DeploymentId};
 use crate::forecast::Forecaster;
 use crate::metrics::METRIC_DIM;
 
-/// The Evaluator: injected model + static policy + key-metric choice.
+/// The Evaluator: injected model + static policy + confidence gate.
 pub struct Evaluator {
     forecaster: Box<dyn Forecaster>,
     policy: Box<dyn StaticPolicy>,
-    key_metric: usize,
-    threshold: f64,
     confidence_threshold: f64,
 }
 
 impl Evaluator {
-    pub fn new(
-        forecaster: Box<dyn Forecaster>,
-        key_metric: usize,
-        threshold: f64,
-        confidence_threshold: f64,
-    ) -> Self {
+    pub fn new(forecaster: Box<dyn Forecaster>, confidence_threshold: f64) -> Self {
         Evaluator {
             forecaster,
             policy: Box::new(ConservativeCeilPolicy),
-            key_metric,
-            threshold,
             confidence_threshold,
         }
     }
@@ -62,57 +61,85 @@ impl Evaluator {
         self.forecaster.observe(actual);
     }
 
-    /// Algorithm 1.
+    /// Algorithm 1 over the spec set: one [`Recommendation`] per spec,
+    /// combined max-wins and capped at the resource-limited maximum.
+    /// (The behavior stage in [`super::Ppa`] runs after this.)
     pub fn evaluate(
         &mut self,
+        specs: &[MetricSpec],
         current: &[f64; METRIC_DIM],
         history: &[[f64; METRIC_DIM]],
         target: DeploymentId,
         cluster: &Cluster,
     ) -> ScaleDecision {
-        let current_key = current[self.key_metric];
+        assert!(!specs.is_empty(), "Algorithm 1 needs >= 1 metric spec");
         // "Calculate max_replicas limited by system resources": the total
         // replica count the matching nodes can host (other deployments'
         // usage subtracted; this deployment's own pods are part of the
         // total, not additional load).
         let max_replicas = cluster.max_replicas(target);
+        let current_replicas = cluster.live_replicas(target);
 
-        let mut predicted = None;
+        // One whole-vector prediction per loop; the confidence gate and
+        // the invalid-model fallback are model-global ("Robust").
+        let raw_prediction = self.forecaster.predict(history);
         let mut used_fallback = false;
-
-        let key_value = match self.forecaster.predict(history) {
-            Some(pred_vector) => {
-                let pred_key = pred_vector[self.key_metric];
-                predicted = Some(pred_key);
+        let usable_prediction = match raw_prediction {
+            Some(vector) => {
                 if self.forecaster.is_bayesian()
                     && self.forecaster.confidence() < self.confidence_threshold
                 {
                     // Confident-only proactivity: fall back to reactive.
                     used_fallback = true;
-                    current_key
+                    None
                 } else {
-                    pred_key
+                    Some(vector)
                 }
             }
             None => {
                 // Invalid/missing model file — robust fallback.
                 used_fallback = true;
-                current_key
+                None
             }
         };
 
-        let current_replicas = cluster.live_replicas(target);
-        let desired = self
-            .policy
-            .replicas(key_value, current_key, self.threshold, current_replicas)
-            .min(max_replicas)
-            .max(1);
+        let mut recommendations = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let current_value = current[spec.metric];
+            let predicted = raw_prediction.map(|v| v[spec.metric]);
+            let (value, source) = match (spec.source, usable_prediction) {
+                (MetricSource::Forecast, Some(vector)) => {
+                    (vector[spec.metric], MetricSource::Forecast)
+                }
+                // Forecast requested but unavailable → reactive fallback.
+                (MetricSource::Forecast, None) => (current_value, MetricSource::Current),
+                (MetricSource::Current, _) => (current_value, MetricSource::Current),
+            };
+            let desired = self
+                .policy
+                .replicas(value, current_value, spec.target, current_replicas);
+            recommendations.push(Recommendation {
+                metric: spec.metric,
+                target: spec.target,
+                value,
+                source,
+                predicted,
+                desired,
+            });
+        }
+
+        let desired = combine_recommendations(
+            &recommendations,
+            cluster.min_replicas(target),
+            Some(max_replicas),
+        );
 
         ScaleDecision {
             desired,
-            key_value,
-            predicted,
+            key_value: recommendations[0].value,
+            predicted: recommendations[0].predicted,
             used_fallback,
+            recommendations,
         }
     }
 }
@@ -122,7 +149,7 @@ mod tests {
     use super::*;
     use crate::cluster::{Deployment, NodeSpec, PodSpec, Selector, Tier};
     use crate::forecast::{NaiveForecaster, UpdatePolicy};
-    use crate::metrics::M_CPU;
+    use crate::metrics::{M_CPU, M_REQ_RATE};
     use crate::sim::EventQueue;
     use crate::util::rng::Pcg64;
 
@@ -193,53 +220,114 @@ mod tests {
         v
     }
 
+    fn cpu_specs(target: f64) -> Vec<MetricSpec> {
+        vec![MetricSpec::forecast(M_CPU, target)]
+    }
+
     #[test]
     fn invalid_model_falls_back_to_current() {
         let cluster = fixture();
-        let mut e = Evaluator::new(Box::new(FailingModel), M_CPU, 70.0, 0.5);
-        let d = e.evaluate(&vec_with_cpu(150.0), &[], DeploymentId(0), &cluster);
+        let mut e = Evaluator::new(Box::new(FailingModel), 0.5);
+        let d = e.evaluate(
+            &cpu_specs(70.0),
+            &vec_with_cpu(150.0),
+            &[],
+            DeploymentId(0),
+            &cluster,
+        );
         assert!(d.used_fallback);
         assert_eq!(d.predicted, None);
         assert_eq!(d.desired, 3); // ceil(150/70) from CURRENT metric
+        assert_eq!(d.recommendations[0].source, MetricSource::Current);
     }
 
     #[test]
     fn low_confidence_bayesian_falls_back() {
         let cluster = fixture();
-        let mut e = Evaluator::new(Box::new(UnderConfidentModel), M_CPU, 70.0, 0.5);
-        let d = e.evaluate(&vec_with_cpu(70.0), &[], DeploymentId(0), &cluster);
+        let mut e = Evaluator::new(Box::new(UnderConfidentModel), 0.5);
+        let d = e.evaluate(
+            &cpu_specs(70.0),
+            &vec_with_cpu(70.0),
+            &[],
+            DeploymentId(0),
+            &cluster,
+        );
         assert!(d.used_fallback, "confidence 0.1 < threshold 0.5");
         assert_eq!(d.desired, 1, "uses current 70, not predicted 999");
-        assert_eq!(d.predicted, Some(999.0));
+        assert_eq!(d.predicted, Some(999.0), "raw prediction still logged");
     }
 
     #[test]
     fn valid_model_prediction_used() {
         let cluster = fixture();
-        let mut e = Evaluator::new(Box::new(NaiveForecaster), M_CPU, 70.0, 0.5);
+        let mut e = Evaluator::new(Box::new(NaiveForecaster), 0.5);
         let history = vec![vec_with_cpu(200.0)];
-        let d = e.evaluate(&vec_with_cpu(50.0), &history, DeploymentId(0), &cluster);
+        let d = e.evaluate(
+            &cpu_specs(70.0),
+            &vec_with_cpu(50.0),
+            &history,
+            DeploymentId(0),
+            &cluster,
+        );
         assert!(!d.used_fallback);
         // Naive predicts the last history row (200) → ceil(200/70)=3.
         assert_eq!(d.desired, 3);
+        assert_eq!(d.recommendations[0].source, MetricSource::Forecast);
     }
 
     #[test]
     fn limitation_aware_cap() {
         let cluster = fixture();
         // Node allows 1800/500 = 3 pods total.
-        let mut e = Evaluator::new(Box::new(NaiveForecaster), M_CPU, 70.0, 0.5);
+        let mut e = Evaluator::new(Box::new(NaiveForecaster), 0.5);
         let history = vec![vec_with_cpu(100_000.0)];
-        let d = e.evaluate(&vec_with_cpu(1.0), &history, DeploymentId(0), &cluster);
+        let d = e.evaluate(
+            &cpu_specs(70.0),
+            &vec_with_cpu(1.0),
+            &history,
+            DeploymentId(0),
+            &cluster,
+        );
         assert_eq!(d.desired, 3, "never overscale past physical limits");
     }
 
     #[test]
     fn floor_of_one_replica() {
         let cluster = fixture();
-        let mut e = Evaluator::new(Box::new(NaiveForecaster), M_CPU, 70.0, 0.5);
+        let mut e = Evaluator::new(Box::new(NaiveForecaster), 0.5);
         let history = vec![vec_with_cpu(0.0)];
-        let d = e.evaluate(&vec_with_cpu(0.0), &history, DeploymentId(0), &cluster);
+        let d = e.evaluate(
+            &cpu_specs(70.0),
+            &vec_with_cpu(0.0),
+            &history,
+            DeploymentId(0),
+            &cluster,
+        );
         assert_eq!(d.desired, 1);
+    }
+
+    #[test]
+    fn mixed_sources_per_spec() {
+        // cpu is forecast (naive → last history row = 210 → 3 replicas);
+        // req_rate is pinned to Current (4.0 → 2 replicas at target 2).
+        let cluster = fixture();
+        let mut e = Evaluator::new(Box::new(NaiveForecaster), 0.5);
+        let mut hist_row = vec_with_cpu(210.0);
+        hist_row[M_REQ_RATE] = 100.0; // would demand 50 replicas if forecast
+        let history = vec![hist_row];
+        let mut current = vec_with_cpu(50.0);
+        current[M_REQ_RATE] = 4.0;
+        let specs = vec![
+            MetricSpec::forecast(M_CPU, 70.0),
+            MetricSpec::current(M_REQ_RATE, 2.0),
+        ];
+        let d = e.evaluate(&specs, &current, &history, DeploymentId(0), &cluster);
+        assert_eq!(d.recommendations[0].desired, 3, "forecast cpu");
+        assert_eq!(d.recommendations[0].source, MetricSource::Forecast);
+        assert_eq!(d.recommendations[1].source, MetricSource::Current);
+        // Conservative policy: max(current 4, …) — value is current 4.
+        assert_eq!(d.recommendations[1].value, 4.0);
+        assert_eq!(d.recommendations[1].desired, 2, "current req_rate only");
+        assert_eq!(d.desired, 3, "combined max, capped at node capacity");
     }
 }

@@ -3,13 +3,18 @@
 //! Three components, two loops, two files (Fig 4):
 //! * [`Formulator`] — extracts the protocol vector from raw metrics each
 //!   control loop and appends it to the *metrics history file*.
-//! * [`Evaluator`] — Algorithm 1: predicts the key metric with the
-//!   injected model (*model file*), falls back to the current metric when
-//!   the model is invalid or under-confident, applies the *static policy*
-//!   and caps at the resource-limited max replicas.
+//! * [`Evaluator`] — Algorithm 1 over the configured [`MetricSpec`] set:
+//!   predicts the protocol vector with the injected model (*model file*),
+//!   falls back to current metrics when the model is invalid or
+//!   under-confident, applies the *static policy* per metric, combines
+//!   max-wins and caps at the resource-limited max replicas.
 //! * [`Updater`] — the model-update loop: applies one of the three update
 //!   policies (§4.2.3) to the model over the history file, then clears
 //!   the history file (as the paper's Updater does).
+//!
+//! The combined decision then runs through the shared
+//! [`ScalingBehavior`] stage — the control plane applies the same
+//! stabilization/rate machinery to every scaler's requests.
 
 mod evaluator;
 mod formulator;
@@ -21,19 +26,23 @@ pub use formulator::Formulator;
 pub use policy::{ConservativeCeilPolicy, HpaCeilPolicy, StaticPolicy, StepPolicy};
 pub use updater::Updater;
 
+use super::behavior::{BehaviorState, ScalingBehavior};
+use super::spec::MetricSpec;
 use super::{Autoscaler, ScaleDecision};
 use crate::cluster::{Cluster, DeploymentId};
 use crate::forecast::{Forecaster, UpdatePolicy};
 use crate::metrics::MetricsPipeline;
 use crate::sim::{ServiceId, Time, HOUR, SEC};
+use crate::stats::StreamingStats;
 
-/// PPA configuration — Table 4's arguments.
+/// PPA configuration — Table 4's arguments, multi-metric form.
 #[derive(Debug, Clone)]
 pub struct PpaConfig {
-    /// `KeyMetric`: index into the protocol vector.
-    pub key_metric: usize,
-    /// `Threashold` (sic): Eq 1 denominator on the key metric.
-    pub threshold: f64,
+    /// Metric targets, combined max-wins. The first spec is the
+    /// *primary* metric: its prediction feeds the prediction log (Figs
+    /// 7–8). Sources are honoured per spec (`Forecast` = Algorithm 1
+    /// proactive path, `Current` = reactive pin).
+    pub specs: Vec<MetricSpec>,
     /// `ControlInterval` (paper experiments: 20 s records).
     pub control_interval: Time,
     /// `UpdateInterval` (paper: hours; 1 h in the optimization runs).
@@ -42,23 +51,21 @@ pub struct PpaConfig {
     pub update_policy: UpdatePolicy,
     /// Confidence gate for Bayesian models (Algorithm 1).
     pub confidence_threshold: f64,
-    /// Downscale stabilization window applied by the control plane to
-    /// the PPA's scale requests (K8s applies the same machinery to every
-    /// scaler; the PPA can afford a shorter window than HPA's 5 min
-    /// because its predictions filter transient dips).
-    pub downscale_stabilization: Time,
+    /// Scaling behavior applied by the control plane to the PPA's scale
+    /// requests. Default: 2-minute downscale stabilization — shorter
+    /// than HPA's 5 min because predictions filter transient dips.
+    pub behavior: ScalingBehavior,
 }
 
 impl Default for PpaConfig {
     fn default() -> Self {
         PpaConfig {
-            key_metric: crate::metrics::M_CPU,
-            threshold: 70.0,
+            specs: vec![MetricSpec::forecast(crate::metrics::M_CPU, 70.0)],
             control_interval: 20 * SEC,
             update_interval: HOUR,
             update_policy: UpdatePolicy::FineTune,
             confidence_threshold: 0.5,
-            downscale_stabilization: 2 * crate::sim::MIN,
+            behavior: ScalingBehavior::stabilize_down(2 * crate::sim::MIN),
         }
     }
 }
@@ -79,32 +86,32 @@ pub struct Ppa {
     formulator: Formulator,
     evaluator: Evaluator,
     updater: Updater,
-    /// Prediction made last tick, awaiting its actual.
+    /// Primary-metric prediction made last tick, awaiting its actual.
     pending_prediction: Option<f64>,
-    /// (predicted, actual) log for MSE evaluation.
+    /// (predicted, actual) log for the primary metric (Figs 7–8).
     pub prediction_log: Vec<PredictionRecord>,
     /// Decision log (desired replicas per tick).
     pub decision_log: Vec<(Time, usize)>,
-    /// (time, desired) history for the downscale-stabilization window.
-    recent_desired: std::collections::VecDeque<(Time, usize)>,
+    /// Streaming squared-error moments over the prediction log — the
+    /// MSE is read off in O(1) with no intermediate collections.
+    squared_errors: StreamingStats,
+    /// Shared behavior-stage state (stabilization windows, rate limits).
+    behavior_state: BehaviorState,
 }
 
 impl Ppa {
     pub fn new(cfg: PpaConfig, forecaster: Box<dyn Forecaster>) -> Self {
+        assert!(!cfg.specs.is_empty(), "PPA needs >= 1 metric spec");
         Ppa {
-            evaluator: Evaluator::new(
-                forecaster,
-                cfg.key_metric,
-                cfg.threshold,
-                cfg.confidence_threshold,
-            ),
+            evaluator: Evaluator::new(forecaster, cfg.confidence_threshold),
             updater: Updater::new(cfg.update_policy),
             formulator: Formulator::new(),
             cfg,
             pending_prediction: None,
             prediction_log: Vec::new(),
             decision_log: Vec::new(),
-            recent_desired: std::collections::VecDeque::new(),
+            squared_errors: StreamingStats::new(),
+            behavior_state: BehaviorState::new(),
         }
     }
 
@@ -119,11 +126,15 @@ impl Ppa {
         self.evaluator.forecaster_name()
     }
 
-    /// Mean squared prediction error so far (Figs 7–8 metric).
+    /// The primary (first-spec) metric index.
+    pub fn primary_metric(&self) -> usize {
+        self.cfg.specs[0].metric
+    }
+
+    /// Mean squared prediction error of the primary metric so far (Figs
+    /// 7–8 metric) — a single streaming pass; no per-call collections.
     pub fn prediction_mse(&self) -> f64 {
-        let preds: Vec<f64> = self.prediction_log.iter().map(|r| r.predicted).collect();
-        let actuals: Vec<f64> = self.prediction_log.iter().map(|r| r.actual).collect();
-        crate::stats::mse(&preds, &actuals)
+        self.squared_errors.mean()
     }
 }
 
@@ -140,6 +151,10 @@ impl Autoscaler for Ppa {
         Some(self.cfg.update_interval)
     }
 
+    fn specs(&self) -> &[MetricSpec] {
+        &self.cfg.specs
+    }
+
     fn evaluate(
         &mut self,
         now: Time,
@@ -152,40 +167,35 @@ impl Autoscaler for Ppa {
         let vector = metrics.latest_vector(service);
         self.formulator.record(vector);
 
-        // Close the loop on last tick's prediction (Fig 7/8 data).
+        // Close the loop on last tick's primary prediction (Fig 7/8
+        // data) and fold its squared error into the streaming moments.
         if let Some(pred) = self.pending_prediction.take() {
+            let actual = vector[self.primary_metric()];
+            let err = pred - actual;
+            self.squared_errors.record(err * err);
             self.prediction_log.push(PredictionRecord {
                 time: now,
                 predicted: pred,
-                actual: vector[self.cfg.key_metric],
+                actual,
             });
         }
         self.evaluator.observe_actual(&vector);
 
-        // Evaluator: Algorithm 1.
-        let mut decision = self
-            .evaluator
-            .evaluate(&vector, self.formulator.history(), target, cluster);
+        // Evaluator: Algorithm 1 per spec + combine + resource cap.
+        let mut decision = self.evaluator.evaluate(
+            &self.cfg.specs,
+            &vector,
+            self.formulator.history(),
+            target,
+            cluster,
+        );
         self.pending_prediction = decision.predicted;
 
-        // Control-plane downscale stabilization (short window).
-        if self.cfg.downscale_stabilization > 0 {
-            self.recent_desired.push_back((now, decision.desired));
-            let cutoff = now.saturating_sub(self.cfg.downscale_stabilization);
-            while matches!(self.recent_desired.front(), Some(&(t, _)) if t < cutoff) {
-                self.recent_desired.pop_front();
-            }
-            let current = cluster.live_replicas(target);
-            if decision.desired < current {
-                let stabilized = self
-                    .recent_desired
-                    .iter()
-                    .map(|&(_, d)| d)
-                    .max()
-                    .unwrap_or(decision.desired);
-                decision.desired = stabilized.min(current);
-            }
-        }
+        // Control-plane behavior stage (stabilization / rate limits).
+        let current = cluster.live_replicas(target);
+        decision.desired =
+            self.behavior_state
+                .apply(now, decision.desired, current, &self.cfg.behavior);
 
         self.decision_log.push((now, decision.desired));
         decision
@@ -204,13 +214,14 @@ impl Autoscaler for Ppa {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::autoscaler::spec::MetricSource;
     use crate::cluster::{Deployment, NodeSpec, PodSpec, Selector, Tier};
     use crate::forecast::NaiveForecaster;
-    use crate::metrics::{M_CPU, METRIC_DIM};
+    use crate::metrics::{M_CPU, M_REQ_RATE, METRIC_DIM};
     use crate::sim::EventQueue;
     use crate::util::rng::Pcg64;
 
-    fn cluster_fixture(replicas: usize) -> Cluster {
+    fn cluster_fixture_min(replicas: usize, min_replicas: usize) -> Cluster {
         let mut cluster = Cluster::new();
         cluster.add_node(NodeSpec::new("e1", Tier::Edge, 1, 2000, 2048));
         cluster.add_node(NodeSpec::new("e2", Tier::Edge, 1, 2000, 2048));
@@ -218,7 +229,7 @@ mod tests {
             "edge",
             Selector::new(Tier::Edge, None),
             PodSpec::new(500, 256),
-            1,
+            min_replicas,
             16,
         ));
         let mut q = EventQueue::new();
@@ -230,6 +241,10 @@ mod tests {
             }
         }
         cluster
+    }
+
+    fn cluster_fixture(replicas: usize) -> Cluster {
+        cluster_fixture_min(replicas, 1)
     }
 
     fn metrics_with(cpu: f64, replicas: usize) -> MetricsPipeline {
@@ -250,6 +265,8 @@ mod tests {
         assert_eq!(d.desired, 5);
         assert!(!d.used_fallback);
         assert_eq!(d.predicted, Some(300.0));
+        assert_eq!(d.recommendations.len(), 1);
+        assert_eq!(d.recommendations[0].source, MetricSource::Forecast);
     }
 
     #[test]
@@ -296,5 +313,42 @@ mod tests {
             0,
             "updater must clear the metrics history file"
         );
+    }
+
+    #[test]
+    fn dead_metric_clamped_to_min_replicas() {
+        // Regression (scale-to-zero leak): with a NaN/zero metric the
+        // old PPA path could decide 1 even when the deployment's floor
+        // was higher; the combine stage now clamps to min_replicas.
+        let cluster = cluster_fixture_min(3, 3);
+        let mut ppa = Ppa::new(PpaConfig::default(), Box::new(NaiveForecaster));
+        let mut mp = MetricsPipeline::new(10 * SEC, 1);
+        mp.test_set_latest(ServiceId(0), [f64::NAN; METRIC_DIM], 3);
+        let d = ppa.evaluate(0, ServiceId(0), DeploymentId(0), &mp, &cluster);
+        assert_eq!(d.desired, 3, "min_replicas floor holds on dead metrics");
+        assert_eq!(d.recommendations[0].desired, 1, "policy floor is 1");
+    }
+
+    #[test]
+    fn multi_metric_combines_max() {
+        let cluster = cluster_fixture(2);
+        let cfg = PpaConfig {
+            specs: vec![
+                MetricSpec::forecast(M_CPU, 70.0),
+                MetricSpec::forecast(M_REQ_RATE, 1.0),
+            ],
+            ..PpaConfig::default()
+        };
+        let mut ppa = Ppa::new(cfg, Box::new(NaiveForecaster));
+        let mut mp = MetricsPipeline::new(10 * SEC, 1);
+        let mut v = [0.0; METRIC_DIM];
+        v[M_CPU] = 70.0; // alone: 1 replica
+        v[M_REQ_RATE] = 3.5; // alone: 4 replicas
+        mp.test_set_latest(ServiceId(0), v, 2);
+        let d = ppa.evaluate(0, ServiceId(0), DeploymentId(0), &mp, &cluster);
+        assert_eq!(d.recommendations[0].desired, 1);
+        assert_eq!(d.recommendations[1].desired, 4);
+        assert_eq!(d.desired, 4, "req_rate spec drives the fleet up");
+        assert_eq!(d.key_value, 70.0, "primary metric is the first spec");
     }
 }

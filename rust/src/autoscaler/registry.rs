@@ -1,0 +1,142 @@
+//! The fleet registry: many `(metric-spec set, behavior, target)`
+//! bindings under one roof, so a single sweep cell (or CLI run) can
+//! drive a whole city-topology fleet with heterogeneous scaling
+//! policies — e.g. the cloud pool on `cpu:70` while a downtown edge
+//! zone runs `cpu:70+req_rate:150` under tighter rate limits.
+
+use super::behavior::ScalingBehavior;
+use super::spec::{specs_label, MetricSource, MetricSpec};
+use crate::metrics::M_CPU;
+
+/// One scaling policy — the spec set plus behavior a Kubernetes HPA
+/// object would carry. Plain data: clonable, `Send + Sync`, shared
+/// read-only across sweep workers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalerPolicy {
+    pub specs: Vec<MetricSpec>,
+    /// Behavior override. `None` keeps the scaler kind's stock default
+    /// (HPA: 5-min downscale stabilization; PPA: 2-min) — so a fleet
+    /// that only customizes metrics never silently changes the
+    /// baseline's stabilization dynamics.
+    pub behavior: Option<ScalingBehavior>,
+}
+
+impl Default for ScalerPolicy {
+    /// The paper's single-metric policy: cpu:70, kind-default behavior.
+    fn default() -> Self {
+        ScalerPolicy {
+            specs: vec![MetricSpec {
+                metric: M_CPU,
+                target: 70.0,
+                source: MetricSource::Forecast,
+            }],
+            behavior: None,
+        }
+    }
+}
+
+impl ScalerPolicy {
+    /// A policy with an explicit behavior override.
+    pub fn new(specs: Vec<MetricSpec>, behavior: ScalingBehavior) -> Self {
+        assert!(!specs.is_empty(), "a scaling policy needs >= 1 metric spec");
+        ScalerPolicy {
+            specs,
+            behavior: Some(behavior),
+        }
+    }
+
+    /// A policy that only customizes metrics (kind-default behavior).
+    pub fn from_specs(specs: Vec<MetricSpec>) -> Self {
+        assert!(!specs.is_empty(), "a scaling policy needs >= 1 metric spec");
+        ScalerPolicy {
+            specs,
+            behavior: None,
+        }
+    }
+
+    /// Compact report/JSON label, e.g. `cpu:70+req_rate:150`.
+    pub fn label(&self) -> String {
+        specs_label(&self.specs)
+    }
+}
+
+/// Binds policies to scaler targets by service index (== deployment
+/// order in the cluster config): a default policy for the fleet plus
+/// per-target overrides.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ScalerRegistry {
+    default: ScalerPolicy,
+    overrides: Vec<(usize, ScalerPolicy)>,
+}
+
+impl ScalerRegistry {
+    /// Every target runs `policy`.
+    pub fn uniform(policy: ScalerPolicy) -> Self {
+        ScalerRegistry {
+            default: policy,
+            overrides: Vec::new(),
+        }
+    }
+
+    /// Override the policy of one target (builder form). Re-binding a
+    /// service replaces its previous override.
+    pub fn bind(mut self, service_idx: usize, policy: ScalerPolicy) -> Self {
+        self.overrides.retain(|&(idx, _)| idx != service_idx);
+        self.overrides.push((service_idx, policy));
+        self
+    }
+
+    /// The policy bound to a service index. (The sweep JSON `"specs"`
+    /// array is derived from the *live* scalers after a run —
+    /// `specs_label(autoscaler.specs())` — not from here, so there is
+    /// exactly one label path.)
+    pub fn policy_for(&self, service_idx: usize) -> &ScalerPolicy {
+        self.overrides
+            .iter()
+            .find(|&&(idx, _)| idx == service_idx)
+            .map(|(_, p)| p)
+            .unwrap_or(&self.default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::M_REQ_RATE;
+    use crate::sim::MIN;
+
+    #[test]
+    fn default_policy_is_paper_single_metric() {
+        let p = ScalerPolicy::default();
+        assert_eq!(p.label(), "cpu:70");
+        assert_eq!(p.behavior, None, "kind-default behavior");
+        let q = ScalerPolicy::from_specs(vec![MetricSpec::current(M_CPU, 50.0)]);
+        assert_eq!(q.behavior, None);
+        assert_eq!(q.label(), "cpu:50");
+    }
+
+    #[test]
+    fn registry_binds_and_falls_back() {
+        let hot = ScalerPolicy::new(
+            vec![
+                MetricSpec::forecast(M_CPU, 70.0),
+                MetricSpec::forecast(M_REQ_RATE, 150.0),
+            ],
+            ScalingBehavior::stabilize_down(MIN),
+        );
+        let reg = ScalerRegistry::uniform(ScalerPolicy::default()).bind(1, hot.clone());
+        assert_eq!(reg.policy_for(0).label(), "cpu:70");
+        assert_eq!(reg.policy_for(1).label(), "cpu:70+req_rate:150");
+        assert_eq!(reg.policy_for(2).label(), "cpu:70", "fallback to default");
+        // Re-binding replaces.
+        let reg = reg.bind(1, ScalerPolicy::default());
+        assert_eq!(reg.policy_for(1).label(), "cpu:70");
+        assert_eq!(reg.overrides.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs >= 1 metric spec")]
+    fn empty_spec_set_rejected() {
+        let _ = ScalerPolicy::new(vec![], ScalingBehavior::stabilize_down(0));
+    }
+}

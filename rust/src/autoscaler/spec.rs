@@ -1,0 +1,184 @@
+//! Metric specs and per-metric recommendations — the first stage of the
+//! scaling-decision pipeline.
+//!
+//! The paper's headline property is that the PPA "forecasts workloads in
+//! advance with multiple user-defined/customized metrics". A
+//! [`MetricSpec`] is one such user-defined metric target (the analogue of
+//! one `metrics:` entry of a Kubernetes HPA object): *which* protocol-
+//! vector metric, the Eq-1 target value, and whether the value feeding
+//! Eq 1 is the current scrape or the model's forecast. An autoscaler
+//! evaluates every spec into a [`Recommendation`] and combines them
+//! K8s-style — the **max** desired count across metrics wins — before the
+//! shared [`super::ScalingBehavior`] stage clamps the result.
+
+use crate::metrics::{parse_metric, METRIC_NAMES};
+use anyhow::Context;
+
+/// Where the metric value feeding Eq 1 comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricSource {
+    /// The latest scraped value (reactive — what the stock HPA uses).
+    Current,
+    /// The forecaster's one-step-ahead prediction (proactive). Falls
+    /// back to `Current` when the model is invalid or under-confident
+    /// (Algorithm 1's "Robust" property).
+    Forecast,
+}
+
+/// One user-defined metric target: Eq 1 is evaluated per spec as
+/// `ceil(value / target)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricSpec {
+    /// Protocol-vector index (see [`crate::metrics::METRIC_NAMES`]).
+    pub metric: usize,
+    /// Eq-1 denominator (the paper's `Threashold`, Table 4).
+    pub target: f64,
+    /// Requested value source. Reactive autoscalers (HPA) always read
+    /// `Current` regardless; the PPA honours the request per spec.
+    pub source: MetricSource,
+}
+
+impl MetricSpec {
+    /// A reactive spec on the current metric value.
+    pub fn current(metric: usize, target: f64) -> Self {
+        MetricSpec {
+            metric,
+            target,
+            source: MetricSource::Current,
+        }
+    }
+
+    /// A proactive spec on the forecast metric value.
+    pub fn forecast(metric: usize, target: f64) -> Self {
+        MetricSpec {
+            metric,
+            target,
+            source: MetricSource::Forecast,
+        }
+    }
+
+    /// Parse `name:target[:current|:forecast]` where `name` is a metric
+    /// name or index ([`crate::metrics::parse_metric`]) — the CLI
+    /// `--metric` syntax, e.g. `cpu:70`, `req_rate:150:current`, `0:80`.
+    /// `default_source` applies when the third segment is omitted.
+    pub fn parse(s: &str, default_source: MetricSource) -> crate::Result<Self> {
+        let mut parts = s.splitn(3, ':');
+        let name = parts.next().unwrap_or("");
+        let target_str = parts
+            .next()
+            .with_context(|| format!("metric spec '{s}' needs a target, e.g. cpu:70"))?;
+        let metric = parse_metric(name)?;
+        let target: f64 = target_str
+            .trim()
+            .parse()
+            .ok()
+            .filter(|t: &f64| t.is_finite() && *t > 0.0)
+            .with_context(|| format!("metric spec '{s}': target must be a positive number"))?;
+        let source = match parts.next() {
+            None => default_source,
+            Some("current") => MetricSource::Current,
+            Some("forecast") => MetricSource::Forecast,
+            Some(other) => anyhow::bail!(
+                "metric spec '{s}': unknown source '{other}' (current|forecast)"
+            ),
+        };
+        Ok(MetricSpec {
+            metric,
+            target,
+            source,
+        })
+    }
+
+    /// The metric's protocol-vector name.
+    pub fn name(&self) -> &'static str {
+        METRIC_NAMES[self.metric]
+    }
+
+    /// Compact `name:target` label (report/JSON form).
+    pub fn label(&self) -> String {
+        format!("{}:{}", self.name(), self.target)
+    }
+}
+
+/// Compact label of a whole spec set: `cpu:70+req_rate:150` (the sweep
+/// JSON `"specs"` entries).
+pub fn specs_label(specs: &[MetricSpec]) -> String {
+    if specs.is_empty() {
+        return "none".to_string();
+    }
+    specs
+        .iter()
+        .map(MetricSpec::label)
+        .collect::<Vec<_>>()
+        .join("+")
+}
+
+/// One spec's evaluated outcome: the per-metric desired replica count
+/// plus full provenance — what the combine stage and the structured
+/// decision logs consume.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Recommendation {
+    /// Protocol-vector index of the spec's metric.
+    pub metric: usize,
+    /// The spec's Eq-1 target.
+    pub target: f64,
+    /// The value Eq 1 was actually fed (current or forecast).
+    pub value: f64,
+    /// The source actually used — `Current` when a `Forecast` spec fell
+    /// back (invalid model / low confidence).
+    pub source: MetricSource,
+    /// The model's prediction for this metric, when one was made (kept
+    /// even under fallback, for the prediction logs).
+    pub predicted: Option<f64>,
+    /// Desired replicas from this metric alone (pre-combine, unclamped).
+    pub desired: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{M_CPU, M_REQ_RATE};
+
+    #[test]
+    fn parse_name_and_index_forms() {
+        let s = MetricSpec::parse("cpu:70", MetricSource::Current).unwrap();
+        assert_eq!(s.metric, M_CPU);
+        assert!((s.target - 70.0).abs() < 1e-12);
+        assert_eq!(s.source, MetricSource::Current);
+        let s = MetricSpec::parse("4:1.5", MetricSource::Forecast).unwrap();
+        assert_eq!(s.metric, M_REQ_RATE);
+        assert_eq!(s.source, MetricSource::Forecast);
+    }
+
+    #[test]
+    fn parse_explicit_source_overrides_default() {
+        let s = MetricSpec::parse("req_rate:150:current", MetricSource::Forecast).unwrap();
+        assert_eq!(s.source, MetricSource::Current);
+        let s = MetricSpec::parse("cpu:70:forecast", MetricSource::Current).unwrap();
+        assert_eq!(s.source, MetricSource::Forecast);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(MetricSpec::parse("cpu", MetricSource::Current).is_err());
+        assert!(MetricSpec::parse("cpu:-3", MetricSource::Current).is_err());
+        assert!(MetricSpec::parse("cpu:NaN", MetricSource::Current).is_err());
+        assert!(MetricSpec::parse("bogus:70", MetricSource::Current).is_err());
+        assert!(MetricSpec::parse("cpu:70:psychic", MetricSource::Current).is_err());
+        let err = format!(
+            "{:#}",
+            MetricSpec::parse("watts:70", MetricSource::Current).unwrap_err()
+        );
+        assert!(err.contains("req_rate"), "error lists metric names: {err}");
+    }
+
+    #[test]
+    fn labels_compact() {
+        let a = MetricSpec::current(M_CPU, 70.0);
+        let b = MetricSpec::forecast(M_REQ_RATE, 1.5);
+        assert_eq!(a.label(), "cpu:70");
+        assert_eq!(b.label(), "req_rate:1.5");
+        assert_eq!(specs_label(&[a, b]), "cpu:70+req_rate:1.5");
+        assert_eq!(specs_label(&[]), "none");
+    }
+}

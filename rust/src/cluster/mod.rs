@@ -112,6 +112,13 @@ impl Cluster {
             .count()
     }
 
+    /// The deployment's configured replica floor (the autoscalers'
+    /// combine stage clamps decisions to this, closing the
+    /// scale-to-zero leak on dead metrics).
+    pub fn min_replicas(&self, dep: DeploymentId) -> usize {
+        self.deployments[dep.0 as usize].min_replicas
+    }
+
     /// The "limitation-aware" cap (paper Algorithm 1): the maximum number
     /// of replicas of `dep` the matching nodes can physically host,
     /// accounting for resources used by other deployments' pods.

@@ -181,7 +181,8 @@ impl Topology {
 pub struct PpaArgs {
     /// `ModelType`: "lstm", "arma" or "naive".
     pub model_type: String,
-    /// `KeyMetric`: "cpu", "ram", "net_in", "net_out" or "req_rate".
+    /// `KeyMetric`: a metric name ("cpu", "ram", "net_in", "net_out",
+    /// "req_rate") or protocol-vector index ("0".."4").
     pub key_metric: String,
     /// `ControlInterval` in seconds.
     pub control_interval_secs: u64,
@@ -211,10 +212,8 @@ impl Default for PpaArgs {
 
 impl PpaArgs {
     pub fn key_metric_index(&self) -> crate::Result<usize> {
-        crate::metrics::METRIC_NAMES
-            .iter()
-            .position(|&n| n == self.key_metric)
-            .with_context(|| format!("unknown key metric '{}'", self.key_metric))
+        crate::metrics::parse_metric(&self.key_metric)
+            .with_context(|| format!("bad KeyMetric '{}'", self.key_metric))
     }
 
     pub fn update_policy_enum(&self) -> crate::Result<UpdatePolicy> {
@@ -234,16 +233,20 @@ impl PpaArgs {
         (self.update_interval_hours * HOUR as f64) as Time
     }
 
-    /// To the runtime PpaConfig.
+    /// To the runtime PpaConfig (single-spec form: Table 4 has one
+    /// `KeyMetric`/`Threashold` pair; multi-metric fleets are built via
+    /// [`crate::autoscaler::ScalerRegistry`] / the CLI `--metric` flags).
     pub fn to_ppa_config(&self) -> crate::Result<crate::autoscaler::PpaConfig> {
         Ok(crate::autoscaler::PpaConfig {
-            key_metric: self.key_metric_index()?,
-            threshold: self.threshold,
+            specs: vec![crate::autoscaler::MetricSpec::forecast(
+                self.key_metric_index()?,
+                self.threshold,
+            )],
             control_interval: self.control_interval(),
             update_interval: self.update_interval(),
             update_policy: self.update_policy_enum()?,
             confidence_threshold: self.confidence_threshold,
-            downscale_stabilization: 2 * crate::sim::MIN,
+            behavior: crate::autoscaler::ScalingBehavior::stabilize_down(2 * crate::sim::MIN),
         })
     }
 }
@@ -438,6 +441,19 @@ mod tests {
             UpdatePolicy::RetrainScratch
         );
         assert!((args.threshold - 4.5).abs() < 1e-12);
+        // The runtime config is the single-spec pipeline form.
+        let cfg = args.to_ppa_config().unwrap();
+        assert_eq!(cfg.specs.len(), 1);
+        assert_eq!(cfg.specs[0].metric, crate::metrics::M_REQ_RATE);
+        assert!((cfg.specs[0].target - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ppa_args_key_metric_by_index() {
+        // Satellite: indices accepted anywhere names are.
+        let doc = Json::parse(r#"{"KeyMetric": "4"}"#).unwrap();
+        let args = PpaArgs::from_json(&doc).unwrap();
+        assert_eq!(args.key_metric_index().unwrap(), crate::metrics::M_REQ_RATE);
     }
 
     #[test]

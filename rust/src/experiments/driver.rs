@@ -2,7 +2,7 @@
 //! autoscalers into one event loop (the whole Fig 3 system).
 
 use crate::app::{App, TaskCosts};
-use crate::autoscaler::Autoscaler;
+use crate::autoscaler::{Autoscaler, Recommendation};
 use crate::cluster::{Cluster, DeploymentId};
 use crate::config::ClusterConfig;
 use crate::metrics::{MetricsPipeline, DEFAULT_SCRAPE_INTERVAL};
@@ -25,6 +25,21 @@ pub struct RirSample {
     pub rir: f64,
 }
 
+/// One control-loop decision as the driver applied it — the structured
+/// per-metric decision log every harness can read (golden-equivalence
+/// tests diff these sequences; the sweep summarizes them).
+#[derive(Debug, Clone)]
+pub struct DecisionRecord {
+    pub time: Time,
+    pub service: ServiceId,
+    /// The behavior-clamped count handed to `Cluster::reconcile`.
+    pub desired: usize,
+    /// True when Algorithm 1 fell back to current metrics.
+    pub used_fallback: bool,
+    /// Per-[`crate::autoscaler::MetricSpec`] provenance, in spec order.
+    pub recommendations: Vec<Recommendation>,
+}
+
 /// The assembled world.
 pub struct SimWorld {
     pub queue: EventQueue,
@@ -36,6 +51,13 @@ pub struct SimWorld {
     pub rir_log: Vec<RirSample>,
     /// (time, service, replicas) per scrape — replica-trajectory data.
     pub replica_log: Vec<(Time, ServiceId, usize)>,
+    /// Every autoscaler decision with per-metric provenance. Opt-in
+    /// (like the exact response log): empty unless
+    /// [`Self::record_decisions`] was called before the run, so sweep
+    /// cells keep their flat-memory guarantee.
+    pub decision_log: Vec<DecisionRecord>,
+    /// Whether [`Self::decision_log`] is populated.
+    log_decisions: bool,
     rng_cluster: Pcg64,
     rng_service: Pcg64,
     rng_workload: Pcg64,
@@ -102,6 +124,8 @@ impl SimWorld {
             scalers: Vec::new(),
             rir_log: Vec::new(),
             replica_log: Vec::new(),
+            decision_log: Vec::new(),
+            log_decisions: false,
             rng_cluster,
             rng_service: Pcg64::new(seed, 2),
             rng_workload: Pcg64::new(seed, 3),
@@ -122,6 +146,14 @@ impl SimWorld {
     /// [`Self::response_times`]) should call this before running.
     pub fn record_responses(&mut self) {
         self.app.retain_responses();
+    }
+
+    /// Turn on the structured per-metric decision log (one
+    /// [`DecisionRecord`] per autoscaler tick — unbounded over long
+    /// runs, so it is opt-in like the response log). Call before the
+    /// run; read via [`Self::decision_log`] / [`Self::decisions_for`].
+    pub fn record_decisions(&mut self) {
+        self.log_decisions = true;
     }
 
     /// Bind an autoscaler to service index `service_idx` (== deployment
@@ -241,6 +273,15 @@ impl SimWorld {
                     );
                     self.cluster
                         .retry_pending(&mut self.queue, &mut self.rng_cluster);
+                    if self.log_decisions {
+                        self.decision_log.push(DecisionRecord {
+                            time: now,
+                            service: b.service,
+                            desired: decision.desired,
+                            used_fallback: decision.used_fallback,
+                            recommendations: decision.recommendations,
+                        });
+                    }
                     self.queue.schedule_in(
                         b.autoscaler.control_interval(),
                         Event::AutoscaleTick { scaler },
@@ -279,6 +320,17 @@ impl SimWorld {
             .iter()
             .filter(|s| s.service == ServiceId(service_idx as u32))
             .map(|s| s.rir)
+            .collect()
+    }
+
+    /// One service's decision sequence as `(time, desired)` — the
+    /// golden-equivalence comparison vector. Needs the opt-in log
+    /// ([`Self::record_decisions`] before the run).
+    pub fn decisions_for(&self, service_idx: usize) -> Vec<(Time, usize)> {
+        self.decision_log
+            .iter()
+            .filter(|d| d.service == ServiceId(service_idx as u32))
+            .map(|d| (d.time, d.desired))
             .collect()
     }
 
@@ -415,6 +467,26 @@ mod tests {
             .filter(|&&(_, svc, _)| svc == ServiceId(0))
             .count();
         assert_eq!(svc0, 6, "duplicated initial ticks detected");
+    }
+
+    #[test]
+    fn decision_log_records_per_metric_provenance() {
+        let mut w = hpa_world(5);
+        w.record_decisions();
+        w.run_until(5 * MIN);
+        assert!(!w.decision_log.is_empty());
+        // HPA ticks every 15 s: decisions for both services, each with
+        // exactly one (cpu:70) recommendation whose provenance lines up.
+        for d in &w.decision_log {
+            assert_eq!(d.recommendations.len(), 1);
+            let rec = &d.recommendations[0];
+            assert_eq!(rec.metric, crate::metrics::M_CPU);
+            assert!((rec.target - 70.0).abs() < 1e-12);
+            assert!(!d.used_fallback);
+        }
+        let svc0 = w.decisions_for(0);
+        assert_eq!(svc0.len(), 5 * 4, "one decision per 15 s tick");
+        assert!(svc0.windows(2).all(|p| p[0].0 < p[1].0), "time-ordered");
     }
 
     #[test]

@@ -6,7 +6,7 @@ use super::driver::SimWorld;
 use super::{make_forecaster, try_runtime, ModelKind};
 use crate::app::{TaskCosts, TaskType};
 use crate::autoscaler::ppa::PredictionRecord;
-use crate::autoscaler::{Hpa, Ppa, PpaConfig};
+use crate::autoscaler::{Hpa, MetricSpec, Ppa, PpaConfig};
 use crate::config::paper_cluster;
 use crate::forecast::UpdatePolicy;
 use crate::metrics::{M_CPU, M_REQ_RATE, METRIC_DIM};
@@ -122,8 +122,10 @@ fn ppa_for(
     let costs = TaskCosts::default();
     let forecaster = make_forecaster(model, runtime, pretrain, seed)?;
     let cfg = PpaConfig {
-        key_metric,
-        threshold: threshold_for(key_metric, service_idx, &costs),
+        specs: vec![MetricSpec::forecast(
+            key_metric,
+            threshold_for(key_metric, service_idx, &costs),
+        )],
         update_policy: policy,
         update_interval,
         ..PpaConfig::default()

@@ -1,4 +1,4 @@
-//! Experiment harnesses — one per paper figure (DESIGN.md §7 index).
+//! Experiment harnesses — one per paper figure (DESIGN.md §8 index).
 //!
 //! Each `figN` function reproduces the corresponding figure's data:
 //! it builds the paper's cluster, replays the figure's workload under the
@@ -11,7 +11,7 @@ pub mod figures;
 pub mod pretrain;
 pub mod sweep;
 
-pub use driver::{RirSample, ScalerBinding, SimWorld};
+pub use driver::{DecisionRecord, RirSample, ScalerBinding, SimWorld};
 pub use figures::*;
 pub use pretrain::pretrain_histories;
 pub use sweep::{run_sweep, AutoscalerKind, CellMetrics, CellResult, SweepConfig, SweepResult};

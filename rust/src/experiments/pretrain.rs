@@ -44,6 +44,7 @@ impl Autoscaler for FixedRecorder {
             key_value: vector[0],
             predicted: None,
             used_fallback: false,
+            recommendations: Vec::new(),
         }
     }
 

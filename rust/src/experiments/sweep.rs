@@ -17,7 +17,9 @@
 
 use super::driver::SimWorld;
 use crate::app::TaskCosts;
-use crate::autoscaler::{Autoscaler, Hpa, Ppa, PpaConfig};
+use crate::autoscaler::{
+    specs_label, Autoscaler, Hpa, HpaConfig, Ppa, PpaConfig, ScalerPolicy, ScalerRegistry,
+};
 use crate::config::{ClusterConfig, Topology};
 use crate::forecast::ArmaForecaster;
 use crate::forecast::NaiveForecaster;
@@ -71,7 +73,8 @@ impl AutoscalerKind {
         }
     }
 
-    /// Fresh autoscaler instance for one service of one cell.
+    /// Fresh default-policy autoscaler for one service of one cell
+    /// (single cpu:70 spec, stock behavior).
     fn build(&self) -> Box<dyn Autoscaler> {
         let ppa_cfg = PpaConfig {
             update_interval: SWEEP_UPDATE_INTERVAL,
@@ -86,6 +89,38 @@ impl AutoscalerKind {
             // "Robust" property describes.
             AutoscalerKind::PpaArma => {
                 Box::new(Ppa::new(ppa_cfg, Box::new(ArmaForecaster::new())))
+            }
+        }
+    }
+
+    /// Fresh autoscaler running one fleet entry's `(spec set, behavior)`
+    /// policy. The HPA reads every spec reactively; the PPAs honour each
+    /// spec's current/forecast source. A policy without a behavior
+    /// override keeps the kind's stock default (HPA: 5-min down window;
+    /// PPA: 2-min), so metric-only fleets never skew the baselines.
+    fn build_with(&self, policy: &ScalerPolicy) -> Box<dyn Autoscaler> {
+        match self {
+            AutoscalerKind::Hpa => {
+                let default = HpaConfig::default();
+                Box::new(Hpa::new(HpaConfig {
+                    specs: policy.specs.clone(),
+                    behavior: policy.behavior.unwrap_or(default.behavior),
+                    ..default
+                }))
+            }
+            AutoscalerKind::PpaNaive | AutoscalerKind::PpaArma => {
+                let default = PpaConfig::default();
+                let cfg = PpaConfig {
+                    specs: policy.specs.clone(),
+                    behavior: policy.behavior.unwrap_or(default.behavior),
+                    update_interval: SWEEP_UPDATE_INTERVAL,
+                    ..default
+                };
+                if *self == AutoscalerKind::PpaNaive {
+                    Box::new(Ppa::new(cfg, Box::new(NaiveForecaster)))
+                } else {
+                    Box::new(Ppa::new(cfg, Box::new(ArmaForecaster::new())))
+                }
             }
         }
     }
@@ -110,6 +145,11 @@ pub struct SweepConfig {
     /// per-cell results are bit-identical either way (asserted by
     /// `golden_core_equivalence_*` below).
     pub core: CoreKind,
+    /// Optional fleet registry: per-service `(spec set, behavior)`
+    /// policies, so one cell scales different deployments under
+    /// different metric specs. `None` = every service on the scaler
+    /// kind's default single-metric policy.
+    pub fleet: Option<ScalerRegistry>,
 }
 
 /// Deterministic per-cell outcome (everything except wall-clock).
@@ -118,6 +158,9 @@ pub struct CellMetrics {
     pub topology: String,
     pub scenario: String,
     pub scaler: String,
+    /// Per-service metric-spec labels (`cpu:70`,
+    /// `cpu:70+req_rate:150`, …) — the fleet the cell actually ran.
+    pub specs: Vec<String>,
     pub seed: u64,
     pub events: u64,
     pub completed: usize,
@@ -182,6 +225,7 @@ pub fn run_cell(
     scenario_name: &str,
     scenario: &Scenario,
     scaler: AutoscalerKind,
+    fleet: Option<&ScalerRegistry>,
     seed: u64,
     minutes: u64,
     core: CoreKind,
@@ -193,9 +237,18 @@ pub fn run_cell(
     }
     let n_services = world.app.services.len();
     for svc in 0..n_services {
-        world.add_scaler(scaler.build(), svc);
+        let autoscaler = match fleet {
+            Some(registry) => scaler.build_with(registry.policy_for(svc)),
+            None => scaler.build(),
+        };
+        world.add_scaler(autoscaler, svc);
     }
     let events = world.run_until(minutes * MIN);
+    let specs: Vec<String> = world
+        .scalers
+        .iter()
+        .map(|b| specs_label(b.autoscaler.specs()))
+        .collect();
 
     let rirs: Vec<f64> = world.rir_log.iter().map(|s| s.rir).collect();
     let reps: Vec<f64> = world.replica_log.iter().map(|&(_, _, r)| r as f64).collect();
@@ -215,6 +268,7 @@ pub fn run_cell(
         topology: topology_label.to_string(),
         scenario: scenario_name.to_string(),
         scaler: scaler.name().to_string(),
+        specs,
         seed,
         events,
         completed: world.app.completed(),
@@ -295,6 +349,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> crate::Result<SweepResult> {
                     name,
                     scenario,
                     scaler,
+                    cfg.fleet.as_ref(),
                     seed,
                     cfg.minutes,
                     cfg.core,
@@ -350,6 +405,10 @@ impl CellResult {
         o.insert("topology".to_string(), Json::Str(m.topology.clone()));
         o.insert("scenario".to_string(), Json::Str(m.scenario.clone()));
         o.insert("scaler".to_string(), Json::Str(m.scaler.clone()));
+        o.insert(
+            "specs".to_string(),
+            Json::Arr(m.specs.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
         o.insert("seed".to_string(), Json::Num(m.seed as f64));
         o.insert("events".to_string(), Json::Num(m.events as f64));
         o.insert("completed".to_string(), Json::Num(m.completed as f64));
@@ -458,6 +517,7 @@ mod tests {
             minutes: 6,
             threads,
             core: CoreKind::Calendar,
+            fleet: None,
         }
     }
 
@@ -539,6 +599,7 @@ mod tests {
             minutes: 25,
             threads: 1,
             core: CoreKind::Calendar,
+            fleet: None,
         };
         let result = run_sweep(&cfg).unwrap();
         let cell = &result.cells[0].metrics;
@@ -559,6 +620,7 @@ mod tests {
             minutes: 4,
             threads: 1,
             core: CoreKind::Calendar,
+            fleet: None,
         })
         .unwrap();
         let dir = std::env::temp_dir().join("ppa_sweep_test");
@@ -570,6 +632,11 @@ mod tests {
         assert_eq!(cells.len(), 1);
         assert_eq!(cells[0].get("scaler").as_str(), Some("hpa"));
         assert!(cells[0].get("rir").get("mean").as_f64().is_some());
+        // Schema: per-service spec labels (default fleet = cpu:70
+        // everywhere — 3 paper services).
+        let specs = cells[0].get("specs").as_arr().unwrap();
+        assert_eq!(specs.len(), 3);
+        assert!(specs.iter().all(|s| s.as_str() == Some("cpu:70")));
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -600,6 +667,7 @@ mod tests {
             minutes: 1,
             threads: 1,
             core: CoreKind::Calendar,
+            fleet: None,
         };
         assert!(run_sweep(&cfg).is_err());
     }
@@ -617,6 +685,7 @@ mod tests {
             minutes: 1,
             threads: 1,
             core: CoreKind::Calendar,
+            fleet: None,
         };
         let err = run_sweep(&cfg).unwrap_err();
         assert!(format!("{err}").contains("zone 9"));
@@ -676,6 +745,7 @@ mod tests {
             minutes: 4,
             threads,
             core: CoreKind::Calendar,
+            fleet: None,
         };
         let serial = run_sweep(&grid(1)).unwrap();
         let parallel = run_sweep(&grid(4)).unwrap();
@@ -729,6 +799,7 @@ mod tests {
             minutes: 3,
             threads: 2,
             core,
+            fleet: None,
         };
         let calendar = run_sweep(&grid(CoreKind::Calendar)).unwrap();
         let heap = run_sweep(&grid(CoreKind::Heap)).unwrap();
@@ -751,9 +822,115 @@ mod tests {
             minutes: 1,
             threads: 1,
             core: CoreKind::Calendar,
+            fleet: None,
         };
         let err = run_sweep(&cfg).unwrap_err();
         assert!(format!("{err}").contains("topology 'paper'"), "{err}");
+    }
+
+    #[test]
+    fn city8_fleet_cell_scales_heterogeneous_spec_sets() {
+        // The acceptance scenario: one city-8 sweep cell drives a fleet
+        // where zone-2's deployment scales under cpu:70+req_rate:0.5
+        // while everything else runs plain cpu:70 — heterogeneous
+        // policies inside a single cell.
+        use crate::autoscaler::{MetricSpec, ScalingBehavior};
+        use crate::metrics::{M_CPU, M_REQ_RATE};
+        let topology = Topology::EdgeCity {
+            zones: 8,
+            workers_per_zone: 2,
+        };
+        let cluster = topology.cluster();
+        let presets = crate::config::city_scenario_presets(8);
+        let (name, scenario) = &presets[0]; // city8-diurnal-wave
+        let fleet = ScalerRegistry::uniform(ScalerPolicy::default()).bind(
+            1,
+            ScalerPolicy::new(
+                vec![
+                    MetricSpec::forecast(M_CPU, 70.0),
+                    MetricSpec::forecast(M_REQ_RATE, 0.5),
+                ],
+                ScalingBehavior::stabilize_down(MIN),
+            ),
+        );
+        let cell = run_cell(
+            "city-8x2",
+            &cluster,
+            name,
+            scenario,
+            AutoscalerKind::PpaNaive,
+            Some(&fleet),
+            11,
+            4,
+            CoreKind::Calendar,
+        );
+        let m = &cell.metrics;
+        assert!(m.events > 100, "fleet cell must simulate: {}", m.events);
+        assert!(m.completed > 0);
+        // 8 edge services + the cloud pool, each labeled with the spec
+        // set it actually ran.
+        assert_eq!(m.specs.len(), 9);
+        assert_eq!(m.specs[0], "cpu:70");
+        assert_eq!(m.specs[1], "cpu:70+req_rate:0.5");
+        assert!(m.specs[2..].iter().all(|s| s == "cpu:70"));
+        // And the fleet axis is part of the deterministic fingerprint.
+        assert!(m.fingerprint().contains("req_rate:0.5"));
+    }
+
+    #[test]
+    fn fleet_registry_changes_decisions() {
+        // The second metric must actually drive scaling: a tight
+        // req_rate spec on the same world yields decisions ≥ the
+        // cpu-only fleet's everywhere, and strictly more pod-time.
+        use crate::autoscaler::{MetricSpec, ScalingBehavior};
+        use crate::metrics::{M_CPU, M_REQ_RATE};
+        let topology = Topology::EdgeCity {
+            zones: 8,
+            workers_per_zone: 2,
+        };
+        let cluster = topology.cluster();
+        let presets = crate::config::city_scenario_presets(8);
+        let (_, scenario) = &presets[0];
+        let run = |fleet: &ScalerRegistry| {
+            let mut world = SimWorld::build_with_core(
+                &cluster,
+                TaskCosts::default(),
+                7,
+                CoreKind::Calendar,
+            );
+            world.record_decisions();
+            for gen in scenario.build_generators() {
+                world.add_generator(gen);
+            }
+            for svc in 0..world.app.services.len() {
+                world.add_scaler(
+                    AutoscalerKind::PpaNaive.build_with(fleet.policy_for(svc)),
+                    svc,
+                );
+            }
+            world.run_until(4 * MIN);
+            world
+        };
+        let cpu_only = ScalerRegistry::uniform(ScalerPolicy::default());
+        let hot = ScalerRegistry::uniform(ScalerPolicy::new(
+            vec![
+                MetricSpec::forecast(M_CPU, 70.0),
+                MetricSpec::forecast(M_REQ_RATE, 0.2),
+            ],
+            ScalingBehavior::stabilize_down(2 * MIN),
+        ));
+        let base = run(&cpu_only);
+        let multi = run(&hot);
+        let sum = |w: &SimWorld| -> usize { w.decision_log.iter().map(|d| d.desired).sum() };
+        assert!(
+            sum(&multi) > sum(&base),
+            "the req_rate spec must add replicas: {} vs {}",
+            sum(&multi),
+            sum(&base)
+        );
+        // Per-metric provenance: multi-spec decisions carry 2 recs.
+        assert!(multi.decision_log.iter().all(|d| d.recommendations.len() == 2));
+        assert!(base.decision_log.iter().all(|d| d.recommendations.len() == 1));
     }
 
     #[test]

@@ -4,10 +4,12 @@
 //! ppa-edge experiment <fig6|fig7|fig8|fig9-10|nasa|all> [--minutes N]
 //!          [--hours H] [--pretrain-hours H] [--seed S]
 //! ppa-edge run [--scaler hpa|ppa] [--model lstm|arma|naive]
+//!          [--metric name:target[:src]]... [--behavior rules]
 //!          [--minutes N] [--seed S]
 //! ppa-edge sweep [--minutes N] [--seeds K] [--threads T]
 //!          [--topology paper|city-N[xW]] [--scenarios a,b,..]
 //!          [--scalers hpa,ppa-arma,..] [--core calendar|heap]
+//!          [--metric name:target[:src]]... [--behavior rules]
 //!          [--out FILE]
 //! ppa-edge info
 //! ```
@@ -20,7 +22,9 @@
 
 use anyhow::{bail, Context};
 use ppa_edge::app::TaskCosts;
-use ppa_edge::autoscaler::Hpa;
+use ppa_edge::autoscaler::{
+    Hpa, HpaConfig, MetricSource, MetricSpec, ScalerPolicy, ScalerRegistry, ScalingBehavior,
+};
 use ppa_edge::experiments::{
     self, fig6_trace, fig7_model_comparison, fig8_update_policies, fig9_fig10_key_metric,
     nasa_eval, run_sweep, AutoscalerKind, FigParams, ModelKind, NasaParams, SimWorld,
@@ -66,6 +70,16 @@ impl Args {
             .map(|(_, v)| v.as_str())
     }
 
+    /// Every value of a repeatable flag, in order (`--metric cpu:70
+    /// --metric req_rate:150`).
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
+
     fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(key) {
             Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
@@ -87,13 +101,27 @@ USAGE:
   ppa-edge experiment <fig6|fig7|fig8|fig9-10|nasa|all>
            [--minutes N] [--hours H] [--pretrain-hours H] [--seed S]
   ppa-edge run [--scaler hpa|ppa] [--model lstm|arma|naive]
-           [--minutes N] [--seed S]
+           [--metric name:target[:current|:forecast]]...
+           [--behavior rules] [--minutes N] [--seed S]
   ppa-edge sweep [--minutes N] [--seeds K] [--threads T]
            [--topology paper|city-N[xW]] [--scenarios a,b,..]
            [--scalers hpa,ppa-arma,ppa-naive] [--core calendar|heap]
-           [--out FILE]
+           [--metric name:target[:current|:forecast]]...
+           [--behavior rules] [--out FILE]
   ppa-edge info
   ppa-edge help | --help | -h
+
+MULTI-METRIC SCALING:
+  --metric is repeatable; each spec is name:target (metric names
+  cpu|ram|net_in|net_out|req_rate, or an index 0..4) with an optional
+  :current|:forecast source (default: forecast under the PPA, and the
+  HPA always reads current). Per decision the max desired count across
+  metrics wins (K8s HPA combine), e.g.:
+    --metric cpu:70 --metric req_rate:150
+  --behavior sets the shared scaling-behavior stage, a comma list of
+  up-/down- rules: up-window=0s, down-window=5m, up-pods=4/15s,
+  up-percent=100/15s, down-select=max|min|disabled, ... ('k8s' as the
+  first entry loads the full upstream defaults, later entries override)
 
 EXPERIMENTS (paper figures):
   fig6     scaled NASA trace generation
@@ -120,6 +148,34 @@ SWEEP (scenario matrix):
 
 Full flag reference: docs/CLI.md (including the sweep JSON schema).
 Artifacts must exist for LSTM experiments: run `make artifacts`.";
+
+/// The repeatable `--metric` flags as a spec set (None when absent).
+/// `default_source` follows the scaler: forecast for the PPA, current
+/// for the HPA (which reads every spec reactively anyway).
+fn metric_flags(
+    args: &Args,
+    default_source: MetricSource,
+) -> anyhow::Result<Option<Vec<MetricSpec>>> {
+    let raw = args.get_all("metric");
+    if raw.is_empty() {
+        return Ok(None);
+    }
+    raw.iter()
+        .map(|s| MetricSpec::parse(s, default_source))
+        .collect::<anyhow::Result<Vec<_>>>()
+        .map(Some)
+}
+
+/// The `--behavior` flag (None when absent); `default_down_window` seeds
+/// the unset fields.
+fn behavior_flag(
+    args: &Args,
+    default_down_window: ppa_edge::sim::Time,
+) -> anyhow::Result<Option<ScalingBehavior>> {
+    args.get("behavior")
+        .map(|s| ScalingBehavior::parse(s, default_down_window))
+        .transpose()
+}
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -264,6 +320,24 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             .map(|s| AutoscalerKind::parse(s.trim()))
             .collect::<anyhow::Result<Vec<_>>>()?,
     };
+    // `--metric`/`--behavior` build a uniform fleet policy for every
+    // service of every cell (heterogeneous registries are API-level:
+    // see `ScalerRegistry::bind`). Unset `--behavior` fields default to
+    // the stock K8s values (5-min down window) so an up-rule-only flag
+    // cannot silently weaken the HPA baseline's stabilization; without
+    // the flag each scaler kind keeps its own default (HPA 5 min,
+    // PPA 2 min).
+    let specs = metric_flags(args, MetricSource::Forecast)?;
+    let behavior = behavior_flag(args, 5 * ppa_edge::sim::MIN)?;
+    let fleet = if specs.is_some() || behavior.is_some() {
+        Some(ScalerRegistry::uniform(ScalerPolicy {
+            specs: specs.unwrap_or_else(|| ScalerPolicy::default().specs),
+            behavior,
+        }))
+    } else {
+        None
+    };
+
     let cfg = SweepConfig {
         topology,
         scenarios,
@@ -272,6 +346,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         minutes,
         threads,
         core,
+        fleet,
     };
 
     println!(
@@ -306,8 +381,17 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 
     match scaler {
         "hpa" => {
+            let specs = metric_flags(args, MetricSource::Current)?;
+            let behavior = behavior_flag(args, 5 * ppa_edge::sim::MIN)?;
             for svc in 0..n_services {
-                world.add_scaler(Box::new(Hpa::with_defaults()), svc);
+                let mut cfg = HpaConfig::default();
+                if let Some(specs) = &specs {
+                    cfg.specs = specs.clone();
+                }
+                if let Some(behavior) = behavior {
+                    cfg.behavior = behavior;
+                }
+                world.add_scaler(Box::new(Hpa::new(cfg)), svc);
             }
         }
         "ppa" => {
@@ -320,6 +404,8 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             } else {
                 None
             };
+            let specs = metric_flags(args, MetricSource::Forecast)?;
+            let behavior = behavior_flag(args, 2 * ppa_edge::sim::MIN)?;
             println!("collecting pretraining data (1 h sim)...");
             let (hist, _) = experiments::pretrain_histories(1.0, 20, seed);
             for svc in 0..n_services {
@@ -330,10 +416,14 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
                 };
                 let forecaster =
                     experiments::make_forecaster(model, runtime.as_ref(), pre, seed as u32)?;
-                let ppa = ppa_edge::autoscaler::Ppa::new(
-                    ppa_edge::autoscaler::PpaConfig::default(),
-                    forecaster,
-                );
+                let mut cfg = ppa_edge::autoscaler::PpaConfig::default();
+                if let Some(specs) = &specs {
+                    cfg.specs = specs.clone();
+                }
+                if let Some(behavior) = behavior {
+                    cfg.behavior = behavior;
+                }
+                let ppa = ppa_edge::autoscaler::Ppa::new(cfg, forecaster);
                 world.add_scaler(Box::new(ppa), svc);
             }
         }

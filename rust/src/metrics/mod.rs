@@ -35,6 +35,27 @@ pub const M_REQ_RATE: usize = 4;
 
 pub const METRIC_NAMES: [&str; METRIC_DIM] = ["cpu", "ram", "net_in", "net_out", "req_rate"];
 
+/// Resolve a protocol-vector metric given by *name* (`cpu`, `req_rate`,
+/// …) or by numeric index (`"0"`..`"4"`). Every CLI/config surface that
+/// takes a metric goes through here, so names work anywhere an index
+/// does — with an error that lists the valid names.
+pub fn parse_metric(s: &str) -> crate::Result<usize> {
+    let s = s.trim();
+    if let Some(idx) = METRIC_NAMES.iter().position(|&n| n == s) {
+        return Ok(idx);
+    }
+    if let Ok(idx) = s.parse::<usize>() {
+        if idx < METRIC_DIM {
+            return Ok(idx);
+        }
+    }
+    anyhow::bail!(
+        "unknown metric '{s}' (expected one of {} or an index 0..{})",
+        METRIC_NAMES.join(", "),
+        METRIC_DIM - 1
+    )
+}
+
 /// One scrape's view of a service.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ServiceSnapshot {
@@ -432,6 +453,17 @@ mod tests {
             mp.scrape(tick * 10 * SEC, &mut cluster, &mut app);
         }
         assert_eq!(mp.tsdb.series_count(), before);
+    }
+
+    #[test]
+    fn parse_metric_accepts_names_and_indices() {
+        assert_eq!(parse_metric("cpu").unwrap(), M_CPU);
+        assert_eq!(parse_metric("req_rate").unwrap(), M_REQ_RATE);
+        assert_eq!(parse_metric(" ram ").unwrap(), M_RAM);
+        assert_eq!(parse_metric("3").unwrap(), M_NET_OUT);
+        let err = format!("{:#}", parse_metric("cpus").unwrap_err());
+        assert!(err.contains("cpu, ram"), "error must list names: {err}");
+        assert!(parse_metric("5").is_err(), "index out of range");
     }
 
     #[test]

@@ -276,6 +276,7 @@ mod tests {
             topology: "paper".into(),
             scenario: "step".into(),
             scaler: "hpa".into(),
+            specs: vec!["cpu:70".into()],
             seed: 1,
             events: 1000,
             completed: 50,
