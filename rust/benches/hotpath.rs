@@ -1,14 +1,22 @@
 //! Hot-path micro-benchmarks (L3 perf deliverable): the DES event queue
-//! (calendar vs the heap reference core), scheduler, metrics scrape
-//! (interned handles vs the legacy string-keyed path), forecaster
-//! dispatches, end-to-end simulation rate and sweep-cell throughput —
-//! including the city-50 cell on both event cores, with peak-resident
-//! (live-heap high-water) tracking via a counting global allocator. Run
-//! with `cargo bench --bench hotpath`.
+//! (calendar vs the heap reference core), scheduler, the dispatch path
+//! and the Algorithm-1 capacity cap (indexed cluster plane vs the
+//! retained scan baseline), metrics scrape (interned handles vs the
+//! legacy string-keyed path), forecaster dispatches, end-to-end
+//! simulation rate and sweep-cell throughput — including the city-50
+//! cell on both event cores and a city-50 deep-queue burst on both
+//! cluster query modes, with peak-resident (live-heap high-water)
+//! tracking via a counting global allocator. Run with
+//! `cargo bench --bench hotpath`; pass `-- --quick` (or set
+//! `BENCH_QUICK=1`) for the CI smoke mode with slashed iteration
+//! counts and shorter simulated horizons.
 //!
-//! Emits a machine-readable `BENCH_hotpath.json` (events/sec per core,
-//! ns/scrape, cells/sec, peak-alloc bytes, speedups) so the perf
-//! trajectory is tracked across PRs.
+//! Emits a machine-readable `BENCH_hotpath.json` (schema 3: events/sec
+//! per core, ns/scrape, ns/dispatch and ns/`max_replicas` per query
+//! mode, cells/sec, city-50 burst events/sec per mode, peak-alloc
+//! bytes, speedups, and a `quick` marker) so the perf trajectory is
+//! tracked across PRs. Quick runs write `BENCH_hotpath.quick.json`
+//! instead, so smoke numbers never clobber the tracked artifact.
 
 #[path = "bench_common.rs"]
 mod bench_common;
@@ -16,7 +24,9 @@ use bench_common::{print_header, run};
 
 use ppa_edge::app::{App, TaskCosts, TaskType};
 use ppa_edge::autoscaler::Hpa;
-use ppa_edge::cluster::{Cluster, Deployment, NodeSpec, PodPhase, PodSpec, Selector, Tier};
+use ppa_edge::cluster::{
+    Cluster, Deployment, NodeSpec, PodPhase, PodSpec, QueryMode, Selector, Tier,
+};
 use ppa_edge::config::{
     city_scenario_presets, paper_cluster, quickstart_cluster, ClusterConfig, Topology,
 };
@@ -27,11 +37,51 @@ use ppa_edge::metrics::{METRIC_DIM, METRIC_NAMES};
 use ppa_edge::sim::{CoreKind, Event, EventQueue, Time, MIN, SEC};
 use ppa_edge::util::json::Json;
 use ppa_edge::util::rng::Pcg64;
-use ppa_edge::workload::{Generator, RandomAccessGen};
+use ppa_edge::workload::{FlashCrowdConfig, Generator, RandomAccessGen, Scenario};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Quick (smoke) mode: `--quick` on the bench command line or
+/// `BENCH_QUICK=1` in the environment. CI runs this so the bench
+/// binary can't rot; numbers from quick runs are not comparable.
+fn quick() -> bool {
+    static QUICK: OnceLock<bool> = OnceLock::new();
+    *QUICK.get_or_init(|| {
+        let env_on = std::env::var("BENCH_QUICK")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        std::env::args().any(|a| a == "--quick") || env_on
+    })
+}
+
+/// Scale an iteration count down in quick mode.
+fn iters(full: usize) -> usize {
+    if quick() {
+        (full / 20).max(1)
+    } else {
+        full
+    }
+}
+
+/// Cap a simulated horizon (minutes) in quick mode.
+fn sim_minutes(full: u64) -> u64 {
+    if quick() {
+        full.min(2)
+    } else {
+        full
+    }
+}
+
+/// Display label for a cluster query mode (bench rows + JSON keys).
+fn mode_name(mode: QueryMode) -> &'static str {
+    match mode {
+        QueryMode::Indexed => "indexed",
+        QueryMode::Scan => "scan",
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Peak-resident tracking: a counting global allocator that keeps the
@@ -107,7 +157,8 @@ fn bench_event_queue() -> (f64, f64) {
     for core in CoreKind::ALL {
         // Uniform near-term times (the old bench's workload).
         let mut rng = Pcg64::new(1, 0);
-        run(&format!("{}: push+pop 10k uniform 1s", core.name()), 3, 30, || {
+        let name = format!("{}: push+pop 10k uniform 1s", core.name());
+        run(&name, iters(3), iters(30), || {
             let mut q = EventQueue::with_core(core);
             for i in 0..10_000u64 {
                 q.schedule_at(
@@ -124,8 +175,8 @@ fn bench_event_queue() -> (f64, f64) {
         let mut rng = Pcg64::new(2, 0);
         let r = run(
             &format!("{}: 50k-event steady-state mix", core.name()),
-            2,
-            10,
+            iters(2),
+            iters(10),
             || {
                 let mut q = EventQueue::with_core(core);
                 q.schedule_at(0, Event::WorkloadTick { generator: 0 });
@@ -163,7 +214,7 @@ fn bench_scheduler() {
     let (mut cluster, ids) = cfg.build();
     let mut q = EventQueue::new();
     let mut rng = Pcg64::new(2, 0);
-    run("reconcile 0->6->0 replicas", 3, 200, || {
+    run("reconcile 0->6->0 replicas", iters(3), iters(200), || {
         cluster.reconcile(ids[0], 6, &mut q, &mut rng);
         cluster.reconcile(ids[0], 0, &mut q, &mut rng);
         while let Some((_, ev)) = q.pop() {
@@ -288,7 +339,7 @@ fn bench_scrape() -> (f64, f64, f64) {
     print_header("metrics pipeline scrape");
     let mut world = busy_world(&paper_cluster(), 3);
     let mut t = 5 * MIN;
-    let interned = run("paper world, interned handles", 5, 500, || {
+    let interned = run("paper world, interned handles", iters(5), iters(500), || {
         t += 10 * SEC;
         world.metrics.scrape(t, &mut world.cluster, &mut world.app);
     });
@@ -298,7 +349,7 @@ fn bench_scrape() -> (f64, f64, f64) {
     let mut t = 5 * MIN;
     let mut last = 0;
     let burn = TaskCosts::default().base_burn_frac;
-    let legacy = run("paper world, legacy string keys", 5, 500, || {
+    let legacy = run("paper world, legacy string keys", iters(5), iters(500), || {
         t += 10 * SEC;
         legacy_scrape(
             &mut tsdb,
@@ -324,7 +375,7 @@ fn bench_scrape() -> (f64, f64, f64) {
     }
     world.run_until(5 * MIN);
     let mut t = 5 * MIN;
-    let city_r = run("city-50 world (51 services), interned", 5, 200, || {
+    let city_r = run("city-50 world (51 services), interned", iters(5), iters(200), || {
         t += 10 * SEC;
         world.metrics.scrape(t, &mut world.cluster, &mut world.app);
     });
@@ -345,7 +396,7 @@ fn bench_forecasters() {
     let series: Vec<f64> = (0..200)
         .map(|i| 100.0 + 30.0 * ((i as f64) / 12.0).sin() + rng.normal() * 4.0)
         .collect();
-    run("ARMA(1,1) CSS fit, 200 points", 2, 20, || {
+    run("ARMA(1,1) CSS fit, 200 points", iters(2), iters(20), || {
         let _ = fit_arma(&series);
     });
 
@@ -360,10 +411,10 @@ fn bench_forecasters() {
             })
             .collect();
         f.pretrain_on(&history).unwrap();
-        run("LSTM predict dispatch (PJRT)", 5, 200, || {
+        run("LSTM predict dispatch (PJRT)", iters(5), iters(200), || {
             let _ = f.predict(&history);
         });
-        run("LSTM fine-tune (6 train_epoch dispatches)", 1, 5, || {
+        run("LSTM fine-tune (6 train_epoch dispatches)", iters(1), iters(5), || {
             f.retrain(&history, ppa_edge::forecast::UpdatePolicy::FineTune)
                 .unwrap();
         });
@@ -375,16 +426,18 @@ fn bench_forecasters() {
 /// Returns measured end-to-end events/sec (quickstart world, HPA).
 fn bench_end_to_end() -> f64 {
     print_header("end-to-end simulation rate");
-    let r = run("quickstart world, 60 sim-minutes (HPA)", 1, 5, || {
+    let minutes = sim_minutes(60);
+    let name = format!("quickstart world, {minutes} sim-minutes (HPA)");
+    let r = run(&name, iters(1), iters(5), || {
         let cfg = quickstart_cluster();
         let mut world = SimWorld::build(&cfg, TaskCosts::default(), 9);
         world.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
         for svc in 0..world.app.services.len() {
             world.add_scaler(Box::new(Hpa::with_defaults()), svc);
         }
-        world.run_until(60 * MIN);
+        world.run_until(minutes * MIN);
     });
-    let speedup = 3600.0 / (r.mean_us / 1e6);
+    let speedup = (minutes * 60) as f64 / (r.mean_us / 1e6);
     println!("  -> simulation speed ~{speedup:.0}x real time");
 
     // Events/sec on one measured run.
@@ -395,7 +448,7 @@ fn bench_end_to_end() -> f64 {
         world.add_scaler(Box::new(Hpa::with_defaults()), svc);
     }
     let wall = std::time::Instant::now();
-    let events = world.run_until(60 * MIN);
+    let events = world.run_until(minutes * MIN);
     let events_per_sec = events as f64 / wall.elapsed().as_secs_f64();
     println!("  -> {events_per_sec:.0} events/sec");
 
@@ -425,7 +478,7 @@ fn bench_end_to_end() -> f64 {
         }
     }
     let mut app = App::new(TaskCosts::default(), &[(1, edge)], cloud);
-    run("submit+serve 100 sort requests", 2, 50, || {
+    run("submit+serve 100 sort requests", iters(2), iters(50), || {
         for _ in 0..100 {
             app.submit(TaskType::Sort, 1, q.now(), &mut q);
         }
@@ -456,7 +509,8 @@ fn bench_sweep_cells() -> f64 {
     let presets = city_scenario_presets(8);
     let (name, scenario) = &presets[2]; // city8-step-carpet
     let scaler = AutoscalerKind::Hpa;
-    let r = run("run_cell city-8 step-carpet", 1, 5, || {
+    let minutes = sim_minutes(5);
+    let r = run("run_cell city-8 step-carpet", iters(1), iters(5), || {
         let _ = run_cell(
             &label,
             &cluster,
@@ -465,7 +519,7 @@ fn bench_sweep_cells() -> f64 {
             scaler,
             None,
             3,
-            5,
+            minutes,
             CoreKind::Calendar,
         );
     });
@@ -489,12 +543,14 @@ fn bench_city50_cell() -> (f64, f64, usize, usize, usize) {
     let presets = city_scenario_presets(50);
     let (name, scenario) = &presets[1]; // city50-flash-mosaic
 
+    let minutes = sim_minutes(3);
     let mut rates = Vec::new();
     let mut peaks = Vec::new();
     for core in CoreKind::ALL {
         // Timed runs.
         let mut events = 0u64;
-        let r = run(&format!("run_cell city-50 on {}", core.name()), 1, 3, || {
+        let bench_name = format!("run_cell city-50 on {}", core.name());
+        let r = run(&bench_name, iters(1), iters(3), || {
             let cell = run_cell(
                 &label,
                 &cluster,
@@ -503,7 +559,7 @@ fn bench_city50_cell() -> (f64, f64, usize, usize, usize) {
                 AutoscalerKind::Hpa,
                 None,
                 3,
-                3,
+                minutes,
                 core,
             );
             events = cell.metrics.events;
@@ -519,7 +575,7 @@ fn bench_city50_cell() -> (f64, f64, usize, usize, usize) {
             AutoscalerKind::Hpa,
             None,
             3,
-            3,
+            minutes,
             core,
         );
         peaks.push(peak_bytes());
@@ -537,7 +593,7 @@ fn bench_city50_cell() -> (f64, f64, usize, usize, usize) {
         for svc in 0..world.app.services.len() {
             world.add_scaler(Box::new(Hpa::with_defaults()), svc);
         }
-        world.run_until(3 * MIN);
+        world.run_until(minutes * MIN);
     }
     let peak_full_log = peak_bytes();
 
@@ -553,18 +609,188 @@ fn bench_city50_cell() -> (f64, f64, usize, usize, usize) {
     (calendar, heap, peaks[0], peaks[1], peak_full_log)
 }
 
+/// The dispatch path: a deep queue drained over a 200-pod pool, indexed
+/// idle-set pops vs the retained scan baseline. Returns
+/// (indexed ns/request, scan ns/request).
+fn bench_dispatch() -> (f64, f64) {
+    print_header("app dispatch path (idle-pod ordered set vs scan)");
+    let mut out = [0.0f64; 2];
+    for (i, mode) in [QueryMode::Indexed, QueryMode::Scan].into_iter().enumerate() {
+        // One huge node so a single deployment runs 200 pods.
+        let mut cluster = Cluster::new();
+        cluster.add_node(NodeSpec::new("big", Tier::Edge, 1, 200_000, 200_000));
+        let edge = cluster.add_deployment(Deployment::new(
+            "edge",
+            Selector::new(Tier::Edge, None),
+            PodSpec::new(500, 256),
+            1,
+            400,
+        ));
+        let cloud = cluster.add_deployment(Deployment::new(
+            "cloud",
+            Selector::new(Tier::Edge, None),
+            PodSpec::new(500, 256),
+            0,
+            1,
+        ));
+        cluster.set_query_mode(mode);
+        let mut q = EventQueue::new();
+        let mut rng = Pcg64::new(17, 0);
+        cluster.reconcile(edge, 200, &mut q, &mut rng);
+        while let Some((_, ev)) = q.pop() {
+            if let Event::PodRunning { pod } = ev {
+                cluster.on_pod_running(pod);
+            }
+        }
+        let mut app = App::new(TaskCosts::default(), &[(1, edge)], cloud);
+        let reqs = 400u32;
+        let mode_name = mode_name(mode);
+        let name = format!("{mode_name}: submit+serve {reqs} sorts, 200 pods");
+        let r = run(&name, iters(2), iters(30), || {
+            for _ in 0..reqs {
+                app.submit(TaskType::Sort, 1, q.now(), &mut q);
+            }
+            while let Some((_, ev)) = q.pop() {
+                match ev {
+                    Event::RequestArrival { request_id } => {
+                        app.on_arrival(request_id, &mut cluster, &mut q, &mut rng)
+                    }
+                    Event::ServiceComplete { pod, request_id } => {
+                        app.on_complete(pod, request_id, &mut cluster, &mut q, &mut rng)
+                    }
+                    _ => {}
+                }
+            }
+        });
+        out[i] = r.mean_us * 1000.0 / reqs as f64;
+    }
+    let (indexed, scan) = (out[0], out[1]);
+    println!(
+        "  -> dispatch {indexed:.0} ns/req indexed vs {scan:.0} ns/req scan ({:.2}x)",
+        scan / indexed
+    );
+    (indexed, scan)
+}
+
+/// The Algorithm-1 capacity cap on the city-50 topology: per-node
+/// ledger reads vs the nodes×pods scan. Returns
+/// (indexed ns/call, scan ns/call).
+fn bench_max_replicas() -> (f64, f64) {
+    print_header("Algorithm-1 capacity cap, city-50 (ledger vs node*pod scan)");
+    let topo = Topology::EdgeCity {
+        zones: 50,
+        workers_per_zone: 2,
+    };
+    let (mut cluster, ids) = topo.cluster().build();
+    let mut q = EventQueue::new();
+    let mut rng = Pcg64::new(13, 0);
+    for &id in &ids {
+        cluster.reconcile(id, 2, &mut q, &mut rng);
+    }
+    while let Some((_, ev)) = q.pop() {
+        if let Event::PodRunning { pod } = ev {
+            cluster.on_pod_running(pod);
+        }
+    }
+    let mut out = [0.0f64; 2];
+    for (i, mode) in [QueryMode::Indexed, QueryMode::Scan].into_iter().enumerate() {
+        cluster.set_query_mode(mode);
+        let mode_name = mode_name(mode);
+        let mut acc = 0usize;
+        let name = format!("{mode_name}: max_replicas, all {} deployments", ids.len());
+        let r = run(&name, iters(5), iters(200), || {
+            for &id in &ids {
+                acc = acc.wrapping_add(cluster.max_replicas(id));
+            }
+        });
+        std::hint::black_box(acc);
+        out[i] = r.mean_us * 1000.0 / ids.len() as f64;
+    }
+    let (indexed, scan) = (out[0], out[1]);
+    println!(
+        "  -> max_replicas {indexed:.0} ns indexed vs {scan:.0} ns scan ({:.2}x)",
+        scan / indexed
+    );
+    (indexed, scan)
+}
+
+/// City-50 deep-queue burst: every zone spikes at once 30 s in, piling
+/// deep per-service queues — the dispatch-heaviest end-to-end shape.
+/// Runs the identical cell on the indexed plane and on the retained
+/// scan baseline (same run, bit-identical decisions). Returns
+/// (indexed events/sec, scan events/sec).
+fn bench_city50_burst() -> (f64, f64) {
+    print_header("city-50 deep-queue burst: indexed vs scan cluster plane");
+    let topo = Topology::EdgeCity {
+        zones: 50,
+        workers_per_zone: 2,
+    };
+    let cfg = topo.cluster();
+    let scenario = Scenario::FlashCrowd {
+        cfg: FlashCrowdConfig {
+            base_rps: 0.2,
+            spike_rps: 3.0,
+            spike_start: 30 * SEC,
+            ramp: 15 * SEC,
+            hold: 2 * MIN,
+            decay: 30 * SEC,
+        },
+        zones: (1..=50).collect(),
+        stagger: 0,
+    };
+    let minutes = sim_minutes(3);
+    let mut rates = [0.0f64; 2];
+    let mut event_counts = [0u64; 2];
+    for (i, mode) in [QueryMode::Indexed, QueryMode::Scan].into_iter().enumerate() {
+        let mode_name = mode_name(mode);
+        let mut events = 0u64;
+        let name = format!("{mode_name}: city-50 burst, {minutes} sim-minutes");
+        let r = run(&name, iters(1), iters(3), || {
+            let mut world = SimWorld::build(&cfg, TaskCosts::default(), 5);
+            world.set_cluster_query_mode(mode);
+            for gen in scenario.build_generators() {
+                world.add_generator(gen);
+            }
+            for svc in 0..world.app.services.len() {
+                world.add_scaler(Box::new(Hpa::with_defaults()), svc);
+            }
+            events = world.run_until(minutes * MIN);
+        });
+        rates[i] = events as f64 / (r.mean_us / 1e6);
+        event_counts[i] = events;
+    }
+    assert_eq!(
+        event_counts[0], event_counts[1],
+        "indexed and scan burst cells must be bit-identical"
+    );
+    let (indexed, scan) = (rates[0], rates[1]);
+    println!(
+        "  -> burst {indexed:.0} ev/s indexed vs {scan:.0} ev/s scan ({:.2}x)",
+        indexed / scan
+    );
+    (indexed, scan)
+}
+
 fn write_bench_json(entries: &[(&str, f64)]) {
     let mut o = BTreeMap::new();
-    o.insert("schema".to_string(), Json::Num(2.0));
+    o.insert("schema".to_string(), Json::Num(3.0));
+    o.insert("quick".to_string(), Json::Bool(quick()));
     for &(k, v) in entries {
         let value = if v.is_finite() { Json::Num(v) } else { Json::Null };
         o.insert(k.to_string(), value);
     }
     // cargo bench runs with cwd = the package root (rust/); anchor the
-    // report at the workspace root where DESIGN.md documents it.
+    // report at the workspace root where DESIGN.md documents it. Quick
+    // smoke runs land in a sidecar file so they can never clobber the
+    // tracked perf-trajectory artifact with non-comparable numbers.
+    let file = if quick() {
+        "BENCH_hotpath.quick.json"
+    } else {
+        "BENCH_hotpath.json"
+    };
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("..")
-        .join("BENCH_hotpath.json");
+        .join(file);
     match std::fs::write(&path, Json::Obj(o).to_string()) {
         Ok(()) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
@@ -573,19 +799,31 @@ fn write_bench_json(entries: &[(&str, f64)]) {
 
 fn main() {
     println!("ppa-edge hot-path benchmarks");
+    if quick() {
+        println!("(quick smoke mode: slashed iteration counts, short horizons)");
+    }
     let (queue_cal, queue_heap) = bench_event_queue();
     bench_scheduler();
+    let (dispatch_indexed, dispatch_scan) = bench_dispatch();
+    let (maxrep_indexed, maxrep_scan) = bench_max_replicas();
     let (scrape_ns, legacy_ns, city_ns) = bench_scrape();
     bench_forecasters();
     let events_per_sec = bench_end_to_end();
     let cells_per_sec = bench_sweep_cells();
     let (cell50_cal, cell50_heap, cell50_peak, cell50_peak_heap, cell50_peak_log) =
         bench_city50_cell();
+    let (burst_indexed, burst_scan) = bench_city50_burst();
     write_bench_json(&[
         ("events_per_sec", events_per_sec),
         ("queue_events_per_sec_calendar", queue_cal),
         ("queue_events_per_sec_heap", queue_heap),
         ("queue_core_speedup", queue_cal / queue_heap),
+        ("dispatch_ns_per_req_indexed", dispatch_indexed),
+        ("dispatch_ns_per_req_scan", dispatch_scan),
+        ("dispatch_speedup_vs_scan", dispatch_scan / dispatch_indexed),
+        ("max_replicas_ns_indexed", maxrep_indexed),
+        ("max_replicas_ns_scan", maxrep_scan),
+        ("max_replicas_speedup_vs_scan", maxrep_scan / maxrep_indexed),
         ("ns_per_scrape", scrape_ns),
         ("ns_per_scrape_legacy", legacy_ns),
         ("ns_per_scrape_city50", city_ns),
@@ -597,5 +835,8 @@ fn main() {
         ("cell50_peak_alloc_bytes_calendar", cell50_peak as f64),
         ("cell50_peak_alloc_bytes_heap", cell50_peak_heap as f64),
         ("cell50_peak_alloc_bytes_full_log", cell50_peak_log as f64),
+        ("city50_burst_events_per_sec_indexed", burst_indexed),
+        ("city50_burst_events_per_sec_scan", burst_scan),
+        ("city50_burst_index_speedup", burst_indexed / burst_scan),
     ]);
 }

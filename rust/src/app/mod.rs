@@ -9,8 +9,10 @@
 //!
 //! # Hot-path data structures
 //!
-//! The arrival→complete path is allocation- and hash-free at steady
-//! state:
+//! The arrival→complete path is hash-free, never scans a pod list, and
+//! does not allocate at steady state beyond amortized idle-set node
+//! churn (the `BTreeSet` may free/reallocate a node when a pool
+//! oscillates between zero and one idle pod):
 //!
 //! * **In-flight requests** live in a [`RequestArena`] — a generational
 //!   slab addressed by [`RequestId`] (slot index + generation). Events
@@ -18,6 +20,16 @@
 //!   request completes, so late/duplicate events miss instead of
 //!   aliasing a recycled slot (see the `arena` module docs for the
 //!   generation rules).
+//! * **Dispatch** pops the idle Running pod with the lowest id from the
+//!   deployment's idle-pod ordered set ([`Cluster::min_idle_pod`], an
+//!   O(log n) read maintained on every phase/occupancy transition) —
+//!   the same deterministic min-pod-id choice the old per-request
+//!   `running_pods` scan made, without walking the pool. Occupancy
+//!   changes go through [`Cluster::start_service`] /
+//!   [`Cluster::finish_service`] so the set stays exact.
+//! * **Zone routing** resolves the origin zone to its edge service
+//!   through a dense `Vec` (zones are contiguous indices) — no hash on
+//!   the submit path.
 //! * **Completed requests** stream into [`ResponseStats`] — per-task
 //!   Welford moments + log-histogram quantiles
 //!   ([`crate::stats::StreamingStats`]) in constant memory. The
@@ -35,7 +47,7 @@ use crate::cluster::{Cluster, PodPhase};
 use crate::sim::{Event, EventQueue, PodId, RequestId, ServiceId, Time, MS};
 use crate::stats::StreamingStats;
 use crate::util::rng::Pcg64;
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 /// Calibrated task costs. The paper gives complexities (Sort: 1e4 ops,
 /// Eigen: 1e9 ops) and measures ~0.5 s / ~13.6 s end-to-end responses on
@@ -157,8 +169,10 @@ impl ResponseStats {
 pub struct App {
     pub services: Vec<Service>,
     pub costs: TaskCosts,
-    /// zone index -> edge service handling that zone's Sort tasks.
-    edge_service_by_zone: HashMap<u32, ServiceId>,
+    /// Dense zone table: `edge_service_by_zone[zone]` is the edge
+    /// service handling that zone's Sort tasks (zones are contiguous
+    /// indices, so this replaces a per-submit hash lookup).
+    edge_service_by_zone: Vec<Option<ServiceId>>,
     cloud_service: ServiceId,
     in_flight: RequestArena,
     /// Streaming per-task response statistics (always on, O(1) memory).
@@ -177,7 +191,7 @@ impl App {
         cloud: crate::cluster::DeploymentId,
     ) -> Self {
         let mut services = Vec::new();
-        let mut edge_service_by_zone = HashMap::new();
+        let mut edge_service_by_zone: Vec<Option<ServiceId>> = Vec::new();
         for &(zone, dep) in edge {
             let id = ServiceId(services.len() as u32);
             services.push(Service {
@@ -187,7 +201,11 @@ impl App {
                 queue: VecDeque::new(),
                 counters: TrafficCounters::default(),
             });
-            edge_service_by_zone.insert(zone, id);
+            let z = zone as usize;
+            if edge_service_by_zone.len() <= z {
+                edge_service_by_zone.resize(z + 1, None);
+            }
+            edge_service_by_zone[z] = Some(id);
         }
         let cloud_service = ServiceId(services.len() as u32);
         services.push(Service {
@@ -254,9 +272,11 @@ impl App {
     ) -> RequestId {
         let (service, latency, bytes_in) = match task {
             TaskType::Sort => {
-                let svc = *self
+                let svc = self
                     .edge_service_by_zone
-                    .get(&zone)
+                    .get(zone as usize)
+                    .copied()
+                    .flatten()
                     .expect("unknown origin zone");
                 (svc, self.costs.network_latency, SORT_IN)
             }
@@ -309,15 +329,10 @@ impl App {
             if self.services[service.0 as usize].queue.is_empty() {
                 return;
             }
-            // Deterministic idle-pod choice: lowest pod id (min over the
-            // iterator — no Vec, no sort; same pod the old collect+sort
-            // picked).
-            let idle: Option<PodId> = cluster
-                .running_pods(dep)
-                .filter(|p| p.current_request.is_none())
-                .map(|p| p.id)
-                .min();
-            let Some(pid) = idle else { return };
+            // Deterministic idle-pod choice: lowest pod id, popped from
+            // the deployment's idle-pod ordered set in O(log n) — the
+            // same pod the old per-request `running_pods` scan picked.
+            let Some(pid) = cluster.min_idle_pod(dep) else { return };
             let req_id = self.services[service.0 as usize]
                 .queue
                 .pop_front()
@@ -327,9 +342,9 @@ impl App {
                 .get(req_id)
                 .expect("queued request is live")
                 .task;
-            let pod = cluster.pod_mut(pid);
-            pod.start_service(req_id, queue.now());
-            let service_time = self.service_time(task, pod.spec.cpu_millis, rng);
+            cluster.start_service(pid, req_id, queue.now());
+            let cpu_millis = cluster.pod(pid).spec.cpu_millis;
+            let service_time = self.service_time(task, cpu_millis, rng);
             queue.schedule_in(
                 service_time,
                 Event::ServiceComplete {
@@ -365,10 +380,10 @@ impl App {
         rng: &mut Pcg64,
     ) {
         let now = queue.now();
-        let pod = cluster.pod_mut(pid);
-        let finished = pod.finish_service(now);
+        // Through the cluster so the idle-pod set re-admits the pod.
+        let finished = cluster.finish_service(pid, now);
         debug_assert_eq!(finished, Some(request_id));
-        let draining = pod.phase == PodPhase::Terminating;
+        let draining = cluster.pod(pid).phase == PodPhase::Terminating;
         if draining {
             queue.schedule_in(
                 crate::cluster::TERMINATION_GRACE,

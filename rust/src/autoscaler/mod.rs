@@ -1,7 +1,7 @@
 //! Autoscalers: the reactive Kubernetes HPA baseline and the paper's
 //! Proactive Pod Autoscaler (PPA), both on one decision pipeline.
 //!
-//! The pipeline (DESIGN.md §7) has three stages:
+//! The pipeline (DESIGN.md §8) has three stages:
 //!
 //! 1. **Specs → recommendations** — every [`MetricSpec`] (metric,
 //!    Eq-1 target, current-or-forecast source) is evaluated into one

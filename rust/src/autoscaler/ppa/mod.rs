@@ -89,11 +89,18 @@ pub struct Ppa {
     /// Primary-metric prediction made last tick, awaiting its actual.
     pending_prediction: Option<f64>,
     /// (predicted, actual) log for the primary metric (Figs 7–8).
+    /// **Opt-in** via [`Ppa::record_logs`] — unbounded over long
+    /// city runs, so sweep cells leave it off and read the streaming
+    /// [`Ppa::prediction_mse`] / [`Ppa::prediction_count`] instead.
     pub prediction_log: Vec<PredictionRecord>,
-    /// Decision log (desired replicas per tick).
+    /// Decision log (desired replicas per tick) — opt-in together with
+    /// the prediction log ([`Ppa::record_logs`] gates both).
     pub decision_log: Vec<(Time, usize)>,
-    /// Streaming squared-error moments over the prediction log — the
-    /// MSE is read off in O(1) with no intermediate collections.
+    /// Whether the unbounded logs above are populated.
+    log_records: bool,
+    /// Streaming squared-error moments over the closed predictions —
+    /// always on; the MSE is read off in O(1) with no intermediate
+    /// collections and no per-tick log growth.
     squared_errors: StreamingStats,
     /// Shared behavior-stage state (stabilization windows, rate limits).
     behavior_state: BehaviorState,
@@ -110,9 +117,19 @@ impl Ppa {
             pending_prediction: None,
             prediction_log: Vec::new(),
             decision_log: Vec::new(),
+            log_records: false,
             squared_errors: StreamingStats::new(),
             behavior_state: BehaviorState::new(),
         }
+    }
+
+    /// Turn on **both** exact logs — [`Ppa::prediction_log`] and
+    /// [`Ppa::decision_log`] (unbounded memory — for the paper-figure
+    /// harnesses and CSV dumps; sweep cells stay flat-memory on the
+    /// streaming MSE). Call before the run, like
+    /// `SimWorld::record_decisions`.
+    pub fn record_logs(&mut self) {
+        self.log_records = true;
     }
 
     /// Replace the static policy (the paper's "users may inject their own
@@ -135,6 +152,12 @@ impl Ppa {
     /// 7–8 metric) — a single streaming pass; no per-call collections.
     pub fn prediction_mse(&self) -> f64 {
         self.squared_errors.mean()
+    }
+
+    /// Number of closed (predicted, actual) pairs so far — available
+    /// whether or not the exact log is recorded.
+    pub fn prediction_count(&self) -> usize {
+        self.squared_errors.n()
     }
 }
 
@@ -173,11 +196,13 @@ impl Autoscaler for Ppa {
             let actual = vector[self.primary_metric()];
             let err = pred - actual;
             self.squared_errors.record(err * err);
-            self.prediction_log.push(PredictionRecord {
-                time: now,
-                predicted: pred,
-                actual,
-            });
+            if self.log_records {
+                self.prediction_log.push(PredictionRecord {
+                    time: now,
+                    predicted: pred,
+                    actual,
+                });
+            }
         }
         self.evaluator.observe_actual(&vector);
 
@@ -197,7 +222,9 @@ impl Autoscaler for Ppa {
             self.behavior_state
                 .apply(now, decision.desired, current, &self.cfg.behavior);
 
-        self.decision_log.push((now, decision.desired));
+        if self.log_records {
+            self.decision_log.push((now, decision.desired));
+        }
         decision
     }
 
@@ -284,6 +311,7 @@ mod tests {
     fn prediction_log_pairs_up() {
         let cluster = cluster_fixture(1);
         let mut ppa = Ppa::new(PpaConfig::default(), Box::new(NaiveForecaster));
+        ppa.record_logs();
         for (i, cpu) in [100.0, 120.0, 90.0].iter().enumerate() {
             let mp = metrics_with(*cpu, 1);
             ppa.evaluate(i as Time * 20 * SEC, ServiceId(0), DeploymentId(0), &mp, &cluster);
@@ -296,6 +324,23 @@ mod tests {
         assert_eq!(ppa.prediction_log[1].actual, 90.0);
         let mse = ppa.prediction_mse();
         assert!((mse - (400.0 + 900.0) / 2.0).abs() < 1e-9);
+        assert_eq!(ppa.prediction_count(), 2);
+    }
+
+    #[test]
+    fn logs_stay_empty_unless_recorded() {
+        // Control-plane memory regression: without the opt-in, neither
+        // per-tick log grows — only the streaming MSE moments do.
+        let cluster = cluster_fixture(1);
+        let mut ppa = Ppa::new(PpaConfig::default(), Box::new(NaiveForecaster));
+        for i in 0..50u64 {
+            let mp = metrics_with(100.0 + i as f64, 1);
+            ppa.evaluate(i * 20 * SEC, ServiceId(0), DeploymentId(0), &mp, &cluster);
+        }
+        assert!(ppa.prediction_log.is_empty(), "prediction log is opt-in");
+        assert!(ppa.decision_log.is_empty(), "decision log is opt-in");
+        assert_eq!(ppa.prediction_count(), 49, "streaming pairs still close");
+        assert!(ppa.prediction_mse() > 0.0);
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! (and optionally a zone) by a node selector — the autoscalers' targets.
 
 use super::{NodeSpec, PodSpec, Tier};
-use crate::sim::PodId;
+use crate::sim::{NodeId, PodId};
+use std::collections::BTreeSet;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct DeploymentId(pub u32);
@@ -30,6 +31,14 @@ impl Selector {
 }
 
 /// A deployment of identical worker pods.
+///
+/// Besides the user-visible configuration, a deployment carries the
+/// incrementally maintained indices of the cluster plane (see
+/// DESIGN.md §5): per-phase pod counters, the idle-pod ordered set the
+/// dispatcher pops, and the cached matching-node list the scheduler and
+/// the Algorithm-1 capacity cap iterate. `Cluster` owns every update;
+/// the selector must not change after `Cluster::add_deployment` (the
+/// matching-node cache would go stale).
 #[derive(Debug, Clone)]
 pub struct Deployment {
     pub name: String,
@@ -40,6 +49,18 @@ pub struct Deployment {
     pub desired_replicas: usize,
     /// All live pods (any phase but Gone).
     pub pods: Vec<PodId>,
+    /// Live pod count per non-Gone phase, indexed by `PodPhase as
+    /// usize` (Pending / Initializing / Running / Terminating) —
+    /// maintained by `Cluster::set_phase` so `live_replicas` /
+    /// `count_phase` are O(1) reads.
+    pub(super) phase_counts: [usize; 4],
+    /// Idle Running pods ordered by pod id: `first()` is the
+    /// deterministic min-pod-id dispatch choice, updated on every
+    /// phase and occupancy transition.
+    pub(super) idle_pods: BTreeSet<PodId>,
+    /// Node indices matching `selector`, ascending — the scheduler's
+    /// pre-computed filter stage and the capacity cap's iteration set.
+    pub(super) matching_nodes: Vec<NodeId>,
 }
 
 impl Deployment {
@@ -58,6 +79,9 @@ impl Deployment {
             max_replicas,
             desired_replicas: min_replicas,
             pods: Vec::new(),
+            phase_counts: [0; 4],
+            idle_pods: BTreeSet::new(),
+            matching_nodes: Vec::new(),
         }
     }
 }

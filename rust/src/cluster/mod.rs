@@ -6,6 +6,32 @@
 //! lifecycle with container-init delay (the reactive-lag the PPA
 //! attacks), a filter+score scheduler (K8s `LeastAllocated`), and
 //! deployment replica reconciliation driven by scale requests.
+//!
+//! # Indexed cluster plane
+//!
+//! Every hot query is answered by an incrementally maintained index
+//! instead of a scan (DESIGN.md §5 has the invariant table):
+//!
+//! * **Idle-pod ordered set** per deployment — `min_idle_pod` is the
+//!   deterministic min-pod-id dispatch choice in O(log n), updated on
+//!   every phase and occupancy transition ([`Cluster::start_service`] /
+//!   [`Cluster::finish_service`] are the occupancy nexus).
+//! * **Phase counters** per deployment — [`Cluster::live_replicas`] and
+//!   [`Cluster::count_phase`] are O(1) reads; every phase change flows
+//!   through the private `set_phase` nexus.
+//! * **Free-slot list** for the pod slab — spawn reuses the lowest Gone
+//!   slot without scanning the slab (lowest-first keeps pod ids, and
+//!   therefore dispatch order, identical to the original scan).
+//! * **Capacity ledger** per node — per-deployment (cpu, ram) aggregates
+//!   updated on bind/unbind make [`Cluster::max_replicas`] (the paper's
+//!   Algorithm-1 cap) O(matching nodes); the scheduler's filter/score
+//!   stages run over each deployment's cached matching-node list.
+//!
+//! The original scan paths are retained behind [`QueryMode::Scan`]; in
+//! debug builds every indexed answer is cross-checked against its scan,
+//! and [`Cluster::verify_indices`] rebuilds all indices from scratch and
+//! compares (the property tests drive it through randomized
+//! reconcile/dispatch/terminate interleavings).
 
 mod deployment;
 mod node;
@@ -16,8 +42,9 @@ pub use deployment::{Deployment, DeploymentId, Selector};
 pub use node::{Node, NodeSpec, Tier};
 pub use pod::{Pod, PodPhase, PodSpec};
 
-use crate::sim::{Event, EventQueue, NodeId, PodId, Time, SEC};
+use crate::sim::{Event, EventQueue, NodeId, PodId, RequestId, Time, SEC};
 use crate::util::rng::Pcg64;
+use std::collections::BTreeSet;
 
 /// Pod container-init delay bounds on constrained edge devices (layer
 /// unpack + runtime start + worker warm-up): the paper's protocol pins
@@ -29,12 +56,35 @@ pub const INIT_DELAY_MAX: Time = 20 * SEC;
 /// Graceful-termination lag for an idle pod.
 pub const TERMINATION_GRACE: Time = SEC;
 
+/// Which implementation answers cluster queries (idle-pod dispatch
+/// choice, replica counts, slab slot choice, the Algorithm-1 capacity
+/// cap, scheduler candidates).
+///
+/// `Indexed` reads the incrementally maintained indices; `Scan` answers
+/// with the original full scans. The indices are maintained in either
+/// mode and both are decision-bit-identical — debug builds cross-check
+/// every indexed answer against its scan, and the golden-equivalence
+/// suite pins whole-run equality — so `Scan` is the retained baseline
+/// for tests and the hot-path benchmarks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueryMode {
+    /// Incremental indices (the default).
+    #[default]
+    Indexed,
+    /// Original scan-everything paths (reference baseline).
+    Scan,
+}
+
 /// The simulated cluster state.
 #[derive(Debug)]
 pub struct Cluster {
     pub nodes: Vec<Node>,
     pub pods: Vec<Pod>, // slab: Pod::phase == Gone marks free entries
     pub deployments: Vec<Deployment>,
+    /// Free pod-slab slots (`phase == Gone`), popped lowest-first so
+    /// slot reuse matches the original first-Gone scan bit-for-bit.
+    free_slots: BTreeSet<u32>,
+    mode: QueryMode,
 }
 
 impl Cluster {
@@ -43,17 +93,46 @@ impl Cluster {
             nodes: Vec::new(),
             pods: Vec::new(),
             deployments: Vec::new(),
+            free_slots: BTreeSet::new(),
+            mode: QueryMode::Indexed,
         }
+    }
+
+    /// Switch between the indexed query plane and the retained scan
+    /// baseline (see [`QueryMode`]). Safe at any point: the indices are
+    /// maintained regardless of mode.
+    pub fn set_query_mode(&mut self, mode: QueryMode) {
+        self.mode = mode;
+    }
+
+    pub fn query_mode(&self) -> QueryMode {
+        self.mode
     }
 
     pub fn add_node(&mut self, spec: NodeSpec) -> NodeId {
         let id = NodeId(self.nodes.len() as u32);
-        self.nodes.push(Node::new(spec));
+        let node = Node::new(spec);
+        // Keep every deployment's matching-node cache current; the new
+        // node has the highest index, so ascending order is preserved.
+        for dep in &mut self.deployments {
+            if dep.selector.matches(&node.spec) {
+                dep.matching_nodes.push(id);
+            }
+        }
+        self.nodes.push(node);
         id
     }
 
-    pub fn add_deployment(&mut self, dep: Deployment) -> DeploymentId {
+    /// Register a deployment. Its selector is considered fixed from
+    /// here on (the cached matching-node list would go stale otherwise).
+    pub fn add_deployment(&mut self, mut dep: Deployment) -> DeploymentId {
         let id = DeploymentId(self.deployments.len() as u32);
+        // A deployment cloned from another cluster must not import that
+        // cluster's pod membership or index state.
+        dep.pods.clear();
+        dep.phase_counts = [0; 4];
+        dep.idle_pods.clear();
+        dep.matching_nodes = self.scan_matching_nodes(&dep.selector);
         self.deployments.push(dep);
         id
     }
@@ -88,28 +167,41 @@ impl Cluster {
             .filter(|p| p.phase == PodPhase::Running)
     }
 
-    /// Count of pods in a phase for a deployment.
+    /// Count of pods in a phase for a deployment — an O(1) counter read
+    /// (`Gone` pods are never listed by a deployment, so that count is 0).
     pub fn count_phase(&self, dep: DeploymentId, phase: PodPhase) -> usize {
-        self.deployments[dep.0 as usize]
-            .pods
-            .iter()
-            .filter(|&&p| self.pod(p).phase == phase)
-            .count()
+        let n = match self.mode {
+            QueryMode::Indexed => {
+                if phase == PodPhase::Gone {
+                    0
+                } else {
+                    self.deployments[dep.0 as usize].phase_counts[phase as usize]
+                }
+            }
+            QueryMode::Scan => self.scan_count_phase(dep, phase),
+        };
+        debug_assert_eq!(
+            n,
+            self.scan_count_phase(dep, phase),
+            "phase-counter drift ({phase:?})"
+        );
+        n
     }
 
     /// Live replicas (everything not terminating/gone) — what HPA's
-    /// `currentReplicas` sees.
+    /// `currentReplicas` sees. O(1) from the phase counters.
     pub fn live_replicas(&self, dep: DeploymentId) -> usize {
-        self.deployments[dep.0 as usize]
-            .pods
-            .iter()
-            .filter(|&&p| {
-                matches!(
-                    self.pod(p).phase,
-                    PodPhase::Pending | PodPhase::Initializing | PodPhase::Running
-                )
-            })
-            .count()
+        let n = match self.mode {
+            QueryMode::Indexed => {
+                let c = &self.deployments[dep.0 as usize].phase_counts;
+                c[PodPhase::Pending as usize]
+                    + c[PodPhase::Initializing as usize]
+                    + c[PodPhase::Running as usize]
+            }
+            QueryMode::Scan => self.scan_live_replicas(dep),
+        };
+        debug_assert_eq!(n, self.scan_live_replicas(dep), "live-replica drift");
+        n
     }
 
     /// The deployment's configured replica floor (the autoscalers'
@@ -119,26 +211,65 @@ impl Cluster {
         self.deployments[dep.0 as usize].min_replicas
     }
 
+    /// The idle Running pod with the lowest id, if any — the
+    /// deterministic dispatch choice (`App::dispatch` pops it and marks
+    /// it busy via [`Cluster::start_service`]). O(log n) from the
+    /// per-deployment idle-pod ordered set.
+    pub fn min_idle_pod(&self, dep: DeploymentId) -> Option<PodId> {
+        let pick = match self.mode {
+            QueryMode::Indexed => self.deployments[dep.0 as usize].idle_pods.first().copied(),
+            QueryMode::Scan => self.scan_min_idle_pod(dep),
+        };
+        debug_assert_eq!(pick, self.scan_min_idle_pod(dep), "idle-set drift");
+        pick
+    }
+
+    /// Mark a pod busy on `request` starting at `now`, maintaining the
+    /// idle-pod set. All occupancy transitions must go through this and
+    /// [`Cluster::finish_service`] (not `Pod::start_service` directly).
+    pub fn start_service(&mut self, pid: PodId, request: RequestId, now: Time) {
+        let pod = &mut self.pods[pid.0 as usize];
+        pod.start_service(request, now);
+        let dep = pod.deployment;
+        self.deployments[dep.0 as usize].idle_pods.remove(&pid);
+    }
+
+    /// Mark a pod's current request finished at `now`. Running pods
+    /// re-enter the idle-pod set; draining (Terminating) pods do not.
+    pub fn finish_service(&mut self, pid: PodId, now: Time) -> Option<RequestId> {
+        let pod = &mut self.pods[pid.0 as usize];
+        let req = pod.finish_service(now);
+        let dep = pod.deployment;
+        let idle_again = pod.phase == PodPhase::Running;
+        if idle_again {
+            self.deployments[dep.0 as usize].idle_pods.insert(pid);
+        }
+        req
+    }
+
     /// The "limitation-aware" cap (paper Algorithm 1): the maximum number
     /// of replicas of `dep` the matching nodes can physically host,
     /// accounting for resources used by other deployments' pods.
+    /// O(matching nodes) from the per-node capacity ledger.
     pub fn max_replicas(&self, dep: DeploymentId) -> usize {
+        let cap = match self.mode {
+            QueryMode::Indexed => self.indexed_max_replicas(dep),
+            QueryMode::Scan => self.scan_max_replicas(dep),
+        };
+        debug_assert_eq!(cap, self.scan_max_replicas(dep), "capacity-cache drift");
+        cap
+    }
+
+    fn indexed_max_replicas(&self, dep: DeploymentId) -> usize {
         let d = &self.deployments[dep.0 as usize];
         let mut total = 0usize;
-        for node in &self.nodes {
-            if !d.selector.matches(&node.spec) {
-                continue;
-            }
-            // Capacity minus what OTHER deployments' pods occupy.
-            let mut other_cpu = 0u32;
-            let mut other_ram = 0u32;
-            for &pid in &node.pods {
-                let p = self.pod(pid);
-                if p.deployment != dep && p.phase != PodPhase::Gone {
-                    other_cpu += p.spec.cpu_millis;
-                    other_ram += p.spec.ram_mb;
-                }
-            }
+        for &nid in &d.matching_nodes {
+            let node = &self.nodes[nid.0 as usize];
+            // Capacity minus what OTHER deployments' pods occupy: the
+            // node totals minus this deployment's ledger share.
+            let (own_cpu, own_ram) = node.alloc_for(dep);
+            let other_cpu = node.alloc_cpu.saturating_sub(own_cpu);
+            let other_ram = node.alloc_ram.saturating_sub(own_ram);
             let free_cpu = node.spec.allocatable_cpu().saturating_sub(other_cpu);
             let free_ram = node.spec.allocatable_ram().saturating_sub(other_ram);
             let by_cpu = free_cpu / d.pod_spec.cpu_millis.max(1);
@@ -178,11 +309,21 @@ impl Cluster {
 
     fn spawn_pod(&mut self, dep: DeploymentId, queue: &mut EventQueue, rng: &mut Pcg64) {
         let spec = self.deployments[dep.0 as usize].pod_spec;
-        // Slab allocation: reuse a Gone slot if available.
-        let pid = match self.pods.iter().position(|p| p.phase == PodPhase::Gone) {
+        // Slab allocation: reuse the lowest Gone slot if available.
+        let slot = match self.mode {
+            QueryMode::Indexed => self.free_slots.first().copied(),
+            QueryMode::Scan => self.scan_free_slot(),
+        };
+        debug_assert_eq!(
+            self.free_slots.first().copied(),
+            self.scan_free_slot(),
+            "free-slot drift"
+        );
+        let pid = match slot {
             Some(i) => {
-                let id = PodId(i as u32);
-                self.pods[i] = Pod::new(id, dep, spec, queue.now());
+                self.free_slots.remove(&i);
+                let id = PodId(i);
+                self.pods[i as usize] = Pod::new(id, dep, spec, queue.now());
                 id
             }
             None => {
@@ -191,21 +332,39 @@ impl Cluster {
                 id
             }
         };
-        self.deployments[dep.0 as usize].pods.push(pid);
+        let d = &mut self.deployments[dep.0 as usize];
+        d.pods.push(pid);
+        d.phase_counts[PodPhase::Pending as usize] += 1;
 
-        match scheduler::schedule(&self.nodes, &self.deployments[dep.0 as usize], spec) {
+        // Unschedulable pods stay Pending; re-tried on next reconcile.
+        self.try_place(pid, queue, rng);
+    }
+
+    /// Run the scheduler for a Pending pod; on success bind it and start
+    /// container init. Returns whether the pod was placed.
+    fn try_place(&mut self, pid: PodId, queue: &mut EventQueue, rng: &mut Pcg64) -> bool {
+        let dep = self.pods[pid.0 as usize].deployment;
+        let spec = self.pods[pid.0 as usize].spec;
+        let choice = match self.mode {
+            QueryMode::Indexed => scheduler::schedule_over(
+                &self.nodes,
+                &self.deployments[dep.0 as usize].matching_nodes,
+                spec,
+            ),
+            QueryMode::Scan => {
+                scheduler::schedule(&self.nodes, &self.deployments[dep.0 as usize], spec)
+            }
+        };
+        match choice {
             Some(node_id) => {
-                self.nodes[node_id.0 as usize].bind(pid, spec);
-                let pod = &mut self.pods[pid.0 as usize];
-                pod.node = Some(node_id);
-                pod.phase = PodPhase::Initializing;
-                let delay =
-                    rng.int_range(INIT_DELAY_MIN, INIT_DELAY_MAX + 1);
+                self.nodes[node_id.0 as usize].bind(pid, dep, spec);
+                self.pods[pid.0 as usize].node = Some(node_id);
+                self.set_phase(pid, PodPhase::Initializing);
+                let delay = rng.int_range(INIT_DELAY_MIN, INIT_DELAY_MAX + 1);
                 queue.schedule_in(delay, Event::PodRunning { pod: pid });
+                true
             }
-            None => {
-                // Unschedulable — stays Pending; re-tried on next reconcile.
-            }
+            None => false,
         }
     }
 
@@ -239,19 +398,19 @@ impl Cluster {
         victims.extend(candidates.into_iter().take(n));
 
         for pid in victims {
-            let pod = &mut self.pods[pid.0 as usize];
-            match pod.phase {
+            match self.pods[pid.0 as usize].phase {
                 PodPhase::Pending => {
-                    pod.phase = PodPhase::Gone;
+                    self.set_phase(pid, PodPhase::Gone);
                     self.detach(pid, dep);
                 }
                 PodPhase::Initializing => {
-                    pod.phase = PodPhase::Terminating;
+                    self.set_phase(pid, PodPhase::Terminating);
                     queue.schedule_in(TERMINATION_GRACE, Event::PodTerminated { pod: pid });
                 }
                 PodPhase::Running => {
-                    pod.phase = PodPhase::Terminating;
-                    if pod.current_request.is_none() {
+                    let busy = self.pods[pid.0 as usize].current_request.is_some();
+                    self.set_phase(pid, PodPhase::Terminating);
+                    if !busy {
                         queue.schedule_in(
                             TERMINATION_GRACE,
                             Event::PodTerminated { pod: pid },
@@ -268,9 +427,8 @@ impl Cluster {
     /// Handle `PodRunning`: Initializing → Running (no-op if the pod was
     /// terminated while initializing).
     pub fn on_pod_running(&mut self, pid: PodId) -> bool {
-        let pod = &mut self.pods[pid.0 as usize];
-        if pod.phase == PodPhase::Initializing {
-            pod.phase = PodPhase::Running;
+        if self.pods[pid.0 as usize].phase == PodPhase::Initializing {
+            self.set_phase(pid, PodPhase::Running);
             true
         } else {
             false
@@ -283,9 +441,9 @@ impl Cluster {
         let node = self.pods[pid.0 as usize].node;
         if let Some(nid) = node {
             let spec = self.pods[pid.0 as usize].spec;
-            self.nodes[nid.0 as usize].unbind(pid, spec);
+            self.nodes[nid.0 as usize].unbind(pid, dep, spec);
         }
-        self.pods[pid.0 as usize].phase = PodPhase::Gone;
+        self.set_phase(pid, PodPhase::Gone);
         self.detach(pid, dep);
     }
 
@@ -296,26 +454,213 @@ impl Cluster {
         }
     }
 
+    /// The single phase-transition nexus: every `Pod::phase` change in
+    /// the cluster goes through here so the phase counters, the
+    /// idle-pod set and the free-slot list stay consistent.
+    fn set_phase(&mut self, pid: PodId, to: PodPhase) {
+        let pod = &mut self.pods[pid.0 as usize];
+        let from = pod.phase;
+        debug_assert_ne!(from, PodPhase::Gone, "transition out of a freed slot");
+        if from == to {
+            return;
+        }
+        pod.phase = to;
+        let dep = pod.deployment;
+        let idle = pod.current_request.is_none();
+        let d = &mut self.deployments[dep.0 as usize];
+        d.phase_counts[from as usize] -= 1;
+        if to == PodPhase::Gone {
+            self.free_slots.insert(pid.0);
+        } else {
+            d.phase_counts[to as usize] += 1;
+        }
+        if from == PodPhase::Running {
+            d.idle_pods.remove(&pid);
+        }
+        if to == PodPhase::Running && idle {
+            d.idle_pods.insert(pid);
+        }
+    }
+
     /// Retry scheduling for Pending pods (called per reconcile tick).
+    /// The phase counters skip deployments with nothing Pending — the
+    /// steady-state common case — instead of scanning the whole slab.
     pub fn retry_pending(&mut self, queue: &mut EventQueue, rng: &mut Pcg64) {
-        let pending: Vec<PodId> = self
+        let mut pending: Vec<PodId> = Vec::new();
+        match self.mode {
+            QueryMode::Indexed => {
+                for dep in &self.deployments {
+                    if dep.phase_counts[PodPhase::Pending as usize] == 0 {
+                        continue;
+                    }
+                    pending.extend(
+                        dep.pods
+                            .iter()
+                            .copied()
+                            .filter(|&p| self.pod(p).phase == PodPhase::Pending),
+                    );
+                }
+                // Ascending pod id == the original slab-scan retry order.
+                pending.sort_unstable();
+            }
+            QueryMode::Scan => {
+                pending.extend(
+                    self.pods
+                        .iter()
+                        .filter(|p| p.phase == PodPhase::Pending)
+                        .map(|p| p.id),
+                );
+            }
+        }
+        for pid in pending {
+            self.try_place(pid, queue, rng);
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Retained scan paths (the pre-index implementations): the `Scan`
+    // query mode answers from these, and debug builds cross-check every
+    // indexed answer against them.
+    // -----------------------------------------------------------------
+
+    fn scan_count_phase(&self, dep: DeploymentId, phase: PodPhase) -> usize {
+        self.deployments[dep.0 as usize]
             .pods
             .iter()
-            .filter(|p| p.phase == PodPhase::Pending)
+            .filter(|&&p| self.pod(p).phase == phase)
+            .count()
+    }
+
+    fn scan_live_replicas(&self, dep: DeploymentId) -> usize {
+        self.deployments[dep.0 as usize]
+            .pods
+            .iter()
+            .filter(|&&p| {
+                matches!(
+                    self.pod(p).phase,
+                    PodPhase::Pending | PodPhase::Initializing | PodPhase::Running
+                )
+            })
+            .count()
+    }
+
+    fn scan_min_idle_pod(&self, dep: DeploymentId) -> Option<PodId> {
+        self.running_pods(dep)
+            .filter(|p| p.current_request.is_none())
             .map(|p| p.id)
+            .min()
+    }
+
+    fn scan_free_slot(&self) -> Option<u32> {
+        self.pods
+            .iter()
+            .position(|p| p.phase == PodPhase::Gone)
+            .map(|i| i as u32)
+    }
+
+    /// Nodes matching `selector`, ascending by index — the single
+    /// definition behind both the matching-node cache builder
+    /// (`add_deployment`) and the `verify_indices` checker.
+    fn scan_matching_nodes(&self, selector: &Selector) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| selector.matches(&n.spec))
+            .map(|(i, _)| NodeId(i as u32))
+            .collect()
+    }
+
+    fn scan_max_replicas(&self, dep: DeploymentId) -> usize {
+        let d = &self.deployments[dep.0 as usize];
+        let mut total = 0usize;
+        for node in &self.nodes {
+            if !d.selector.matches(&node.spec) {
+                continue;
+            }
+            // Capacity minus what OTHER deployments' pods occupy.
+            let mut other_cpu = 0u32;
+            let mut other_ram = 0u32;
+            for &pid in &node.pods {
+                let p = self.pod(pid);
+                if p.deployment != dep && p.phase != PodPhase::Gone {
+                    other_cpu += p.spec.cpu_millis;
+                    other_ram += p.spec.ram_mb;
+                }
+            }
+            let free_cpu = node.spec.allocatable_cpu().saturating_sub(other_cpu);
+            let free_ram = node.spec.allocatable_ram().saturating_sub(other_ram);
+            let by_cpu = free_cpu / d.pod_spec.cpu_millis.max(1);
+            let by_ram = free_ram / d.pod_spec.ram_mb.max(1);
+            total += by_cpu.min(by_ram) as usize;
+        }
+        total
+    }
+
+    /// Rebuild every index from a from-scratch scan and compare —
+    /// panics on any drift. Driven by the multi-seed property tests
+    /// after randomized reconcile/dispatch/terminate interleavings.
+    pub fn verify_indices(&self) {
+        // Free-slot list == slab scan of Gone slots.
+        let scan_free: BTreeSet<u32> = self
+            .pods
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.phase == PodPhase::Gone)
+            .map(|(i, _)| i as u32)
             .collect();
-        for pid in pending {
-            let dep = self.pods[pid.0 as usize].deployment;
-            let spec = self.pods[pid.0 as usize].spec;
-            if let Some(node_id) =
-                scheduler::schedule(&self.nodes, &self.deployments[dep.0 as usize], spec)
-            {
-                self.nodes[node_id.0 as usize].bind(pid, spec);
-                let pod = &mut self.pods[pid.0 as usize];
-                pod.node = Some(node_id);
-                pod.phase = PodPhase::Initializing;
-                let delay = rng.int_range(INIT_DELAY_MIN, INIT_DELAY_MAX + 1);
-                queue.schedule_in(delay, Event::PodRunning { pod: pid });
+        assert_eq!(self.free_slots, scan_free, "free-slot list drift");
+
+        for (di, dep) in self.deployments.iter().enumerate() {
+            let id = DeploymentId(di as u32);
+            for phase in [
+                PodPhase::Pending,
+                PodPhase::Initializing,
+                PodPhase::Running,
+                PodPhase::Terminating,
+            ] {
+                assert_eq!(
+                    dep.phase_counts[phase as usize],
+                    self.scan_count_phase(id, phase),
+                    "dep {di}: {phase:?} counter drift"
+                );
+            }
+            let scan_idle: BTreeSet<PodId> = dep
+                .pods
+                .iter()
+                .copied()
+                .filter(|&p| self.pod(p).is_idle_running())
+                .collect();
+            assert_eq!(dep.idle_pods, scan_idle, "dep {di}: idle-set drift");
+            assert_eq!(
+                dep.matching_nodes,
+                self.scan_matching_nodes(&dep.selector),
+                "dep {di}: matching-node cache drift"
+            );
+            assert_eq!(
+                self.indexed_max_replicas(id),
+                self.scan_max_replicas(id),
+                "dep {di}: capacity-cache drift"
+            );
+        }
+
+        // Node ledgers == per-deployment sums over each node's pods.
+        for (ni, node) in self.nodes.iter().enumerate() {
+            for di in 0..self.deployments.len() {
+                let id = DeploymentId(di as u32);
+                let mut cpu = 0u32;
+                let mut ram = 0u32;
+                for &pid in &node.pods {
+                    let p = self.pod(pid);
+                    if p.deployment == id {
+                        cpu += p.spec.cpu_millis;
+                        ram += p.spec.ram_mb;
+                    }
+                }
+                assert_eq!(
+                    node.alloc_for(id),
+                    (cpu, ram),
+                    "node {ni}: ledger drift for dep {di}"
+                );
             }
         }
     }
@@ -370,6 +715,7 @@ mod tests {
         // Resources allocated on nodes.
         let alloc: u32 = c.nodes.iter().map(|n| n.alloc_cpu).sum();
         assert_eq!(alloc, 3 * 500);
+        c.verify_indices();
     }
 
     #[test]
@@ -390,6 +736,7 @@ mod tests {
         assert_eq!(c.count_phase(DeploymentId(0), PodPhase::Running), 2);
         let alloc: u32 = c.nodes.iter().map(|n| n.alloc_cpu).sum();
         assert_eq!(alloc, 2 * 500);
+        c.verify_indices();
     }
 
     #[test]
@@ -404,6 +751,7 @@ mod tests {
         c.reconcile(DeploymentId(0), 10, &mut q, &mut rng); // no-op, still full
         c.retry_pending(&mut q, &mut rng);
         assert_eq!(c.count_phase(DeploymentId(0), PodPhase::Pending), 4);
+        c.verify_indices();
     }
 
     #[test]
@@ -424,6 +772,7 @@ mod tests {
         c.reconcile(other_id, 2, &mut q, &mut rng);
         drain_inits(&mut c, &mut q);
         assert_eq!(c.max_replicas(DeploymentId(0)), 2);
+        c.verify_indices();
     }
 
     #[test]
@@ -440,15 +789,17 @@ mod tests {
         let (mut c, mut q, mut rng) = test_cluster();
         c.reconcile(DeploymentId(0), 2, &mut q, &mut rng);
         drain_inits(&mut c, &mut q);
-        // Mark both busy.
+        // Mark both busy (through the cluster, so the idle set follows).
         let pods: Vec<PodId> = c.deployments[0].pods.clone();
-        for &p in &pods {
-            c.pod_mut(p).current_request = Some(crate::sim::RequestId::new(7, 0));
+        for (i, &p) in pods.iter().enumerate() {
+            c.start_service(p, RequestId::new(7 + i as u32, 0), q.now());
         }
+        assert_eq!(c.min_idle_pod(DeploymentId(0)), None);
         c.reconcile(DeploymentId(0), 1, &mut q, &mut rng);
         // No PodTerminated scheduled yet (busy drain).
         assert_eq!(c.count_phase(DeploymentId(0), PodPhase::Terminating), 1);
         assert!(q.is_empty());
+        c.verify_indices();
     }
 
     #[test]
@@ -462,5 +813,140 @@ mod tests {
         c.reconcile(DeploymentId(0), 3, &mut q, &mut rng);
         drain_inits(&mut c, &mut q);
         assert_eq!(c.pods.len(), slots_before, "slab should reuse Gone slots");
+        c.verify_indices();
+    }
+
+    #[test]
+    fn min_idle_pod_tracks_occupancy() {
+        let (mut c, mut q, mut rng) = test_cluster();
+        let dep = DeploymentId(0);
+        c.reconcile(dep, 3, &mut q, &mut rng);
+        drain_inits(&mut c, &mut q);
+        // Lowest-id pod first, deterministically.
+        let first = c.min_idle_pod(dep).unwrap();
+        assert_eq!(first, PodId(0));
+        c.start_service(first, RequestId::new(1, 0), q.now());
+        let second = c.min_idle_pod(dep).unwrap();
+        assert_eq!(second, PodId(1));
+        c.start_service(second, RequestId::new(2, 0), q.now());
+        assert_eq!(c.min_idle_pod(dep), Some(PodId(2)));
+        // Completion puts the lowest id back in front.
+        assert_eq!(c.finish_service(first, q.now()), Some(RequestId::new(1, 0)));
+        assert_eq!(c.min_idle_pod(dep), Some(PodId(0)));
+        c.verify_indices();
+    }
+
+    #[test]
+    fn surplus_victim_ordering() {
+        // Victim order regression: Pending first, then Initializing
+        // (newest first), and Running pods only after those.
+        let (mut c, mut q, mut rng) = test_cluster();
+        let dep = DeploymentId(0);
+        c.reconcile(dep, 2, &mut q, &mut rng);
+        drain_inits(&mut c, &mut q); // 2 oldest pods now Running
+        c.reconcile(dep, 7, &mut q, &mut rng); // capacity 6: 4 Init + 1 Pending
+        assert_eq!(c.count_phase(dep, PodPhase::Pending), 1);
+        assert_eq!(c.count_phase(dep, PodPhase::Initializing), 4);
+        let pending: Vec<PodId> = c
+            .pods
+            .iter()
+            .filter(|p| p.phase == PodPhase::Pending)
+            .map(|p| p.id)
+            .collect();
+        c.reconcile(dep, 3, &mut q, &mut rng); // terminate 4 of 7
+        // The Pending pod went first (straight to Gone)...
+        assert_eq!(c.pod(pending[0]).phase, PodPhase::Gone);
+        // ...then 3 of the 4 Initializing pods; Running pods survive.
+        assert_eq!(c.count_phase(dep, PodPhase::Terminating), 3);
+        assert_eq!(c.count_phase(dep, PodPhase::Initializing), 1);
+        assert_eq!(c.count_phase(dep, PodPhase::Running), 2);
+        c.verify_indices();
+
+        // Next scale-down: the surviving Initializing pod goes before
+        // any Running pod, and an idle Running pod goes before a busy
+        // one — the busy pod is the last-resort victim and survives.
+        let busy = c.min_idle_pod(dep).unwrap();
+        c.start_service(busy, RequestId::new(1, 0), q.now());
+        c.reconcile(dep, 1, &mut q, &mut rng); // live 3 -> terminate 2
+        assert_eq!(c.count_phase(dep, PodPhase::Initializing), 0);
+        assert_eq!(c.pod(busy).phase, PodPhase::Running, "busy pod victimized last");
+        assert_eq!(c.live_replicas(dep), 1);
+        assert_eq!(c.min_idle_pod(dep), None, "the survivor is the busy pod");
+        c.verify_indices();
+    }
+
+    #[test]
+    fn drain_then_terminate_keeps_indices_consistent() {
+        let (mut c, mut q, mut rng) = test_cluster();
+        let dep = DeploymentId(0);
+        c.reconcile(dep, 2, &mut q, &mut rng);
+        drain_inits(&mut c, &mut q);
+        let a = c.min_idle_pod(dep).unwrap();
+        c.start_service(a, RequestId::new(1, 0), q.now());
+        let b = c.min_idle_pod(dep).unwrap();
+        c.start_service(b, RequestId::new(2, 0), q.now());
+        assert_eq!(c.min_idle_pod(dep), None);
+        // Scale to zero while both are busy — both drain.
+        c.deployments[0].min_replicas = 0;
+        c.reconcile(dep, 0, &mut q, &mut rng);
+        assert_eq!(c.count_phase(dep, PodPhase::Terminating), 2);
+        assert!(q.is_empty(), "busy pods drain: no PodTerminated yet");
+        c.verify_indices();
+        // First request completes; the draining pod must not re-enter
+        // the idle set, and termination frees its slot.
+        assert_eq!(c.finish_service(a, q.now()), Some(RequestId::new(1, 0)));
+        assert_eq!(c.min_idle_pod(dep), None);
+        c.on_pod_terminated(a);
+        assert_eq!(c.pod(a).phase, PodPhase::Gone);
+        assert_eq!(c.live_replicas(dep), 0);
+        c.verify_indices();
+        c.finish_service(b, q.now());
+        c.on_pod_terminated(b);
+        c.verify_indices();
+        // Freed slots are reused lowest-first on the next scale-up.
+        c.deployments[0].min_replicas = 1;
+        c.reconcile(dep, 1, &mut q, &mut rng);
+        assert_eq!(c.pods.len(), 2, "slab slot reused, not grown");
+        assert_eq!(
+            c.deployments[0].pods,
+            vec![PodId(0)],
+            "lowest free slot first"
+        );
+        c.verify_indices();
+    }
+
+    #[test]
+    fn scan_and_indexed_modes_make_identical_choices() {
+        let build = |mode: QueryMode| -> Vec<(u32, PodPhase, Option<NodeId>)> {
+            let (mut c, mut q, mut rng) = test_cluster();
+            c.set_query_mode(mode);
+            c.reconcile(DeploymentId(0), 5, &mut q, &mut rng);
+            drain_inits(&mut c, &mut q);
+            c.reconcile(DeploymentId(0), 2, &mut q, &mut rng);
+            drain_inits(&mut c, &mut q);
+            c.reconcile(DeploymentId(0), 4, &mut q, &mut rng);
+            drain_inits(&mut c, &mut q);
+            c.verify_indices();
+            c.pods.iter().map(|p| (p.id.0, p.phase, p.node)).collect()
+        };
+        assert_eq!(build(QueryMode::Indexed), build(QueryMode::Scan));
+    }
+
+    #[test]
+    fn matching_node_cache_follows_node_additions() {
+        let mut c = Cluster::new();
+        c.add_node(NodeSpec::new("e1", Tier::Edge, 1, 2000, 2048));
+        let dep = c.add_deployment(Deployment::new(
+            "edge",
+            Selector::new(Tier::Edge, Some(1)),
+            PodSpec::new(500, 256),
+            0,
+            16,
+        ));
+        // Nodes added after the deployment still join its cache.
+        c.add_node(NodeSpec::new("c1", Tier::Cloud, 0, 3000, 3072));
+        c.add_node(NodeSpec::new("e2", Tier::Edge, 1, 2000, 2048));
+        assert_eq!(c.max_replicas(dep), 6, "both zone-1 edge nodes count");
+        c.verify_indices();
     }
 }

@@ -1,8 +1,8 @@
 //! Nodes: heterogeneous cloud/edge machines with CPU (millicores) and RAM
 //! (MB) capacities, per Table 2 of the paper.
 
+use super::{DeploymentId, PodSpec};
 use crate::sim::PodId;
-use super::PodSpec;
 
 /// Which tier a node lives in — the defining heterogeneity of the edge
 /// environment (Fig 2).
@@ -63,6 +63,12 @@ pub struct Node {
     pub alloc_cpu: u32,
     pub alloc_ram: u32,
     pub pods: Vec<PodId>,
+    /// Per-deployment (cpu, ram) shares of `alloc_cpu`/`alloc_ram`,
+    /// indexed by deployment id and updated on bind/unbind — the
+    /// capacity ledger `Cluster::max_replicas` reads instead of
+    /// walking `pods` (paper Algorithm 1 subtracts "what OTHER
+    /// deployments occupy" per node).
+    alloc_by_dep: Vec<(u32, u32)>,
 }
 
 impl Node {
@@ -72,6 +78,7 @@ impl Node {
             alloc_cpu: 0,
             alloc_ram: 0,
             pods: Vec::new(),
+            alloc_by_dep: Vec::new(),
         }
     }
 
@@ -98,19 +105,38 @@ impl Node {
         (cpu + ram) / 2.0
     }
 
-    pub fn bind(&mut self, pod: PodId, spec: PodSpec) {
+    pub fn bind(&mut self, pod: PodId, dep: DeploymentId, spec: PodSpec) {
         debug_assert!(self.fits(spec), "bind without fit check");
         self.alloc_cpu += spec.cpu_millis;
         self.alloc_ram += spec.ram_mb;
+        let d = dep.0 as usize;
+        if self.alloc_by_dep.len() <= d {
+            self.alloc_by_dep.resize(d + 1, (0, 0));
+        }
+        self.alloc_by_dep[d].0 += spec.cpu_millis;
+        self.alloc_by_dep[d].1 += spec.ram_mb;
         self.pods.push(pod);
     }
 
-    pub fn unbind(&mut self, pod: PodId, spec: PodSpec) {
+    pub fn unbind(&mut self, pod: PodId, dep: DeploymentId, spec: PodSpec) {
         self.alloc_cpu = self.alloc_cpu.saturating_sub(spec.cpu_millis);
         self.alloc_ram = self.alloc_ram.saturating_sub(spec.ram_mb);
+        if let Some(share) = self.alloc_by_dep.get_mut(dep.0 as usize) {
+            share.0 = share.0.saturating_sub(spec.cpu_millis);
+            share.1 = share.1.saturating_sub(spec.ram_mb);
+        }
         if let Some(i) = self.pods.iter().position(|&p| p == pod) {
             self.pods.swap_remove(i);
         }
+    }
+
+    /// This node's (cpu, ram) allocation held by `dep`'s pods — the
+    /// ledger read behind the O(nodes) capacity cap.
+    pub fn alloc_for(&self, dep: DeploymentId) -> (u32, u32) {
+        self.alloc_by_dep
+            .get(dep.0 as usize)
+            .copied()
+            .unwrap_or((0, 0))
     }
 }
 
@@ -130,12 +156,12 @@ mod tests {
         let mut n = Node::new(NodeSpec::new("n", Tier::Edge, 1, 2000, 2048));
         let p = PodSpec::new(500, 256);
         assert!(n.fits(p));
-        n.bind(PodId(0), p);
-        n.bind(PodId(1), p);
-        n.bind(PodId(2), p);
+        n.bind(PodId(0), DeploymentId(0), p);
+        n.bind(PodId(1), DeploymentId(0), p);
+        n.bind(PodId(2), DeploymentId(0), p);
         assert!(!n.fits(PodSpec::new(500, 256)), "1800-1500=300 < 500");
         assert_eq!(n.free_cpu(), 300);
-        n.unbind(PodId(1), p);
+        n.unbind(PodId(1), DeploymentId(0), p);
         assert!(n.fits(p));
         assert_eq!(n.pods.len(), 2);
     }
@@ -145,8 +171,26 @@ mod tests {
         let mut n = Node::new(NodeSpec::new("n", Tier::Cloud, 0, 3000, 3072));
         let p = PodSpec::new(500, 256);
         let s0 = n.score_after(p);
-        n.bind(PodId(0), p);
+        n.bind(PodId(0), DeploymentId(0), p);
         let s1 = n.score_after(p);
         assert!(s1 > s0);
+    }
+
+    #[test]
+    fn ledger_tracks_per_deployment_shares() {
+        let mut n = Node::new(NodeSpec::new("n", Tier::Edge, 1, 4000, 4096));
+        let small = PodSpec::new(500, 256);
+        let big = PodSpec::new(1000, 512);
+        n.bind(PodId(0), DeploymentId(0), small);
+        n.bind(PodId(1), DeploymentId(2), big);
+        n.bind(PodId(2), DeploymentId(0), small);
+        assert_eq!(n.alloc_for(DeploymentId(0)), (1000, 512));
+        assert_eq!(n.alloc_for(DeploymentId(2)), (1000, 512));
+        assert_eq!(n.alloc_for(DeploymentId(1)), (0, 0), "never bound");
+        assert_eq!(n.alloc_for(DeploymentId(9)), (0, 0), "past ledger end");
+        assert_eq!(n.alloc_cpu, 2000);
+        n.unbind(PodId(0), DeploymentId(0), small);
+        assert_eq!(n.alloc_for(DeploymentId(0)), (500, 256));
+        assert_eq!(n.alloc_cpu, 1500);
     }
 }

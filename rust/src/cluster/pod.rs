@@ -43,7 +43,10 @@ pub struct Pod {
     pub created: Time,
     /// Request currently being serviced (workers are single-slot, like a
     /// Celery worker with concurrency 1). The generational handle goes
-    /// stale once the request completes in the arena.
+    /// stale once the request completes in the arena. Cluster-resident
+    /// pods must change occupancy through `Cluster::start_service` /
+    /// `Cluster::finish_service` so the idle-pod dispatch set stays
+    /// exact (the methods below are the pod-local mechanics).
     pub current_request: Option<RequestId>,
     /// Busy-time accumulator since the last metrics scrape.
     busy_accum: Time,

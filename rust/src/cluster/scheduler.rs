@@ -1,11 +1,21 @@
 //! The pod scheduler: K8s default-profile shape — a `PodFitsResources` +
 //! node-selector filter stage, then a `LeastAllocated` score stage.
 //! Deterministic tie-break on node index keeps runs reproducible.
+//!
+//! Two entry points share the score stage: [`schedule`] scans every
+//! node against the deployment's selector (the retained reference
+//! path, used by `QueryMode::Scan` and for standalone deployments),
+//! while [`schedule_over`] runs the same filter/score over a
+//! pre-computed ascending candidate list — the deployment's cached
+//! matching-node index, which skips the selector test entirely.
+//! Candidate lists are built in node-index order, so both paths pick
+//! the same node (same score comparison, same tie-break).
 
 use super::{Deployment, Node, PodSpec};
 use crate::sim::NodeId;
 
 /// Pick the best node for a pod of `dep`, or `None` if unschedulable.
+/// Full scan: every node is tested against the deployment's selector.
 pub fn schedule(nodes: &[Node], dep: &Deployment, spec: PodSpec) -> Option<NodeId> {
     let mut best: Option<(f64, usize)> = None;
     for (idx, node) in nodes.iter().enumerate() {
@@ -23,14 +33,43 @@ pub fn schedule(nodes: &[Node], dep: &Deployment, spec: PodSpec) -> Option<NodeI
     best.map(|(_, idx)| NodeId(idx as u32))
 }
 
+/// [`schedule`] over a pre-filtered candidate list (ascending node
+/// indices, selector already applied): only `PodFitsResources` and the
+/// `LeastAllocated` score run per candidate.
+pub fn schedule_over(nodes: &[Node], candidates: &[NodeId], spec: PodSpec) -> Option<NodeId> {
+    let mut best: Option<(f64, NodeId)> = None;
+    for &nid in candidates {
+        let node = &nodes[nid.0 as usize];
+        if !node.fits(spec) {
+            continue;
+        }
+        let score = node.score_after(spec);
+        match best {
+            Some((s, _)) if s <= score => {}
+            _ => best = Some((score, nid)),
+        }
+    }
+    best.map(|(_, nid)| nid)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::{NodeSpec, Selector, Tier};
+    use crate::cluster::{DeploymentId, NodeSpec, Selector, Tier};
     use crate::sim::PodId;
 
     fn dep(selector: Selector) -> Deployment {
         Deployment::new("d", selector, PodSpec::new(500, 256), 0, 100)
+    }
+
+    /// The candidate list `Cluster::add_deployment` would cache.
+    fn matching(nodes: &[Node], d: &Deployment) -> Vec<NodeId> {
+        nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| d.selector.matches(&n.spec))
+            .map(|(i, _)| NodeId(i as u32))
+            .collect()
     }
 
     #[test]
@@ -54,7 +93,7 @@ mod tests {
             Node::new(NodeSpec::new("e2", Tier::Edge, 1, 2000, 2048)),
         ];
         let d = dep(Selector::new(Tier::Edge, None));
-        nodes[0].bind(PodId(0), d.pod_spec);
+        nodes[0].bind(PodId(0), DeploymentId(0), d.pod_spec);
         assert_eq!(schedule(&nodes, &d, d.pod_spec), Some(NodeId(1)));
     }
 
@@ -68,7 +107,7 @@ mod tests {
         let mut placements = Vec::new();
         for i in 0..4 {
             let n = schedule(&nodes, &d, d.pod_spec).unwrap();
-            nodes[n.0 as usize].bind(PodId(i), d.pod_spec);
+            nodes[n.0 as usize].bind(PodId(i), DeploymentId(0), d.pod_spec);
             placements.push(n.0);
         }
         assert_eq!(placements, vec![0, 1, 0, 1]);
@@ -78,7 +117,34 @@ mod tests {
     fn none_when_full() {
         let mut nodes = vec![Node::new(NodeSpec::new("e", Tier::Edge, 1, 700, 2048))];
         let d = dep(Selector::new(Tier::Edge, None));
-        nodes[0].bind(PodId(0), d.pod_spec); // 500 of 500 allocatable
+        nodes[0].bind(PodId(0), DeploymentId(0), d.pod_spec); // 500 of 500 allocatable
         assert_eq!(schedule(&nodes, &d, d.pod_spec), None);
+    }
+
+    #[test]
+    fn candidate_list_path_matches_full_scan() {
+        // schedule_over on the cached matching list must pick the node
+        // the selector-scanning schedule picks, at every load state.
+        let mut nodes = vec![
+            Node::new(NodeSpec::new("c", Tier::Cloud, 0, 3000, 3072)),
+            Node::new(NodeSpec::new("e1", Tier::Edge, 1, 2000, 2048)),
+            Node::new(NodeSpec::new("e2", Tier::Edge, 1, 2000, 2048)),
+            Node::new(NodeSpec::new("e3", Tier::Edge, 2, 2000, 2048)),
+        ];
+        let d = dep(Selector::new(Tier::Edge, Some(1)));
+        let candidates = matching(&nodes, &d);
+        assert_eq!(candidates, vec![NodeId(1), NodeId(2)]);
+        for i in 0..7 {
+            let scan = schedule(&nodes, &d, d.pod_spec);
+            let indexed = schedule_over(&nodes, &candidates, d.pod_spec);
+            assert_eq!(scan, indexed, "placement {i} diverged");
+            match indexed {
+                Some(n) => nodes[n.0 as usize].bind(PodId(i), DeploymentId(0), d.pod_spec),
+                None => break,
+            }
+        }
+        // Both full: both report unschedulable.
+        assert_eq!(schedule(&nodes, &d, d.pod_spec), None);
+        assert_eq!(schedule_over(&nodes, &candidates, d.pod_spec), None);
     }
 }

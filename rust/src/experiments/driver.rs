@@ -156,6 +156,14 @@ impl SimWorld {
         self.log_decisions = true;
     }
 
+    /// Switch the cluster between its indexed query plane and the
+    /// retained scan baseline ([`crate::cluster::QueryMode`]). Both
+    /// modes are decision-bit-identical; the golden-equivalence tests
+    /// and the hot-path bench run `Scan` worlds as the reference.
+    pub fn set_cluster_query_mode(&mut self, mode: crate::cluster::QueryMode) {
+        self.cluster.set_query_mode(mode);
+    }
+
     /// Bind an autoscaler to service index `service_idx` (== deployment
     /// order in the config).
     pub fn add_scaler(&mut self, autoscaler: Box<dyn Autoscaler>, service_idx: usize) {
@@ -433,6 +441,28 @@ mod tests {
         );
         assert_eq!(cal.app.completed(), heap.app.completed());
         assert_eq!(cal.rir_log.len(), heap.rir_log.len());
+    }
+
+    #[test]
+    fn indexed_and_scan_cluster_planes_are_bit_identical() {
+        // The index-layer golden contract at world level: the retained
+        // scan baseline reproduces the indexed run bit-for-bit (the
+        // full grids live in tests/golden_index_equivalence.rs).
+        let mut indexed = hpa_world(42);
+        let mut scan = hpa_world(42);
+        scan.set_cluster_query_mode(crate::cluster::QueryMode::Scan);
+        indexed.run_until(8 * MIN);
+        scan.run_until(8 * MIN);
+        assert!(indexed.events_processed > 100);
+        assert_eq!(indexed.events_processed, scan.events_processed);
+        assert_eq!(
+            indexed.app.stats.fingerprint(),
+            scan.app.stats.fingerprint(),
+            "scan baseline must reproduce the indexed run bit-for-bit"
+        );
+        assert_eq!(indexed.app.completed(), scan.app.completed());
+        indexed.cluster.verify_indices();
+        scan.cluster.verify_indices();
     }
 
     #[test]

@@ -224,7 +224,7 @@ fn run_ppa_under_test(
 ) -> crate::Result<SimWorld> {
     let mut world = world_random_access(params.seed);
     let n_services = world.app.services.len();
-    let ppa = ppa_for(
+    let mut ppa = ppa_for(
         0,
         model,
         policy,
@@ -234,6 +234,9 @@ fn run_ppa_under_test(
         HOUR,
         params.seed as u32,
     )?;
+    // Figure harnesses need the exact (predicted, actual) trace for the
+    // CSV dumps — the log is opt-in (sweep cells stay flat-memory).
+    ppa.record_logs();
     world.add_scaler(Box::new(ppa), 0);
     for svc in 1..n_services {
         world.add_scaler(Box::new(Hpa::with_defaults()), svc);

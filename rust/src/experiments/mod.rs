@@ -1,4 +1,4 @@
-//! Experiment harnesses — one per paper figure (DESIGN.md §8 index).
+//! Experiment harnesses — one per paper figure (DESIGN.md §9 index).
 //!
 //! Each `figN` function reproduces the corresponding figure's data:
 //! it builds the paper's cluster, replays the figure's workload under the

@@ -257,7 +257,9 @@ pub fn run_cell(
     let mut mses = Vec::new();
     for binding in &world.scalers {
         if let Some(ppa) = binding.autoscaler.as_any().downcast_ref::<Ppa>() {
-            if !ppa.prediction_log.is_empty() {
+            // Streaming count/MSE: the exact prediction log stays off
+            // in sweep cells (flat memory).
+            if ppa.prediction_count() > 0 {
                 mses.push(ppa.prediction_mse());
             }
         }

@@ -1,0 +1,144 @@
+//! Golden equivalence for the indexed cluster plane.
+//!
+//! The index layer (idle-pod ordered sets, phase counters, slab
+//! free-slot list, per-node capacity ledger, cached matching-node
+//! lists) replaced every hot-path scan in the cluster. These tests pin
+//! that a world answering queries from the indices reproduces a world
+//! running the retained scan paths (`QueryMode::Scan` — the pre-change
+//! implementations, kept verbatim) **bit-identically**: decision logs,
+//! event counts, and response-stream fingerprints all equal, on the
+//! paper grid, the city-8 sweep grid, and a city-50 cell — under both
+//! HPA and PPA with live ARMA update loops.
+
+use ppa_edge::app::TaskCosts;
+use ppa_edge::autoscaler::{Autoscaler, Hpa, Ppa, PpaConfig};
+use ppa_edge::cluster::QueryMode;
+use ppa_edge::config::{city_scenario_presets, paper_cluster, ClusterConfig, Topology};
+use ppa_edge::experiments::SimWorld;
+use ppa_edge::forecast::ArmaForecaster;
+use ppa_edge::sim::MIN;
+use ppa_edge::workload::{Generator, RandomAccessGen};
+
+/// Which autoscaler to bind on every service of both worlds.
+#[derive(Clone, Copy)]
+enum ScalerKind {
+    Hpa,
+    /// ARMA PPA trained online by a live 10-minute update loop — the
+    /// Algorithm-1 fallback path, real forecasts, history clearing.
+    PpaArma,
+}
+
+fn build_scaler(kind: ScalerKind) -> Box<dyn Autoscaler> {
+    match kind {
+        ScalerKind::Hpa => Box::new(Hpa::with_defaults()),
+        ScalerKind::PpaArma => Box::new(Ppa::new(
+            PpaConfig {
+                update_interval: 10 * MIN,
+                ..PpaConfig::default()
+            },
+            Box::new(ArmaForecaster::new()),
+        )),
+    }
+}
+
+/// Run the same (cluster, generators, scaler, seed) world on the
+/// indexed plane and on the retained scan baseline; assert bit-identical
+/// evolution.
+fn assert_modes_equivalent(
+    cfg: &ClusterConfig,
+    gens: &dyn Fn() -> Vec<Generator>,
+    kind: ScalerKind,
+    seed: u64,
+    minutes: u64,
+) {
+    let run_one = |mode: QueryMode| -> SimWorld {
+        let mut w = SimWorld::build(cfg, TaskCosts::default(), seed);
+        w.set_cluster_query_mode(mode);
+        w.record_decisions();
+        for g in gens() {
+            w.add_generator(g);
+        }
+        for svc in 0..w.app.services.len() {
+            w.add_scaler(build_scaler(kind), svc);
+        }
+        w.run_until(minutes * MIN);
+        w
+    };
+    let indexed = run_one(QueryMode::Indexed);
+    let scan = run_one(QueryMode::Scan);
+
+    assert!(indexed.events_processed > 100, "world should be busy");
+    assert_eq!(
+        indexed.events_processed, scan.events_processed,
+        "event counts diverged"
+    );
+    assert_eq!(indexed.app.completed(), scan.app.completed());
+    assert_eq!(
+        indexed.app.stats.fingerprint(),
+        scan.app.stats.fingerprint(),
+        "response streams diverged"
+    );
+    for svc in 0..indexed.app.services.len() {
+        assert_eq!(
+            indexed.decisions_for(svc),
+            scan.decisions_for(svc),
+            "service {svc}: decision logs diverged"
+        );
+    }
+    assert_eq!(indexed.rir_log.len(), scan.rir_log.len());
+    // And the indices themselves still mirror a from-scratch scan.
+    indexed.cluster.verify_indices();
+    scan.cluster.verify_indices();
+}
+
+/// The paper scenario: Table-2 cluster, Random Access on both zones.
+fn paper_generators() -> Vec<Generator> {
+    vec![
+        Generator::RandomAccess(RandomAccessGen::new(1)),
+        Generator::RandomAccess(RandomAccessGen::new(2)),
+    ]
+}
+
+#[test]
+fn golden_index_equivalence_paper_hpa() {
+    let cfg = paper_cluster();
+    assert_modes_equivalent(&cfg, &paper_generators, ScalerKind::Hpa, 2021, 30);
+}
+
+#[test]
+fn golden_index_equivalence_paper_ppa_arma() {
+    let cfg = paper_cluster();
+    assert_modes_equivalent(&cfg, &paper_generators, ScalerKind::PpaArma, 7, 25);
+}
+
+#[test]
+fn golden_index_equivalence_city8_grid() {
+    // A small city-8 grid: 2 scenarios x both scalers.
+    let topo = Topology::EdgeCity {
+        zones: 8,
+        workers_per_zone: 2,
+    };
+    let cfg = topo.cluster();
+    for (_, scenario) in &city_scenario_presets(8)[..2] {
+        for kind in [ScalerKind::Hpa, ScalerKind::PpaArma] {
+            let build = || scenario.build_generators();
+            assert_modes_equivalent(&cfg, &build, kind, 11, 4);
+        }
+    }
+}
+
+#[test]
+fn golden_index_equivalence_city50_cell() {
+    // The acceptance cell: one city-50 flash-mosaic cell, HPA and the
+    // live-ARMA PPA, indexed vs scan.
+    let topo = Topology::EdgeCity {
+        zones: 50,
+        workers_per_zone: 2,
+    };
+    let cfg = topo.cluster();
+    let presets = city_scenario_presets(50);
+    let (_, scenario) = &presets[1]; // city50-flash-mosaic
+    let build = || scenario.build_generators();
+    assert_modes_equivalent(&cfg, &build, ScalerKind::Hpa, 3, 3);
+    assert_modes_equivalent(&cfg, &build, ScalerKind::PpaArma, 3, 3);
+}

@@ -259,6 +259,108 @@ fn prop_max_replicas_is_schedulable() {
 }
 
 // ---------------------------------------------------------------------------
+// Cluster index plane: after randomized reconcile/dispatch/terminate
+// interleavings, every index (idle-pod sets, phase counters, free-slot
+// list, capacity ledgers, matching-node caches) must equal a
+// from-scratch scan — `Cluster::verify_indices` rebuilds and compares.
+// ---------------------------------------------------------------------------
+
+/// Deliver up to `limit` pending events through the app/cluster
+/// handlers (the driver's event loop, minus the periodic ticks).
+fn deliver_events(
+    app: &mut ppa_edge::app::App,
+    cluster: &mut Cluster,
+    q: &mut EventQueue,
+    rng: &mut Pcg64,
+    limit: u64,
+) {
+    for _ in 0..limit {
+        match q.pop() {
+            Some((_, Event::RequestArrival { request_id })) => {
+                app.on_arrival(request_id, cluster, q, rng)
+            }
+            Some((_, Event::ServiceComplete { pod, request_id })) => {
+                app.on_complete(pod, request_id, cluster, q, rng)
+            }
+            Some((_, Event::PodRunning { pod })) => {
+                cluster.on_pod_running(pod);
+            }
+            Some((_, Event::PodTerminated { pod })) => cluster.on_pod_terminated(pod),
+            Some(_) => {}
+            None => break,
+        }
+    }
+}
+
+#[test]
+fn prop_cluster_indices_match_scan_after_interleavings() {
+    use ppa_edge::app::{App, TaskCosts, TaskType};
+    use ppa_edge::config::{paper_cluster, Topology};
+
+    for seed in 0..64u64 {
+        // Alternate the paper topology with a city-8 cell.
+        let cfg = if seed % 2 == 0 {
+            paper_cluster()
+        } else {
+            Topology::EdgeCity {
+                zones: 8,
+                workers_per_zone: 2,
+            }
+            .cluster()
+        };
+        let (mut cluster, dep_ids) = cfg.build();
+        let edge: Vec<(u32, _)> = cfg.deployments[..dep_ids.len() - 1]
+            .iter()
+            .zip(&dep_ids)
+            .map(|(d, &id)| (d.zone.expect("edge deployments set a zone"), id))
+            .collect();
+        let cloud = *dep_ids.last().unwrap();
+        let n_zones = edge.len() as u64;
+        let mut app = App::new(TaskCosts::default(), &edge, cloud);
+        let mut q = EventQueue::new();
+        let mut rng = Pcg64::new(seed, 9);
+
+        for step in 0..60 {
+            match rng.below(10) {
+                // Reconcile a random deployment to a random size
+                // (drives spawn, surplus-victim selection, drains).
+                0..=3 => {
+                    let di = rng.below(dep_ids.len() as u64) as usize;
+                    let desired = rng.below(7) as usize;
+                    cluster.reconcile(dep_ids[di], desired, &mut q, &mut rng);
+                }
+                4 => cluster.retry_pending(&mut q, &mut rng),
+                // Submit a burst of tasks (drives dispatch).
+                5..=7 => {
+                    for _ in 0..1 + rng.below(5) {
+                        let task = if rng.chance(0.8) {
+                            TaskType::Sort
+                        } else {
+                            TaskType::Eigen
+                        };
+                        let zone = 1 + rng.below(n_zones) as u32;
+                        app.submit(task, zone, q.now(), &mut q);
+                    }
+                }
+                // Deliver a slice of pending events out of order with
+                // the control actions above.
+                _ => {
+                    let limit = rng.below(12);
+                    deliver_events(&mut app, &mut cluster, &mut q, &mut rng, limit);
+                }
+            }
+            if step % 6 == 0 {
+                cluster.verify_indices();
+            }
+        }
+        // Drain to exhaustion; the indices must still mirror a scan.
+        deliver_events(&mut app, &mut cluster, &mut q, &mut rng, u64::MAX);
+        assert!(q.is_empty(), "seed {seed}: queue drained");
+        cluster.verify_indices();
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Scaler: transform/inverse roundtrip on arbitrary data.
 // ---------------------------------------------------------------------------
 
