@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
         "NASA evaluation: {hours} simulated hours, {pretrain_hours} h pretraining (paper: 48 / 10)"
     );
 
-    let wall = std::time::Instant::now();
+    let wall = ppa_edge::util::wallclock();
     let eval = nasa_eval(&params)?;
     report::print_nasa_eval(&eval);
     println!(

@@ -272,6 +272,7 @@ impl App {
     ) -> RequestId {
         let (service, latency, bytes_in) = match task {
             TaskType::Sort => {
+                // detlint: allow(P1) — an unknown zone is a config-construction bug; fail loudly at the ingress boundary instead of silently misrouting traffic
                 let svc = self
                     .edge_service_by_zone
                     .get(zone as usize)
@@ -333,15 +334,16 @@ impl App {
             // the deployment's idle-pod ordered set in O(log n) — the
             // same pod the old per-request `running_pods` scan picked.
             let Some(pid) = cluster.min_idle_pod(dep) else { return };
-            let req_id = self.services[service.0 as usize]
-                .queue
-                .pop_front()
-                .unwrap();
-            let task = self
-                .in_flight
-                .get(req_id)
-                .expect("queued request is live")
-                .task;
+            let Some(req_id) = self.services[service.0 as usize].queue.pop_front() else {
+                // Unreachable: emptiness was checked at the top of the
+                // loop and nothing pops between there and here.
+                return;
+            };
+            let Some(task) = self.in_flight.get(req_id).map(|r| r.task) else {
+                // Stale handle (the request completed or was cancelled
+                // while queued): drop it and keep pulling work.
+                continue;
+            };
             cluster.start_service(pid, req_id, queue.now());
             let cpu_millis = cluster.pod(pid).spec.cpu_millis;
             let service_time = self.service_time(task, cpu_millis, rng);

@@ -80,7 +80,11 @@ impl ScalerRegistry {
 
     /// Override the policy of one target (builder form). Re-binding a
     /// service replaces its previous override.
-    pub fn bind(mut self, service_idx: usize, policy: ScalerPolicy) -> Self {
+    ///
+    /// (Named `with_policy`, not `bind`: `bind`/`unbind` are reserved
+    /// for the `Node` capacity-ledger nexus — detlint rule N1 flags the
+    /// bare method name outside `cluster/`.)
+    pub fn with_policy(mut self, service_idx: usize, policy: ScalerPolicy) -> Self {
         self.overrides.retain(|&(idx, _)| idx != service_idx);
         self.overrides.push((service_idx, policy));
         self
@@ -124,12 +128,12 @@ mod tests {
             ],
             ScalingBehavior::stabilize_down(MIN),
         );
-        let reg = ScalerRegistry::uniform(ScalerPolicy::default()).bind(1, hot.clone());
+        let reg = ScalerRegistry::uniform(ScalerPolicy::default()).with_policy(1, hot.clone());
         assert_eq!(reg.policy_for(0).label(), "cpu:70");
         assert_eq!(reg.policy_for(1).label(), "cpu:70+req_rate:150");
         assert_eq!(reg.policy_for(2).label(), "cpu:70", "fallback to default");
         // Re-binding replaces.
-        let reg = reg.bind(1, ScalerPolicy::default());
+        let reg = reg.with_policy(1, ScalerPolicy::default());
         assert_eq!(reg.policy_for(1).label(), "cpu:70");
         assert_eq!(reg.overrides.len(), 1);
     }

@@ -230,7 +230,7 @@ pub fn run_cell(
     minutes: u64,
     core: CoreKind,
 ) -> CellResult {
-    let wall = std::time::Instant::now();
+    let wall = crate::util::wallclock();
     let mut world = SimWorld::build_with_core(cluster, TaskCosts::default(), seed, core);
     for gen in scenario.build_generators() {
         world.add_generator(gen);
@@ -334,7 +334,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> crate::Result<SweepResult> {
     };
     let threads = threads.clamp(1, specs.len());
 
-    let wall = std::time::Instant::now();
+    let wall = crate::util::wallclock();
     let next = AtomicUsize::new(0);
     let slots: Mutex<Vec<Option<CellResult>>> = Mutex::new(vec![None; specs.len()]);
     std::thread::scope(|scope| {
@@ -845,7 +845,7 @@ mod tests {
         let cluster = topology.cluster();
         let presets = crate::config::city_scenario_presets(8);
         let (name, scenario) = &presets[0]; // city8-diurnal-wave
-        let fleet = ScalerRegistry::uniform(ScalerPolicy::default()).bind(
+        let fleet = ScalerRegistry::uniform(ScalerPolicy::default()).with_policy(
             1,
             ScalerPolicy::new(
                 vec![

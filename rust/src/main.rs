@@ -322,8 +322,8 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     };
     // `--metric`/`--behavior` build a uniform fleet policy for every
     // service of every cell (heterogeneous registries are API-level:
-    // see `ScalerRegistry::bind`). Unset `--behavior` fields default to
-    // the stock K8s values (5-min down window) so an up-rule-only flag
+    // see `ScalerRegistry::with_policy`). Unset `--behavior` fields
+    // default to the stock K8s values (5-min down window) so an up-rule-only flag
     // cannot silently weaken the HPA baseline's stabilization; without
     // the flag each scaler kind keeps its own default (HPA 5 min,
     // PPA 2 min).
@@ -434,7 +434,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         "running {minutes} simulated minutes with {scaler} ({})...",
         model.name()
     );
-    let wall = std::time::Instant::now();
+    let wall = ppa_edge::util::wallclock();
     let events = world.run_until(minutes * MIN);
     let elapsed = wall.elapsed();
 

@@ -9,7 +9,12 @@
 //! of a name.
 
 use crate::sim::Time;
-use std::collections::{HashMap, VecDeque};
+// The name index below is lookup-only (never iterated), so HashMap's
+// nondeterministic order can't leak into simulation state — see
+// clippy.toml / detlint rule D2.
+#[allow(clippy::disallowed_types)]
+use std::collections::HashMap;
+use std::collections::VecDeque;
 
 /// Default per-series retention cap (samples). At a 10 s scrape interval
 /// this holds > 48 h of history — enough for the NASA evaluation runs.
@@ -85,6 +90,7 @@ impl Series {
 /// The store: a slab of series addressed by [`SeriesId`], with a name
 /// index used only at registration time and by the debug/report API.
 #[derive(Debug, Default)]
+#[allow(clippy::disallowed_types)] // lookup-only name index; never iterated
 pub struct Tsdb {
     series: Vec<Series>,
     names: Vec<String>,

@@ -171,11 +171,11 @@ impl CalendarQueue {
     /// their slots. Called whenever the cursor advances.
     fn refill_from_overflow(&mut self) {
         let horizon = self.cursor + NUM_BUCKETS as u64;
-        while let Some((&(time, _), _)) = self.overflow.first_key_value() {
-            if time >> BUCKET_SHIFT >= horizon {
+        while let Some(first) = self.overflow.first_entry() {
+            if first.key().0 >> BUCKET_SHIFT >= horizon {
                 break;
             }
-            let ((time, seq), event) = self.overflow.pop_first().unwrap();
+            let ((time, seq), event) = first.remove_entry();
             let bucket = time >> BUCKET_SHIFT;
             self.slots[(bucket & BUCKET_MASK) as usize].push(Entry { time, seq, event });
             self.wheel_len += 1;

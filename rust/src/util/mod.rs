@@ -10,6 +10,21 @@ pub mod json;
 pub mod nelder_mead;
 pub mod rng;
 
+/// The single sanctioned wall-clock read in the workspace.
+///
+/// Experiment harnesses (`main.rs`, `experiments/sweep.rs`) time
+/// themselves through this helper so simulation modules stay
+/// mechanically clock-free: the determinism lint (`cargo run -p
+/// detlint`, rule D1) forbids `Instant`/`SystemTime` in sim code, and
+/// this is the one annotated escape. The returned `Instant` must only
+/// feed operator-facing reporting (`elapsed()` in run summaries) —
+/// never simulation state, which advances exclusively on `sim::Time`.
+// detlint: allow(D1) — harness wall-clock timing for run reports; never feeds simulation state
+#[allow(clippy::disallowed_methods)]
+pub fn wallclock() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
 /// Clamp helper for f64 that also guards NaN (returns `lo`); infinities
 /// clamp to the nearest bound.
 pub fn clamp_finite(x: f64, lo: f64, hi: f64) -> f64 {

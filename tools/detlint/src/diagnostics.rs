@@ -1,0 +1,122 @@
+//! Diagnostic type and the two output renderers (plain text and JSON).
+
+use std::fmt;
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Repo-relative path, forward slashes.
+    pub path: String,
+    /// 1-based line.
+    pub line: u32,
+    /// Rule id, e.g. `D1`.
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{} {} {}",
+            self.path, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// Order + dedupe a batch: by (path, line, rule), one diagnostic per
+/// (path, line, rule) triple — overlapping detectors (e.g. the two D2
+/// patterns) collapse into a single report.
+pub fn finalize(mut diags: Vec<Diagnostic>) -> Vec<Diagnostic> {
+    diags.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+    diags.dedup_by(|a, b| a.path == b.path && a.line == b.line && a.rule == b.rule);
+    diags
+}
+
+/// Render as a JSON array (hand-rolled: the tool is dependency-free).
+pub fn to_json(diags: &[Diagnostic]) -> String {
+    let mut out = String::from("[\n");
+    for (i, d) in diags.iter().enumerate() {
+        out.push_str("  {\"path\": \"");
+        json_escape(&d.path, &mut out);
+        out.push_str("\", \"line\": ");
+        out.push_str(&d.line.to_string());
+        out.push_str(", \"rule\": \"");
+        json_escape(d.rule, &mut out);
+        out.push_str("\", \"message\": \"");
+        json_escape(&d.message, &mut out);
+        out.push_str("\"}");
+        if i + 1 < diags.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push(']');
+    out
+}
+
+fn json_escape(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diag(path: &str, line: u32, rule: &'static str) -> Diagnostic {
+        Diagnostic {
+            path: path.to_string(),
+            line,
+            rule,
+            message: "m".to_string(),
+        }
+    }
+
+    #[test]
+    fn finalize_sorts_and_dedupes() {
+        let out = finalize(vec![
+            diag("b.rs", 2, "D1"),
+            diag("a.rs", 9, "P1"),
+            diag("b.rs", 2, "D1"),
+            diag("b.rs", 2, "D2"),
+        ]);
+        let keys: Vec<_> = out
+            .iter()
+            .map(|d| (d.path.clone(), d.line, d.rule))
+            .collect();
+        assert_eq!(
+            keys,
+            vec![
+                ("a.rs".to_string(), 9, "P1"),
+                ("b.rs".to_string(), 2, "D1"),
+                ("b.rs".to_string(), 2, "D2"),
+            ]
+        );
+    }
+
+    #[test]
+    fn json_escapes_specials() {
+        let d = Diagnostic {
+            path: "a\"b.rs".to_string(),
+            line: 1,
+            rule: "D1",
+            message: "tab\there".to_string(),
+        };
+        let j = to_json(&[d]);
+        assert!(j.contains("a\\\"b.rs"));
+        assert!(j.contains("tab\\there"));
+    }
+}

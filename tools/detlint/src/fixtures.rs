@@ -1,0 +1,398 @@
+//! Embedded fixture corpus: one positive and one negative fixture per
+//! rule, plus pragma-handling cases. The same table backs the unit
+//! tests (`cargo test -p detlint`) and the runtime self-check
+//! (`cargo run -p detlint -- --self-test`), so CI proves the rules fire
+//! before trusting a clean repo scan.
+//!
+//! Fixtures are lexed, never compiled — they only need to be lexically
+//! plausible Rust.
+
+use crate::rules::lint_source;
+
+/// One corpus entry: a virtual file and the exact rule-id sequence the
+/// lint must produce for it (diagnostics ordered by line, then rule).
+pub struct Fixture {
+    pub name: &'static str,
+    /// Repo-relative virtual path — placement decides rule scope.
+    pub path: &'static str,
+    pub src: &'static str,
+    pub expect: &'static [&'static str],
+}
+
+pub const FIXTURES: &[Fixture] = &[
+    // ---- D1: wall clock / env / ambient randomness ----
+    Fixture {
+        name: "d1_instant_fires",
+        path: "rust/src/sim/fixture.rs",
+        src: r##"
+pub fn stamp() -> u64 {
+    let wall = std::time::Instant::now();
+    wall.elapsed().as_millis() as u64
+}
+"##,
+        expect: &["D1"],
+    },
+    Fixture {
+        name: "d1_env_fires",
+        path: "rust/src/workload/fixture.rs",
+        src: r##"
+pub fn home() -> Option<String> {
+    std::env::var("HOME").ok()
+}
+"##,
+        expect: &["D1"],
+    },
+    Fixture {
+        name: "d1_seeded_rng_clean",
+        path: "rust/src/sim/fixture.rs",
+        src: r##"
+use crate::util::rng::Pcg64;
+
+pub fn roll(rng: &mut Pcg64) -> f64 {
+    rng.f64()
+}
+"##,
+        expect: &[],
+    },
+    Fixture {
+        name: "d1_test_module_exempt",
+        path: "rust/src/metrics/fixture.rs",
+        src: r##"
+pub fn double(x: u64) -> u64 {
+    x * 2
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn timing_is_fine_in_tests() {
+        let wall = std::time::Instant::now();
+        assert!(wall.elapsed().as_secs() < 1);
+    }
+}
+"##,
+        expect: &[],
+    },
+    Fixture {
+        name: "d1_out_of_scope_bench_clean",
+        path: "rust/benches/fixture.rs",
+        src: r##"
+pub fn wall_time() -> std::time::Instant {
+    std::time::Instant::now()
+}
+"##,
+        expect: &[],
+    },
+    Fixture {
+        name: "d1_string_literal_is_not_a_token",
+        path: "rust/src/sim/fixture.rs",
+        src: r##"
+pub const DOC: &str = "std::time::Instant::now() is banned here";
+"##,
+        expect: &[],
+    },
+    // ---- D2: hash-collection traversal ----
+    Fixture {
+        name: "d2_iter_fires",
+        path: "rust/src/metrics/fixture.rs",
+        src: r##"
+use std::collections::HashMap;
+
+pub fn total(m: &HashMap<u32, u64>) -> u64 {
+    let mut sum = 0;
+    for (_, v) in m.iter() {
+        sum += v;
+    }
+    sum
+}
+"##,
+        expect: &["D2"],
+    },
+    Fixture {
+        name: "d2_for_loop_fires",
+        path: "rust/src/cluster/fixture.rs",
+        src: r##"
+use std::collections::HashSet;
+
+pub fn drain_all(seen: &mut HashSet<u32>, out: &mut Vec<u32>) {
+    for id in seen.drain() {
+        out.push(id);
+    }
+}
+"##,
+        expect: &["D2"],
+    },
+    Fixture {
+        name: "d2_lookup_clean",
+        path: "rust/src/metrics/fixture.rs",
+        src: r##"
+use std::collections::HashMap;
+
+pub struct Interner {
+    by_name: HashMap<String, u32>,
+}
+
+impl Interner {
+    pub fn id(&self, name: &str) -> Option<u32> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn insert(&mut self, name: &str, id: u32) {
+        self.by_name.insert(name.to_string(), id);
+    }
+}
+"##,
+        expect: &[],
+    },
+    // ---- N1: nexus enforcement ----
+    Fixture {
+        name: "n1_set_phase_outside_owner_fires",
+        path: "rust/src/app/fixture.rs",
+        src: r##"
+pub fn sneak(cluster: &mut Cluster, pid: PodId) {
+    cluster.set_phase(pid, PodPhase::Gone);
+}
+"##,
+        expect: &["N1"],
+    },
+    Fixture {
+        name: "n1_arena_type_outside_owner_fires",
+        path: "rust/src/cluster/fixture.rs",
+        src: r##"
+pub fn steal(arena: &mut RequestArena) {
+    let _ = arena.len();
+}
+"##,
+        expect: &["N1"],
+    },
+    Fixture {
+        name: "n1_owner_module_clean",
+        path: "rust/src/cluster/mod.rs",
+        src: r##"
+impl Cluster {
+    fn set_phase(&mut self, pid: PodId, to: PodPhase) {
+        self.pods[pid.0 as usize].phase = to;
+    }
+
+    pub fn kill(&mut self, pid: PodId) {
+        self.set_phase(pid, PodPhase::Gone);
+    }
+}
+"##,
+        expect: &[],
+    },
+    Fixture {
+        name: "n1_unrelated_ident_clean",
+        path: "rust/src/autoscaler/fixture.rs",
+        src: r##"
+pub fn binding_label(bindings: &[u32]) -> usize {
+    bindings.len()
+}
+"##,
+        expect: &[],
+    },
+    // ---- P1: hot-path panics ----
+    Fixture {
+        name: "p1_unwrap_fires",
+        path: "rust/src/app/fixture.rs",
+        src: r##"
+pub fn first(v: &[u32]) -> u32 {
+    *v.first().unwrap()
+}
+"##,
+        expect: &["P1"],
+    },
+    Fixture {
+        name: "p1_panic_macro_fires",
+        path: "rust/src/sim/fixture.rs",
+        src: r##"
+pub fn advance(step: u64) -> u64 {
+    if step == 0 {
+        panic!("zero step");
+    }
+    step - 1
+}
+"##,
+        expect: &["P1"],
+    },
+    Fixture {
+        name: "p1_handled_arm_clean",
+        path: "rust/src/app/fixture.rs",
+        src: r##"
+pub fn first(v: &[u32]) -> u32 {
+    match v.first() {
+        Some(&x) => x,
+        None => 0,
+    }
+}
+"##,
+        expect: &[],
+    },
+    Fixture {
+        name: "p1_debug_assert_exempt",
+        path: "rust/src/cluster/fixture.rs",
+        src: r##"
+pub fn check(v: &[u32]) -> usize {
+    debug_assert!(*v.first().unwrap() == 0, "first must be zero");
+    v.len()
+}
+"##,
+        expect: &[],
+    },
+    Fixture {
+        name: "p1_test_module_exempt",
+        path: "rust/src/sim/fixture.rs",
+        src: r##"
+pub fn len_of(v: &[u32]) -> usize {
+    v.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let v = vec![1u32];
+        assert_eq!(*v.first().unwrap(), 1);
+        assert_eq!(len_of(&v), 1);
+    }
+}
+"##,
+        expect: &[],
+    },
+    // ---- Pragmas: suppression scope and S1 hygiene ----
+    Fixture {
+        name: "pragma_standalone_covers_next_item",
+        path: "rust/src/experiments/fixture.rs",
+        src: r##"
+// detlint: allow(D1) — harness-side timing, reported to the operator only
+pub fn wall() -> std::time::Instant {
+    std::time::Instant::now()
+}
+"##,
+        expect: &[],
+    },
+    Fixture {
+        name: "pragma_trailing_covers_its_line",
+        path: "rust/src/app/fixture.rs",
+        src: r##"
+pub fn pick(v: &[u32]) -> u32 {
+    *v.first().expect("non-empty by construction") // detlint: allow(P1) — validated at build time
+}
+"##,
+        expect: &[],
+    },
+    Fixture {
+        name: "pragma_wrong_rule_does_not_suppress",
+        path: "rust/src/sim/fixture.rs",
+        src: r##"
+// detlint: allow(P1) — aimed at the wrong rule
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
+"##,
+        expect: &["D1", "D1"],
+    },
+    Fixture {
+        name: "pragma_unknown_rule_rejected",
+        path: "rust/src/sim/fixture.rs",
+        src: r##"
+// detlint: allow(Z9) — no such rule
+pub fn fine() -> u64 {
+    7
+}
+"##,
+        expect: &["S1"],
+    },
+    Fixture {
+        name: "pragma_missing_reason_rejected",
+        path: "rust/src/sim/fixture.rs",
+        src: r##"
+// detlint: allow(D1)
+pub fn stamp() -> u64 {
+    let wall = std::time::Instant::now();
+    wall.elapsed().as_millis() as u64
+}
+"##,
+        expect: &["S1", "D1"],
+    },
+    Fixture {
+        name: "pragma_in_doc_comment_is_prose",
+        path: "rust/src/sim/fixture.rs",
+        src: r##"
+/// detlint: allow(D1) — this is documentation, not a pragma
+pub fn fine() -> u64 {
+    7
+}
+"##,
+        expect: &[],
+    },
+];
+
+/// Run the whole corpus; `Err` lists every mismatching fixture.
+pub fn run_all() -> Result<usize, String> {
+    let mut failures = Vec::new();
+    for f in FIXTURES {
+        let diags = lint_source(f.path, f.src);
+        let got: Vec<&str> = diags.iter().map(|d| d.rule).collect();
+        if got != f.expect {
+            failures.push(format!(
+                "fixture `{}` ({}): expected rules {:?}, got {:?}\n{}",
+                f.name,
+                f.path,
+                f.expect,
+                got,
+                diags
+                    .iter()
+                    .map(|d| format!("  {d}"))
+                    .collect::<Vec<_>>()
+                    .join("\n"),
+            ));
+        }
+    }
+    if failures.is_empty() {
+        Ok(FIXTURES.len())
+    } else {
+        Err(failures.join("\n"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every fixture as one named assertion batch: positives fire,
+    /// negatives stay silent, pragmas behave.
+    #[test]
+    fn corpus_matches_expectations() {
+        if let Err(report) = run_all() {
+            panic!("fixture corpus mismatch:\n{report}");
+        }
+    }
+
+    #[test]
+    fn corpus_covers_every_rule_both_ways() {
+        for rule in ["D1", "D2", "N1", "P1", "S1"] {
+            assert!(
+                FIXTURES.iter().any(|f| f.expect.contains(&rule)),
+                "no positive fixture for {rule}"
+            );
+        }
+        // Each lint rule also needs at least one clean fixture in scope.
+        assert!(FIXTURES.iter().any(|f| f.expect.is_empty()));
+    }
+
+    #[test]
+    fn diagnostics_carry_position_and_text() {
+        let f = FIXTURES
+            .iter()
+            .find(|f| f.name == "d1_instant_fires")
+            .unwrap();
+        let diags = lint_source(f.path, f.src);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].line, 3);
+        assert_eq!(diags[0].path, f.path);
+        assert!(diags[0].message.contains("Instant"));
+    }
+}

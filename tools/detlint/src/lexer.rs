@@ -1,0 +1,440 @@
+//! A minimal Rust tokenizer — just enough lexical fidelity for the rule
+//! checks in [`crate::rules`].
+//!
+//! The offline crate set has no `syn`/`proc-macro2`, so detlint carries
+//! its own lexer. It understands exactly the constructs that would
+//! otherwise produce false positives in a grep-style scan:
+//!
+//! * line comments (captured, for suppression pragmas) and nested block
+//!   comments (skipped),
+//! * string literals, byte strings, raw strings (`r#"…"#`, any guard
+//!   depth) and char literals — so `"Instant::now"` inside a string is
+//!   not a token,
+//! * lifetimes vs. char literals (`'a` vs. `'a'`),
+//! * raw identifiers (`r#type`),
+//! * `::` as a single punctuation token (path patterns key off it).
+//!
+//! Everything else (numbers, identifiers, single-char punctuation) is
+//! deliberately loose: the rules only ever match identifier text and a
+//! few punctuation neighbors, never full expression structure.
+
+/// Token class. String-like literals all collapse into [`TokKind::Str`];
+/// the rules never need to look inside them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Number,
+    Str,
+    Lifetime,
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// One `//` line comment. `doc` marks `///` and `//!` forms (which are
+/// documentation, never suppression pragmas); `trailing` marks comments
+/// that share their line with preceding code.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// Comment body with the leading slashes (and doc `!`) stripped.
+    pub text: String,
+    pub line: u32,
+    pub doc: bool,
+    pub trailing: bool,
+}
+
+/// Tokenizer output: the token stream plus every line comment.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Never fails: unterminated constructs simply run to
+/// end of input (the lint pass prefers resilience over strictness).
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut line: u32 = 1;
+    let mut i = 0usize;
+
+    let at = |idx: usize| -> char {
+        if idx < n {
+            b[idx]
+        } else {
+            '\0'
+        }
+    };
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && at(i + 1) == '/' {
+            let mut j = i + 2;
+            let mut doc = false;
+            if at(j) == '/' && at(j + 1) != '/' {
+                doc = true; // `///` outer doc (but `////…` is plain)
+                j += 1;
+            } else if at(j) == '!' {
+                doc = true; // `//!` inner doc
+                j += 1;
+            }
+            let start = j;
+            while j < n && b[j] != '\n' {
+                j += 1;
+            }
+            let trailing = out.toks.last().is_some_and(|t| t.line == line);
+            out.comments.push(Comment {
+                text: b[start..j].iter().collect(),
+                line,
+                doc,
+                trailing,
+            });
+            i = j;
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && at(i + 1) == '*' {
+            let mut depth = 1u32;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == '/' && at(j + 1) == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == '*' && at(j + 1) == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if b[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // String literal.
+        if c == '"' {
+            let (j, nl) = scan_quoted(&b, i);
+            out.toks.push(Tok {
+                kind: TokKind::Str,
+                text: String::new(),
+                line,
+            });
+            line += nl;
+            i = j;
+            continue;
+        }
+        // Char literal or lifetime.
+        if c == '\'' {
+            let next = at(i + 1);
+            if next == '\\' {
+                // Escaped char literal: scan to the closing quote.
+                let (j, nl) = scan_char(&b, i);
+                out.toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: String::new(),
+                    line,
+                });
+                line += nl;
+                i = j;
+                continue;
+            }
+            if is_ident_start(next) && at(i + 2) != '\'' {
+                // Lifetime: `'a`, `'static`, `'_`.
+                let mut j = i + 1;
+                while j < n && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: b[i..j].iter().collect(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            // Plain char literal: `'a'`, `'('`, `'0'`.
+            let (j, nl) = scan_char(&b, i);
+            out.toks.push(Tok {
+                kind: TokKind::Str,
+                text: String::new(),
+                line,
+            });
+            line += nl;
+            i = j;
+            continue;
+        }
+        // Identifier (and the raw-string / raw-ident lookahead).
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < n && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            let text: String = b[i..j].iter().collect();
+            // Raw / byte string prefixes: r"…", r#"…"#, b"…", br#"…"#.
+            if text == "r" || text == "b" || text == "br" {
+                let mut k = j;
+                let mut hashes = 0usize;
+                if text != "b" {
+                    while at(k) == '#' {
+                        hashes += 1;
+                        k += 1;
+                    }
+                }
+                if at(k) == '"' {
+                    let (end, nl) = if text == "b" {
+                        scan_quoted(&b, k)
+                    } else {
+                        scan_raw(&b, k, hashes)
+                    };
+                    out.toks.push(Tok {
+                        kind: TokKind::Str,
+                        text: String::new(),
+                        line,
+                    });
+                    line += nl;
+                    i = end;
+                    continue;
+                }
+                // Raw identifier `r#type`.
+                if text == "r" && hashes == 1 && is_ident_start(at(k)) {
+                    let mut e = k + 1;
+                    while e < n && is_ident_continue(b[e]) {
+                        e += 1;
+                    }
+                    out.toks.push(Tok {
+                        kind: TokKind::Ident,
+                        text: b[k..e].iter().collect(),
+                        line,
+                    });
+                    i = e;
+                    continue;
+                }
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text,
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // Number (loose: suffixes and float tails ride along).
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            if at(j) == '.' && at(j + 1).is_ascii_digit() {
+                j += 1;
+                while j < n && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Number,
+                text: b[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // Punctuation: `::` is one token, everything else one char.
+        if c == ':' && at(i + 1) == ':' {
+            out.toks.push(Tok {
+                kind: TokKind::Punct,
+                text: "::".to_string(),
+                line,
+            });
+            i += 2;
+            continue;
+        }
+        out.toks.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    out
+}
+
+/// Scan a `"…"` literal starting at the opening quote; returns
+/// (index past the closing quote, newlines crossed).
+fn scan_quoted(b: &[char], start: usize) -> (usize, u32) {
+    let n = b.len();
+    let mut nl = 0u32;
+    let mut j = start + 1;
+    while j < n {
+        match b[j] {
+            // An escape may hide a newline (`\` line continuation).
+            '\\' => {
+                if b.get(j + 1) == Some(&'\n') {
+                    nl += 1;
+                }
+                j += 2;
+            }
+            '"' => return (j + 1, nl),
+            '\n' => {
+                nl += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    (n, nl)
+}
+
+/// Scan a `'…'` char literal starting at the opening quote.
+fn scan_char(b: &[char], start: usize) -> (usize, u32) {
+    let n = b.len();
+    let mut nl = 0u32;
+    let mut j = start + 1;
+    while j < n {
+        match b[j] {
+            '\\' => {
+                if b.get(j + 1) == Some(&'\n') {
+                    nl += 1;
+                }
+                j += 2;
+            }
+            '\'' => return (j + 1, nl),
+            '\n' => {
+                nl += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    (n, nl)
+}
+
+/// Scan a raw string whose opening quote is at `quote`, guarded by
+/// `hashes` hash marks.
+fn scan_raw(b: &[char], quote: usize, hashes: usize) -> (usize, u32) {
+    let n = b.len();
+    let mut nl = 0u32;
+    let mut j = quote + 1;
+    while j < n {
+        if b[j] == '\n' {
+            nl += 1;
+            j += 1;
+            continue;
+        }
+        if b[j] == '"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while seen < hashes && k < n && b[k] == '#' {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return (k, nl);
+            }
+        }
+        j += 1;
+    }
+    (n, nl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let src = r##"let s = "Instant::now()"; let r = r#"HashMap "quoted" inner"#;"##;
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "s", "let", "r"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' }";
+        let lexed = lex(src);
+        let lifetimes: Vec<_> = lexed
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(lifetimes, vec!["'a", "'a"]);
+        let strs = lexed.toks.iter().filter(|t| t.kind == TokKind::Str).count();
+        assert_eq!(strs, 1, "'x' is a char literal");
+    }
+
+    #[test]
+    fn nested_block_comments_and_line_tracking() {
+        let src = "a\n/* one /* two */ still */\nb";
+        let lexed = lex(src);
+        assert_eq!(lexed.toks.len(), 2);
+        assert_eq!(lexed.toks[0].line, 1);
+        assert_eq!(lexed.toks[1].line, 3);
+    }
+
+    #[test]
+    fn comments_capture_doc_and_trailing_flags() {
+        let src = "/// doc line\nlet x = 1; // trailing note\n// standalone\n";
+        let lexed = lex(src);
+        assert_eq!(lexed.comments.len(), 3);
+        assert!(lexed.comments[0].doc && !lexed.comments[0].trailing);
+        assert!(!lexed.comments[1].doc && lexed.comments[1].trailing);
+        assert!(!lexed.comments[2].doc && !lexed.comments[2].trailing);
+        assert_eq!(lexed.comments[2].text.trim(), "standalone");
+    }
+
+    #[test]
+    fn path_sep_is_one_token() {
+        let toks = lex("std::time::Instant").toks;
+        let texts: Vec<_> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["std", "::", "time", "::", "Instant"]);
+    }
+
+    #[test]
+    fn raw_identifiers_resolve_to_their_name() {
+        let ids = idents("let r#type = 1;");
+        assert_eq!(ids, vec!["let", "type"]);
+    }
+
+    #[test]
+    fn numeric_range_does_not_eat_dots() {
+        let toks = lex("0..NUM_BUCKETS");
+        let texts: Vec<_> = toks.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["0", ".", ".", "NUM_BUCKETS"]);
+    }
+}

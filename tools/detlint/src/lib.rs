@@ -1,0 +1,79 @@
+//! detlint — a workspace lint that machine-checks the determinism
+//! contract (see `DESIGN.md` §11 at the repo root).
+//!
+//! The simulator's correctness story rests on bit-identical replays:
+//! decision logs and response fingerprints must not change across
+//! `QueryMode`, `CoreKind`, seeds, or thread counts. Those are *dynamic*
+//! checks; this crate is the static side — it walks every `.rs` file
+//! under `rust/src`, `rust/benches`, `rust/tests`, and `examples/` and
+//! rejects constructs that could make a run depend on anything but
+//! (config, seed): wall-clock reads, `std::env`, ambient randomness,
+//! hash-order traversal, nexus bypasses, and hot-path panics.
+//!
+//! Run it with `cargo run -p detlint`; `--list-rules` documents the
+//! registry, `--json` emits machine-readable diagnostics, and
+//! `--self-test` replays the embedded fixture corpus.
+
+pub mod diagnostics;
+pub mod fixtures;
+pub mod lexer;
+pub mod rules;
+
+use diagnostics::Diagnostic;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Directories scanned, relative to the workspace root.
+pub const SCAN_ROOTS: &[&str] = &["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// Collect every `.rs` file under the scan roots, sorted by path so
+/// diagnostics (and exit codes) are stable across filesystems.
+pub fn collect_rs_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut files = Vec::new();
+    for scan in SCAN_ROOTS {
+        let dir = root.join(scan);
+        if dir.is_dir() {
+            walk(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Repo-relative path with forward slashes (rule scopes are matched
+/// against this form).
+pub fn rel_label(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let mut label = String::new();
+    for comp in rel.components() {
+        if !label.is_empty() {
+            label.push('/');
+        }
+        label.push_str(&comp.as_os_str().to_string_lossy());
+    }
+    label
+}
+
+/// Lint the whole workspace under `root`. Diagnostics come back sorted
+/// by (path, line, rule).
+pub fn lint_repo(root: &Path) -> io::Result<Vec<Diagnostic>> {
+    let mut diags = Vec::new();
+    for path in collect_rs_files(root)? {
+        let src = fs::read_to_string(&path)?;
+        diags.extend(rules::lint_source(&rel_label(root, &path), &src));
+    }
+    Ok(diags)
+}

@@ -1,0 +1,150 @@
+//! CLI entry point: `cargo run -p detlint [-- FLAGS] [PATH…]`.
+//!
+//! ```text
+//! detlint                 lint the workspace (exit 1 on any violation)
+//! detlint --list-rules    print the rule registry and exit
+//! detlint --json          emit diagnostics as a JSON array
+//! detlint --self-test     replay the embedded fixture corpus
+//! detlint --root DIR      lint a different workspace root
+//! detlint PATH…           lint only the given files/directories
+//! ```
+
+use detlint::diagnostics::to_json;
+use detlint::{fixtures, lint_repo, rel_label, rules};
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn usage() -> &'static str {
+    "usage: detlint [--list-rules | --self-test] [--json] [--root DIR] [PATH…]"
+}
+
+/// Workspace root: two levels above this crate's manifest
+/// (`tools/detlint` → repo root), so `cargo run -p detlint` works from
+/// anywhere inside the workspace.
+fn default_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .expect("tools/detlint always sits two levels under the workspace root")
+        .to_path_buf()
+}
+
+fn main() -> ExitCode {
+    let mut list_rules = false;
+    let mut self_test = false;
+    let mut json = false;
+    let mut root = default_root();
+    let mut targets: Vec<PathBuf> = Vec::new();
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--list-rules" => list_rules = true,
+            "--self-test" => self_test = true,
+            "--json" => json = true,
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("--root needs a directory\n{}", usage());
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            flag if flag.starts_with('-') => {
+                eprintln!("unknown flag `{flag}`\n{}", usage());
+                return ExitCode::from(2);
+            }
+            path => targets.push(PathBuf::from(path)),
+        }
+    }
+
+    if list_rules {
+        for rule in rules::RULES {
+            println!("{}  {}", rule.id, rule.title);
+            println!("      scope: {}", rule.scope);
+            println!("      why:   {}", rule.rationale);
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    if self_test {
+        return match fixtures::run_all() {
+            Ok(n) => {
+                println!("detlint self-test: {n} fixtures ok");
+                ExitCode::SUCCESS
+            }
+            Err(report) => {
+                eprintln!("detlint self-test FAILED:\n{report}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+
+    let result = if targets.is_empty() {
+        lint_repo(&root)
+    } else {
+        lint_targets(&root, &targets)
+    };
+    let diags = match result {
+        Ok(d) => d,
+        Err(err) => {
+            eprintln!("detlint: io error: {err}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if json {
+        println!("{}", to_json(&diags));
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
+    }
+    if diags.is_empty() {
+        if !json {
+            println!("detlint: clean");
+        }
+        ExitCode::SUCCESS
+    } else {
+        if !json {
+            eprintln!("detlint: {} violation(s)", diags.len());
+        }
+        ExitCode::FAILURE
+    }
+}
+
+/// Lint explicit files or directories (paths resolved against `root`
+/// when relative, scopes still matched repo-relative).
+fn lint_targets(
+    root: &Path,
+    targets: &[PathBuf],
+) -> std::io::Result<Vec<detlint::diagnostics::Diagnostic>> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for target in targets {
+        let path = if target.is_absolute() {
+            target.clone()
+        } else {
+            root.join(target)
+        };
+        if path.is_dir() {
+            for file in detlint::collect_rs_files(root)? {
+                if file.starts_with(&path) {
+                    files.push(file);
+                }
+            }
+        } else {
+            files.push(path);
+        }
+    }
+    files.sort();
+    files.dedup();
+    let mut diags = Vec::new();
+    for file in files {
+        let src = std::fs::read_to_string(&file)?;
+        diags.extend(rules::lint_source(&rel_label(root, &file), &src));
+    }
+    Ok(diags)
+}

@@ -1,0 +1,673 @@
+//! The rule registry and checkers.
+//!
+//! Every rule encodes one clause of the repo's determinism contract —
+//! the dynamic property (bit-identical decision logs and response
+//! fingerprints across `QueryMode`, `CoreKind`, seeds, and thread
+//! counts) restated as a *static* invariant a token scan can enforce:
+//!
+//! * **D1** — simulation modules read no wall clock (`Instant`,
+//!   `SystemTime`), no `std::env`, and no randomness source other than
+//!   the seeded `util::rng` streams.
+//! * **D2** — simulation modules never traverse a `HashMap`/`HashSet`
+//!   (`.iter()`, `.keys()`, `.values()`, `for … in`): iteration order is
+//!   nondeterministic. Lookups are fine.
+//! * **N1** — index-invariant nexus methods (`Cluster::set_phase`,
+//!   `Node::bind`/`unbind`) and the request-arena type may only be
+//!   named inside their owning module, so a new call site can't bypass
+//!   the incremental indices.
+//! * **P1** — no `unwrap()`/`expect()`/`panic!`-family macros on the
+//!   arrival→complete hot path outside `#[cfg(test)]` items and
+//!   `debug_assert!` arguments.
+//! * **S1** — suppression pragmas (`// detlint: allow(D1) — reason`)
+//!   must name known rules and carry a reason.
+//!
+//! Suppression scope: a *trailing* pragma covers its own line; a
+//! *standalone* pragma covers the next item (through the close of its
+//! first top-level brace block, or its terminating `;`). Doc comments
+//! are never pragmas.
+
+use crate::diagnostics::{finalize, Diagnostic};
+use crate::lexer::{lex, Lexed, Tok, TokKind};
+
+/// One registry entry, surfaced by `--list-rules`.
+pub struct Rule {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub scope: &'static str,
+    pub rationale: &'static str,
+}
+
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "D1",
+        title: "no wall clock, std::env, or ambient randomness in simulation modules",
+        scope: "rust/src/{sim,app,cluster,autoscaler,workload,metrics,forecast,config,experiments,stats,util}",
+        rationale: "sim state must be a pure function of (config, seed); a clock or env read \
+                    makes replays diverge silently",
+    },
+    Rule {
+        id: "D2",
+        title: "no order-dependent traversal of HashMap/HashSet in simulation modules",
+        scope: "same modules as D1",
+        rationale: "hash iteration order varies across runs and toolchains; lookups are fine, \
+                    traversal must use Vec/BTree collections",
+    },
+    Rule {
+        id: "N1",
+        title: "index-invariant nexus methods only named in their owning module",
+        scope: "all scanned files",
+        rationale: "set_phase / Node::bind / Node::unbind / RequestArena maintain incremental \
+                    indices; an outside call site could desynchronize them from the scan baseline",
+    },
+    Rule {
+        id: "P1",
+        title: "no unwrap/expect/panic on the arrival→complete hot path",
+        scope: "rust/src/{sim,app,cluster}",
+        rationale: "a panic mid-run tears down city-scale simulations; hot-path code handles \
+                    its None/Err arms (test modules and debug_assert! arguments exempt)",
+    },
+    Rule {
+        id: "S1",
+        title: "suppression pragmas name known rules and carry a reason",
+        scope: "all scanned files",
+        rationale: "`// detlint: allow(RULE, …) — reason` keeps escapes visible and auditable; \
+                    unknown rules or missing reasons are rejected",
+    },
+];
+
+/// Rules a pragma may suppress (S1 itself is not suppressible).
+const SUPPRESSIBLE: &[&str] = &["D1", "D2", "N1", "P1"];
+
+/// Modules under the determinism contract (D1/D2).
+const SIM_SCOPE: &[&str] = &[
+    "rust/src/sim/",
+    "rust/src/app/",
+    "rust/src/cluster/",
+    "rust/src/autoscaler/",
+    "rust/src/workload/",
+    "rust/src/metrics/",
+    "rust/src/forecast/",
+    "rust/src/config/",
+    "rust/src/experiments/",
+    "rust/src/stats/",
+    "rust/src/util/",
+];
+
+/// The arrival→complete hot path (P1).
+const HOT_SCOPE: &[&str] = &["rust/src/sim/", "rust/src/app/", "rust/src/cluster/"];
+
+/// Nondeterministic randomness identifiers (anything outside `util::rng`).
+const RNG_IDENTS: &[&str] = &[
+    "thread_rng",
+    "getrandom",
+    "from_entropy",
+    "RandomState",
+    "OsRng",
+    "StdRng",
+    "SmallRng",
+];
+
+const HASH_TYPES: &[&str] = &["HashMap", "HashSet"];
+
+/// Methods that traverse (or drain) a hash collection in storage order.
+const TRAVERSAL_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// An N1 nexus: `name` may only appear in `allowed` files.
+struct Nexus {
+    name: &'static str,
+    owner: &'static str,
+    /// `true`: every mention of the identifier counts (types);
+    /// `false`: only call/definition positions (methods).
+    is_type: bool,
+    allowed: &'static [&'static str],
+}
+
+const NODE_FILES: &[&str] = &[
+    "rust/src/cluster/node.rs",
+    "rust/src/cluster/mod.rs",
+    "rust/src/cluster/scheduler.rs",
+];
+
+const NEXUSES: &[Nexus] = &[
+    Nexus {
+        name: "set_phase",
+        owner: "Cluster",
+        is_type: false,
+        allowed: &["rust/src/cluster/mod.rs"],
+    },
+    Nexus {
+        name: "bind",
+        owner: "Node",
+        is_type: false,
+        allowed: NODE_FILES,
+    },
+    Nexus {
+        name: "unbind",
+        owner: "Node",
+        is_type: false,
+        allowed: NODE_FILES,
+    },
+    Nexus {
+        name: "RequestArena",
+        owner: "App",
+        is_type: true,
+        allowed: &["rust/src/app/arena.rs", "rust/src/app/mod.rs"],
+    },
+];
+
+/// Token text at `i`, or `""` past the end.
+fn t(toks: &[Tok], i: usize) -> &str {
+    toks.get(i).map(|t| t.text.as_str()).unwrap_or("")
+}
+
+/// Token text before `i`, or `""` at the start.
+fn before(toks: &[Tok], i: usize) -> &str {
+    if i == 0 {
+        ""
+    } else {
+        t(toks, i - 1)
+    }
+}
+
+fn is_ident_at(toks: &[Tok], i: usize) -> bool {
+    toks.get(i).is_some_and(|t| t.kind == TokKind::Ident)
+}
+
+/// Index of the bracket matching the opener at `open` (any of `(`/`[`/`{`),
+/// or the last token if unterminated.
+fn matching(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    for (i, tok) in toks.iter().enumerate().skip(open) {
+        match tok.text.as_str() {
+            "(" | "[" | "{" => depth += 1,
+            ")" | "]" | "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Index of the last token of the item starting at `i` (leading outer
+/// attributes are part of the item): the close of its first top-level
+/// brace block, or its terminating `;`.
+fn item_end(toks: &[Tok], mut i: usize) -> usize {
+    while t(toks, i) == "#" && t(toks, i + 1) == "[" {
+        i = matching(toks, i + 1) + 1;
+    }
+    let mut depth = 0i32;
+    let mut braced = false;
+    while i < toks.len() {
+        match t(toks, i) {
+            "(" | "[" => depth += 1,
+            ")" | "]" => depth -= 1,
+            "{" => {
+                depth += 1;
+                if depth == 1 {
+                    braced = true;
+                }
+            }
+            "}" => {
+                depth -= 1;
+                if depth == 0 && braced {
+                    return i;
+                }
+            }
+            ";" if depth == 0 => return i,
+            _ => {}
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Mark every token inside a `#[cfg(test)]` or `#[cfg(debug_assertions)]`
+/// item: compiled out of release builds, exempt from D1/D2/P1.
+fn cfg_exempt(toks: &[Tok]) -> Vec<bool> {
+    let mut exempt = vec![false; toks.len()];
+    let mut i = 0;
+    while i < toks.len() {
+        if t(toks, i) == "#"
+            && t(toks, i + 1) == "["
+            && t(toks, i + 2) == "cfg"
+            && t(toks, i + 3) == "("
+        {
+            let close = matching(toks, i + 3);
+            let inner: Vec<&str> = (i + 4..close).map(|k| t(toks, k)).collect();
+            if inner == ["test"] || inner == ["debug_assertions"] {
+                let end = item_end(toks, i);
+                for flag in exempt.iter_mut().take(end + 1).skip(i) {
+                    *flag = true;
+                }
+                i = end + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    exempt
+}
+
+/// Mark every token inside a `debug_assert*!(…)` invocation: debug-only,
+/// exempt from P1.
+fn debug_assert_exempt(toks: &[Tok]) -> Vec<bool> {
+    let mut exempt = vec![false; toks.len()];
+    let mut i = 0;
+    while i < toks.len() {
+        if is_ident_at(toks, i)
+            && toks[i].text.starts_with("debug_assert")
+            && t(toks, i + 1) == "!"
+            && matches!(t(toks, i + 2), "(" | "[" | "{")
+        {
+            let close = matching(toks, i + 2);
+            for flag in exempt.iter_mut().take(close + 1).skip(i) {
+                *flag = true;
+            }
+            i = close + 1;
+            continue;
+        }
+        i += 1;
+    }
+    exempt
+}
+
+/// A parsed `// detlint: allow(…) — reason` pragma's effect.
+struct Suppression {
+    rule: String,
+    from: u32,
+    to: u32,
+}
+
+/// Parse suppression pragmas out of the comment stream. Returns the
+/// active suppressions plus S1 diagnostics for malformed ones.
+fn parse_pragmas(lexed: &Lexed, rel_path: &str) -> (Vec<Suppression>, Vec<Diagnostic>) {
+    let toks = &lexed.toks;
+    let mut sups = Vec::new();
+    let mut diags = Vec::new();
+    let mut s1 = |line: u32, message: String| {
+        diags.push(Diagnostic {
+            path: rel_path.to_string(),
+            line,
+            rule: "S1",
+            message,
+        });
+    };
+    for c in &lexed.comments {
+        if c.doc {
+            continue; // doc comments are prose, never pragmas
+        }
+        let body = c.text.trim();
+        let Some(rest) = body.strip_prefix("detlint:") else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        let directive = rest.strip_prefix("allow").map(str::trim_start);
+        let Some(args) = directive.and_then(|d| d.strip_prefix('(')) else {
+            s1(
+                c.line,
+                "malformed pragma (expected `detlint: allow(RULE, …) — reason`)".to_string(),
+            );
+            continue;
+        };
+        let Some(close) = args.find(')') else {
+            s1(c.line, "unterminated rule list in pragma".to_string());
+            continue;
+        };
+        let ids: Vec<&str> = args[..close]
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .collect();
+        let reason = args[close + 1..]
+            .trim_start_matches(|ch: char| matches!(ch, ' ' | '\t' | ':' | '-' | '—' | '–'))
+            .trim();
+        if ids.is_empty() {
+            s1(c.line, "pragma suppresses no rules".to_string());
+            continue;
+        }
+        let mut ok = true;
+        for id in &ids {
+            if !SUPPRESSIBLE.contains(id) {
+                ok = false;
+                s1(
+                    c.line,
+                    format!(
+                        "unknown or non-suppressible rule `{id}` in pragma (suppressible: {})",
+                        SUPPRESSIBLE.join(", ")
+                    ),
+                );
+            }
+        }
+        if reason.is_empty() {
+            ok = false;
+            s1(
+                c.line,
+                "suppression needs a reason (`detlint: allow(RULE) — why this escape is sound`)"
+                    .to_string(),
+            );
+        }
+        if !ok {
+            continue; // a rejected pragma suppresses nothing
+        }
+        let to = if c.trailing {
+            c.line
+        } else {
+            // Standalone: cover the next item.
+            match toks.iter().position(|t| t.line > c.line) {
+                Some(first) => toks[item_end(toks, first)].line,
+                None => c.line,
+            }
+        };
+        for id in ids {
+            sups.push(Suppression {
+                rule: id.to_string(),
+                from: c.line,
+                to,
+            });
+        }
+    }
+    (sups, diags)
+}
+
+fn in_scope(rel_path: &str, scope: &[&str]) -> bool {
+    scope.iter().any(|p| rel_path.starts_with(p))
+}
+
+/// Candidate violation: token index + rule id + message.
+type Candidate = (usize, &'static str, String);
+
+fn check_d1(toks: &[Tok], out: &mut Vec<Candidate>) {
+    for (i, tok) in toks.iter().enumerate() {
+        if tok.kind != TokKind::Ident {
+            continue;
+        }
+        let name = tok.text.as_str();
+        match name {
+            "Instant" | "SystemTime" | "UNIX_EPOCH" => out.push((
+                i,
+                "D1",
+                format!(
+                    "wall-clock source `{name}` in a simulation module — sim code derives time \
+                     from `sim::Time`; harness timing goes through `util::wallclock()`"
+                ),
+            )),
+            "env" if i >= 2 && t(toks, i - 2) == "std" && t(toks, i - 1) == "::" => out.push((
+                i,
+                "D1",
+                "`std::env` in a simulation module — configuration must arrive through explicit \
+                 config structs, not ambient process state"
+                    .to_string(),
+            )),
+            "rand" if t(toks, i + 1) == "::" => out.push((
+                i,
+                "D1",
+                "`rand` crate path in a simulation module — use the seeded `util::rng::Pcg64` \
+                 streams"
+                    .to_string(),
+            )),
+            _ if RNG_IDENTS.contains(&name) => out.push((
+                i,
+                "D1",
+                format!(
+                    "nondeterministic randomness source `{name}` — use the seeded \
+                     `util::rng::Pcg64` streams"
+                ),
+            )),
+            _ => {}
+        }
+    }
+}
+
+/// Names bound to a hash-collection type in this file: struct fields and
+/// parameters (`name: HashMap<…>`, through `&`/`mut`/paths/`Option<`),
+/// and `let` bindings whose initializer statement mentions `HashMap::`.
+fn hash_bound_names(toks: &[Tok]) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    for i in 0..toks.len() {
+        if is_ident_at(toks, i) && t(toks, i + 1) == ":" {
+            let mut j = i + 2;
+            for _ in 0..8 {
+                if toks.get(j).is_some_and(|t| t.kind == TokKind::Lifetime) {
+                    j += 1;
+                    continue;
+                }
+                match t(toks, j) {
+                    "&" | "mut" | "std" | "collections" | "::" | "<" | "Option" | "Box" => j += 1,
+                    ty if HASH_TYPES.contains(&ty) => {
+                        names.push(toks[i].text.clone());
+                        break;
+                    }
+                    _ => break,
+                }
+            }
+        }
+        if t(toks, i) == "let" {
+            let mut j = i + 1;
+            if t(toks, j) == "mut" {
+                j += 1;
+            }
+            if !is_ident_at(toks, j) {
+                continue;
+            }
+            let name = toks[j].text.clone();
+            let mut depth = 0i32;
+            let mut k = j + 1;
+            while k < toks.len() {
+                match t(toks, k) {
+                    "(" | "[" | "{" => depth += 1,
+                    ")" | "]" | "}" => {
+                        if depth == 0 {
+                            break;
+                        }
+                        depth -= 1;
+                    }
+                    ";" if depth == 0 => break,
+                    ty if HASH_TYPES.contains(&ty) => {
+                        names.push(name.clone());
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+        }
+    }
+    names.sort();
+    names.dedup();
+    names
+}
+
+fn check_d2(toks: &[Tok], out: &mut Vec<Candidate>) {
+    let names = hash_bound_names(toks);
+    let is_hashy = |i: usize| -> bool {
+        toks.get(i).is_some_and(|tok| {
+            tok.kind == TokKind::Ident
+                && (HASH_TYPES.contains(&tok.text.as_str())
+                    || names.binary_search(&tok.text).is_ok())
+        })
+    };
+    for i in 0..toks.len() {
+        // `name.iter()` / `name.keys()` / … on a hash-bound name.
+        if is_hashy(i)
+            && t(toks, i + 1) == "."
+            && is_ident_at(toks, i + 2)
+            && TRAVERSAL_METHODS.contains(&t(toks, i + 2))
+            && t(toks, i + 3) == "("
+        {
+            out.push((
+                i + 2,
+                "D2",
+                format!(
+                    "order-dependent traversal `{}.{}()` of a hash collection — hash iteration \
+                     order is nondeterministic; traverse a Vec/BTree index instead (lookups are \
+                     fine)",
+                    toks[i].text,
+                    t(toks, i + 2),
+                ),
+            ));
+        }
+        // `for … in <expr naming a hash collection> { … }`.
+        if t(toks, i) == "for" {
+            let mut depth = 0i32;
+            let mut j = i + 1;
+            let mut in_at = None;
+            while j < toks.len() {
+                match t(toks, j) {
+                    "(" | "[" => depth += 1,
+                    ")" | "]" => depth -= 1,
+                    "{" | ";" if depth == 0 => break,
+                    "in" if depth == 0 => {
+                        in_at = Some(j);
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            let Some(start) = in_at else { continue };
+            let mut depth = 0i32;
+            let mut k = start + 1;
+            while k < toks.len() {
+                match t(toks, k) {
+                    "(" | "[" => depth += 1,
+                    ")" | "]" => depth -= 1,
+                    "{" if depth == 0 => break,
+                    _ => {}
+                }
+                if is_hashy(k) {
+                    out.push((
+                        k,
+                        "D2",
+                        format!(
+                            "`for … in` over hash collection `{}` — iteration order is \
+                             nondeterministic; traverse a Vec/BTree index instead",
+                            toks[k].text
+                        ),
+                    ));
+                }
+                k += 1;
+            }
+        }
+    }
+}
+
+fn check_n1(rel_path: &str, toks: &[Tok], out: &mut Vec<Candidate>) {
+    for nexus in NEXUSES {
+        if nexus.allowed.contains(&rel_path) {
+            continue;
+        }
+        for (i, tok) in toks.iter().enumerate() {
+            if tok.kind != TokKind::Ident || tok.text != nexus.name {
+                continue;
+            }
+            let named = nexus.is_type
+                || t(toks, i + 1) == "("
+                || matches!(before(toks, i), "." | "::" | "fn");
+            if named {
+                out.push((
+                    i,
+                    "N1",
+                    format!(
+                        "`{}` is an index-invariant nexus owned by `{}` — it may only be named \
+                         in {}",
+                        nexus.name,
+                        nexus.owner,
+                        nexus.allowed.join(", ")
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn check_p1(toks: &[Tok], out: &mut Vec<Candidate>) {
+    for (i, tok) in toks.iter().enumerate() {
+        if tok.kind != TokKind::Ident {
+            continue;
+        }
+        let name = tok.text.as_str();
+        if (name == "unwrap" || name == "expect")
+            && before(toks, i) == "."
+            && t(toks, i + 1) == "("
+        {
+            out.push((
+                i,
+                "P1",
+                format!(
+                    "`.{name}()` on the arrival→complete hot path — handle the None/Err arm \
+                     explicitly (a panic tears down the whole city-scale run)"
+                ),
+            ));
+        }
+        if PANIC_MACROS.contains(&name) && t(toks, i + 1) == "!" {
+            out.push((
+                i,
+                "P1",
+                format!("`{name}!` on the arrival→complete hot path — must not panic"),
+            ));
+        }
+    }
+}
+
+/// Lint one file. `rel_path` is repo-relative with forward slashes.
+pub fn lint_source(rel_path: &str, src: &str) -> Vec<Diagnostic> {
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let (sups, mut meta) = parse_pragmas(&lexed, rel_path);
+    let cfg_ex = cfg_exempt(toks);
+    let dbg_ex = debug_assert_exempt(toks);
+
+    let mut cands: Vec<Candidate> = Vec::new();
+    if in_scope(rel_path, SIM_SCOPE) {
+        check_d1(toks, &mut cands);
+        check_d2(toks, &mut cands);
+    }
+    check_n1(rel_path, toks, &mut cands);
+    if in_scope(rel_path, HOT_SCOPE) {
+        check_p1(toks, &mut cands);
+    }
+
+    let mut diags = Vec::new();
+    for (idx, rule, message) in cands {
+        // Test / debug-only items never run in a release simulation.
+        // (N1 stays live there: an index bypass in a test still
+        // invalidates the scan-vs-indexed equivalence it asserts.)
+        if rule != "N1" && cfg_ex.get(idx).copied().unwrap_or(false) {
+            continue;
+        }
+        if rule == "P1" && dbg_ex.get(idx).copied().unwrap_or(false) {
+            continue;
+        }
+        let line = toks[idx].line;
+        if sups
+            .iter()
+            .any(|s| s.rule == rule && s.from <= line && line <= s.to)
+        {
+            continue;
+        }
+        diags.push(Diagnostic {
+            path: rel_path.to_string(),
+            line,
+            rule,
+            message,
+        });
+    }
+    diags.append(&mut meta);
+    finalize(diags)
+}

@@ -1,0 +1,82 @@
+//! Integration check: the real repository lints clean.
+//!
+//! This is the teeth of the determinism contract — if a PR introduces a
+//! wall-clock read, a hash traversal, a nexus bypass, or a hot-path
+//! panic anywhere in the scanned tree, `cargo test -q` fails here with
+//! the exact `file:line rule message` list (and `cargo run -p detlint`
+//! fails in CI with the same output).
+
+use std::path::Path;
+
+fn workspace_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .expect("tools/detlint sits two levels under the workspace root")
+}
+
+#[test]
+fn repository_lints_clean() {
+    let root = workspace_root();
+    let diags = detlint::lint_repo(root).expect("walk + read the scanned tree");
+    assert!(
+        diags.is_empty(),
+        "determinism-contract violations (fix them or add `// detlint: allow(RULE) — reason`):\n{}",
+        diags
+            .iter()
+            .map(|d| format!("  {d}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn scan_actually_covers_the_tree() {
+    // Guard against a silent path bug making the clean check vacuous:
+    // the workspace has dozens of Rust files in the scanned roots, and
+    // the simulator core must be among them.
+    let root = workspace_root();
+    let files = detlint::collect_rs_files(root).expect("walk the scanned tree");
+    assert!(
+        files.len() >= 40,
+        "expected to scan >= 40 files, found {} — scan roots moved?",
+        files.len()
+    );
+    let labels: Vec<String> = files
+        .iter()
+        .map(|f| detlint::rel_label(root, f))
+        .collect();
+    for must_have in [
+        "rust/src/sim/queue.rs",
+        "rust/src/app/mod.rs",
+        "rust/src/cluster/mod.rs",
+        "rust/src/experiments/sweep.rs",
+        "examples/quickstart.rs",
+    ] {
+        assert!(
+            labels.iter().any(|l| l == must_have),
+            "scan missed {must_have}"
+        );
+    }
+}
+
+#[test]
+fn suppressions_in_tree_are_rare_and_reasoned() {
+    // The contract allows escapes but keeps them visible: every pragma
+    // in the real tree must parse cleanly (S1 enforces the reason), and
+    // the total count stays small enough to audit by hand. Raise the
+    // bound consciously if a future PR needs another sanctioned escape.
+    let root = workspace_root();
+    let mut pragmas = 0usize;
+    for file in detlint::collect_rs_files(root).expect("walk") {
+        let src = std::fs::read_to_string(&file).expect("read");
+        pragmas += src
+            .lines()
+            .filter(|l| l.contains("// detlint: allow("))
+            .count();
+    }
+    assert!(
+        pragmas <= 4,
+        "suppression pragma count grew to {pragmas}; audit each escape before raising this bound"
+    );
+}
