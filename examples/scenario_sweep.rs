@@ -64,6 +64,7 @@ fn main() -> anyhow::Result<()> {
         threads: 0, // one worker per core
         core: CoreKind::Calendar,
         fleet,
+        shards: 0, // monolith engine; >=1 selects the sharded cores
     };
     println!(
         "scenario sweep: {} scenarios x {} autoscalers x {} seeds on {} ({} sim-minutes per cell)",

@@ -4,26 +4,33 @@
 //! retained scan baseline), metrics scrape (interned handles vs the
 //! legacy string-keyed path), forecaster dispatches, end-to-end
 //! simulation rate and sweep-cell throughput — including the city-50
-//! cell on both event cores and a city-50 deep-queue burst on both
-//! cluster query modes, with peak-resident (live-heap high-water)
-//! tracking via a counting global allocator. Run with
-//! `cargo bench --bench hotpath`; pass `-- --quick` (or set
-//! `BENCH_QUICK=1`) for the CI smoke mode with slashed iteration
-//! counts and shorter simulated horizons.
+//! cell on both event cores, a city-50 deep-queue burst on both
+//! cluster query modes, and the same city-50 cell on the sharded
+//! engine at 1/2/4 shards (asserting the bit-identity invariant), with
+//! peak-resident (live-heap high-water) tracking via a counting global
+//! allocator. Run with `cargo bench --bench hotpath`; pass `-- --quick`
+//! (or set `BENCH_QUICK=1`) for the CI smoke mode with slashed
+//! iteration counts and shorter simulated horizons.
 //!
-//! Emits a machine-readable `BENCH_hotpath.json` (schema 3: events/sec
+//! Emits a machine-readable `BENCH_hotpath.json` (schema 4: events/sec
 //! per core, ns/scrape, ns/dispatch and ns/`max_replicas` per query
-//! mode, cells/sec, city-50 burst events/sec per mode, peak-alloc
-//! bytes, speedups, and a `quick` marker) so the perf trajectory is
-//! tracked across PRs. Quick runs write `BENCH_hotpath.quick.json`
-//! instead, so smoke numbers never clobber the tracked artifact.
+//! mode, cells/sec, city-50 burst events/sec per mode, sharded city-50
+//! events/sec per shard count with `shard_speedup_2`/`shard_speedup_4`,
+//! peak-alloc bytes, speedups, and a `quick` marker) so the perf
+//! trajectory is tracked across PRs. Quick runs write
+//! `BENCH_hotpath.quick.json` instead, so smoke numbers never clobber
+//! the tracked artifact — and when a tracked `BENCH_hotpath.json`
+//! exists, the quick run doubles as a regression gate: it exits
+//! non-zero if a key speedup ratio falls below 0.8x its committed
+//! baseline (ratios, unlike absolute rates, are comparable across
+//! machines and iteration counts).
 
 #[path = "bench_common.rs"]
 mod bench_common;
 use bench_common::{print_header, run};
 
 use ppa_edge::app::{App, TaskCosts, TaskType};
-use ppa_edge::autoscaler::Hpa;
+use ppa_edge::autoscaler::{Autoscaler, Hpa};
 use ppa_edge::cluster::{
     Cluster, Deployment, NodeSpec, PodPhase, PodSpec, QueryMode, Selector, Tier,
 };
@@ -34,7 +41,7 @@ use ppa_edge::experiments::sweep::run_cell;
 use ppa_edge::experiments::{AutoscalerKind, SimWorld};
 use ppa_edge::forecast::{arma::fit_arma, Forecaster, LstmForecaster};
 use ppa_edge::metrics::{METRIC_DIM, METRIC_NAMES};
-use ppa_edge::sim::{CoreKind, Event, EventQueue, Time, MIN, SEC};
+use ppa_edge::sim::{run_sharded, CoreKind, Event, EventQueue, ShardSpec, Time, MIN, SEC};
 use ppa_edge::util::json::Json;
 use ppa_edge::util::rng::Pcg64;
 use ppa_edge::workload::{FlashCrowdConfig, Generator, RandomAccessGen, Scenario};
@@ -521,6 +528,7 @@ fn bench_sweep_cells() -> f64 {
             3,
             minutes,
             CoreKind::Calendar,
+            0,
         );
     });
     let cells_per_sec = 1e6 / r.mean_us;
@@ -561,6 +569,7 @@ fn bench_city50_cell() -> (f64, f64, usize, usize, usize) {
                 3,
                 minutes,
                 core,
+                0,
             );
             events = cell.metrics.events;
         });
@@ -577,6 +586,7 @@ fn bench_city50_cell() -> (f64, f64, usize, usize, usize) {
             3,
             minutes,
             core,
+            0,
         );
         peaks.push(peak_bytes());
     }
@@ -771,9 +781,69 @@ fn bench_city50_burst() -> (f64, f64) {
     (indexed, scan)
 }
 
+/// The sharded-engine cell: the same city-50 flash-mosaic world on the
+/// conservative lockstep engine at 1, 2 and 4 shards. Asserts the
+/// bit-identity invariant the whole design hangs on (equal fingerprints
+/// and event counts for every shard count) and returns events/sec at
+/// each count.
+fn bench_city50_sharded() -> (f64, f64, f64) {
+    print_header("city-50 sharded engine: 1 vs 2 vs 4 shards (3 sim-minutes)");
+    let topo = Topology::EdgeCity {
+        zones: 50,
+        workers_per_zone: 2,
+    };
+    let cfg = topo.cluster();
+    let presets = city_scenario_presets(50);
+    let (_, scenario) = &presets[1]; // city50-flash-mosaic
+    let minutes = sim_minutes(3);
+    let factory = |_svc: usize| -> Box<dyn Autoscaler> { Box::new(Hpa::with_defaults()) };
+
+    let mut rates = Vec::new();
+    let mut fingerprints: Vec<String> = Vec::new();
+    let mut event_counts = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let spec = ShardSpec {
+            shards,
+            core: CoreKind::Calendar,
+            seed: 5,
+            costs: TaskCosts::default(),
+            end: minutes * MIN,
+            record_decisions: false,
+        };
+        let mut events = 0u64;
+        let mut fp = String::new();
+        let name = format!("{shards} shard(s): city-50 flash-mosaic");
+        let r = run(&name, iters(1), iters(3), || {
+            let res = run_sharded(&cfg, scenario.build_generators(), &factory, &spec)
+                .expect("sharded city-50 bench cell failed");
+            events = res.events();
+            fp = res.fingerprint();
+        });
+        rates.push(events as f64 / (r.mean_us / 1e6));
+        fingerprints.push(fp);
+        event_counts.push(events);
+    }
+    assert!(
+        fingerprints.iter().all(|f| f == &fingerprints[0]),
+        "sharded city-50 cells must be bit-identical across shard counts"
+    );
+    assert!(
+        event_counts.iter().all(|&e| e == event_counts[0]),
+        "sharded city-50 cells must pop identical event counts"
+    );
+    let (s1, s2, s4) = (rates[0], rates[1], rates[2]);
+    println!(
+        "  -> {s1:.0} ev/s @1 vs {s2:.0} @2 vs {s4:.0} @4 shards \
+         ({:.2}x / {:.2}x, bit-identical)",
+        s2 / s1,
+        s4 / s1
+    );
+    (s1, s2, s4)
+}
+
 fn write_bench_json(entries: &[(&str, f64)]) {
     let mut o = BTreeMap::new();
-    o.insert("schema".to_string(), Json::Num(3.0));
+    o.insert("schema".to_string(), Json::Num(4.0));
     o.insert("quick".to_string(), Json::Bool(quick()));
     for &(k, v) in entries {
         let value = if v.is_finite() { Json::Num(v) } else { Json::Null };
@@ -813,7 +883,8 @@ fn main() {
     let (cell50_cal, cell50_heap, cell50_peak, cell50_peak_heap, cell50_peak_log) =
         bench_city50_cell();
     let (burst_indexed, burst_scan) = bench_city50_burst();
-    write_bench_json(&[
+    let (shard1, shard2, shard4) = bench_city50_sharded();
+    let entries = [
         ("events_per_sec", events_per_sec),
         ("queue_events_per_sec_calendar", queue_cal),
         ("queue_events_per_sec_heap", queue_heap),
@@ -838,5 +909,67 @@ fn main() {
         ("city50_burst_events_per_sec_indexed", burst_indexed),
         ("city50_burst_events_per_sec_scan", burst_scan),
         ("city50_burst_index_speedup", burst_indexed / burst_scan),
-    ]);
+        ("cell50_sharded_events_per_sec_1", shard1),
+        ("cell50_sharded_events_per_sec_2", shard2),
+        ("cell50_sharded_events_per_sec_4", shard4),
+        ("shard_speedup_2", shard2 / shard1),
+        ("shard_speedup_4", shard4 / shard1),
+    ];
+    write_bench_json(&entries);
+    check_quick_regressions(&entries);
+}
+
+/// Quick-mode regression gate. Absolute rates are machine-dependent,
+/// but the *ratios* (indexed vs scan, N shards vs 1) are not — so when
+/// a tracked `BENCH_hotpath.json` baseline is committed, the CI smoke
+/// run compares the key ratios against it and fails the bench binary
+/// (exit 1) if any fell below 0.8x its baseline value. No baseline
+/// file, or a pre-ratio schema, means nothing to gate against.
+fn check_quick_regressions(entries: &[(&str, f64)]) {
+    const GATED_RATIOS: [&str; 4] = [
+        "dispatch_speedup_vs_scan",
+        "city50_burst_index_speedup",
+        "shard_speedup_2",
+        "shard_speedup_4",
+    ];
+    if !quick() {
+        return;
+    }
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_hotpath.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        println!("(no tracked BENCH_hotpath.json baseline; regression gate skipped)");
+        return;
+    };
+    let baseline = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("warning: unparseable baseline {}: {e}", path.display());
+            return;
+        }
+    };
+    let mut failed = false;
+    for key in GATED_RATIOS {
+        let Some(base) = baseline.get(key).as_f64() else {
+            continue; // older-schema baseline without this ratio
+        };
+        let Some(&(_, current)) = entries.iter().find(|(k, _)| *k == key) else {
+            continue;
+        };
+        let floor = base * 0.8;
+        if current < floor {
+            eprintln!(
+                "PERF REGRESSION: {key} = {current:.2} is below 0.8x the \
+                 tracked baseline ({base:.2}, floor {floor:.2})"
+            );
+            failed = true;
+        } else {
+            println!("  gate ok: {key} = {current:.2} (baseline {base:.2})");
+        }
+    }
+    if failed {
+        eprintln!("quick-mode perf gate failed against {}", path.display());
+        std::process::exit(1);
+    }
 }

@@ -163,6 +163,19 @@ impl ResponseStats {
     }
 }
 
+/// An Eigen task leaving an edge shard for the shared cloud pool: the
+/// plain-data record exchanged between shard worlds at barrier ticks
+/// (see [`crate::sim::shard`]). Carries everything the cloud world
+/// needs to reconstruct the request with monolith semantics — the
+/// response clock starts at `submitted`, the arrival lands at
+/// `submitted + network_latency + forward_latency`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ForwardedTask {
+    pub origin_zone: u32,
+    /// Client submit time at the edge (the request's `created` stamp).
+    pub submitted: Time,
+}
+
 /// The application: services, the in-flight request arena, streaming
 /// response statistics (plus the opt-in exact log).
 #[derive(Debug)]
@@ -175,6 +188,11 @@ pub struct App {
     edge_service_by_zone: Vec<Option<ServiceId>>,
     cloud_service: ServiceId,
     in_flight: RequestArena,
+    /// `Some` on an edge-shard app: Eigen submits are captured here as
+    /// [`ForwardedTask`]s (instead of routing to a local cloud service)
+    /// for delivery into the cloud world at the next barrier. `None` on
+    /// monolith and cloud-shard apps.
+    forward_outbox: Option<Vec<ForwardedTask>>,
     /// Streaming per-task response statistics (always on, O(1) memory).
     pub stats: ResponseStats,
     /// Exact completed-request log — `None` (off) by default; enabled by
@@ -221,9 +239,97 @@ impl App {
             edge_service_by_zone,
             cloud_service,
             in_flight: RequestArena::new(),
+            forward_outbox: None,
             stats: ResponseStats::default(),
             response_log: None,
         }
+    }
+
+    /// A single-zone edge-shard app: one edge service, no local cloud
+    /// pool. Eigen submits are intercepted into the forward outbox (see
+    /// [`App::take_forwards`]) and return an inert sentinel handle —
+    /// the real request materializes in the cloud world via
+    /// [`App::deliver_forward`].
+    pub fn new_edge_shard(
+        costs: TaskCosts,
+        zone: u32,
+        dep: crate::cluster::DeploymentId,
+    ) -> Self {
+        let id = ServiceId(0);
+        let mut edge_service_by_zone = vec![None; zone as usize + 1];
+        edge_service_by_zone[zone as usize] = Some(id);
+        App {
+            services: vec![Service {
+                id,
+                name: format!("edge-workers-z{zone}"),
+                deployment: dep,
+                queue: VecDeque::new(),
+                counters: TrafficCounters::default(),
+            }],
+            costs,
+            edge_service_by_zone,
+            // Never read: Eigen submits are intercepted by the outbox
+            // before the cloud route resolves.
+            cloud_service: ServiceId(u32::MAX),
+            in_flight: RequestArena::new(),
+            forward_outbox: Some(Vec::new()),
+            stats: ResponseStats::default(),
+            response_log: None,
+        }
+    }
+
+    /// A cloud-shard app: only the shared Eigen pool. Requests arrive
+    /// exclusively through [`App::deliver_forward`].
+    pub fn new_cloud_shard(costs: TaskCosts, cloud: crate::cluster::DeploymentId) -> Self {
+        let cloud_service = ServiceId(0);
+        App {
+            services: vec![Service {
+                id: cloud_service,
+                name: "cloud-workers".to_string(),
+                deployment: cloud,
+                queue: VecDeque::new(),
+                counters: TrafficCounters::default(),
+            }],
+            costs,
+            edge_service_by_zone: Vec::new(),
+            cloud_service,
+            in_flight: RequestArena::new(),
+            forward_outbox: None,
+            stats: ResponseStats::default(),
+            response_log: None,
+        }
+    }
+
+    /// Drain the edge-shard forward outbox (empty for monolith and
+    /// cloud-shard apps). Entries are in submit order, so their
+    /// `submitted` times are non-decreasing.
+    pub fn take_forwards(&mut self) -> Vec<ForwardedTask> {
+        match &mut self.forward_outbox {
+            Some(v) => std::mem::take(v),
+            None => Vec::new(),
+        }
+    }
+
+    /// Materialize a forwarded Eigen task in this (cloud-shard) app.
+    /// Counters are attributed at delivery time; the arrival is
+    /// scheduled at the absolute time the monolith would have used
+    /// (`submitted + network_latency + forward_latency`), which the
+    /// barrier protocol guarantees is still in this world's future.
+    pub fn deliver_forward(&mut self, fwd: ForwardedTask, queue: &mut EventQueue) {
+        let service = self.cloud_service;
+        let id = self.in_flight.insert(Request {
+            task: TaskType::Eigen,
+            origin_zone: fwd.origin_zone,
+            service,
+            created: fwd.submitted,
+        });
+        self.services[service.0 as usize].counters.arrivals += 1;
+        self.services[service.0 as usize].counters.net_in_bytes += EIGEN_IN;
+        let latency = self.costs.network_latency + self.costs.forward_latency;
+        queue.schedule_at(
+            fwd.submitted.saturating_add(latency),
+            Event::RequestArrival { request_id: id },
+        );
     }
 
     /// Turn on the exact per-request log (unbounded memory — for the
@@ -270,6 +376,18 @@ impl App {
         now: Time,
         queue: &mut EventQueue,
     ) -> RequestId {
+        // Edge-shard interception: the Eigen task belongs to the cloud
+        // world; record the crossing and hand back an inert stale-shaped
+        // handle (no arena slot — lookups on it miss like any stale id).
+        if task == TaskType::Eigen {
+            if let Some(outbox) = &mut self.forward_outbox {
+                outbox.push(ForwardedTask {
+                    origin_zone: zone,
+                    submitted: now,
+                });
+                return RequestId::new(u32::MAX, u32::MAX);
+            }
+        }
         let (service, latency, bytes_in) = match task {
             TaskType::Sort => {
                 // detlint: allow(P1) — an unknown zone is a config-construction bug; fail loudly at the ingress boundary instead of silently misrouting traffic
@@ -636,6 +754,67 @@ mod tests {
         }
         assert_eq!(app.completed(), 20);
         assert_eq!(app.in_flight_len(), 0);
+    }
+
+    #[test]
+    fn edge_shard_intercepts_eigen_and_cloud_shard_delivers() {
+        let mut cluster = Cluster::new();
+        cluster.add_node(NodeSpec::new("e1", Tier::Edge, 1, 2000, 2048));
+        cluster.add_node(NodeSpec::new("c1", Tier::Cloud, 0, 3000, 3072));
+        let edge_dep = cluster.add_deployment(Deployment::new(
+            "edge",
+            Selector::new(Tier::Edge, Some(1)),
+            PodSpec::new(500, 256),
+            1,
+            8,
+        ));
+        let cloud_dep = cluster.add_deployment(Deployment::new(
+            "cloud",
+            Selector::new(Tier::Cloud, None),
+            PodSpec::new(1000, 512),
+            1,
+            8,
+        ));
+        let mut rng = Pcg64::new(3, 1);
+
+        // Edge shard: the Eigen submit crosses into the outbox — no
+        // local arrival event, no local counters, inert handle.
+        let mut edge = App::new_edge_shard(TaskCosts::default(), 1, edge_dep);
+        let mut eq = EventQueue::new();
+        let id = edge.submit(TaskType::Eigen, 1, 5 * SEC, &mut eq);
+        assert!(eq.is_empty());
+        assert_eq!(edge.services[0].counters.arrivals, 0);
+        edge.on_arrival(id, &mut cluster, &mut eq, &mut rng); // stale-shaped: no-op
+        assert_eq!(edge.queued_total(), 0);
+        let fwds = edge.take_forwards();
+        assert_eq!(
+            fwds,
+            vec![ForwardedTask {
+                origin_zone: 1,
+                submitted: 5 * SEC
+            }]
+        );
+        assert!(edge.take_forwards().is_empty(), "outbox drains");
+        // Sort still routes locally.
+        edge.submit(TaskType::Sort, 1, 5 * SEC, &mut eq);
+        assert_eq!(eq.len(), 1);
+        assert_eq!(edge.services[0].counters.arrivals, 1);
+
+        // Cloud shard: delivery reconstructs the request with the
+        // monolith's arrival time and created stamp.
+        let mut cloud = App::new_cloud_shard(TaskCosts::default(), cloud_dep);
+        let mut cq = EventQueue::new();
+        cluster.reconcile(cloud_dep, 1, &mut cq, &mut rng);
+        run(&mut cloud, &mut cluster, &mut cq, &mut rng); // pod comes up
+        cloud.deliver_forward(fwds[0], &mut cq);
+        assert_eq!(cloud.services[0].counters.arrivals, 1);
+        assert!(cloud.services[0].counters.net_in_bytes >= EIGEN_IN);
+        let delta = TaskCosts::default().network_latency + TaskCosts::default().forward_latency;
+        assert_eq!(cq.peek_time(), Some(5 * SEC + delta));
+        run(&mut cloud, &mut cluster, &mut cq, &mut rng);
+        assert_eq!(cloud.completed(), 1);
+        // Response clock started at the edge submit time.
+        assert!(cloud.stats.eigen.mean() > crate::sim::to_secs(delta));
     }
 
     #[test]

@@ -177,9 +177,9 @@ impl SimWorld {
     }
 
     fn schedule_initial(&mut self) {
-        for (i, g) in self.generators.iter_mut().enumerate() {
-            g.start(i as u32, &mut self.queue);
-        }
+        // Batched: one wheel insert per run of equal-delay generators,
+        // byte-identical to the per-generator `start` loop.
+        crate::workload::start_all(&self.generators, &mut self.queue);
         self.queue
             .schedule_in(self.scrape_interval, Event::Scrape);
         for (i, s) in self.scalers.iter().enumerate() {

@@ -14,7 +14,10 @@ pub mod sweep;
 pub use driver::{DecisionRecord, RirSample, ScalerBinding, SimWorld};
 pub use figures::*;
 pub use pretrain::pretrain_histories;
-pub use sweep::{run_sweep, AutoscalerKind, CellMetrics, CellResult, SweepConfig, SweepResult};
+pub use sweep::{
+    run_cell, run_cell_with_scratch, run_sweep, AutoscalerKind, CellMetrics, CellResult,
+    CellScratch, SweepConfig, SweepResult,
+};
 
 use crate::forecast::Forecaster;
 use crate::metrics::METRIC_DIM;

@@ -10,6 +10,12 @@
 //! count (asserted by `determinism_across_thread_counts` and the
 //! city-scale determinism tests below) *and* of the event-queue core
 //! ([`CoreKind`], asserted by the `golden_core_equivalence_*` tests).
+//! With `SweepConfig::shards >= 1` the same invariant extends inward:
+//! each cell runs on the conservative sharded engine
+//! ([`crate::sim::run_sharded`]) and its results are bit-identical for
+//! every shard count (asserted by
+//! `sharded_cells_are_bit_identical_across_shard_counts` and
+//! `tests/shard_identity.rs`).
 //!
 //! Memory stays flat per cell: response statistics are streamed
 //! ([`crate::app::ResponseStats`] — Welford moments + log-histogram
@@ -23,7 +29,7 @@ use crate::autoscaler::{
 use crate::config::{ClusterConfig, Topology};
 use crate::forecast::ArmaForecaster;
 use crate::forecast::NaiveForecaster;
-use crate::sim::{CoreKind, Time, MIN};
+use crate::sim::{run_sharded, CoreKind, ShardSpec, Time, MIN};
 use crate::stats::{percentile, summarize, Summary};
 use crate::util::json::Json;
 use crate::workload::Scenario;
@@ -150,6 +156,14 @@ pub struct SweepConfig {
     /// different metric specs. `None` = every service on the scaler
     /// kind's default single-metric policy.
     pub fleet: Option<ScalerRegistry>,
+    /// Within-cell sharding: `0` runs each cell on the monolithic
+    /// [`SimWorld`]; `>= 1` runs it on the conservative sharded engine
+    /// ([`run_sharded`]) with that many worker threads per cell.
+    /// Sharded cells are bit-identical across every `shards >= 1` value
+    /// (asserted by `tests/shard_identity.rs`); the monolith remains the
+    /// golden single-threaded reference with its own RNG stream layout,
+    /// so `0` and `>= 1` are two (each bit-reproducible) schedules.
+    pub shards: usize,
 }
 
 /// Deterministic per-cell outcome (everything except wall-clock).
@@ -208,16 +222,35 @@ pub struct SweepResult {
     pub topology: String,
     /// Event-queue core the cells ran on.
     pub core: CoreKind,
+    /// Within-cell shard count the cells ran on (0 = monolithic world).
+    pub shards: usize,
     pub cells: Vec<CellResult>,
     pub minutes: u64,
     pub threads_used: usize,
     pub wall_secs: f64,
 }
 
+/// Per-worker scratch buffers reused across the grid, so city sweeps
+/// stop paying a build/drop of these temporaries for every cell. The
+/// buffers never leak data between cells (`run_cell_with_scratch`
+/// clears them up front) and never shrink, so a worker converges on the
+/// high-water allocation of its largest cell.
+#[derive(Debug, Default)]
+pub struct CellScratch {
+    rirs: Vec<f64>,
+    reps: Vec<f64>,
+    mses: Vec<f64>,
+    specs: Vec<String>,
+}
+
 /// Run one independent cell on `cluster` (a materialized topology).
 /// Response statistics come from the app's always-on streaming stats —
 /// the cell never accumulates a per-request log, so memory stays flat
 /// however long (or busy) the cell runs.
+///
+/// `shards == 0` runs the monolithic [`SimWorld`]; `shards >= 1` runs
+/// the conservative sharded engine with that many worker threads —
+/// bit-identical for every `shards >= 1` value.
 #[allow(clippy::too_many_arguments)]
 pub fn run_cell(
     topology_label: &str,
@@ -229,63 +262,141 @@ pub fn run_cell(
     seed: u64,
     minutes: u64,
     core: CoreKind,
+    shards: usize,
+) -> CellResult {
+    let mut scratch = CellScratch::default();
+    run_cell_with_scratch(
+        topology_label,
+        cluster,
+        scenario_name,
+        scenario,
+        scaler,
+        fleet,
+        seed,
+        minutes,
+        core,
+        shards,
+        &mut scratch,
+    )
+}
+
+/// [`run_cell`] against caller-owned scratch — what the sweep workers
+/// use to reuse one set of buffers across their whole share of the grid.
+#[allow(clippy::too_many_arguments)]
+pub fn run_cell_with_scratch(
+    topology_label: &str,
+    cluster: &ClusterConfig,
+    scenario_name: &str,
+    scenario: &Scenario,
+    scaler: AutoscalerKind,
+    fleet: Option<&ScalerRegistry>,
+    seed: u64,
+    minutes: u64,
+    core: CoreKind,
+    shards: usize,
+    scratch: &mut CellScratch,
 ) -> CellResult {
     let wall = crate::util::wallclock();
-    let mut world = SimWorld::build_with_core(cluster, TaskCosts::default(), seed, core);
-    for gen in scenario.build_generators() {
-        world.add_generator(gen);
-    }
-    let n_services = world.app.services.len();
-    for svc in 0..n_services {
-        let autoscaler = match fleet {
-            Some(registry) => scaler.build_with(registry.policy_for(svc)),
-            None => scaler.build(),
-        };
-        world.add_scaler(autoscaler, svc);
-    }
-    let events = world.run_until(minutes * MIN);
-    let specs: Vec<String> = world
-        .scalers
-        .iter()
-        .map(|b| specs_label(b.autoscaler.specs()))
-        .collect();
+    scratch.rirs.clear();
+    scratch.reps.clear();
+    scratch.mses.clear();
+    scratch.specs.clear();
 
-    let rirs: Vec<f64> = world.rir_log.iter().map(|s| s.rir).collect();
-    let reps: Vec<f64> = world.replica_log.iter().map(|&(_, _, r)| r as f64).collect();
-    let replicas_max = world.replica_log.iter().map(|&(_, _, r)| r).max().unwrap_or(0);
-
-    let mut mses = Vec::new();
-    for binding in &world.scalers {
-        if let Some(ppa) = binding.autoscaler.as_any().downcast_ref::<Ppa>() {
-            // Streaming count/MSE: the exact prediction log stays off
-            // in sweep cells (flat memory).
-            if ppa.prediction_count() > 0 {
-                mses.push(ppa.prediction_mse());
+    let (events, completed, sort, eigen, replicas_max) = if shards == 0 {
+        let mut world = SimWorld::build_with_core(cluster, TaskCosts::default(), seed, core);
+        for gen in scenario.build_generators() {
+            world.add_generator(gen);
+        }
+        let n_services = world.app.services.len();
+        for svc in 0..n_services {
+            let autoscaler = match fleet {
+                Some(registry) => scaler.build_with(registry.policy_for(svc)),
+                None => scaler.build(),
+            };
+            world.add_scaler(autoscaler, svc);
+        }
+        let events = world.run_until(minutes * MIN);
+        scratch
+            .specs
+            .extend(world.scalers.iter().map(|b| specs_label(b.autoscaler.specs())));
+        scratch.rirs.extend(world.rir_log.iter().map(|s| s.rir));
+        scratch
+            .reps
+            .extend(world.replica_log.iter().map(|&(_, _, r)| r as f64));
+        let replicas_max = world.replica_log.iter().map(|&(_, _, r)| r).max().unwrap_or(0);
+        for binding in &world.scalers {
+            if let Some(ppa) = binding.autoscaler.as_any().downcast_ref::<Ppa>() {
+                // Streaming count/MSE: the exact prediction log stays off
+                // in sweep cells (flat memory).
+                if ppa.prediction_count() > 0 {
+                    scratch.mses.push(ppa.prediction_mse());
+                }
             }
         }
-    }
+        let stats = &world.app.stats;
+        (
+            events,
+            world.app.completed(),
+            stats.sort.clone(),
+            stats.eigen.clone(),
+            replicas_max,
+        )
+    } else {
+        let spec = ShardSpec {
+            shards,
+            core,
+            seed,
+            costs: TaskCosts::default(),
+            end: minutes * MIN,
+            record_decisions: false,
+        };
+        let run = run_sharded(
+            cluster,
+            scenario.build_generators(),
+            &|svc| match fleet {
+                Some(registry) => scaler.build_with(registry.policy_for(svc)),
+                None => scaler.build(),
+            },
+            &spec,
+        )
+        .expect("sharded cell failed (topology was validated up front)");
+        scratch.specs.extend(run.spec_labels());
+        scratch.rirs.extend(run.rir_log().iter().map(|s| s.rir));
+        let replica_log = run.replica_log();
+        scratch
+            .reps
+            .extend(replica_log.iter().map(|&(_, _, r)| r as f64));
+        let replicas_max = replica_log.iter().map(|&(_, _, r)| r).max().unwrap_or(0);
+        scratch.mses.extend(run.prediction_mses());
+        (
+            run.events(),
+            run.completed(),
+            run.sort_stats(),
+            run.eigen_stats(),
+            replicas_max,
+        )
+    };
 
-    let stats = &world.app.stats;
     let metrics = CellMetrics {
         topology: topology_label.to_string(),
         scenario: scenario_name.to_string(),
         scaler: scaler.name().to_string(),
-        specs,
+        specs: scratch.specs.clone(),
         seed,
         events,
-        completed: world.app.completed(),
-        sort: stats.sort.summary(),
-        sort_p50: stats.sort.quantile(50.0),
-        sort_p95: stats.sort.quantile(95.0),
-        sort_p99: stats.sort.quantile(99.0),
-        eigen: stats.eigen.summary(),
-        rir: summarize(&rirs),
-        rir_p50: percentile(&rirs, 50.0),
-        rir_p95: percentile(&rirs, 95.0),
-        rir_p99: percentile(&rirs, 99.0),
-        replicas_mean: summarize(&reps).mean,
+        completed,
+        sort: sort.summary(),
+        sort_p50: sort.quantile(50.0),
+        sort_p95: sort.quantile(95.0),
+        sort_p99: sort.quantile(99.0),
+        eigen: eigen.summary(),
+        rir: summarize(&scratch.rirs),
+        rir_p50: percentile(&scratch.rirs, 50.0),
+        rir_p95: percentile(&scratch.rirs, 95.0),
+        rir_p99: percentile(&scratch.rirs, 99.0),
+        replicas_mean: summarize(&scratch.reps).mean,
         replicas_max,
-        prediction_mse: (!mses.is_empty()).then(|| summarize(&mses).mean),
+        prediction_mse: (!scratch.mses.is_empty()).then(|| summarize(&scratch.mses).mean),
     };
     CellResult {
         metrics,
@@ -302,6 +413,11 @@ pub fn run_sweep(cfg: &SweepConfig) -> crate::Result<SweepResult> {
     let topology_label = cfg.topology.label();
     let cluster = cfg.topology.cluster();
     cluster.validate()?;
+    if cfg.shards >= 1 {
+        // Fail fast (and with a real error) if the topology cannot be
+        // partitioned into zone worlds, instead of inside a worker.
+        crate::sim::partition_worlds(&cluster)?;
+    }
     // Validate scenario zones against the chosen topology before
     // spawning anything.
     let edge_zones: Vec<u32> = cluster.deployments.iter().filter_map(|d| d.zone).collect();
@@ -339,24 +455,31 @@ pub fn run_sweep(cfg: &SweepConfig) -> crate::Result<SweepResult> {
     let slots: Mutex<Vec<Option<CellResult>>> = Mutex::new(vec![None; specs.len()]);
     std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= specs.len() {
-                    break;
+            scope.spawn(|| {
+                // One scratch per worker, reused for its whole share of
+                // the grid (no per-cell build/drop of the buffers).
+                let mut scratch = CellScratch::default();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= specs.len() {
+                        break;
+                    }
+                    let (name, scenario, scaler, seed) = specs[i];
+                    let result = run_cell_with_scratch(
+                        &topology_label,
+                        &cluster,
+                        name,
+                        scenario,
+                        scaler,
+                        cfg.fleet.as_ref(),
+                        seed,
+                        cfg.minutes,
+                        cfg.core,
+                        cfg.shards,
+                        &mut scratch,
+                    );
+                    slots.lock().unwrap()[i] = Some(result);
                 }
-                let (name, scenario, scaler, seed) = specs[i];
-                let result = run_cell(
-                    &topology_label,
-                    &cluster,
-                    name,
-                    scenario,
-                    scaler,
-                    cfg.fleet.as_ref(),
-                    seed,
-                    cfg.minutes,
-                    cfg.core,
-                );
-                slots.lock().unwrap()[i] = Some(result);
             });
         }
     });
@@ -370,6 +493,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> crate::Result<SweepResult> {
     Ok(SweepResult {
         topology: topology_label,
         core: cfg.core,
+        shards: cfg.shards,
         cells,
         minutes: cfg.minutes,
         threads_used: threads,
@@ -439,6 +563,7 @@ impl SweepResult {
         let mut root = BTreeMap::new();
         root.insert("topology".to_string(), Json::Str(self.topology.clone()));
         root.insert("core".to_string(), Json::Str(self.core.name().to_string()));
+        root.insert("shards".to_string(), Json::Num(self.shards as f64));
         root.insert("minutes".to_string(), Json::Num(self.minutes as f64));
         root.insert("threads".to_string(), Json::Num(self.threads_used as f64));
         root.insert("wall_secs".to_string(), num(self.wall_secs));
@@ -520,6 +645,7 @@ mod tests {
             threads,
             core: CoreKind::Calendar,
             fleet: None,
+            shards: 0,
         }
     }
 
@@ -602,6 +728,7 @@ mod tests {
             threads: 1,
             core: CoreKind::Calendar,
             fleet: None,
+            shards: 0,
         };
         let result = run_sweep(&cfg).unwrap();
         let cell = &result.cells[0].metrics;
@@ -623,6 +750,7 @@ mod tests {
             threads: 1,
             core: CoreKind::Calendar,
             fleet: None,
+            shards: 0,
         })
         .unwrap();
         let dir = std::env::temp_dir().join("ppa_sweep_test");
@@ -670,6 +798,7 @@ mod tests {
             threads: 1,
             core: CoreKind::Calendar,
             fleet: None,
+            shards: 0,
         };
         assert!(run_sweep(&cfg).is_err());
     }
@@ -688,6 +817,7 @@ mod tests {
             threads: 1,
             core: CoreKind::Calendar,
             fleet: None,
+            shards: 0,
         };
         let err = run_sweep(&cfg).unwrap_err();
         assert!(format!("{err}").contains("zone 9"));
@@ -748,6 +878,7 @@ mod tests {
             threads,
             core: CoreKind::Calendar,
             fleet: None,
+            shards: 0,
         };
         let serial = run_sweep(&grid(1)).unwrap();
         let parallel = run_sweep(&grid(4)).unwrap();
@@ -802,6 +933,7 @@ mod tests {
             threads: 2,
             core,
             fleet: None,
+            shards: 0,
         };
         let calendar = run_sweep(&grid(CoreKind::Calendar)).unwrap();
         let heap = run_sweep(&grid(CoreKind::Heap)).unwrap();
@@ -825,6 +957,7 @@ mod tests {
             threads: 1,
             core: CoreKind::Calendar,
             fleet: None,
+            shards: 0,
         };
         let err = run_sweep(&cfg).unwrap_err();
         assert!(format!("{err}").contains("topology 'paper'"), "{err}");
@@ -865,6 +998,7 @@ mod tests {
             11,
             4,
             CoreKind::Calendar,
+            0,
         );
         let m = &cell.metrics;
         assert!(m.events > 100, "fleet cell must simulate: {}", m.events);
@@ -877,6 +1011,59 @@ mod tests {
         assert!(m.specs[2..].iter().all(|s| s == "cpu:70"));
         // And the fleet axis is part of the deterministic fingerprint.
         assert!(m.fingerprint().contains("req_rate:0.5"));
+    }
+
+    #[test]
+    fn sharded_cells_are_bit_identical_across_shard_counts() {
+        // The tentpole invariant at the cell level: one paper-topology
+        // cell, `shards` 1 vs 2 vs 4 — every deterministic field equal.
+        let cluster = Topology::Paper.cluster();
+        let scenarios = tiny_scenarios();
+        let (name, scenario) = &scenarios[0];
+        let cell = |shards: usize| {
+            run_cell(
+                "paper",
+                &cluster,
+                name,
+                scenario,
+                AutoscalerKind::Hpa,
+                None,
+                9,
+                5,
+                CoreKind::Calendar,
+                shards,
+            )
+            .metrics
+        };
+        let one = cell(1);
+        let two = cell(2);
+        let four = cell(4);
+        assert!(one.events > 100, "sharded cell must simulate: {}", one.events);
+        assert!(one.completed > 10);
+        assert_eq!(one.fingerprint(), two.fingerprint());
+        assert_eq!(one.fingerprint(), four.fingerprint());
+        // The sharded schedule is its own world (per-world RNG streams):
+        // reproducible, but intentionally not the monolith's bits.
+        let mono = cell(0);
+        assert_eq!(mono.specs, one.specs);
+        assert_eq!(mono.topology, one.topology);
+    }
+
+    #[test]
+    fn sharded_sweep_reports_shards_in_json() {
+        let result = run_sweep(&SweepConfig {
+            scenarios: tiny_scenarios()[..1].to_vec(),
+            scalers: vec![AutoscalerKind::Hpa],
+            seeds: vec![3],
+            minutes: 3,
+            shards: 2,
+            ..tiny_config(1)
+        })
+        .unwrap();
+        assert_eq!(result.shards, 2);
+        let doc = result.to_json();
+        assert_eq!(doc.get("shards").as_f64(), Some(2.0));
+        assert!(result.cells[0].metrics.events > 100);
     }
 
     #[test]

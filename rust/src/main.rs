@@ -5,12 +5,12 @@
 //!          [--hours H] [--pretrain-hours H] [--seed S]
 //! ppa-edge run [--scaler hpa|ppa] [--model lstm|arma|naive]
 //!          [--metric name:target[:src]]... [--behavior rules]
-//!          [--minutes N] [--seed S]
+//!          [--minutes N] [--seed S] [--shards S]
 //! ppa-edge sweep [--minutes N] [--seeds K] [--threads T]
 //!          [--topology paper|city-N[xW]] [--scenarios a,b,..]
 //!          [--scalers hpa,ppa-arma,..] [--core calendar|heap]
 //!          [--metric name:target[:src]]... [--behavior rules]
-//!          [--out FILE]
+//!          [--shards S] [--out FILE]
 //! ppa-edge info
 //! ```
 //!
@@ -23,7 +23,8 @@
 use anyhow::{bail, Context};
 use ppa_edge::app::TaskCosts;
 use ppa_edge::autoscaler::{
-    Hpa, HpaConfig, MetricSource, MetricSpec, ScalerPolicy, ScalerRegistry, ScalingBehavior,
+    Autoscaler, Hpa, HpaConfig, MetricSource, MetricSpec, ScalerPolicy, ScalerRegistry,
+    ScalingBehavior,
 };
 use ppa_edge::experiments::{
     self, fig6_trace, fig7_model_comparison, fig8_update_policies, fig9_fig10_key_metric,
@@ -102,12 +103,12 @@ USAGE:
            [--minutes N] [--hours H] [--pretrain-hours H] [--seed S]
   ppa-edge run [--scaler hpa|ppa] [--model lstm|arma|naive]
            [--metric name:target[:current|:forecast]]...
-           [--behavior rules] [--minutes N] [--seed S]
+           [--behavior rules] [--minutes N] [--seed S] [--shards S]
   ppa-edge sweep [--minutes N] [--seeds K] [--threads T]
            [--topology paper|city-N[xW]] [--scenarios a,b,..]
            [--scalers hpa,ppa-arma,ppa-naive] [--core calendar|heap]
            [--metric name:target[:current|:forecast]]...
-           [--behavior rules] [--out FILE]
+           [--behavior rules] [--shards S] [--out FILE]
   ppa-edge info
   ppa-edge help | --help | -h
 
@@ -142,9 +143,13 @@ SWEEP (scenario matrix):
   cityN-rush-hour) on 'city-N'. Autoscalers default to
   hpa,ppa-arma,ppa-naive. --core selects the DES event queue: the fast
   'calendar' bucket queue (default) or the 'heap' reference core —
-  results are bit-identical either way.
+  results are bit-identical either way. --shards S (run and sweep)
+  switches each world onto the sharded engine: zones are split into
+  per-zone event cores advancing in conservative lockstep windows
+  across S worker threads, and results are bit-identical for any
+  S >= 1 (0, the default, keeps the single-queue reference engine).
   City-scale example:
-    ppa-edge sweep --topology city-50 --scalers hpa,ppa-arma --seeds 2
+    ppa-edge sweep --topology city-50 --scalers hpa,ppa-arma --seeds 2 --shards 4
 
 Full flag reference: docs/CLI.md (including the sweep JSON schema).
 Artifacts must exist for LSTM experiments: run `make artifacts`.";
@@ -287,6 +292,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let out = args.get("out").unwrap_or("target/experiments/sweep.json");
     let topology = ppa_edge::config::Topology::parse(args.get("topology").unwrap_or("paper"))?;
     let core = ppa_edge::sim::CoreKind::parse(args.get("core").unwrap_or("calendar"))?;
+    let shards = args.get_u64("shards", 0)? as usize;
 
     // The preset library follows the topology: Table-2 scenarios on
     // `paper`, generated N-zone `cityN-*` composites on `city-N[xW]`.
@@ -347,6 +353,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         threads,
         core,
         fleet,
+        shards,
     };
 
     println!(
@@ -372,6 +379,10 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     // Default to ARMA: it works in every build. LSTM additionally needs
     // the `pjrt` cargo feature and `make artifacts`.
     let model = ModelKind::parse(args.get("model").unwrap_or("arma"))?;
+    let shards = args.get_u64("shards", 0)? as usize;
+    if shards >= 1 {
+        return cmd_run_sharded(args, minutes, seed, scaler, model, shards);
+    }
 
     let cfg = ppa_edge::config::paper_cluster();
     let mut world = SimWorld::build(&cfg, TaskCosts::default(), seed);
@@ -465,5 +476,129 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         stats.eigen.quantile(95.0)
     );
     println!("  RIR: {:.3} ± {:.3}", rir.mean, rir.std);
+    Ok(())
+}
+
+/// `run --shards S`: the same paper-topology run on the sharded engine
+/// (one event core per zone, conservative lockstep windows). Results
+/// are bit-identical for any `S >= 1` but intentionally *not* to the
+/// monolith engine (different RNG stream layout — see `sim::shard`).
+fn cmd_run_sharded(
+    args: &Args,
+    minutes: u64,
+    seed: u64,
+    scaler: &str,
+    model: ModelKind,
+    shards: usize,
+) -> anyhow::Result<()> {
+    use ppa_edge::sim::{run_sharded, ShardSpec};
+
+    let cfg = ppa_edge::config::paper_cluster();
+    let generators = vec![
+        Generator::RandomAccess(RandomAccessGen::new(1)),
+        Generator::RandomAccess(RandomAccessGen::new(2)),
+    ];
+    // World order == service order: edge zones in config order, then the
+    // cloud pool; the scaler factory sees the global world index.
+    let n_services = cfg.deployments.len();
+    let spec = ShardSpec {
+        shards,
+        core: ppa_edge::sim::CoreKind::parse(args.get("core").unwrap_or("calendar"))?,
+        seed,
+        costs: TaskCosts::default(),
+        end: minutes * MIN,
+        record_decisions: false,
+    };
+
+    println!(
+        "running {minutes} simulated minutes with {scaler} ({}) on {shards} shard(s)...",
+        model.name()
+    );
+    let wall = ppa_edge::util::wallclock();
+    let run = match scaler {
+        "hpa" => {
+            let specs = metric_flags(args, MetricSource::Current)?;
+            let behavior = behavior_flag(args, 5 * ppa_edge::sim::MIN)?;
+            let factory = |_svc: usize| -> Box<dyn Autoscaler> {
+                let mut cfg = HpaConfig::default();
+                if let Some(specs) = &specs {
+                    cfg.specs = specs.clone();
+                }
+                if let Some(behavior) = behavior {
+                    cfg.behavior = behavior;
+                }
+                Box::new(Hpa::new(cfg))
+            };
+            run_sharded(&cfg, generators, &factory, &spec)?
+        }
+        "ppa" => {
+            if model == ModelKind::Lstm {
+                bail!(
+                    "--shards does not support --model lstm: the PJRT runtime is \
+                     shared single-threaded state; use --model arma|naive or drop --shards"
+                );
+            }
+            let specs = metric_flags(args, MetricSource::Forecast)?;
+            let behavior = behavior_flag(args, 2 * ppa_edge::sim::MIN)?;
+            println!("collecting pretraining data (1 h sim)...");
+            let (hist, _) = experiments::pretrain_histories(1.0, 20, seed);
+            // Fail fast on a bad seed model here, on the main thread —
+            // the per-world factory below can then only repeat a fit
+            // that already succeeded.
+            experiments::make_forecaster(model, None, &hist[0], seed as u32)
+                .context("fitting the edge seed model")?;
+            experiments::make_forecaster(model, None, hist.last().unwrap(), seed as u32)
+                .context("fitting the cloud seed model")?;
+            let factory = |svc: usize| -> Box<dyn Autoscaler> {
+                let pre = if svc + 1 == n_services {
+                    hist.last().unwrap()
+                } else {
+                    &hist[0]
+                };
+                let forecaster = experiments::make_forecaster(model, None, pre, seed as u32)
+                    .expect("seed-model fit succeeded in the up-front check");
+                let mut cfg = ppa_edge::autoscaler::PpaConfig::default();
+                if let Some(specs) = &specs {
+                    cfg.specs = specs.clone();
+                }
+                if let Some(behavior) = behavior {
+                    cfg.behavior = behavior;
+                }
+                Box::new(ppa_edge::autoscaler::Ppa::new(cfg, forecaster))
+            };
+            run_sharded(&cfg, generators, &factory, &spec)?
+        }
+        other => bail!("unknown scaler '{other}' (hpa|ppa)"),
+    };
+    let elapsed = wall.elapsed();
+
+    let sort_stats = run.sort_stats();
+    let eigen_stats = run.eigen_stats();
+    let sort = sort_stats.summary();
+    let eigen = eigen_stats.summary();
+    let rirs: Vec<f64> = run.rir_log().iter().map(|s| s.rir).collect();
+    let rir = summarize(&rirs);
+    println!(
+        "done: {} events in {:.2}s ({:.0}x real time)",
+        run.events(),
+        elapsed.as_secs_f64(),
+        minutes as f64 * 60.0 / elapsed.as_secs_f64()
+    );
+    println!(
+        "  sort  resp: {:.4} ± {:.4} s (n={}, p95 ≈ {:.4})",
+        sort.mean,
+        sort.std,
+        sort.n,
+        sort_stats.quantile(95.0)
+    );
+    println!(
+        "  eigen resp: {:.3} ± {:.3} s (n={}, p95 ≈ {:.3})",
+        eigen.mean,
+        eigen.std,
+        eigen.n,
+        eigen_stats.quantile(95.0)
+    );
+    println!("  RIR: {:.3} ± {:.3}", rir.mean, rir.std);
+    println!("  fingerprint: identical for any --shards >= 1 at this seed");
     Ok(())
 }

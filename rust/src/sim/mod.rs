@@ -12,7 +12,10 @@
 //! events dispatch in insertion (FIFO) order. Past-time schedules clamp
 //! to `now`. Both queue cores honor the same contract, which makes
 //! whole-cluster runs bit-reproducible for a given seed — the
-//! paper-figure experiments and the sweep harness rely on this.
+//! paper-figure experiments and the sweep harness rely on this. The
+//! `shard` module extends the contract inward: a city world split into
+//! per-zone worlds advancing in conservative lockstep windows stays
+//! bit-identical for any `--shards` count (see [`run_sharded`]).
 //!
 //! # Identifier types
 //!
@@ -24,8 +27,10 @@
 //! aliasing a new request.
 
 mod queue;
+mod shard;
 
 pub use queue::{CoreKind, EventQueue};
+pub use shard::{partition_worlds, run_sharded, ShardSpec, ShardedRun, WorldOutcome, WorldPlan};
 
 /// Simulated time in microseconds since simulation start.
 pub type Time = u64;

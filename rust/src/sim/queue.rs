@@ -324,6 +324,72 @@ impl EventQueue {
         self.schedule_at(self.now.saturating_add(delay), event);
     }
 
+    /// Schedule a same-time burst of events at absolute time `at`.
+    ///
+    /// Result is byte-identical to calling [`EventQueue::schedule_at`]
+    /// once per event (each entry still draws its own consecutive
+    /// `seq`, so within-burst FIFO order is preserved), but the clamp
+    /// and bucket computation are paid once: when the whole burst lands
+    /// in a single future wheel slot it is one `Vec::extend` and one
+    /// scan-hint update instead of N pushes. Current-bucket and
+    /// beyond-horizon times fall back to the per-entry path; the heap
+    /// core pushes each entry.
+    pub fn schedule_in_batch(&mut self, delay: Time, events: impl IntoIterator<Item = Event>) {
+        self.schedule_batch(self.now.saturating_add(delay), events);
+    }
+
+    /// Absolute-time form of [`EventQueue::schedule_in_batch`].
+    pub fn schedule_batch(&mut self, at: Time, events: impl IntoIterator<Item = Event>) {
+        let time = at.max(self.now);
+        match &mut self.backend {
+            Backend::Calendar(c) => {
+                let bucket = time >> BUCKET_SHIFT;
+                if bucket > c.cursor && bucket < c.cursor + NUM_BUCKETS as u64 {
+                    // Fast path: the whole burst belongs to one pending
+                    // wheel slot (sorted later, when the cursor reaches
+                    // it), so appending in seq order is exactly what N
+                    // individual schedules would have produced.
+                    let slot = &mut c.slots[(bucket & BUCKET_MASK) as usize];
+                    let before = slot.len();
+                    let seq0 = self.seq;
+                    slot.extend(events.into_iter().enumerate().map(|(i, event)| Entry {
+                        time,
+                        seq: seq0 + i as u64,
+                        event,
+                    }));
+                    let n = slot.len() - before;
+                    self.seq += n as u64;
+                    c.wheel_len += n;
+                    if n > 0 {
+                        c.scan_hint.set(c.scan_hint.get().min(bucket));
+                    }
+                } else {
+                    // Current-bucket (sorted insert) or overflow times:
+                    // per-entry scheduling already is the right shape.
+                    for event in events {
+                        let entry = Entry {
+                            time,
+                            seq: self.seq,
+                            event,
+                        };
+                        self.seq += 1;
+                        c.schedule(entry);
+                    }
+                }
+            }
+            Backend::Heap(h) => {
+                for event in events {
+                    h.push(Entry {
+                        time,
+                        seq: self.seq,
+                        event,
+                    });
+                    self.seq += 1;
+                }
+            }
+        }
+    }
+
     /// Pop the next event, advancing the clock.
     pub fn pop(&mut self) -> Option<(Time, Event)> {
         self.pop_due(Time::MAX)
@@ -540,6 +606,55 @@ mod tests {
             assert_eq!(q.pop(), Some((SEC, tick(1))));
             assert_eq!(q.pop(), Some((SEC, tick(2))));
             assert_eq!(q.pop(), Some((SEC, tick(3))));
+        });
+    }
+
+    /// Drain a queue into `(time, generator)` pairs.
+    fn drain(mut q: EventQueue) -> Vec<(Time, u32)> {
+        std::iter::from_fn(|| q.pop())
+            .map(|(t, e)| match e {
+                Event::WorkloadTick { generator } => (t, generator),
+                _ => unreachable!(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn schedule_batch_matches_repeated_schedule_at() {
+        // Every batch landing zone — future wheel slot (fast path),
+        // current bucket, past-clamp, beyond-horizon overflow — must
+        // reproduce the per-entry schedule byte-for-byte, interleaved
+        // with individually scheduled same-time events.
+        let times = [30 * SEC, 0, 2 * HOUR, 5];
+        for core in CoreKind::ALL {
+            let mut one = EventQueue::with_core(core);
+            let mut batched = EventQueue::with_core(core);
+            for q in [&mut one, &mut batched] {
+                q.schedule_at(10, tick(900));
+                q.pop(); // now == 10: later schedules at 5 and 0 clamp
+                q.schedule_at(30 * SEC, tick(901));
+            }
+            let mut g = 0;
+            for &at in &times {
+                for i in 0..40 {
+                    one.schedule_at(at, tick(g + i));
+                }
+                batched.schedule_batch(at, (g..g + 40).map(tick));
+                g += 40;
+            }
+            assert_eq!(drain(one), drain(batched), "core {}", core.name());
+        }
+    }
+
+    #[test]
+    fn schedule_in_batch_is_relative_and_empty_batch_is_noop() {
+        on_each_core(|mut q| {
+            q.schedule_at(7, tick(0));
+            q.pop();
+            q.schedule_batch(3, Vec::new()); // empty: no effect
+            assert!(q.is_empty());
+            q.schedule_in_batch(3, vec![tick(1), tick(2)]);
+            assert_eq!(drain(q), vec![(10, 1), (10, 2)]);
         });
     }
 

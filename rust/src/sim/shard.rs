@@ -1,0 +1,827 @@
+//! Sharded conservative-parallel execution of a city world.
+//!
+//! A city topology is nearly embarrassingly parallel: each edge zone has
+//! its own nodes, its own deployment, its own workload and its own
+//! autoscaler, and the only cross-zone coupling is the ~10% Eigen
+//! forward from every edge zone to the shared cloud pool (one-directional
+//! — the cloud never sends anything back). This module exploits that
+//! structure with a classic conservative parallel-DES scheme:
+//!
+//! * The config is partitioned into **zone worlds** — one per edge
+//!   deployment (its matching nodes, a single-service app, its own
+//!   [`EventQueue`], metrics pipeline, autoscaler and RNG streams) plus
+//!   one cloud world holding every remaining node and the cloud pool.
+//! * Worlds are grouped onto `S` worker threads and advance in lockstep
+//!   **windows** of width `Δ = network_latency + forward_latency` — the
+//!   minimum edge→cloud event delay, i.e. the conservative lookahead.
+//!   An Eigen forward submitted during window `k` (at `τ ≤ T_k`) arrives
+//!   at `τ + Δ ≤ T_k + Δ = T_{k+1}`, and strictly after `T_k`, so it is
+//!   always in the cloud world's future when exchanged at the barrier
+//!   ending window `k` and always due within the very next window.
+//! * At each barrier, per-world forward batches are concatenated in
+//!   world order and stable-sorted by `(submitted, origin_zone)` before
+//!   delivery, so the cloud queue's `(time, seq)` order — and with it
+//!   every downstream bit — is independent of the shard count.
+//!
+//! # Determinism argument
+//!
+//! The unit of state is the zone world, not the shard: every world owns
+//! RNG streams keyed by its *world index*, its event `seq` counter, and
+//! its whole app/cluster/metrics state. Shards are only a thread-
+//! ownership grouping of worlds, and the barrier merge order is a pure
+//! function of the batches' contents — so a run is bit-identical for
+//! `--shards 1|2|4|8` (asserted by the in-module tests here and by
+//! `tests/shard_identity.rs`). This is the same invariant the sweep
+//! harness pins across worker-thread counts, extended inward.
+//!
+//! The monolithic [`crate::experiments::SimWorld`] remains the golden
+//! single-threaded reference. A sharded run is *not* bit-identical to a
+//! monolith run of the same seed: worlds draw from per-world RNG streams
+//! (`Pcg64::new(seed, 10 + 3·w + k)`) where the monolith interleaves
+//! three global streams, and cloud traffic counters attribute a forward
+//! at its delivery barrier (≤ Δ = 60 ms after the monolith's submit-time
+//! attribution, far inside one 10 s scrape). Both schedules are valid
+//! discretizations of the same system; each is bit-reproducible.
+//!
+//! A worker that panics mid-window would leave its peers blocked on the
+//! barrier; the engine itself is panic-free (no `unwrap`/`expect` — the
+//! determinism lint P1 covers this file) and maps worker panics from
+//! app code to an error after the join.
+
+use std::sync::{Barrier, Mutex};
+
+use super::{CoreKind, Event, EventQueue, ServiceId, Time};
+use crate::app::{App, ForwardedTask, ResponseStats, TaskCosts};
+use crate::autoscaler::{specs_label, Autoscaler, Ppa};
+use crate::cluster::{Cluster, DeploymentId, NodeSpec, Selector};
+use crate::config::{ClusterConfig, NodeConfig};
+use crate::experiments::{DecisionRecord, RirSample};
+use crate::metrics::{MetricsPipeline, DEFAULT_SCRAPE_INTERVAL};
+use crate::stats::StreamingStats;
+use crate::util::rng::Pcg64;
+use crate::workload::{start_all, Generator};
+use anyhow::bail;
+
+/// Per-world RNG stream id: disjoint from the monolith's streams 1–3
+/// and from the scenario/test streams, unique per `(world, role)`.
+fn shard_stream(world: usize, role: u64) -> u64 {
+    10 + 3 * world as u64 + role
+}
+
+/// How to run a sharded world.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardSpec {
+    /// Worker threads the zone worlds are grouped onto (≥ 1). The
+    /// results are bit-identical for every value.
+    pub shards: usize,
+    /// Event-queue core every world runs on.
+    pub core: CoreKind,
+    pub seed: u64,
+    pub costs: TaskCosts,
+    /// Simulated end time.
+    pub end: Time,
+    /// Populate per-world [`DecisionRecord`] logs (opt-in, unbounded).
+    pub record_decisions: bool,
+}
+
+/// One zone world's slice of the topology: its nodes plus its single
+/// deployment (`zone: None` marks the cloud world).
+#[derive(Debug, Clone)]
+pub struct WorldPlan {
+    pub cfg: ClusterConfig,
+    pub zone: Option<u32>,
+}
+
+/// Partition a city config into per-zone worlds plus the cloud world.
+///
+/// Every edge deployment (all but the last) claims the nodes its
+/// selector matches; the cloud world gets the last deployment plus every
+/// unclaimed node (cloud workers and the reserved control node). The
+/// split must be exact: a node matching two edge deployments has no
+/// single owner and is rejected.
+pub fn partition_worlds(cfg: &ClusterConfig) -> crate::Result<Vec<WorldPlan>> {
+    if cfg.deployments.len() < 2 {
+        bail!("sharded mode needs at least one edge and one cloud deployment");
+    }
+    let (edge_deps, cloud_dep) = cfg.deployments.split_at(cfg.deployments.len() - 1);
+    let mut owner: Vec<Option<usize>> = vec![None; cfg.nodes.len()];
+    for (w, d) in edge_deps.iter().enumerate() {
+        if d.zone.is_none() {
+            bail!("edge deployment '{}' has no zone — cannot shard", d.name);
+        }
+        let sel = Selector::new(d.tier, d.zone);
+        for (i, n) in cfg.nodes.iter().enumerate() {
+            if sel.matches(&NodeSpec::new(&n.name, n.tier, n.zone, n.cpu_millis, n.ram_mb)) {
+                if let Some(prev) = owner[i] {
+                    bail!(
+                        "node '{}' matches deployments '{}' and '{}' — zones must \
+                         partition the edge nodes",
+                        n.name,
+                        edge_deps[prev].name,
+                        d.name
+                    );
+                }
+                owner[i] = Some(w);
+            }
+        }
+    }
+    let mut plans = Vec::with_capacity(edge_deps.len() + 1);
+    for (w, d) in edge_deps.iter().enumerate() {
+        let nodes: Vec<NodeConfig> = cfg
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| owner[i] == Some(w))
+            .map(|(_, n)| n.clone())
+            .collect();
+        if nodes.is_empty() {
+            bail!("deployment '{}' matches no node", d.name);
+        }
+        plans.push(WorldPlan {
+            cfg: ClusterConfig {
+                nodes,
+                deployments: vec![d.clone()],
+            },
+            zone: d.zone,
+        });
+    }
+    let cloud_nodes: Vec<NodeConfig> = cfg
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| owner[i].is_none())
+        .map(|(_, n)| n.clone())
+        .collect();
+    let d = &cloud_dep[0];
+    let sel = Selector::new(d.tier, d.zone);
+    if !cloud_nodes
+        .iter()
+        .any(|n| sel.matches(&NodeSpec::new(&n.name, n.tier, n.zone, n.cpu_millis, n.ram_mb)))
+    {
+        bail!("cloud deployment '{}' matches no unclaimed node", d.name);
+    }
+    plans.push(WorldPlan {
+        cfg: ClusterConfig {
+            nodes: cloud_nodes,
+            deployments: vec![d.clone()],
+        },
+        zone: None,
+    });
+    Ok(plans)
+}
+
+/// One zone (or the cloud pool) as a self-contained world: the same
+/// event loop as [`crate::experiments::SimWorld`], specialized to a
+/// single service. Owned entirely by one worker thread — the autoscaler
+/// trait object never crosses threads.
+struct ZoneWorld {
+    /// Global world index == global service index (edge zones in config
+    /// order, cloud last — matching the monolith's service order).
+    world: usize,
+    zone: Option<u32>,
+    queue: EventQueue,
+    cluster: Cluster,
+    app: App,
+    metrics: MetricsPipeline,
+    generators: Vec<Generator>,
+    scaler: Box<dyn Autoscaler>,
+    dep: DeploymentId,
+    rir_log: Vec<RirSample>,
+    replica_log: Vec<(Time, ServiceId, usize)>,
+    decision_log: Vec<DecisionRecord>,
+    log_decisions: bool,
+    rng_cluster: Pcg64,
+    rng_service: Pcg64,
+    rng_workload: Pcg64,
+    scrape_interval: Time,
+    events: u64,
+    started: bool,
+}
+
+impl ZoneWorld {
+    fn build(
+        plan: &WorldPlan,
+        world: usize,
+        generators: Vec<Generator>,
+        scaler: Box<dyn Autoscaler>,
+        spec: &ShardSpec,
+    ) -> Self {
+        let (mut cluster, dep_ids) = plan.cfg.build();
+        let dep = dep_ids[0];
+        let app = match plan.zone {
+            Some(z) => App::new_edge_shard(spec.costs, z, dep),
+            None => App::new_cloud_shard(spec.costs, dep),
+        };
+        let metrics =
+            MetricsPipeline::for_app(DEFAULT_SCRAPE_INTERVAL, &app, spec.costs.base_burn_frac);
+        let mut queue = EventQueue::with_core(spec.core);
+        let mut rng_cluster = Pcg64::new(spec.seed, shard_stream(world, 0));
+        for (dcfg, &id) in plan.cfg.deployments.iter().zip(&dep_ids) {
+            cluster.reconcile(id, dcfg.initial_replicas, &mut queue, &mut rng_cluster);
+        }
+        ZoneWorld {
+            world,
+            zone: plan.zone,
+            queue,
+            cluster,
+            app,
+            metrics,
+            generators,
+            scaler,
+            dep,
+            rir_log: Vec::new(),
+            replica_log: Vec::new(),
+            decision_log: Vec::new(),
+            log_decisions: false,
+            rng_cluster,
+            rng_service: Pcg64::new(spec.seed, shard_stream(world, 1)),
+            rng_workload: Pcg64::new(spec.seed, shard_stream(world, 2)),
+            scrape_interval: DEFAULT_SCRAPE_INTERVAL,
+            events: 0,
+            started: false,
+        }
+    }
+
+    fn schedule_initial(&mut self) {
+        start_all(&self.generators, &mut self.queue);
+        self.queue.schedule_in(self.scrape_interval, Event::Scrape);
+        self.queue.schedule_in(
+            self.scaler.control_interval(),
+            Event::AutoscaleTick { scaler: 0 },
+        );
+        if let Some(u) = self.scaler.update_interval() {
+            self.queue
+                .schedule_in(u, Event::ModelUpdateTick { scaler: 0 });
+        }
+    }
+
+    /// Advance to `end` (a barrier tick — `pop_due` is inclusive, so a
+    /// forward arrival landing exactly on the tick runs in this window).
+    fn run_window(&mut self, end: Time) {
+        if !self.started {
+            self.started = true;
+            self.schedule_initial();
+        }
+        // The global service id this world's samples are logged under.
+        let service = ServiceId(self.world as u32);
+        while let Some((now, event)) = self.queue.pop_due(end) {
+            self.events += 1;
+            match event {
+                Event::RequestArrival { request_id } => {
+                    self.app.on_arrival(
+                        request_id,
+                        &mut self.cluster,
+                        &mut self.queue,
+                        &mut self.rng_service,
+                    );
+                }
+                Event::ServiceComplete { pod, request_id } => {
+                    self.app.on_complete(
+                        pod,
+                        request_id,
+                        &mut self.cluster,
+                        &mut self.queue,
+                        &mut self.rng_service,
+                    );
+                }
+                Event::PodRunning { pod } => {
+                    // Single-deployment world: any running pod belongs to
+                    // this world's one service.
+                    if self.cluster.on_pod_running(pod) {
+                        self.app.dispatch(
+                            ServiceId(0),
+                            &mut self.cluster,
+                            &mut self.queue,
+                            &mut self.rng_service,
+                        );
+                    }
+                }
+                Event::PodTerminated { pod } => {
+                    self.cluster.on_pod_terminated(pod);
+                }
+                Event::Scrape => {
+                    self.metrics.scrape(now, &mut self.cluster, &mut self.app);
+                    let snap = self.metrics.latest_snapshot(ServiceId(0));
+                    if let Some(rir) = snap.rir() {
+                        self.rir_log.push(RirSample { time: now, service, rir });
+                    }
+                    self.replica_log.push((now, service, snap.replicas));
+                    self.queue.schedule_in(self.scrape_interval, Event::Scrape);
+                }
+                Event::AutoscaleTick { scaler } => {
+                    let decision = self.scaler.evaluate(
+                        now,
+                        ServiceId(0),
+                        self.dep,
+                        &self.metrics,
+                        &self.cluster,
+                    );
+                    self.cluster.reconcile(
+                        self.dep,
+                        decision.desired,
+                        &mut self.queue,
+                        &mut self.rng_cluster,
+                    );
+                    self.cluster
+                        .retry_pending(&mut self.queue, &mut self.rng_cluster);
+                    if self.log_decisions {
+                        self.decision_log.push(DecisionRecord {
+                            time: now,
+                            service,
+                            desired: decision.desired,
+                            used_fallback: decision.used_fallback,
+                            recommendations: decision.recommendations,
+                        });
+                    }
+                    self.queue
+                        .schedule_in(self.scaler.control_interval(), Event::AutoscaleTick {
+                            scaler,
+                        });
+                }
+                Event::ModelUpdateTick { scaler } => {
+                    if let Err(e) = self.scaler.model_update(now) {
+                        eprintln!("[t={now}] model update failed: {e:#}");
+                    }
+                    if let Some(u) = self.scaler.update_interval() {
+                        self.queue
+                            .schedule_in(u, Event::ModelUpdateTick { scaler });
+                    }
+                }
+                Event::WorkloadTick { generator } => {
+                    if let Some(g) = self.generators.get_mut(generator as usize) {
+                        let _alive = g.on_tick(
+                            generator,
+                            &mut self.app,
+                            &mut self.queue,
+                            &mut self.rng_workload,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Plain-data summary — the only thing that leaves the worker thread.
+    fn finish(mut self) -> WorldOutcome {
+        let prediction_mse = self
+            .scaler
+            .as_any()
+            .downcast_ref::<Ppa>()
+            .filter(|p| p.prediction_count() > 0)
+            .map(|p| p.prediction_mse());
+        WorldOutcome {
+            world: self.world,
+            zone: self.zone,
+            spec_label: specs_label(self.scaler.specs()),
+            events: self.events,
+            completed: self.app.completed(),
+            stats: self.app.stats.clone(),
+            rir_log: std::mem::take(&mut self.rir_log),
+            replica_log: std::mem::take(&mut self.replica_log),
+            decision_log: std::mem::take(&mut self.decision_log),
+            prediction_mse,
+        }
+    }
+}
+
+/// One world's deterministic results (plain data: safe to send).
+#[derive(Debug, Clone)]
+pub struct WorldOutcome {
+    pub world: usize,
+    pub zone: Option<u32>,
+    /// Metric-spec label of the scaler this world ran (`cpu:70`, …).
+    pub spec_label: String,
+    pub events: u64,
+    pub completed: usize,
+    pub stats: ResponseStats,
+    pub rir_log: Vec<RirSample>,
+    pub replica_log: Vec<(Time, ServiceId, usize)>,
+    pub decision_log: Vec<DecisionRecord>,
+    pub prediction_mse: Option<f64>,
+}
+
+/// A finished sharded run: per-world outcomes in world order (edge zones
+/// in config order, cloud last) plus merge helpers. Every accessor is a
+/// pure function of the outcomes, so the aggregate views inherit the
+/// shard-count invariance of the per-world results.
+#[derive(Debug, Clone)]
+pub struct ShardedRun {
+    pub outcomes: Vec<WorldOutcome>,
+    /// The conservative lookahead the run advanced in.
+    pub window: Time,
+}
+
+impl ShardedRun {
+    pub fn events(&self) -> u64 {
+        self.outcomes.iter().map(|o| o.events).sum()
+    }
+
+    pub fn completed(&self) -> usize {
+        self.outcomes.iter().map(|o| o.completed).sum()
+    }
+
+    /// Bit-exact digest of every world's response stream, in world
+    /// order — the shard-identity comparison key.
+    pub fn fingerprint(&self) -> String {
+        let parts: Vec<String> = self.outcomes.iter().map(|o| o.stats.fingerprint()).collect();
+        parts.join("|")
+    }
+
+    /// All Sort response moments merged across worlds (exact Chan/Welford
+    /// combination — see [`StreamingStats::merge`]).
+    pub fn sort_stats(&self) -> StreamingStats {
+        let mut acc = StreamingStats::default();
+        for o in &self.outcomes {
+            acc.merge(&o.stats.sort);
+        }
+        acc
+    }
+
+    /// All Eigen response moments merged across worlds.
+    pub fn eigen_stats(&self) -> StreamingStats {
+        let mut acc = StreamingStats::default();
+        for o in &self.outcomes {
+            acc.merge(&o.stats.eigen);
+        }
+        acc
+    }
+
+    /// Per-world scaler spec labels in world (== service) order.
+    pub fn spec_labels(&self) -> Vec<String> {
+        self.outcomes.iter().map(|o| o.spec_label.clone()).collect()
+    }
+
+    /// Prediction MSEs of the PPA worlds that made predictions.
+    pub fn prediction_mses(&self) -> Vec<f64> {
+        self.outcomes.iter().filter_map(|o| o.prediction_mse).collect()
+    }
+
+    /// All RIR samples merged by time (stable: equal-time samples keep
+    /// world order, matching the monolith's per-scrape service order).
+    pub fn rir_log(&self) -> Vec<RirSample> {
+        let mut all: Vec<RirSample> = self
+            .outcomes
+            .iter()
+            .flat_map(|o| o.rir_log.iter().copied())
+            .collect();
+        all.sort_by_key(|s| s.time);
+        all
+    }
+
+    /// All replica samples merged by time (stable, world order on ties).
+    pub fn replica_log(&self) -> Vec<(Time, ServiceId, usize)> {
+        let mut all: Vec<(Time, ServiceId, usize)> = self
+            .outcomes
+            .iter()
+            .flat_map(|o| o.replica_log.iter().copied())
+            .collect();
+        all.sort_by_key(|&(t, _, _)| t);
+        all
+    }
+
+    /// All autoscaler decisions merged by time (stable, world order on
+    /// ties). Empty unless the run had `record_decisions`.
+    pub fn decision_log(&self) -> Vec<DecisionRecord> {
+        let mut all: Vec<DecisionRecord> = self
+            .outcomes
+            .iter()
+            .flat_map(|o| o.decision_log.iter().cloned())
+            .collect();
+        all.sort_by_key(|d| d.time);
+        all
+    }
+}
+
+/// Run `cfg` sharded: partition into zone worlds, group them onto
+/// `spec.shards` workers, and advance everything in lockstep windows of
+/// the conservative lookahead, exchanging edge→cloud forwards at the
+/// barriers. `make_scaler` is called once per world with the *global*
+/// service index (== world index) and runs entirely on that world's
+/// thread, so non-`Send` autoscalers are fine.
+pub fn run_sharded(
+    cfg: &ClusterConfig,
+    generators: Vec<Generator>,
+    make_scaler: &(dyn Fn(usize) -> Box<dyn Autoscaler> + Sync),
+    spec: &ShardSpec,
+) -> crate::Result<ShardedRun> {
+    let plans = partition_worlds(cfg)?;
+    let window = spec
+        .costs
+        .network_latency
+        .saturating_add(spec.costs.forward_latency);
+    if window == 0 {
+        bail!(
+            "sharded mode needs network_latency + forward_latency > 0 \
+             (the conservative lookahead window)"
+        );
+    }
+    let shards = spec.shards.max(1);
+    let n_worlds = plans.len();
+    let cloud_world = n_worlds - 1;
+
+    // Bucket generators per zone world, preserving their relative order
+    // (the bucketing depends only on zones, never on the shard count).
+    let mut gen_buckets: Vec<Vec<Generator>> = (0..n_worlds).map(|_| Vec::new()).collect();
+    for g in generators {
+        match plans.iter().position(|p| p.zone == Some(g.zone())) {
+            Some(w) => gen_buckets[w].push(g),
+            None => bail!(
+                "generator targets zone {} but no edge deployment covers it",
+                g.zone()
+            ),
+        }
+    }
+
+    // Round-robin the edge worlds over workers; the cloud world lives on
+    // worker 0, which also owns the barrier merge. The grouping affects
+    // only load balance — results are grouping-independent.
+    let mut ingredients: Vec<Option<(WorldPlan, Vec<Generator>)>> =
+        plans.into_iter().zip(gen_buckets).map(Some).collect();
+    let mut bundles: Vec<Vec<(usize, WorldPlan, Vec<Generator>)>> =
+        (0..shards).map(|_| Vec::new()).collect();
+    for w in 0..cloud_world {
+        if let Some((plan, gens)) = ingredients[w].take() {
+            bundles[w % shards].push((w, plan, gens));
+        }
+    }
+    if let Some((plan, gens)) = ingredients[cloud_world].take() {
+        bundles[0].push((cloud_world, plan, gens));
+    }
+
+    let end = spec.end;
+    let barrier = Barrier::new(shards);
+    // One forward slot per edge world, written by its owning worker
+    // during the window, drained by worker 0 between the two barrier
+    // waits — concatenation order is world order, never worker order.
+    let slots: Vec<Mutex<Vec<ForwardedTask>>> =
+        (0..cloud_world).map(|_| Mutex::new(Vec::new())).collect();
+
+    let per_worker = std::thread::scope(|scope| -> crate::Result<Vec<Vec<WorldOutcome>>> {
+        let mut handles = Vec::with_capacity(shards);
+        for (worker, bundle) in bundles.into_iter().enumerate() {
+            let barrier = &barrier;
+            let slots = &slots;
+            handles.push(scope.spawn(move || -> Vec<WorldOutcome> {
+                // Worlds are built (and dropped) on their own thread.
+                let mut worlds: Vec<ZoneWorld> = bundle
+                    .into_iter()
+                    .map(|(w, plan, gens)| {
+                        ZoneWorld::build(&plan, w, gens, make_scaler(w), spec)
+                    })
+                    .collect();
+                if spec.record_decisions {
+                    for wld in &mut worlds {
+                        wld.log_decisions = true;
+                    }
+                }
+                let mut batch: Vec<ForwardedTask> = Vec::new();
+                let mut t: Time = 0;
+                while t < end {
+                    let t_next = t.saturating_add(window).min(end);
+                    for wld in &mut worlds {
+                        wld.run_window(t_next);
+                        if wld.zone.is_some() {
+                            let fwds = wld.app.take_forwards();
+                            if !fwds.is_empty() {
+                                let mut slot = match slots[wld.world].lock() {
+                                    Ok(s) => s,
+                                    Err(poisoned) => poisoned.into_inner(),
+                                };
+                                slot.extend(fwds);
+                            }
+                        }
+                    }
+                    barrier.wait();
+                    if worker == 0 {
+                        for slot in slots.iter() {
+                            let mut s = match slot.lock() {
+                                Ok(s) => s,
+                                Err(poisoned) => poisoned.into_inner(),
+                            };
+                            batch.append(&mut s);
+                        }
+                        // Stable: equal (submitted, zone) pairs — always
+                        // from the same world — keep their submit order.
+                        batch.sort_by_key(|f| (f.submitted, f.origin_zone));
+                        if let Some(cloud) =
+                            worlds.iter_mut().find(|wld| wld.zone.is_none())
+                        {
+                            for f in batch.drain(..) {
+                                cloud.app.deliver_forward(f, &mut cloud.queue);
+                            }
+                        }
+                    }
+                    barrier.wait();
+                    t = t_next;
+                }
+                worlds.into_iter().map(ZoneWorld::finish).collect()
+            }));
+        }
+        let mut per_worker = Vec::with_capacity(shards);
+        for h in handles {
+            match h.join() {
+                Ok(v) => per_worker.push(v),
+                Err(_) => bail!("a shard worker panicked"),
+            }
+        }
+        Ok(per_worker)
+    })?;
+
+    let mut slots_out: Vec<Option<WorldOutcome>> = (0..n_worlds).map(|_| None).collect();
+    for outcomes in per_worker {
+        for o in outcomes {
+            let w = o.world;
+            slots_out[w] = Some(o);
+        }
+    }
+    let mut ordered = Vec::with_capacity(n_worlds);
+    for (w, o) in slots_out.into_iter().enumerate() {
+        match o {
+            Some(o) => ordered.push(o),
+            None => bail!("world {w} produced no outcome"),
+        }
+    }
+    Ok(ShardedRun {
+        outcomes: ordered,
+        window,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autoscaler::Hpa;
+    use crate::config::{paper_cluster, quickstart_cluster};
+    use crate::sim::MIN;
+    use crate::workload::RandomAccessGen;
+
+    #[test]
+    fn partition_paper_topology() {
+        let cfg = paper_cluster();
+        let plans = partition_worlds(&cfg).unwrap();
+        assert_eq!(plans.len(), 3, "z1, z2, cloud");
+        assert_eq!(plans[0].zone, Some(1));
+        assert_eq!(plans[1].zone, Some(2));
+        assert_eq!(plans[2].zone, None);
+        // 7 nodes: 2 per edge zone, control + 2 cloud workers left over.
+        assert_eq!(plans[0].cfg.nodes.len(), 2);
+        assert_eq!(plans[1].cfg.nodes.len(), 2);
+        assert_eq!(plans[2].cfg.nodes.len(), 3);
+        assert!(plans.iter().all(|p| p.cfg.deployments.len() == 1));
+        // The split is exact: every node lands in exactly one world.
+        let total: usize = plans.iter().map(|p| p.cfg.nodes.len()).sum();
+        assert_eq!(total, cfg.nodes.len());
+    }
+
+    #[test]
+    fn partition_rejects_single_deployment() {
+        let mut cfg = quickstart_cluster();
+        cfg.deployments.truncate(1);
+        assert!(partition_worlds(&cfg).is_err());
+    }
+
+    fn spec(shards: usize, seed: u64, end: Time) -> ShardSpec {
+        ShardSpec {
+            shards,
+            core: CoreKind::Calendar,
+            seed,
+            costs: TaskCosts::default(),
+            end,
+            record_decisions: true,
+        }
+    }
+
+    /// Satellite: a forward submitted exactly at a barrier tick arrives
+    /// exactly ON the next barrier tick and is processed in the window
+    /// that tick closes (`pop_due` is inclusive) — the boundary case of
+    /// the conservative-lookahead argument.
+    #[test]
+    fn forward_on_barrier_edge_lands_on_next_barrier_tick() {
+        let costs = TaskCosts::default();
+        let window = costs.network_latency + costs.forward_latency;
+        let cfg = quickstart_cluster();
+        let plans = partition_worlds(&cfg).unwrap();
+        let sp = spec(1, 9, 10 * window);
+        let cloud_plan = plans.last().unwrap();
+        let mut cloud = ZoneWorld::build(
+            cloud_plan,
+            plans.len() - 1,
+            Vec::new(),
+            Box::new(Hpa::with_defaults()),
+            &sp,
+        );
+        // Window 1 passes with nothing due (first pod/scrape ticks are
+        // seconds away; the window is 60 ms).
+        cloud.run_window(window);
+        assert_eq!(cloud.events, 0);
+        // Barrier 1: a forward submitted exactly at T_1 = window (it was
+        // popped by its edge world in window 1, whose pop_due(T_1) is
+        // inclusive) is delivered...
+        cloud.app.deliver_forward(
+            ForwardedTask {
+                origin_zone: 1,
+                submitted: window,
+            },
+            &mut cloud.queue,
+        );
+        // ...arriving exactly ON the next barrier tick T_2 = 2·window,
+        assert_eq!(cloud.queue.peek_time(), Some(2 * window));
+        assert_eq!(cloud.app.services[0].counters.arrivals, 1);
+        // ...and window 2 (inclusive of its closing tick) processes it.
+        cloud.run_window(2 * window);
+        assert_eq!(cloud.events, 1, "arrival must pop in the window its tick closes");
+    }
+
+    fn sharded_quickstart(shards: usize, seed: u64) -> ShardedRun {
+        let cfg = quickstart_cluster();
+        let gens = vec![Generator::RandomAccess(RandomAccessGen::new(1))];
+        run_sharded(
+            &cfg,
+            gens,
+            &|_| Box::new(Hpa::with_defaults()),
+            &spec(shards, seed, 6 * MIN),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn shard_counts_are_bit_identical_on_quickstart() {
+        let one = sharded_quickstart(1, 42);
+        let two = sharded_quickstart(2, 42);
+        let four = sharded_quickstart(4, 42);
+        assert!(one.events() > 100, "world should be busy: {}", one.events());
+        assert!(one.completed() > 10);
+        let cloud = one.outcomes.last().unwrap();
+        assert!(
+            cloud.stats.eigen.n() > 0,
+            "cloud pool must serve forwarded Eigen tasks"
+        );
+        let decisions = |r: &ShardedRun| -> Vec<(Time, ServiceId, usize, bool)> {
+            r.decision_log()
+                .iter()
+                .map(|d| (d.time, d.service, d.desired, d.used_fallback))
+                .collect()
+        };
+        assert!(!decisions(&one).is_empty());
+        for other in [&two, &four] {
+            assert_eq!(one.fingerprint(), other.fingerprint(), "response streams");
+            assert_eq!(one.events(), other.events(), "event counts");
+            assert_eq!(one.completed(), other.completed());
+            assert_eq!(decisions(&one), decisions(other), "decision logs");
+            assert_eq!(one.rir_log().len(), other.rir_log().len());
+        }
+        // Different seeds must differ (the invariance is not vacuous).
+        let other_seed = sharded_quickstart(2, 43);
+        assert_ne!(one.fingerprint(), other_seed.fingerprint());
+    }
+
+    #[test]
+    fn sharded_run_is_core_invariant() {
+        let cfg = quickstart_cluster();
+        let run_on = |core: CoreKind| {
+            let gens = vec![Generator::RandomAccess(RandomAccessGen::new(1))];
+            let sp = ShardSpec {
+                core,
+                ..spec(2, 7, 4 * MIN)
+            };
+            run_sharded(&cfg, gens, &|_| Box::new(Hpa::with_defaults()), &sp).unwrap()
+        };
+        let cal = run_on(CoreKind::Calendar);
+        let heap = run_on(CoreKind::Heap);
+        assert_eq!(cal.fingerprint(), heap.fingerprint());
+        assert_eq!(cal.events(), heap.events());
+    }
+
+    #[test]
+    fn unknown_generator_zone_rejected() {
+        let cfg = quickstart_cluster();
+        let gens = vec![Generator::RandomAccess(RandomAccessGen::new(9))];
+        let err = run_sharded(
+            &cfg,
+            gens,
+            &|_| Box::new(Hpa::with_defaults()),
+            &spec(2, 1, MIN),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("zone 9"), "{err}");
+    }
+
+    #[test]
+    fn zero_lookahead_rejected() {
+        let cfg = quickstart_cluster();
+        let mut sp = spec(2, 1, MIN);
+        sp.costs.network_latency = 0;
+        sp.costs.forward_latency = 0;
+        let err = run_sharded(&cfg, Vec::new(), &|_| Box::new(Hpa::with_defaults()), &sp)
+            .unwrap_err();
+        assert!(format!("{err}").contains("lookahead"), "{err}");
+    }
+
+    #[test]
+    fn more_shards_than_worlds_is_fine() {
+        // 2 worlds on 8 workers: idle workers still hit every barrier.
+        let eight = sharded_quickstart(8, 42);
+        let one = sharded_quickstart(1, 42);
+        assert_eq!(one.fingerprint(), eight.fingerprint());
+    }
+}

@@ -86,6 +86,42 @@ impl Generator {
             Generator::Rate(g) => g.zone,
         }
     }
+
+    /// Delay before this generator's first tick (0 for un-staggered
+    /// generators).
+    pub fn start_delay(&self) -> Time {
+        match self {
+            Generator::RandomAccess(_) => 0,
+            Generator::Trace(g) => g.start_delay,
+            Generator::Rate(g) => g.start_delay,
+        }
+    }
+}
+
+/// Start every generator, batching consecutive equal-delay runs through
+/// [`EventQueue::schedule_in_batch`] — one wheel insert per run instead
+/// of one per generator (a measured win on city topologies, where all N
+/// zones of a step-carpet or diurnal preset start together).
+///
+/// Only *consecutive* generators are grouped, so the `(delay, index)`
+/// schedule order — and with it every event `seq` — stays byte-identical
+/// to calling [`Generator::start`] in a loop.
+pub fn start_all(generators: &[Generator], queue: &mut EventQueue) {
+    let mut i = 0;
+    while i < generators.len() {
+        let delay = generators[i].start_delay();
+        let mut j = i + 1;
+        while j < generators.len() && generators[j].start_delay() == delay {
+            j += 1;
+        }
+        queue.schedule_in_batch(
+            delay,
+            (i..j).map(|g| Event::WorkloadTick {
+                generator: g as u32,
+            }),
+        );
+        i = j;
+    }
 }
 
 /// Shared task-mix draw (Algorithm 2's 0.9/0.1 Sort/Eigen split).
@@ -402,6 +438,41 @@ mod tests {
             arrivals.iter().all(|&t| t >= 5 * MIN && t <= 8 * MIN + crate::sim::SEC),
             "arrivals must land in the staggered window"
         );
+    }
+
+    #[test]
+    fn start_all_matches_sequential_starts() {
+        // Mixed stagger pattern: [0, 0, 2m, 2m, 0] — two batchable runs
+        // plus a trailing singleton that must NOT be grouped with the
+        // leading zeros (grouping non-consecutive delays would reorder
+        // seqs).
+        let counts = Arc::new(vec![60.0; 3]);
+        let build = || -> Vec<Generator> {
+            vec![
+                Generator::RandomAccess(RandomAccessGen::new(1)),
+                Generator::RandomAccess(RandomAccessGen::new(2)),
+                Generator::Trace(TraceGen::new(1, counts.clone(), 1.0).with_start_delay(2 * MIN)),
+                Generator::Trace(TraceGen::new(2, counts.clone(), 1.0).with_start_delay(2 * MIN)),
+                Generator::RandomAccess(RandomAccessGen::new(1)),
+            ]
+        };
+        let mut seq_q = EventQueue::new();
+        for (i, g) in build().iter_mut().enumerate() {
+            g.start(i as u32, &mut seq_q);
+        }
+        let mut batch_q = EventQueue::new();
+        start_all(&build(), &mut batch_q);
+        let drain = |mut q: EventQueue| -> Vec<(Time, u32)> {
+            std::iter::from_fn(|| q.pop())
+                .map(|(t, e)| match e {
+                    Event::WorkloadTick { generator } => (t, generator),
+                    _ => unreachable!(),
+                })
+                .collect()
+        };
+        let seq = drain(seq_q);
+        assert_eq!(seq.len(), 5);
+        assert_eq!(seq, drain(batch_q));
     }
 
     #[test]

@@ -328,6 +328,49 @@ pub fn fine() -> u64 {
 "##,
         expect: &[],
     },
+    // ---- Sharded engine (sim/shard.rs is inside SIM_SCOPE + HOT_SCOPE) ----
+    Fixture {
+        // Cross-shard exchange machinery — `Mutex`, `Barrier`, poison
+        // recovery — is deterministic plumbing, not a banned source;
+        // none of D1/D2/P1 may fire on it (the false-positive case the
+        // sharded engine's barrier loop would otherwise trip).
+        name: "d1_shard_channel_clean",
+        path: "rust/src/sim/shard.rs",
+        src: r##"
+use std::sync::{Barrier, Mutex};
+
+pub fn exchange(slots: &[Mutex<Vec<u64>>], barrier: &Barrier) -> Vec<u64> {
+    barrier.wait();
+    let mut merged = Vec::new();
+    for slot in slots {
+        let mut batch = match slot.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        merged.append(&mut batch);
+    }
+    barrier.wait();
+    merged
+}
+"##,
+        expect: &[],
+    },
+    Fixture {
+        // …but the hot-path panic ban still applies there: the idiomatic
+        // `.lock().unwrap()` is exactly the poison-propagating panic the
+        // engine must avoid.
+        name: "p1_shard_unwrap_fires",
+        path: "rust/src/sim/shard.rs",
+        src: r##"
+use std::sync::Mutex;
+
+pub fn drain(slot: &Mutex<Vec<u64>>) -> Vec<u64> {
+    let mut batch = slot.lock().unwrap();
+    std::mem::take(&mut batch)
+}
+"##,
+        expect: &["P1"],
+    },
 ];
 
 /// Run the whole corpus; `Err` lists every mismatching fixture.

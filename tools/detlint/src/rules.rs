@@ -93,7 +93,11 @@ const SIM_SCOPE: &[&str] = &[
     "rust/src/util/",
 ];
 
-/// The arrival→complete hot path (P1).
+/// The arrival→complete hot path (P1). The `rust/src/sim/` prefix
+/// covers the sharded engine (`sim/shard.rs`) too: its cross-shard
+/// channels (`Mutex`, `Barrier`, scoped threads) are not banned tokens,
+/// but its lock handling must stay panic-free — poisoned locks are
+/// recovered with `into_inner`, never `.lock().unwrap()`.
 const HOT_SCOPE: &[&str] = &["rust/src/sim/", "rust/src/app/", "rust/src/cluster/"];
 
 /// Nondeterministic randomness identifiers (anything outside `util::rng`).
