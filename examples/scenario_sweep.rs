@@ -14,6 +14,7 @@
 //! ```
 
 use ppa_edge::autoscaler::{MetricSource, MetricSpec, ScalerPolicy, ScalerRegistry};
+use ppa_edge::cluster::FaultPlan;
 use ppa_edge::config::Topology;
 use ppa_edge::experiments::{run_sweep, AutoscalerKind, SweepConfig};
 use ppa_edge::report;
@@ -65,6 +66,7 @@ fn main() -> anyhow::Result<()> {
         core: CoreKind::Calendar,
         fleet,
         shards: 0, // monolith engine; >=1 selects the sharded cores
+        chaos: FaultPlan::none(), // see `--chaos` on the ppa-edge binary for faulted sweeps
     };
     println!(
         "scenario sweep: {} scenarios x {} autoscalers x {} seeds on {} ({} sim-minutes per cell)",

@@ -12,11 +12,12 @@
 //! (or set `BENCH_QUICK=1`) for the CI smoke mode with slashed
 //! iteration counts and shorter simulated horizons.
 //!
-//! Emits a machine-readable `BENCH_hotpath.json` (schema 4: events/sec
+//! Emits a machine-readable `BENCH_hotpath.json` (schema 5: events/sec
 //! per core, ns/scrape, ns/dispatch and ns/`max_replicas` per query
 //! mode, cells/sec, city-50 burst events/sec per mode, sharded city-50
 //! events/sec per shard count with `shard_speedup_2`/`shard_speedup_4`,
-//! peak-alloc bytes, speedups, and a `quick` marker) so the perf
+//! a full-storm faulted city-50 cell with its chaos-plane overhead
+//! ratio, peak-alloc bytes, speedups, and a `quick` marker) so the perf
 //! trajectory is tracked across PRs. Quick runs write
 //! `BENCH_hotpath.quick.json` instead, so smoke numbers never clobber
 //! the tracked artifact — and when a tracked `BENCH_hotpath.json`
@@ -32,7 +33,7 @@ use bench_common::{print_header, run};
 use ppa_edge::app::{App, TaskCosts, TaskType};
 use ppa_edge::autoscaler::{Autoscaler, Hpa};
 use ppa_edge::cluster::{
-    Cluster, Deployment, NodeSpec, PodPhase, PodSpec, QueryMode, Selector, Tier,
+    Cluster, Deployment, FaultPlan, NodeSpec, PodPhase, PodSpec, QueryMode, Selector, Tier,
 };
 use ppa_edge::config::{
     city_scenario_presets, paper_cluster, quickstart_cluster, ClusterConfig, Topology,
@@ -371,6 +372,7 @@ fn bench_scrape() -> (f64, f64, f64) {
     let city = Topology::EdgeCity {
         zones: 50,
         workers_per_zone: 2,
+        mix: Default::default(),
     };
     let mut world = SimWorld::build(&city.cluster(), TaskCosts::default(), 7);
     let presets = city_scenario_presets(50);
@@ -510,6 +512,7 @@ fn bench_sweep_cells() -> f64 {
     let topo = Topology::EdgeCity {
         zones: 8,
         workers_per_zone: 2,
+        mix: Default::default(),
     };
     let cluster = topo.cluster();
     let label = topo.label();
@@ -529,6 +532,7 @@ fn bench_sweep_cells() -> f64 {
             minutes,
             CoreKind::Calendar,
             0,
+            &FaultPlan::none(),
         );
     });
     let cells_per_sec = 1e6 / r.mean_us;
@@ -545,6 +549,7 @@ fn bench_city50_cell() -> (f64, f64, usize, usize, usize) {
     let topo = Topology::EdgeCity {
         zones: 50,
         workers_per_zone: 2,
+        mix: Default::default(),
     };
     let cluster = topo.cluster();
     let label = topo.label();
@@ -570,6 +575,7 @@ fn bench_city50_cell() -> (f64, f64, usize, usize, usize) {
                 minutes,
                 core,
                 0,
+                &FaultPlan::none(),
             );
             events = cell.metrics.events;
         });
@@ -587,6 +593,7 @@ fn bench_city50_cell() -> (f64, f64, usize, usize, usize) {
             minutes,
             core,
             0,
+            &FaultPlan::none(),
         );
         peaks.push(peak_bytes());
     }
@@ -690,6 +697,7 @@ fn bench_max_replicas() -> (f64, f64) {
     let topo = Topology::EdgeCity {
         zones: 50,
         workers_per_zone: 2,
+        mix: Default::default(),
     };
     let (mut cluster, ids) = topo.cluster().build();
     let mut q = EventQueue::new();
@@ -734,6 +742,7 @@ fn bench_city50_burst() -> (f64, f64) {
     let topo = Topology::EdgeCity {
         zones: 50,
         workers_per_zone: 2,
+        mix: Default::default(),
     };
     let cfg = topo.cluster();
     let scenario = Scenario::FlashCrowd {
@@ -791,6 +800,7 @@ fn bench_city50_sharded() -> (f64, f64, f64) {
     let topo = Topology::EdgeCity {
         zones: 50,
         workers_per_zone: 2,
+        mix: Default::default(),
     };
     let cfg = topo.cluster();
     let presets = city_scenario_presets(50);
@@ -809,6 +819,7 @@ fn bench_city50_sharded() -> (f64, f64, f64) {
             costs: TaskCosts::default(),
             end: minutes * MIN,
             record_decisions: false,
+            chaos: FaultPlan::none(),
         };
         let mut events = 0u64;
         let mut fp = String::new();
@@ -841,9 +852,66 @@ fn bench_city50_sharded() -> (f64, f64, f64) {
     (s1, s2, s4)
 }
 
+/// The chaos-plane cell: the city-50 flash-mosaic cell under the
+/// `full-storm` preset (node crashes + rescheduling, cold-start
+/// inflation, crash-loops, net delay) on the monolith engine. Asserts
+/// faults actually fired and repeats reproduce bit-identically, and
+/// returns faulted events/sec — `cell50_chaos_overhead` in the JSON is
+/// the fault-free/faulted rate ratio, tracking what the chaos plane
+/// costs when it IS armed (the none-plan case is covered by the
+/// golden-equivalence suite: exactly zero).
+fn bench_city50_faulted() -> f64 {
+    print_header("city-50 faulted cell: full-storm chaos preset (3 sim-minutes)");
+    let topo = Topology::EdgeCity {
+        zones: 50,
+        workers_per_zone: 2,
+        mix: Default::default(),
+    };
+    let cluster = topo.cluster();
+    let label = topo.label();
+    let presets = city_scenario_presets(50);
+    let (name, scenario) = &presets[1]; // city50-flash-mosaic
+    let plan = ppa_edge::config::chaos_preset("full-storm").expect("preset exists");
+    let minutes = sim_minutes(3);
+
+    let mut events = 0u64;
+    let mut fingerprint = String::new();
+    let mut crashes = 0u64;
+    let r = run("run_cell city-50 full-storm", iters(1), iters(3), || {
+        let cell = run_cell(
+            &label,
+            &cluster,
+            name,
+            scenario,
+            AutoscalerKind::Hpa,
+            None,
+            3,
+            minutes,
+            CoreKind::Calendar,
+            0,
+            &plan,
+        );
+        events = cell.metrics.events;
+        crashes = cell.metrics.crashes;
+        if fingerprint.is_empty() {
+            fingerprint = cell.metrics.fingerprint();
+        } else {
+            assert_eq!(
+                fingerprint,
+                cell.metrics.fingerprint(),
+                "faulted city-50 cell must reproduce bit-identically"
+            );
+        }
+    });
+    assert!(crashes > 0, "full-storm injected no crashes into the city-50 cell");
+    let rate = events as f64 / (r.mean_us / 1e6);
+    println!("  -> {rate:.0} ev/s under the storm ({crashes} node crashes)");
+    rate
+}
+
 fn write_bench_json(entries: &[(&str, f64)]) {
     let mut o = BTreeMap::new();
-    o.insert("schema".to_string(), Json::Num(4.0));
+    o.insert("schema".to_string(), Json::Num(5.0));
     o.insert("quick".to_string(), Json::Bool(quick()));
     for &(k, v) in entries {
         let value = if v.is_finite() { Json::Num(v) } else { Json::Null };
@@ -884,6 +952,7 @@ fn main() {
         bench_city50_cell();
     let (burst_indexed, burst_scan) = bench_city50_burst();
     let (shard1, shard2, shard4) = bench_city50_sharded();
+    let cell50_faulted = bench_city50_faulted();
     let entries = [
         ("events_per_sec", events_per_sec),
         ("queue_events_per_sec_calendar", queue_cal),
@@ -914,6 +983,8 @@ fn main() {
         ("cell50_sharded_events_per_sec_4", shard4),
         ("shard_speedup_2", shard2 / shard1),
         ("shard_speedup_4", shard4 / shard1),
+        ("cell50_faulted_events_per_sec", cell50_faulted),
+        ("cell50_chaos_overhead", cell50_cal / cell50_faulted),
     ];
     write_bench_json(&entries);
     check_quick_regressions(&entries);

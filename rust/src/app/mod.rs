@@ -43,7 +43,7 @@ mod request;
 pub use arena::RequestArena;
 pub use request::{Request, ResponseRecord, TaskType};
 
-use crate::cluster::{Cluster, PodPhase};
+use crate::cluster::{Cluster, NetChaos, PodPhase};
 use crate::sim::{Event, EventQueue, PodId, RequestId, ServiceId, Time, MS};
 use crate::stats::StreamingStats;
 use crate::util::rng::Pcg64;
@@ -198,6 +198,12 @@ pub struct App {
     /// Exact completed-request log — `None` (off) by default; enabled by
     /// [`App::retain_responses`] for harnesses that need full traces.
     response_log: Option<Vec<ResponseRecord>>,
+    /// Chaos plane: extra edge→cloud delay drawn per Eigen forward.
+    /// `None` (the default) leaves the forward path untouched. In the
+    /// sharded engine only the cloud world installs this — the edge
+    /// shards intercept Eigen submits into the outbox without a draw,
+    /// so the draw order is the (shard-count-invariant) merge order.
+    net_chaos: Option<NetChaos>,
 }
 
 impl App {
@@ -242,6 +248,7 @@ impl App {
             forward_outbox: None,
             stats: ResponseStats::default(),
             response_log: None,
+            net_chaos: None,
         }
     }
 
@@ -275,6 +282,7 @@ impl App {
             forward_outbox: Some(Vec::new()),
             stats: ResponseStats::default(),
             response_log: None,
+            net_chaos: None,
         }
     }
 
@@ -297,6 +305,7 @@ impl App {
             forward_outbox: None,
             stats: ResponseStats::default(),
             response_log: None,
+            net_chaos: None,
         }
     }
 
@@ -325,11 +334,24 @@ impl App {
         });
         self.services[service.0 as usize].counters.arrivals += 1;
         self.services[service.0 as usize].counters.net_in_bytes += EIGEN_IN;
-        let latency = self.costs.network_latency + self.costs.forward_latency;
+        let mut latency = self.costs.network_latency + self.costs.forward_latency;
+        if let Some(nc) = &mut self.net_chaos {
+            // Extra delay ≥ 0 only pushes the arrival later, so the
+            // barrier protocol's future-window guarantee still holds.
+            latency = latency.saturating_add(nc.draw_extra());
+        }
         queue.schedule_at(
             fwd.submitted.saturating_add(latency),
             Event::RequestArrival { request_id: id },
         );
+    }
+
+    /// Install (or clear) the chaos-plane extra forward delay. `None`
+    /// (the default) keeps the forward path bit-identical to fault-free
+    /// runs. Monolith worlds install it unconditionally; sharded runs
+    /// install it only on the cloud world (see the field docs).
+    pub fn set_net_chaos(&mut self, chaos: Option<NetChaos>) {
+        self.net_chaos = chaos;
     }
 
     /// Turn on the exact per-request log (unbounded memory — for the
@@ -388,7 +410,7 @@ impl App {
                 return RequestId::new(u32::MAX, u32::MAX);
             }
         }
-        let (service, latency, bytes_in) = match task {
+        let (service, mut latency, bytes_in) = match task {
             TaskType::Sort => {
                 // detlint: allow(P1) — an unknown zone is a config-construction bug; fail loudly at the ingress boundary instead of silently misrouting traffic
                 let svc = self
@@ -405,6 +427,12 @@ impl App {
                 EIGEN_IN,
             ),
         };
+        if task == TaskType::Eigen {
+            if let Some(nc) = &mut self.net_chaos {
+                // Monolith-only: chaos on the edge→cloud forward hop.
+                latency = latency.saturating_add(nc.draw_extra());
+            }
+        }
         let id = self.in_flight.insert(Request {
             task,
             origin_zone: zone,
@@ -500,6 +528,14 @@ impl App {
         rng: &mut Pcg64,
     ) {
         let now = queue.now();
+        // Stale-event guard: if this pod is no longer servicing this
+        // request (its node crashed and the request was re-queued under
+        // a fresh handle, or the slot was recycled), drop the event. On
+        // the fault-free path the pod always holds exactly this request
+        // here, so the guard never fires there.
+        if cluster.pod(pid).current_request != Some(request_id) {
+            return;
+        }
         // Through the cluster so the idle-pod set re-admits the pod.
         let finished = cluster.finish_service(pid, now);
         debug_assert_eq!(finished, Some(request_id));
@@ -530,6 +566,36 @@ impl App {
             // Keep the queue moving — even when this pod is draining,
             // another pod may be idle.
             self.dispatch(req.service, cluster, queue, rng);
+        }
+    }
+
+    /// Re-queue requests orphaned by a node crash: each orphan is
+    /// removed from the arena (its old handle — and any in-queue
+    /// `ServiceComplete` carrying it — goes stale) and re-inserted
+    /// under a fresh generational handle at the back of its service's
+    /// queue, keeping the original `created` stamp so the response time
+    /// includes the outage. Touched services are then re-dispatched.
+    pub fn requeue_orphans(
+        &mut self,
+        orphans: &[RequestId],
+        cluster: &mut Cluster,
+        queue: &mut EventQueue,
+        rng: &mut Pcg64,
+    ) {
+        let mut touched: Vec<ServiceId> = Vec::new();
+        for &old in orphans {
+            let Some(req) = self.in_flight.remove(old) else {
+                continue; // already stale (double-crash paranoia)
+            };
+            let service = req.service;
+            let fresh = self.in_flight.insert(req);
+            self.services[service.0 as usize].queue.push_back(fresh);
+            if !touched.contains(&service) {
+                touched.push(service);
+            }
+        }
+        for service in touched {
+            self.dispatch(service, cluster, queue, rng);
         }
     }
 

@@ -1,0 +1,639 @@
+//! Deterministic fault injection — the chaos plane.
+//!
+//! A [`FaultPlan`] is a copyable grid-axis descriptor (like
+//! `workload::Scenario`): it *describes* which fault classes a run
+//! injects, while every concrete fault timing is derived from the cell
+//! seed through dedicated RNG streams at install time. The plan itself
+//! never draws randomness, so an empty plan is a strict no-op — zero
+//! extra RNG draws, zero extra events — and a faulted run is
+//! bit-reproducible across runs, worker-thread counts, and shard counts
+//! (see DESIGN.md §Chaos plane).
+//!
+//! # RNG stream layout
+//!
+//! Chaos never touches the engine streams (monolith 1/2/3, sharded
+//! `shard_stream(world, role)`). Each world draws its fault randomness
+//! from three dedicated streams keyed by the world index (0 for the
+//! monolith):
+//!
+//! * [`chaos_schedule_stream`] — the node crash/rejoin schedule, drawn
+//!   entirely at install time (absolute-time events, one pass per node
+//!   in ascending node order).
+//! * [`chaos_pod_stream`] — cold-start / crash-loop perturbation of the
+//!   container-init delay, drawn once per successful placement in
+//!   `Cluster::try_place` (placements happen in event order, so the
+//!   draw sequence is deterministic).
+//! * [`chaos_net_stream`] — extra edge→cloud network delay, drawn once
+//!   per Eigen forward in submit order (monolith) or barrier-merge
+//!   order (cloud shard world — the merge order is shard-count
+//!   invariant).
+//!
+//! # Fault classes
+//!
+//! * **Node crash / rejoin** ([`NodeCrashPlan`]): per-node renewal
+//!   process — exponential up-gaps, uniform outage lengths. A crashed
+//!   node leaves every matching-node cache (the scheduler stops seeing
+//!   it), its pods are killed through the `set_phase` nexus, and their
+//!   in-flight requests are re-queued with fresh generational handles.
+//! * **Cold start / crash loop** ([`ColdStartPlan`] /
+//!   [`CrashLoopPlan`]): multiplies or extends the `PodRunning` init
+//!   delay — the reactive-lag window proactive scaling attacks.
+//! * **Network delay** ([`NetDelayPlan`]): uniform extra one-way delay
+//!   on the edge→cloud Eigen forward path.
+
+use super::{Cluster, DeploymentId, PodPhase, Tier};
+use crate::sim::{Event, EventQueue, NodeId, RequestId, Time};
+use crate::stats::StreamingStats;
+use crate::util::rng::Pcg64;
+
+/// Node crash/rejoin schedule parameters: each eligible node alternates
+/// exponential(mean `mean_gap`) up-time with uniform
+/// `[outage_min, outage_max]` outages.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeCrashPlan {
+    /// Mean up-time between crashes per node.
+    pub mean_gap: Time,
+    /// Outage length bounds (inclusive).
+    pub outage_min: Time,
+    pub outage_max: Time,
+    /// Whether cloud-tier nodes crash too (edge nodes always do).
+    pub cloud: bool,
+}
+
+/// Cold-start perturbation: with probability `slow_prob` a placement's
+/// init delay is multiplied by uniform `[factor_min, factor_max]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ColdStartPlan {
+    pub slow_prob: f64,
+    pub factor_min: f64,
+    pub factor_max: f64,
+}
+
+/// Crash-loop perturbation: each restart attempt (up to `max_restarts`)
+/// independently fails with probability `prob`, adding one more full
+/// init delay before the pod comes up.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrashLoopPlan {
+    pub prob: f64,
+    pub max_restarts: u32,
+}
+
+/// Extra one-way delay on each edge→cloud Eigen forward, uniform in
+/// `[extra_min, extra_max]` (inclusive).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetDelayPlan {
+    pub extra_min: Time,
+    pub extra_max: Time,
+}
+
+/// Which fault classes a run injects. `Default`/[`FaultPlan::none`] is
+/// the empty plan — a strict no-op.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultPlan {
+    pub node_crash: Option<NodeCrashPlan>,
+    pub cold_start: Option<ColdStartPlan>,
+    pub crash_loop: Option<CrashLoopPlan>,
+    pub net_delay: Option<NetDelayPlan>,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults, no RNG draws, no extra events.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.node_crash.is_none()
+            && self.cold_start.is_none()
+            && self.crash_loop.is_none()
+            && self.net_delay.is_none()
+    }
+
+    /// Compact report/JSON label, e.g. `"crash+coldstart"`; `"none"`
+    /// for the empty plan.
+    pub fn label(&self) -> String {
+        let mut parts: Vec<&str> = Vec::new();
+        if self.node_crash.is_some() {
+            parts.push("crash");
+        }
+        if self.cold_start.is_some() {
+            parts.push("coldstart");
+        }
+        if self.crash_loop.is_some() {
+            parts.push("crashloop");
+        }
+        if self.net_delay.is_some() {
+            parts.push("netdelay");
+        }
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join("+")
+        }
+    }
+}
+
+/// RNG stream for a world's node-fault schedule (world 0 = monolith).
+/// The chaos streams sit far above the engine streams (monolith 1/2/3,
+/// sharded `10 + 3*world + role`) so they can never collide.
+pub fn chaos_schedule_stream(world: usize) -> u64 {
+    1_000_000 + world as u64
+}
+
+/// RNG stream for a world's pod cold-start / crash-loop perturbations.
+pub fn chaos_pod_stream(world: usize) -> u64 {
+    2_000_000 + world as u64
+}
+
+/// RNG stream for a world's edge→cloud network-delay perturbations.
+pub fn chaos_net_stream(world: usize) -> u64 {
+    3_000_000 + world as u64
+}
+
+/// Pre-draw the whole node crash/rejoin schedule for `[0, end)` and
+/// enqueue it as absolute-time events. One renewal pass per eligible
+/// node in ascending node order — the event count and every timestamp
+/// are functions of (plan, node list, rng seed) only, never of the
+/// run's interleaving. A crash whose rejoin would land at or past `end`
+/// leaves the node down for the rest of the run.
+pub fn schedule_node_faults(
+    cluster: &Cluster,
+    plan: &NodeCrashPlan,
+    end: Time,
+    rng: &mut Pcg64,
+    queue: &mut EventQueue,
+) {
+    let mean_gap_secs = crate::sim::to_secs(plan.mean_gap.max(1));
+    for (idx, node) in cluster.nodes.iter().enumerate() {
+        if node.spec.tier == Tier::Cloud && !plan.cloud {
+            continue;
+        }
+        let nid = NodeId(idx as u32);
+        let mut t: Time = 0;
+        loop {
+            let gap = crate::sim::from_secs(rng.exponential(1.0 / mean_gap_secs));
+            t = t.saturating_add(gap.max(1));
+            if t >= end {
+                break;
+            }
+            queue.schedule_at(t, Event::NodeCrash { node: nid });
+            let outage = rng.int_range(plan.outage_min, plan.outage_max + 1);
+            let rejoin = t.saturating_add(outage.max(1));
+            if rejoin >= end {
+                break; // stays down through the end of the run
+            }
+            queue.schedule_at(rejoin, Event::NodeRejoin { node: nid });
+            t = rejoin;
+        }
+    }
+}
+
+/// Per-world pod-chaos state: one RNG stream perturbing every
+/// placement's init delay, plus the streaming stats the fault counters
+/// report. Installed on the [`Cluster`] via [`Cluster::set_pod_chaos`];
+/// `Cluster::try_place` consults it after drawing the base delay.
+#[derive(Debug)]
+pub struct PodChaos {
+    rng: Pcg64,
+    cold_start: Option<ColdStartPlan>,
+    crash_loop: Option<CrashLoopPlan>,
+    /// Total simulated restart failures across all placements.
+    pub crash_loops: u64,
+    /// Distribution of effective init delays (seconds) — perturbed and
+    /// unperturbed alike, so the p95 exposes the slowdown tail.
+    pub init_delays: StreamingStats,
+}
+
+impl PodChaos {
+    pub fn new(
+        rng: Pcg64,
+        cold_start: Option<ColdStartPlan>,
+        crash_loop: Option<CrashLoopPlan>,
+    ) -> Self {
+        PodChaos {
+            rng,
+            cold_start,
+            crash_loop,
+            crash_loops: 0,
+            init_delays: StreamingStats::new(),
+        }
+    }
+
+    /// Perturb a placement's base init delay. Called once per successful
+    /// placement; the draw count per call depends only on the plan and
+    /// this stream's own history, never on engine-stream state.
+    pub fn perturb_init_delay(&mut self, base: Time) -> Time {
+        let mut delay = base;
+        if let Some(cs) = self.cold_start {
+            if self.rng.chance(cs.slow_prob) {
+                let factor = self.rng.range(cs.factor_min, cs.factor_max);
+                delay = (delay as f64 * factor).round() as Time;
+            }
+        }
+        if let Some(cl) = self.crash_loop {
+            let mut restarts = 0;
+            while restarts < cl.max_restarts && self.rng.chance(cl.prob) {
+                delay = delay.saturating_add(
+                    self.rng
+                        .int_range(super::INIT_DELAY_MIN, super::INIT_DELAY_MAX + 1),
+                );
+                restarts += 1;
+                self.crash_loops += 1;
+            }
+        }
+        self.init_delays.record(crate::sim::to_secs(delay));
+        delay
+    }
+}
+
+/// Per-world network-chaos state: one RNG stream drawing extra
+/// edge→cloud forward delay, one draw per Eigen forward.
+#[derive(Debug)]
+pub struct NetChaos {
+    rng: Pcg64,
+    extra_min: Time,
+    extra_max: Time,
+}
+
+impl NetChaos {
+    pub fn new(rng: Pcg64, plan: &NetDelayPlan) -> Self {
+        NetChaos {
+            rng,
+            extra_min: plan.extra_min,
+            extra_max: plan.extra_max,
+        }
+    }
+
+    /// Extra one-way delay for the next Eigen forward.
+    pub fn draw_extra(&mut self) -> Time {
+        self.rng.int_range(self.extra_min, self.extra_max + 1)
+    }
+}
+
+/// What a node crash did to the cluster — the driver uses it to
+/// reschedule replacements and re-queue orphaned requests.
+#[derive(Debug, Clone, Default)]
+pub struct CrashOutcome {
+    /// Requests that were in flight on killed pods, in ascending pod-id
+    /// order. The handles are still live in the request arena — the
+    /// caller re-queues them (`App::requeue_orphans`).
+    pub orphans: Vec<RequestId>,
+    /// Deployments that lost pods, ascending, deduplicated.
+    pub deployments: Vec<DeploymentId>,
+    /// Pods killed by the crash.
+    pub pods_killed: usize,
+}
+
+/// Per-run fault counters, merged across shard worlds and surfaced in
+/// `CellMetrics` / the sweep report.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosCounters {
+    pub crashes: u64,
+    pub rejoins: u64,
+    pub pods_killed: u64,
+    pub pods_rescheduled: u64,
+    pub crash_loops: u64,
+    /// Total node downtime (sum over nodes, clamped to the run window).
+    pub downtime: Time,
+    /// Effective init-delay distribution (seconds).
+    pub init_delays: StreamingStats,
+}
+
+impl ChaosCounters {
+    pub fn merge(&mut self, other: &ChaosCounters) {
+        self.crashes += other.crashes;
+        self.rejoins += other.rejoins;
+        self.pods_killed += other.pods_killed;
+        self.pods_rescheduled += other.pods_rescheduled;
+        self.crash_loops += other.crash_loops;
+        self.downtime += other.downtime;
+        self.init_delays.merge(&other.init_delays);
+    }
+
+    /// p95 of the effective init delay in seconds (NaN when no pod ever
+    /// placed — e.g. a run too short to scale).
+    pub fn cold_start_p95(&self) -> f64 {
+        self.init_delays.quantile(95.0)
+    }
+}
+
+impl Cluster {
+    /// Install (or clear) the pod-chaos perturbation consulted by
+    /// `try_place`. `None` restores the unperturbed init delay.
+    pub fn set_pod_chaos(&mut self, chaos: Option<PodChaos>) {
+        self.pod_chaos = chaos;
+    }
+
+    /// The installed pod-chaos state, if any (for counter finalization).
+    pub fn pod_chaos(&self) -> Option<&PodChaos> {
+        self.pod_chaos.as_ref()
+    }
+
+    /// Whether a node is currently up (down nodes are invisible to the
+    /// scheduler and the Algorithm-1 capacity cap).
+    pub fn node_up(&self, node: NodeId) -> bool {
+        self.nodes[node.0 as usize].up
+    }
+
+    /// Crash a node: mark it down, drop it from every matching-node
+    /// cache, and kill every pod bound to it (straight to `Gone`
+    /// through the `set_phase` nexus — a crash skips graceful
+    /// termination). Returns `None` if the node was already down.
+    ///
+    /// Killed pods may leave stale `PodRunning` / `PodTerminated` /
+    /// `ServiceComplete` events in the queue; the handlers tolerate
+    /// them (phase guards and request-generation checks), exactly like
+    /// the pre-existing stale-event tolerance on the graceful path.
+    pub fn crash_node(&mut self, nid: NodeId) -> Option<CrashOutcome> {
+        if !self.nodes[nid.0 as usize].up {
+            return None;
+        }
+        self.nodes[nid.0 as usize].up = false;
+        // Drop the node from every matching-node cache (ascending order
+        // is preserved by point removal).
+        for dep in &mut self.deployments {
+            if let Ok(i) = dep.matching_nodes.binary_search(&nid) {
+                dep.matching_nodes.remove(i);
+            }
+        }
+        // Kill bound pods in ascending pod-id order (node.pods is
+        // swap_remove-ordered, so sort the snapshot).
+        let mut victims: Vec<_> = self.nodes[nid.0 as usize].pods.clone();
+        victims.sort_unstable();
+        let mut out = CrashOutcome {
+            pods_killed: victims.len(),
+            ..CrashOutcome::default()
+        };
+        for pid in victims {
+            let dep = self.pods[pid.0 as usize].deployment;
+            let spec = self.pods[pid.0 as usize].spec;
+            if let Some(req) = self.pods[pid.0 as usize].finish_service(0) {
+                out.orphans.push(req);
+            }
+            self.nodes[nid.0 as usize].unbind(pid, dep, spec);
+            self.pods[pid.0 as usize].node = None;
+            self.set_phase(pid, PodPhase::Gone);
+            self.detach(pid, dep);
+            if out.deployments.last() != Some(&dep) {
+                match out.deployments.binary_search(&dep) {
+                    Ok(_) => {}
+                    Err(i) => out.deployments.insert(i, dep),
+                }
+            }
+        }
+        Some(out)
+    }
+
+    /// Rejoin a crashed node: mark it up and restore it to every
+    /// matching-node cache (sorted insertion keeps ascending order).
+    /// No-op if the node is already up. The caller retries Pending pods
+    /// so the recovered capacity is used.
+    pub fn rejoin_node(&mut self, nid: NodeId) -> bool {
+        if self.nodes[nid.0 as usize].up {
+            return false;
+        }
+        self.nodes[nid.0 as usize].up = true;
+        let spec = self.nodes[nid.0 as usize].spec.clone();
+        for dep in &mut self.deployments {
+            if dep.selector.matches(&spec) {
+                if let Err(i) = dep.matching_nodes.binary_search(&nid) {
+                    dep.matching_nodes.insert(i, nid);
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Deployment, NodeSpec, PodSpec, Selector};
+    use crate::sim::{MIN, SEC};
+
+    fn chaos_cluster() -> (Cluster, EventQueue, Pcg64) {
+        let mut c = Cluster::new();
+        c.add_node(NodeSpec::new("e1", Tier::Edge, 1, 2000, 2048));
+        c.add_node(NodeSpec::new("e2", Tier::Edge, 1, 2000, 2048));
+        c.add_node(NodeSpec::new("c1", Tier::Cloud, 0, 3000, 3072));
+        c.add_deployment(Deployment::new(
+            "edge",
+            Selector::new(Tier::Edge, Some(1)),
+            PodSpec::new(500, 256),
+            1,
+            16,
+        ));
+        (c, EventQueue::new(), Pcg64::new(9, 1))
+    }
+
+    #[test]
+    fn empty_plan_is_empty() {
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        assert_eq!(p.label(), "none");
+        let storm = FaultPlan {
+            node_crash: Some(NodeCrashPlan {
+                mean_gap: 10 * MIN,
+                outage_min: 30 * SEC,
+                outage_max: 2 * MIN,
+                cloud: false,
+            }),
+            net_delay: Some(NetDelayPlan {
+                extra_min: 0,
+                extra_max: 20_000,
+            }),
+            ..FaultPlan::none()
+        };
+        assert!(!storm.is_empty());
+        assert_eq!(storm.label(), "crash+netdelay");
+    }
+
+    #[test]
+    fn crash_kills_pods_and_hides_node() {
+        let (mut c, mut q, mut rng) = chaos_cluster();
+        let dep = DeploymentId(0);
+        c.reconcile(dep, 4, &mut q, &mut rng);
+        while let Some((_, ev)) = q.pop() {
+            if let Event::PodRunning { pod } = ev {
+                c.on_pod_running(pod);
+            }
+        }
+        assert_eq!(c.live_replicas(dep), 4);
+        let max_before = c.max_replicas(dep);
+
+        // Mark one pod busy so the crash orphans its request.
+        let busy = c.min_idle_pod(dep).unwrap();
+        let req = RequestId::new(5, 0);
+        c.start_service(busy, req, 0);
+        let victim_node = c.pod(busy).node.unwrap();
+        let killed = c.nodes[victim_node.0 as usize].pods.len();
+
+        let out = c.crash_node(victim_node).expect("node was up");
+        assert_eq!(out.pods_killed, killed);
+        assert_eq!(out.orphans, vec![req]);
+        assert_eq!(out.deployments, vec![dep]);
+        assert!(!c.node_up(victim_node));
+        assert_eq!(c.live_replicas(dep), 4 - killed);
+        assert!(c.max_replicas(dep) < max_before, "down node must not count");
+        c.verify_indices();
+
+        // Idempotent: crashing a down node is None.
+        assert!(c.crash_node(victim_node).is_none());
+
+        // Rejoin restores capacity and the matching cache.
+        assert!(c.rejoin_node(victim_node));
+        assert!(!c.rejoin_node(victim_node), "already up");
+        assert_eq!(c.max_replicas(dep), max_before);
+        c.verify_indices();
+    }
+
+    #[test]
+    fn crashed_node_rejected_by_scheduler() {
+        let (mut c, mut q, mut rng) = chaos_cluster();
+        let dep = DeploymentId(0);
+        c.crash_node(NodeId(0)).unwrap();
+        c.reconcile(dep, 6, &mut q, &mut rng);
+        // Only e2 is schedulable: 1800m/500m = 3 placements, rest Pending.
+        assert_eq!(c.count_phase(dep, PodPhase::Initializing), 3);
+        assert_eq!(c.count_phase(dep, PodPhase::Pending), 3);
+        for p in c.pods.iter() {
+            assert_ne!(p.node, Some(NodeId(0)), "placed on a down node");
+        }
+        c.verify_indices();
+        // Rejoin + retry drains the Pending backlog onto e1.
+        c.rejoin_node(NodeId(0));
+        c.retry_pending(&mut q, &mut rng);
+        assert_eq!(c.count_phase(dep, PodPhase::Pending), 0);
+        c.verify_indices();
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_and_bounded() {
+        let (c, _, _) = chaos_cluster();
+        let plan = NodeCrashPlan {
+            mean_gap: 5 * MIN,
+            outage_min: 30 * SEC,
+            outage_max: 2 * MIN,
+            cloud: false,
+        };
+        let end = 60 * MIN;
+        let drain = |seed: u64| -> Vec<(Time, Event)> {
+            let mut q = EventQueue::new();
+            let mut rng = Pcg64::new(seed, chaos_schedule_stream(0));
+            schedule_node_faults(&c, &plan, end, &mut rng, &mut q);
+            let mut events = Vec::new();
+            while let Some((t, ev)) = q.pop() {
+                events.push((t, ev));
+            }
+            events
+        };
+        let a = drain(42);
+        assert_eq!(a, drain(42), "same seed, same schedule");
+        assert_ne!(a, drain(43), "seeds must differ");
+        assert!(!a.is_empty(), "an hour at 5-min gaps must crash something");
+        assert!(a.iter().all(|(t, _)| *t < end));
+        // Only edge nodes appear (cloud: false), and per-node the
+        // crash/rejoin events alternate.
+        for (_, ev) in &a {
+            match ev {
+                Event::NodeCrash { node } | Event::NodeRejoin { node } => {
+                    assert!(node.0 < 2, "cloud node crashed with cloud: false");
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        for n in 0..2u32 {
+            let mut expect_crash = true;
+            for (_, ev) in a.iter().filter(|(_, ev)| {
+                matches!(ev,
+                    Event::NodeCrash { node } | Event::NodeRejoin { node }
+                        if node.0 == n)
+            }) {
+                match ev {
+                    Event::NodeCrash { .. } => {
+                        assert!(expect_crash, "double crash for node {n}");
+                        expect_crash = false;
+                    }
+                    Event::NodeRejoin { .. } => {
+                        assert!(!expect_crash, "rejoin before crash for node {n}");
+                        expect_crash = true;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pod_chaos_perturbs_init_delay() {
+        let mut pc = PodChaos::new(
+            Pcg64::new(7, chaos_pod_stream(0)),
+            Some(ColdStartPlan {
+                slow_prob: 0.5,
+                factor_min: 2.0,
+                factor_max: 4.0,
+            }),
+            Some(CrashLoopPlan {
+                prob: 0.3,
+                max_restarts: 3,
+            }),
+        );
+        let base = super::super::INIT_DELAY_MIN;
+        let delays: Vec<Time> = (0..200).map(|_| pc.perturb_init_delay(base)).collect();
+        assert!(delays.iter().all(|&d| d >= base), "never faster than base");
+        assert!(
+            delays.iter().any(|&d| d > base),
+            "perturbation never fired in 200 draws"
+        );
+        assert_eq!(pc.init_delays.n(), 200);
+        assert!(pc.crash_loops > 0, "crash loops never fired");
+        // Crash loops bounded: worst case base*4 + 3 extra full delays.
+        let cap = base * 4 + 3 * (super::super::INIT_DELAY_MAX + 1);
+        assert!(delays.iter().all(|&d| d <= cap));
+
+        // A plan-free PodChaos is the identity.
+        let mut inert = PodChaos::new(Pcg64::new(7, 2), None, None);
+        assert_eq!(inert.perturb_init_delay(base), base);
+        assert_eq!(inert.crash_loops, 0);
+    }
+
+    #[test]
+    fn net_chaos_draws_within_bounds() {
+        let plan = NetDelayPlan {
+            extra_min: 20_000,
+            extra_max: 200_000,
+        };
+        let mut nc = NetChaos::new(Pcg64::new(11, chaos_net_stream(0)), &plan);
+        for _ in 0..100 {
+            let extra = nc.draw_extra();
+            assert!((plan.extra_min..=plan.extra_max).contains(&extra));
+        }
+    }
+
+    #[test]
+    fn counters_merge() {
+        let mut a = ChaosCounters {
+            crashes: 2,
+            rejoins: 1,
+            pods_killed: 5,
+            pods_rescheduled: 4,
+            crash_loops: 3,
+            downtime: 90 * SEC,
+            ..ChaosCounters::default()
+        };
+        a.init_delays.record(12.0);
+        let mut b = ChaosCounters {
+            crashes: 1,
+            downtime: 30 * SEC,
+            ..ChaosCounters::default()
+        };
+        b.init_delays.record(48.0);
+        a.merge(&b);
+        assert_eq!(a.crashes, 3);
+        assert_eq!(a.rejoins, 1);
+        assert_eq!(a.pods_killed, 5);
+        assert_eq!(a.downtime, 120 * SEC);
+        assert_eq!(a.init_delays.n(), 2);
+        assert!(a.cold_start_p95() > 12.0);
+    }
+}

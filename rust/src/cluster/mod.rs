@@ -33,11 +33,17 @@
 //! compares (the property tests drive it through randomized
 //! reconcile/dispatch/terminate interleavings).
 
+mod chaos;
 mod deployment;
 mod node;
 mod pod;
 mod scheduler;
 
+pub use chaos::{
+    chaos_net_stream, chaos_pod_stream, chaos_schedule_stream, schedule_node_faults,
+    ChaosCounters, ColdStartPlan, CrashLoopPlan, CrashOutcome, FaultPlan, NetChaos, NetDelayPlan,
+    NodeCrashPlan, PodChaos,
+};
 pub use deployment::{Deployment, DeploymentId, Selector};
 pub use node::{Node, NodeSpec, Tier};
 pub use pod::{Pod, PodPhase, PodSpec};
@@ -85,6 +91,9 @@ pub struct Cluster {
     /// slot reuse matches the original first-Gone scan bit-for-bit.
     free_slots: BTreeSet<u32>,
     mode: QueryMode,
+    /// Installed cold-start / crash-loop perturbation (`None` — the
+    /// default — leaves `try_place` byte-identical to fault-free runs).
+    pod_chaos: Option<PodChaos>,
 }
 
 impl Cluster {
@@ -95,6 +104,7 @@ impl Cluster {
             deployments: Vec::new(),
             free_slots: BTreeSet::new(),
             mode: QueryMode::Indexed,
+            pod_chaos: None,
         }
     }
 
@@ -360,7 +370,13 @@ impl Cluster {
                 self.nodes[node_id.0 as usize].bind(pid, dep, spec);
                 self.pods[pid.0 as usize].node = Some(node_id);
                 self.set_phase(pid, PodPhase::Initializing);
-                let delay = rng.int_range(INIT_DELAY_MIN, INIT_DELAY_MAX + 1);
+                // The base delay always comes off the engine stream (so
+                // an empty fault plan stays bit-identical); chaos only
+                // perturbs it afterwards from its own stream.
+                let mut delay = rng.int_range(INIT_DELAY_MIN, INIT_DELAY_MAX + 1);
+                if let Some(pc) = &mut self.pod_chaos {
+                    delay = pc.perturb_init_delay(delay);
+                }
                 queue.schedule_in(delay, Event::PodRunning { pod: pid });
                 true
             }
@@ -436,7 +452,14 @@ impl Cluster {
     }
 
     /// Handle `PodTerminated`: release node resources, free the slab slot.
+    /// Tolerates stale events: if the pod is not draining (a crash
+    /// already freed it, or the slot was recycled), this is a no-op —
+    /// on the fault-free path exactly one `PodTerminated` fires per
+    /// Terminating incarnation, so the guard never triggers there.
     pub fn on_pod_terminated(&mut self, pid: PodId) {
+        if self.pods[pid.0 as usize].phase != PodPhase::Terminating {
+            return;
+        }
         let dep = self.pods[pid.0 as usize].deployment;
         let node = self.pods[pid.0 as usize].node;
         if let Some(nid) = node {
@@ -558,14 +581,15 @@ impl Cluster {
             .map(|i| i as u32)
     }
 
-    /// Nodes matching `selector`, ascending by index — the single
+    /// *Up* nodes matching `selector`, ascending by index — the single
     /// definition behind both the matching-node cache builder
-    /// (`add_deployment`) and the `verify_indices` checker.
+    /// (`add_deployment`) and the `verify_indices` checker. Crashed
+    /// nodes are excluded until they rejoin.
     fn scan_matching_nodes(&self, selector: &Selector) -> Vec<NodeId> {
         self.nodes
             .iter()
             .enumerate()
-            .filter(|(_, n)| selector.matches(&n.spec))
+            .filter(|(_, n)| n.up && selector.matches(&n.spec))
             .map(|(i, _)| NodeId(i as u32))
             .collect()
     }
@@ -574,7 +598,7 @@ impl Cluster {
         let d = &self.deployments[dep.0 as usize];
         let mut total = 0usize;
         for node in &self.nodes {
-            if !d.selector.matches(&node.spec) {
+            if !node.up || !d.selector.matches(&node.spec) {
                 continue;
             }
             // Capacity minus what OTHER deployments' pods occupy.

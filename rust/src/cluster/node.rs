@@ -60,6 +60,10 @@ impl NodeSpec {
 #[derive(Debug)]
 pub struct Node {
     pub spec: NodeSpec,
+    /// Whether the node is up. Crashed nodes (`Cluster::crash_node`)
+    /// keep their slot but are invisible to the scheduler and the
+    /// capacity cap until they rejoin.
+    pub up: bool,
     pub alloc_cpu: u32,
     pub alloc_ram: u32,
     pub pods: Vec<PodId>,
@@ -75,6 +79,7 @@ impl Node {
     pub fn new(spec: NodeSpec) -> Self {
         Node {
             spec,
+            up: true,
             alloc_cpu: 0,
             alloc_ram: 0,
             pods: Vec::new(),

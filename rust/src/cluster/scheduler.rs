@@ -19,8 +19,9 @@ use crate::sim::NodeId;
 pub fn schedule(nodes: &[Node], dep: &Deployment, spec: PodSpec) -> Option<NodeId> {
     let mut best: Option<(f64, usize)> = None;
     for (idx, node) in nodes.iter().enumerate() {
-        // Filter stage.
-        if !dep.selector.matches(&node.spec) || !node.fits(spec) {
+        // Filter stage (down nodes never pass — they are also absent
+        // from the cached matching lists `schedule_over` runs on).
+        if !node.up || !dep.selector.matches(&node.spec) || !node.fits(spec) {
             continue;
         }
         // Score stage: least allocated after placement (lower = better).

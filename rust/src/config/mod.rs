@@ -98,17 +98,139 @@ impl ClusterConfig {
     }
 }
 
+/// A worker-node hardware class for heterogeneous city grids.
+///
+/// `Medium` is the Table-2 edge worker (2000 mCPU / 2048 MB); `Small`
+/// and `Large` halve / double it. All classes keep the Table-2 edge
+/// reservation (300 mCPU / 384 MB), so a homogeneous `medium` mix is
+/// byte-identical to the classic [`edge_city`] grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NodeClass {
+    /// 1000 mCPU / 1024 MB.
+    Small,
+    /// 2000 mCPU / 2048 MB — the Table-2 edge worker.
+    #[default]
+    Medium,
+    /// 4000 mCPU / 4096 MB.
+    Large,
+}
+
+impl NodeClass {
+    pub fn cpu_millis(&self) -> u32 {
+        match self {
+            NodeClass::Small => 1000,
+            NodeClass::Medium => 2000,
+            NodeClass::Large => 4000,
+        }
+    }
+
+    pub fn ram_mb(&self) -> u32 {
+        match self {
+            NodeClass::Small => 1024,
+            NodeClass::Medium => 2048,
+            NodeClass::Large => 4096,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            NodeClass::Small => "small",
+            NodeClass::Medium => "medium",
+            NodeClass::Large => "large",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "small" => Ok(NodeClass::Small),
+            "medium" => Ok(NodeClass::Medium),
+            "large" => Ok(NodeClass::Large),
+            other => bail!("unknown node class '{other}' (expected small|medium|large)"),
+        }
+    }
+}
+
+/// Maximum classes a [`ClassMix`] cycles through.
+pub const MAX_MIX_CLASSES: usize = 4;
+
+/// Per-zone worker class mix for city grids: worker `i` of every zone
+/// gets class `classes[i % len]`. The empty mix (the `Default`) means
+/// homogeneous `Medium` workers — the classic grid. Inline storage
+/// keeps [`Topology`] `Copy` for the sweep grid axes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ClassMix {
+    len: u8,
+    classes: [NodeClass; MAX_MIX_CLASSES],
+}
+
+impl ClassMix {
+    /// A mix cycling through `classes` (1..=[`MAX_MIX_CLASSES`] entries).
+    pub fn new(classes: &[NodeClass]) -> crate::Result<Self> {
+        if classes.is_empty() {
+            bail!("class mix needs at least one class");
+        }
+        if classes.len() > MAX_MIX_CLASSES {
+            bail!(
+                "class mix supports at most {MAX_MIX_CLASSES} classes, got {}",
+                classes.len()
+            );
+        }
+        let mut arr = [NodeClass::Medium; MAX_MIX_CLASSES];
+        arr[..classes.len()].copy_from_slice(classes);
+        Ok(ClassMix {
+            len: classes.len() as u8,
+            classes: arr,
+        })
+    }
+
+    /// True for the homogeneous default (all workers `Medium`).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The class of worker `i` within its zone.
+    pub fn class_for(&self, worker: u32) -> NodeClass {
+        if self.len == 0 {
+            return NodeClass::Medium;
+        }
+        self.classes[(worker as usize) % self.len as usize]
+    }
+
+    /// Parse `small,large` (comma-separated class names).
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        let classes: Vec<NodeClass> = s
+            .split(',')
+            .map(|p| NodeClass::parse(p.trim()))
+            .collect::<crate::Result<_>>()?;
+        ClassMix::new(&classes)
+    }
+
+    /// `small,large` — empty string for the homogeneous default.
+    pub fn label(&self) -> String {
+        let parts: Vec<&str> = self.classes[..self.len as usize]
+            .iter()
+            .map(|c| c.label())
+            .collect();
+        parts.join(",")
+    }
+}
+
 /// A named cluster-topology descriptor: copyable grid-axis data for the
 /// sweep harness (the way [`crate::workload::Scenario`] describes a
-/// workload). `parse` accepts `paper`, `city-<zones>` and
-/// `city-<zones>x<workers>`.
+/// workload). `parse` accepts `paper`, `city-<zones>`,
+/// `city-<zones>x<workers>` and a `:<classes>` suffix on the city forms
+/// (e.g. `city-50x4:small,large` — heterogeneous worker classes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Topology {
     /// The Table-2 testbed: 2 edge zones of 2 workers.
     Paper,
     /// Generated city: `zones` edge zones × `workers_per_zone` nodes
-    /// (see [`edge_city`]).
-    EdgeCity { zones: u32, workers_per_zone: u32 },
+    /// of classes cycling through `mix` (see [`edge_city_with_classes`]).
+    EdgeCity {
+        zones: u32,
+        workers_per_zone: u32,
+        mix: ClassMix,
+    },
 }
 
 impl Topology {
@@ -120,9 +242,13 @@ impl Topology {
             return Ok(Topology::Paper);
         }
         if let Some(rest) = s.strip_prefix("city-") {
-            let (zones_str, workers_str) = match rest.split_once('x') {
-                Some((z, w)) => (z, Some(w)),
+            let (dims, mix_str) = match rest.split_once(':') {
+                Some((d, m)) => (d, Some(m)),
                 None => (rest, None),
+            };
+            let (zones_str, workers_str) = match dims.split_once('x') {
+                Some((z, w)) => (z, Some(w)),
+                None => (dims, None),
             };
             let zones: u32 = zones_str
                 .parse()
@@ -137,22 +263,38 @@ impl Topology {
                     .with_context(|| format!("bad worker count in topology '{s}'"))?,
                 None => Self::DEFAULT_CITY_WORKERS,
             };
+            let mix = match mix_str {
+                Some(m) => ClassMix::parse(m)
+                    .with_context(|| format!("bad node-class mix in topology '{s}'"))?,
+                None => ClassMix::default(),
+            };
             return Ok(Topology::EdgeCity {
                 zones,
                 workers_per_zone,
+                mix,
             });
         }
-        bail!("unknown topology '{s}' (expected paper | city-<zones>[x<workers>])")
+        bail!(
+            "unknown topology '{s}' (expected paper | \
+             city-<zones>[x<workers>][:<class,...>])"
+        )
     }
 
-    /// Report/JSON label.
+    /// Report/JSON label (round-trips through [`Self::parse`]).
     pub fn label(&self) -> String {
         match *self {
             Topology::Paper => "paper".to_string(),
             Topology::EdgeCity {
                 zones,
                 workers_per_zone,
-            } => format!("city-{zones}x{workers_per_zone}"),
+                mix,
+            } => {
+                if mix.is_empty() {
+                    format!("city-{zones}x{workers_per_zone}")
+                } else {
+                    format!("city-{zones}x{workers_per_zone}:{}", mix.label())
+                }
+            }
         }
     }
 
@@ -163,7 +305,8 @@ impl Topology {
             Topology::EdgeCity {
                 zones,
                 workers_per_zone,
-            } => edge_city(zones, workers_per_zone),
+                mix,
+            } => edge_city_with_classes(zones, workers_per_zone, mix),
         }
     }
 
@@ -473,14 +616,16 @@ mod tests {
             Topology::parse("city-50").unwrap(),
             Topology::EdgeCity {
                 zones: 50,
-                workers_per_zone: 2
+                workers_per_zone: 2,
+                mix: ClassMix::default()
             }
         );
         assert_eq!(
             Topology::parse("city-12x3").unwrap(),
             Topology::EdgeCity {
                 zones: 12,
-                workers_per_zone: 3
+                workers_per_zone: 3,
+                mix: ClassMix::default()
             }
         );
         assert!(Topology::parse("city-0").is_err());
@@ -499,6 +644,56 @@ mod tests {
             Topology::Paper.scenario_presets().len(),
             scenario_presets().len()
         );
+    }
+
+    #[test]
+    fn topology_class_mix_parse_label_and_build() {
+        // Round-trip and explicit structure.
+        let t = Topology::parse("city-50x4:small,large").unwrap();
+        assert_eq!(
+            t,
+            Topology::EdgeCity {
+                zones: 50,
+                workers_per_zone: 4,
+                mix: ClassMix::new(&[NodeClass::Small, NodeClass::Large]).unwrap()
+            }
+        );
+        assert_eq!(t.label(), "city-50x4:small,large");
+        assert_eq!(Topology::parse(&t.label()).unwrap(), t);
+        // Classes also attach to the short city form.
+        let short = Topology::parse("city-3:large").unwrap();
+        assert_eq!(short.label(), "city-3x2:large");
+        // Bad class names and over-long mixes are rejected.
+        assert!(Topology::parse("city-4:tiny").is_err());
+        assert!(Topology::parse("city-4:small,small,small,small,small").is_err());
+        assert!(ClassMix::parse("").is_err());
+
+        // The mix cycles per worker within each zone.
+        let mix = ClassMix::parse("small,large").unwrap();
+        assert_eq!(mix.class_for(0), NodeClass::Small);
+        assert_eq!(mix.class_for(1), NodeClass::Large);
+        assert_eq!(mix.class_for(2), NodeClass::Small);
+        // Empty mix is homogeneous Medium (the classic grid).
+        assert_eq!(ClassMix::default().class_for(7), NodeClass::Medium);
+
+        // The built cluster carries the heterogeneous specs...
+        let cfg = Topology::parse("city-2x2:small,large").unwrap().cluster();
+        cfg.validate().unwrap();
+        let edge: Vec<(u32, u32)> = cfg
+            .nodes
+            .iter()
+            .filter(|n| n.tier == Tier::Edge)
+            .map(|n| (n.cpu_millis, n.ram_mb))
+            .collect();
+        assert_eq!(
+            edge,
+            vec![(1000, 1024), (4000, 4096), (1000, 1024), (4000, 4096)]
+        );
+        // ...while the homogeneous medium mix is byte-identical to the
+        // classic grid (back-compat with pre-mix sweeps).
+        let classic = Topology::parse("city-4x3").unwrap().cluster();
+        let medium = Topology::parse("city-4x3:medium").unwrap().cluster();
+        assert_eq!(format!("{classic:?}"), format!("{medium:?}"));
     }
 
     #[test]

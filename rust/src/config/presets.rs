@@ -1,9 +1,11 @@
 //! Presets mirroring the paper's testbed, plus the workload scenario
 //! library the sweep harness runs against.
 
-use super::{ClusterConfig, DeploymentConfig, NodeConfig};
-use crate::cluster::Tier;
-use crate::sim::{HOUR, MIN};
+use super::{ClassMix, ClusterConfig, DeploymentConfig, NodeConfig};
+use crate::cluster::{
+    ColdStartPlan, CrashLoopPlan, FaultPlan, NetDelayPlan, NodeCrashPlan, Tier,
+};
+use crate::sim::{HOUR, MIN, MS, SEC};
 use crate::workload::{
     nasa_synthetic, DiurnalConfig, FlashCrowdConfig, NasaTraceConfig, Scenario, StepSurgeConfig,
 };
@@ -98,6 +100,19 @@ pub fn paper_cluster() -> ClusterConfig {
 /// naming), scaled to the many-zone matrices the related hybrid/SLA
 /// studies (arXiv:2512.14290, arXiv:2510.10166) evaluate on.
 pub fn edge_city(n_zones: u32, workers_per_zone: u32) -> ClusterConfig {
+    edge_city_with_classes(n_zones, workers_per_zone, ClassMix::default())
+}
+
+/// [`edge_city`] with a heterogeneous worker-class mix: worker `i` of
+/// every zone gets `mix.class_for(i)` hardware (see
+/// [`crate::config::NodeClass`]). All classes keep the Table-2 edge
+/// reservation, so the homogeneous `medium` mix reproduces the classic
+/// grid byte for byte.
+pub fn edge_city_with_classes(
+    n_zones: u32,
+    workers_per_zone: u32,
+    mix: ClassMix,
+) -> ClusterConfig {
     assert!(n_zones >= 1, "a city needs at least one zone");
     assert!(workers_per_zone >= 1, "a zone needs at least one worker");
     let mut nodes = vec![NodeConfig {
@@ -123,12 +138,13 @@ pub fn edge_city(n_zones: u32, workers_per_zone: u32) -> ClusterConfig {
     }
     for zone in 1..=n_zones {
         for i in 1..=workers_per_zone {
+            let class = mix.class_for(i - 1);
             nodes.push(NodeConfig {
                 name: format!("edge-z{zone}-worker-{i}"),
                 tier: Tier::Edge,
                 zone,
-                cpu_millis: 2000,
-                ram_mb: 2048,
+                cpu_millis: class.cpu_millis(),
+                ram_mb: class.ram_mb(),
                 reserved_cpu_millis: 300,
                 reserved_ram_mb: 384,
             });
@@ -421,9 +437,135 @@ pub fn city_scenario_presets(n_zones: u32) -> Vec<(String, Scenario)> {
     ]
 }
 
+/// The fault-plan preset library (the `--chaos <name>` axis). All
+/// timings/probabilities are drawn from the dedicated chaos RNG streams
+/// at run time, so every preset is bit-reproducible per seed.
+pub fn chaos_presets() -> Vec<(String, FaultPlan)> {
+    vec![
+        ("none".to_string(), FaultPlan::none()),
+        (
+            "node-outage".to_string(),
+            FaultPlan {
+                node_crash: Some(NodeCrashPlan {
+                    mean_gap: 10 * MIN,
+                    outage_min: 30 * SEC,
+                    outage_max: 2 * MIN,
+                    cloud: false,
+                }),
+                ..FaultPlan::none()
+            },
+        ),
+        (
+            "flaky-pods".to_string(),
+            FaultPlan {
+                cold_start: Some(ColdStartPlan {
+                    slow_prob: 0.3,
+                    factor_min: 2.0,
+                    factor_max: 5.0,
+                }),
+                crash_loop: Some(CrashLoopPlan {
+                    prob: 0.15,
+                    max_restarts: 3,
+                }),
+                ..FaultPlan::none()
+            },
+        ),
+        (
+            "slow-network".to_string(),
+            FaultPlan {
+                net_delay: Some(NetDelayPlan {
+                    extra_min: 20 * MS,
+                    extra_max: 200 * MS,
+                }),
+                ..FaultPlan::none()
+            },
+        ),
+        (
+            "full-storm".to_string(),
+            FaultPlan {
+                node_crash: Some(NodeCrashPlan {
+                    mean_gap: 10 * MIN,
+                    outage_min: 30 * SEC,
+                    outage_max: 2 * MIN,
+                    cloud: false,
+                }),
+                cold_start: Some(ColdStartPlan {
+                    slow_prob: 0.3,
+                    factor_min: 2.0,
+                    factor_max: 5.0,
+                }),
+                crash_loop: Some(CrashLoopPlan {
+                    prob: 0.15,
+                    max_restarts: 3,
+                }),
+                net_delay: Some(NetDelayPlan {
+                    extra_min: 20 * MS,
+                    extra_max: 200 * MS,
+                }),
+            },
+        ),
+    ]
+}
+
+/// Look up a chaos preset by name.
+pub fn chaos_preset(name: &str) -> crate::Result<FaultPlan> {
+    let presets = chaos_presets();
+    match presets.iter().find(|(n, _)| n == name) {
+        Some((_, plan)) => Ok(*plan),
+        None => {
+            let names: Vec<&str> = presets.iter().map(|(n, _)| n.as_str()).collect();
+            anyhow::bail!("unknown chaos preset '{name}' (expected {})", names.join("|"))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn chaos_presets_cover_the_axes() {
+        let presets = chaos_presets();
+        assert_eq!(presets.len(), 5);
+        assert!(chaos_preset("none").unwrap().is_empty());
+        assert_eq!(chaos_preset("node-outage").unwrap().label(), "crash");
+        assert_eq!(
+            chaos_preset("flaky-pods").unwrap().label(),
+            "coldstart+crashloop"
+        );
+        assert_eq!(chaos_preset("slow-network").unwrap().label(), "netdelay");
+        let storm = chaos_preset("full-storm").unwrap();
+        assert_eq!(storm.label(), "crash+coldstart+crashloop+netdelay");
+        assert!(storm.node_crash.is_some() && storm.net_delay.is_some());
+        assert!(chaos_preset("hurricane").is_err());
+    }
+
+    #[test]
+    fn heterogeneous_city_cycles_classes_per_zone() {
+        use crate::config::NodeClass;
+        let mix = ClassMix::new(&[NodeClass::Small, NodeClass::Large]).unwrap();
+        let cfg = edge_city_with_classes(3, 3, mix);
+        cfg.validate().unwrap();
+        // Worker i of each zone: small, large, small.
+        for zone in 1..=3u32 {
+            let cpus: Vec<u32> = cfg
+                .nodes
+                .iter()
+                .filter(|n| n.tier == Tier::Edge && n.zone == zone)
+                .map(|n| n.cpu_millis)
+                .collect();
+            assert_eq!(cpus, vec![1000, 4000, 1000], "zone {zone}");
+        }
+        // Reservation is class-independent (Table-2 edge overhead).
+        assert!(cfg
+            .nodes
+            .iter()
+            .filter(|n| n.tier == Tier::Edge)
+            .all(|n| n.reserved_cpu_millis == 300 && n.reserved_ram_mb == 384));
+        // Small workers host (1000-300)/500 = 1 pod; large (4000-300)/500 = 7.
+        let (cluster, ids) = cfg.build();
+        assert_eq!(cluster.max_replicas(ids[0]), 1 + 7 + 1);
+    }
 
     #[test]
     fn scenario_presets_build() {

@@ -3,7 +3,10 @@
 
 use crate::app::{App, TaskCosts};
 use crate::autoscaler::{Autoscaler, Recommendation};
-use crate::cluster::{Cluster, DeploymentId};
+use crate::cluster::{
+    chaos_net_stream, chaos_pod_stream, chaos_schedule_stream, schedule_node_faults,
+    ChaosCounters, Cluster, DeploymentId, FaultPlan, NetChaos, PodChaos,
+};
 use crate::config::ClusterConfig;
 use crate::metrics::{MetricsPipeline, DEFAULT_SCRAPE_INTERVAL};
 use crate::sim::{CoreKind, Event, EventQueue, ServiceId, Time};
@@ -62,6 +65,12 @@ pub struct SimWorld {
     rng_service: Pcg64,
     rng_workload: Pcg64,
     scrape_interval: Time,
+    /// Chaos-plane fault counters (all zero on fault-free runs). The
+    /// pod-chaos contributions are folded in by
+    /// [`Self::chaos_summary`], not here.
+    pub chaos: ChaosCounters,
+    /// Crash time per node index while it is down (downtime accounting).
+    crashed_at: Vec<Option<Time>>,
     /// Events processed (perf counter).
     pub events_processed: u64,
     /// Whether the initial periodic ticks have been armed. Guarding on
@@ -115,6 +124,7 @@ impl SimWorld {
             cluster.reconcile(id, dcfg.initial_replicas, &mut queue, &mut rng_cluster);
         }
 
+        let crashed_at = vec![None; cluster.nodes.len()];
         SimWorld {
             queue,
             cluster,
@@ -130,9 +140,55 @@ impl SimWorld {
             rng_service: Pcg64::new(seed, 2),
             rng_workload: Pcg64::new(seed, 3),
             scrape_interval: DEFAULT_SCRAPE_INTERVAL,
+            chaos: ChaosCounters::default(),
+            crashed_at,
             events_processed: 0,
             started: false,
         }
+    }
+
+    /// Install a fault plan for a run ending at `end` (call before the
+    /// first [`Self::run_until`]). An empty plan is a strict no-op —
+    /// no RNG construction, no events, no state change — so fault-free
+    /// runs stay bit-identical to builds without the chaos plane. All
+    /// fault randomness comes from the dedicated chaos streams keyed by
+    /// `seed` (world index 0 — the monolith), never from the engine
+    /// streams.
+    pub fn install_chaos(&mut self, plan: &FaultPlan, seed: u64, end: Time) {
+        if plan.is_empty() {
+            return;
+        }
+        if let Some(nc) = &plan.node_crash {
+            let mut rng = Pcg64::new(seed, chaos_schedule_stream(0));
+            schedule_node_faults(&self.cluster, nc, end, &mut rng, &mut self.queue);
+        }
+        if plan.cold_start.is_some() || plan.crash_loop.is_some() {
+            self.cluster.set_pod_chaos(Some(PodChaos::new(
+                Pcg64::new(seed, chaos_pod_stream(0)),
+                plan.cold_start,
+                plan.crash_loop,
+            )));
+        }
+        if let Some(nd) = &plan.net_delay {
+            self.app
+                .set_net_chaos(Some(NetChaos::new(Pcg64::new(seed, chaos_net_stream(0)), nd)));
+        }
+    }
+
+    /// The run's fault counters with end-of-run finalization: nodes
+    /// still down at `end` contribute their remaining downtime, and the
+    /// pod-chaos restart/init-delay stats are folded in. Non-destructive
+    /// (returns a merged clone).
+    pub fn chaos_summary(&self, end: Time) -> ChaosCounters {
+        let mut out = self.chaos.clone();
+        for t in self.crashed_at.iter().flatten() {
+            out.downtime += end.saturating_sub(*t);
+        }
+        if let Some(pc) = self.cluster.pod_chaos() {
+            out.crash_loops += pc.crash_loops;
+            out.init_delays.merge(&pc.init_delays);
+        }
+        out
     }
 
     /// Register a workload generator (started by [`Self::run_until`]).
@@ -315,6 +371,47 @@ impl SimWorld {
                         &mut self.queue,
                         &mut self.rng_workload,
                     );
+                }
+                Event::NodeCrash { node } => {
+                    if let Some(out) = self.cluster.crash_node(node) {
+                        self.chaos.crashes += 1;
+                        self.chaos.pods_killed += out.pods_killed as u64;
+                        self.crashed_at[node.0 as usize] = Some(now);
+                        // Replace lost capacity immediately (the
+                        // ReplicaSet controller reacts to pod deletion,
+                        // not the next autoscale tick).
+                        for &dep in &out.deployments {
+                            let desired =
+                                self.cluster.deployments[dep.0 as usize].desired_replicas;
+                            let before = self.cluster.live_replicas(dep);
+                            self.cluster.reconcile(
+                                dep,
+                                desired,
+                                &mut self.queue,
+                                &mut self.rng_cluster,
+                            );
+                            let after = self.cluster.live_replicas(dep);
+                            self.chaos.pods_rescheduled +=
+                                after.saturating_sub(before) as u64;
+                        }
+                        self.app.requeue_orphans(
+                            &out.orphans,
+                            &mut self.cluster,
+                            &mut self.queue,
+                            &mut self.rng_service,
+                        );
+                    }
+                }
+                Event::NodeRejoin { node } => {
+                    if self.cluster.rejoin_node(node) {
+                        self.chaos.rejoins += 1;
+                        if let Some(t) = self.crashed_at[node.0 as usize].take() {
+                            self.chaos.downtime += now.saturating_sub(t);
+                        }
+                        // Recovered capacity absorbs the Pending backlog.
+                        self.cluster
+                            .retry_pending(&mut self.queue, &mut self.rng_cluster);
+                    }
                 }
             }
         }

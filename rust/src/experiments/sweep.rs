@@ -26,10 +26,11 @@ use crate::app::TaskCosts;
 use crate::autoscaler::{
     specs_label, Autoscaler, Hpa, HpaConfig, Ppa, PpaConfig, ScalerPolicy, ScalerRegistry,
 };
+use crate::cluster::FaultPlan;
 use crate::config::{ClusterConfig, Topology};
 use crate::forecast::ArmaForecaster;
 use crate::forecast::NaiveForecaster;
-use crate::sim::{run_sharded, CoreKind, ShardSpec, Time, MIN};
+use crate::sim::{run_sharded, to_secs, CoreKind, ShardSpec, Time, MIN};
 use crate::stats::{percentile, summarize, Summary};
 use crate::util::json::Json;
 use crate::workload::Scenario;
@@ -164,6 +165,15 @@ pub struct SweepConfig {
     /// golden single-threaded reference with its own RNG stream layout,
     /// so `0` and `>= 1` are two (each bit-reproducible) schedules.
     pub shards: usize,
+    /// Fault plan every cell runs under (see `cluster::chaos` and
+    /// [`crate::config::chaos_presets`]). [`FaultPlan::none`] — the
+    /// fault-free default — is a strict no-op: cells are bit-identical
+    /// to a sweep without the chaos plane (asserted by
+    /// `tests/golden_chaos_equivalence.rs`). Faulted cells stay
+    /// bit-reproducible across runs, worker-thread counts and shard
+    /// counts, because all fault randomness comes from dedicated chaos
+    /// RNG streams keyed by the cell seed.
+    pub chaos: FaultPlan,
 }
 
 /// Deterministic per-cell outcome (everything except wall-clock).
@@ -197,6 +207,22 @@ pub struct CellMetrics {
     pub replicas_max: usize,
     /// Mean prediction MSE across PPA scalers that made predictions.
     pub prediction_mse: Option<f64>,
+    /// Fault-plan label the cell ran under (`none` when fault-free).
+    pub chaos: String,
+    /// Node crashes injected.
+    pub crashes: u64,
+    /// Crashed nodes that rejoined before the end of the cell.
+    pub rejoins: u64,
+    /// Pods killed by node crashes.
+    pub pods_killed: u64,
+    /// Replacement pods scheduled by the post-crash reconciles.
+    pub pods_rescheduled: u64,
+    /// Simulated container crash-loop restarts.
+    pub crash_loops: u64,
+    /// Total node downtime in simulated seconds (crash → rejoin or end).
+    pub downtime_secs: f64,
+    /// p95 of perturbed pod init delays, seconds (NaN when no pod chaos).
+    pub cold_start_p95: f64,
 }
 
 impl CellMetrics {
@@ -263,6 +289,7 @@ pub fn run_cell(
     minutes: u64,
     core: CoreKind,
     shards: usize,
+    chaos: &FaultPlan,
 ) -> CellResult {
     let mut scratch = CellScratch::default();
     run_cell_with_scratch(
@@ -276,6 +303,7 @@ pub fn run_cell(
         minutes,
         core,
         shards,
+        chaos,
         &mut scratch,
     )
 }
@@ -294,6 +322,7 @@ pub fn run_cell_with_scratch(
     minutes: u64,
     core: CoreKind,
     shards: usize,
+    chaos: &FaultPlan,
     scratch: &mut CellScratch,
 ) -> CellResult {
     let wall = crate::util::wallclock();
@@ -301,8 +330,9 @@ pub fn run_cell_with_scratch(
     scratch.reps.clear();
     scratch.mses.clear();
     scratch.specs.clear();
+    let end = minutes * MIN;
 
-    let (events, completed, sort, eigen, replicas_max) = if shards == 0 {
+    let (events, completed, sort, eigen, replicas_max, chaos_counters) = if shards == 0 {
         let mut world = SimWorld::build_with_core(cluster, TaskCosts::default(), seed, core);
         for gen in scenario.build_generators() {
             world.add_generator(gen);
@@ -315,7 +345,8 @@ pub fn run_cell_with_scratch(
             };
             world.add_scaler(autoscaler, svc);
         }
-        let events = world.run_until(minutes * MIN);
+        world.install_chaos(chaos, seed, end);
+        let events = world.run_until(end);
         scratch
             .specs
             .extend(world.scalers.iter().map(|b| specs_label(b.autoscaler.specs())));
@@ -340,6 +371,7 @@ pub fn run_cell_with_scratch(
             stats.sort.clone(),
             stats.eigen.clone(),
             replicas_max,
+            world.chaos_summary(end),
         )
     } else {
         let spec = ShardSpec {
@@ -347,8 +379,9 @@ pub fn run_cell_with_scratch(
             core,
             seed,
             costs: TaskCosts::default(),
-            end: minutes * MIN,
+            end,
             record_decisions: false,
+            chaos: *chaos,
         };
         let run = run_sharded(
             cluster,
@@ -374,6 +407,7 @@ pub fn run_cell_with_scratch(
             run.sort_stats(),
             run.eigen_stats(),
             replicas_max,
+            run.chaos_counters(),
         )
     };
 
@@ -397,6 +431,14 @@ pub fn run_cell_with_scratch(
         replicas_mean: summarize(&scratch.reps).mean,
         replicas_max,
         prediction_mse: (!scratch.mses.is_empty()).then(|| summarize(&scratch.mses).mean),
+        chaos: chaos.label(),
+        crashes: chaos_counters.crashes,
+        rejoins: chaos_counters.rejoins,
+        pods_killed: chaos_counters.pods_killed,
+        pods_rescheduled: chaos_counters.pods_rescheduled,
+        crash_loops: chaos_counters.crash_loops,
+        downtime_secs: to_secs(chaos_counters.downtime),
+        cold_start_p95: chaos_counters.cold_start_p95(),
     };
     CellResult {
         metrics,
@@ -476,6 +518,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> crate::Result<SweepResult> {
                         cfg.minutes,
                         cfg.core,
                         cfg.shards,
+                        &cfg.chaos,
                         &mut scratch,
                     );
                     slots.lock().unwrap()[i] = Some(result);
@@ -553,6 +596,17 @@ impl CellResult {
             "prediction_mse".to_string(),
             m.prediction_mse.map_or(Json::Null, num),
         );
+        o.insert("chaos".to_string(), Json::Str(m.chaos.clone()));
+        o.insert("crashes".to_string(), Json::Num(m.crashes as f64));
+        o.insert("rejoins".to_string(), Json::Num(m.rejoins as f64));
+        o.insert("pods_killed".to_string(), Json::Num(m.pods_killed as f64));
+        o.insert(
+            "pods_rescheduled".to_string(),
+            Json::Num(m.pods_rescheduled as f64),
+        );
+        o.insert("crash_loops".to_string(), Json::Num(m.crash_loops as f64));
+        o.insert("downtime_secs".to_string(), num(m.downtime_secs));
+        o.insert("cold_start_p95".to_string(), num(m.cold_start_p95));
         o.insert("wall_secs".to_string(), num(self.wall_secs));
         Json::Obj(o)
     }
@@ -646,6 +700,7 @@ mod tests {
             core: CoreKind::Calendar,
             fleet: None,
             shards: 0,
+            chaos: FaultPlan::none(),
         }
     }
 
@@ -729,6 +784,7 @@ mod tests {
             core: CoreKind::Calendar,
             fleet: None,
             shards: 0,
+            chaos: FaultPlan::none(),
         };
         let result = run_sweep(&cfg).unwrap();
         let cell = &result.cells[0].metrics;
@@ -751,6 +807,7 @@ mod tests {
             core: CoreKind::Calendar,
             fleet: None,
             shards: 0,
+            chaos: FaultPlan::none(),
         })
         .unwrap();
         let dir = std::env::temp_dir().join("ppa_sweep_test");
@@ -799,6 +856,7 @@ mod tests {
             core: CoreKind::Calendar,
             fleet: None,
             shards: 0,
+            chaos: FaultPlan::none(),
         };
         assert!(run_sweep(&cfg).is_err());
     }
@@ -818,6 +876,7 @@ mod tests {
             core: CoreKind::Calendar,
             fleet: None,
             shards: 0,
+            chaos: FaultPlan::none(),
         };
         let err = run_sweep(&cfg).unwrap_err();
         assert!(format!("{err}").contains("zone 9"));
@@ -831,6 +890,7 @@ mod tests {
         let topo = Topology::EdgeCity {
             zones: 50,
             workers_per_zone: 2,
+            mix: Default::default(),
         };
         let cluster = topo.cluster();
         let presets = crate::config::city_scenario_presets(50);
@@ -870,6 +930,7 @@ mod tests {
             topology: Topology::EdgeCity {
                 zones: 8,
                 workers_per_zone: 2,
+                mix: Default::default(),
             },
             scenarios: crate::config::city_scenario_presets(8)[..2].to_vec(),
             scalers: vec![AutoscalerKind::Hpa, AutoscalerKind::PpaArma],
@@ -879,6 +940,7 @@ mod tests {
             core: CoreKind::Calendar,
             fleet: None,
             shards: 0,
+            chaos: FaultPlan::none(),
         };
         let serial = run_sweep(&grid(1)).unwrap();
         let parallel = run_sweep(&grid(4)).unwrap();
@@ -925,6 +987,7 @@ mod tests {
             topology: Topology::EdgeCity {
                 zones: 8,
                 workers_per_zone: 2,
+                mix: Default::default(),
             },
             scenarios: crate::config::city_scenario_presets(8)[..2].to_vec(),
             scalers: vec![AutoscalerKind::Hpa, AutoscalerKind::PpaArma],
@@ -934,6 +997,7 @@ mod tests {
             core,
             fleet: None,
             shards: 0,
+            chaos: FaultPlan::none(),
         };
         let calendar = run_sweep(&grid(CoreKind::Calendar)).unwrap();
         let heap = run_sweep(&grid(CoreKind::Heap)).unwrap();
@@ -958,6 +1022,7 @@ mod tests {
             core: CoreKind::Calendar,
             fleet: None,
             shards: 0,
+            chaos: FaultPlan::none(),
         };
         let err = run_sweep(&cfg).unwrap_err();
         assert!(format!("{err}").contains("topology 'paper'"), "{err}");
@@ -974,6 +1039,7 @@ mod tests {
         let topology = Topology::EdgeCity {
             zones: 8,
             workers_per_zone: 2,
+            mix: Default::default(),
         };
         let cluster = topology.cluster();
         let presets = crate::config::city_scenario_presets(8);
@@ -999,6 +1065,7 @@ mod tests {
             4,
             CoreKind::Calendar,
             0,
+            &FaultPlan::none(),
         );
         let m = &cell.metrics;
         assert!(m.events > 100, "fleet cell must simulate: {}", m.events);
@@ -1032,6 +1099,7 @@ mod tests {
                 5,
                 CoreKind::Calendar,
                 shards,
+                &FaultPlan::none(),
             )
             .metrics
         };
@@ -1076,6 +1144,7 @@ mod tests {
         let topology = Topology::EdgeCity {
             zones: 8,
             workers_per_zone: 2,
+            mix: Default::default(),
         };
         let cluster = topology.cluster();
         let presets = crate::config::city_scenario_presets(8);
@@ -1120,6 +1189,53 @@ mod tests {
         // Per-metric provenance: multi-spec decisions carry 2 recs.
         assert!(multi.decision_log.iter().all(|d| d.recommendations.len() == 2));
         assert!(base.decision_log.iter().all(|d| d.recommendations.len() == 1));
+    }
+
+    #[test]
+    fn faulted_cell_reports_counters_and_reproduces() {
+        // A faulted monolith cell: fault counters surface in the
+        // metrics/JSON, and the whole cell is bit-reproducible.
+        let cluster = Topology::Paper.cluster();
+        let scenarios = tiny_scenarios();
+        let (name, scenario) = &scenarios[0];
+        let chaos = crate::config::chaos_preset("full-storm").unwrap();
+        let cell = |shards: usize| {
+            run_cell(
+                "paper",
+                &cluster,
+                name,
+                scenario,
+                AutoscalerKind::Hpa,
+                None,
+                21,
+                6,
+                CoreKind::Calendar,
+                shards,
+                &chaos,
+            )
+            .metrics
+        };
+        let a = cell(0);
+        let b = cell(0);
+        assert_eq!(a.chaos, "crash+coldstart+crashloop+netdelay");
+        assert!(a.crashes > 0, "storm must crash nodes: {a:?}");
+        assert!(a.downtime_secs > 0.0);
+        assert!(a.events > 100 && a.completed > 0);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "faulted cell must reproduce");
+        // The JSON schema carries the fault columns.
+        let result = CellResult {
+            metrics: a.clone(),
+            wall_secs: 0.0,
+        };
+        let doc = result.to_json();
+        assert_eq!(doc.get("chaos").as_str(), Some("crash+coldstart+crashloop+netdelay"));
+        assert_eq!(doc.get("crashes").as_f64(), Some(a.crashes as f64));
+        assert!(doc.get("downtime_secs").as_f64().unwrap() > 0.0);
+        // And the sharded engine reproduces its own faulted schedule.
+        let s1 = cell(1);
+        let s2 = cell(2);
+        assert_eq!(s1.fingerprint(), s2.fingerprint(), "faulted shards 1 vs 2");
+        assert!(s1.crashes > 0);
     }
 
     #[test]

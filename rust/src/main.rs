@@ -5,12 +5,13 @@
 //!          [--hours H] [--pretrain-hours H] [--seed S]
 //! ppa-edge run [--scaler hpa|ppa] [--model lstm|arma|naive]
 //!          [--metric name:target[:src]]... [--behavior rules]
-//!          [--minutes N] [--seed S] [--shards S]
+//!          [--minutes N] [--seed S] [--shards S] [--chaos preset]
 //! ppa-edge sweep [--minutes N] [--seeds K] [--threads T]
-//!          [--topology paper|city-N[xW]] [--scenarios a,b,..]
+//!          [--topology paper|city-N[xW][:classes]] [--scenarios a,b,..]
 //!          [--scalers hpa,ppa-arma,..] [--core calendar|heap]
 //!          [--metric name:target[:src]]... [--behavior rules]
-//!          [--shards S] [--out FILE]
+//!          [--shards S] [--chaos preset] [--node-classes list]
+//!          [--out FILE]
 //! ppa-edge info
 //! ```
 //!
@@ -104,11 +105,13 @@ USAGE:
   ppa-edge run [--scaler hpa|ppa] [--model lstm|arma|naive]
            [--metric name:target[:current|:forecast]]...
            [--behavior rules] [--minutes N] [--seed S] [--shards S]
+           [--chaos none|node-outage|flaky-pods|slow-network|full-storm]
   ppa-edge sweep [--minutes N] [--seeds K] [--threads T]
-           [--topology paper|city-N[xW]] [--scenarios a,b,..]
+           [--topology paper|city-N[xW][:classes]] [--scenarios a,b,..]
            [--scalers hpa,ppa-arma,ppa-naive] [--core calendar|heap]
            [--metric name:target[:current|:forecast]]...
            [--behavior rules] [--shards S] [--out FILE]
+           [--chaos preset] [--node-classes small,medium,large]
   ppa-edge info
   ppa-edge help | --help | -h
 
@@ -150,6 +153,22 @@ SWEEP (scenario matrix):
   S >= 1 (0, the default, keeps the single-queue reference engine).
   City-scale example:
     ppa-edge sweep --topology city-50 --scalers hpa,ppa-arma --seeds 2 --shards 4
+
+CHAOS (deterministic fault injection):
+  --chaos picks a fault-plan preset: none (default), node-outage
+  (Poisson node crashes + rejoins), flaky-pods (cold-start latency
+  inflation + crash-loops), slow-network (extra edge->cloud delay on
+  the Eigen forward path), full-storm (all of the above). Fault
+  timings derive from the cell seed on dedicated RNG streams, so a
+  faulted run is bit-reproducible across runs, --threads, and
+  --shards 1|2|4|8; --chaos none is byte-identical to a build without
+  the chaos plane. City workers can be heterogeneous: --node-classes
+  small,large cycles hardware classes per zone worker (small =
+  1 core/1 GiB, medium = Table-2 worker, large = 4 cores/4 GiB);
+  equivalently suffix the topology, e.g. city-8x4:small,large.
+  Faulted city sweep example:
+    ppa-edge sweep --topology city-8 --node-classes small,large \\
+             --chaos full-storm --seeds 2 --shards 4
 
 Full flag reference: docs/CLI.md (including the sweep JSON schema).
 Artifacts must exist for LSTM experiments: run `make artifacts`.";
@@ -290,9 +309,20 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let n_seeds = args.get_u64("seeds", 4)?;
     let threads = args.get_u64("threads", 0)? as usize;
     let out = args.get("out").unwrap_or("target/experiments/sweep.json");
-    let topology = ppa_edge::config::Topology::parse(args.get("topology").unwrap_or("paper"))?;
+    let mut topology =
+        ppa_edge::config::Topology::parse(args.get("topology").unwrap_or("paper"))?;
+    // `--node-classes small,large` is sugar for the `city-NxW:small,large`
+    // topology suffix; it overrides any suffix already present.
+    if let Some(list) = args.get("node-classes") {
+        let parsed = ppa_edge::config::ClassMix::parse(list)?;
+        match &mut topology {
+            ppa_edge::config::Topology::EdgeCity { mix, .. } => *mix = parsed,
+            _ => bail!("--node-classes needs a city topology (e.g. --topology city-8x4)"),
+        }
+    }
     let core = ppa_edge::sim::CoreKind::parse(args.get("core").unwrap_or("calendar"))?;
     let shards = args.get_u64("shards", 0)? as usize;
+    let chaos = ppa_edge::config::chaos_preset(args.get("chaos").unwrap_or("none"))?;
 
     // The preset library follows the topology: Table-2 scenarios on
     // `paper`, generated N-zone `cityN-*` composites on `city-N[xW]`.
@@ -354,16 +384,18 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         core,
         fleet,
         shards,
+        chaos,
     };
 
     println!(
         "sweeping {} scenarios x {} autoscalers x {} seeds on topology {}, \
-         {} sim-minutes per cell...",
+         {} sim-minutes per cell (chaos: {})...",
         cfg.scenarios.len(),
         cfg.scalers.len(),
         cfg.seeds.len(),
-        topology.label(),
-        minutes
+        cfg.topology.label(),
+        minutes,
+        cfg.chaos.label()
     );
     let result = run_sweep(&cfg)?;
     report::print_sweep(&result);
@@ -380,8 +412,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     // the `pjrt` cargo feature and `make artifacts`.
     let model = ModelKind::parse(args.get("model").unwrap_or("arma"))?;
     let shards = args.get_u64("shards", 0)? as usize;
+    let chaos = ppa_edge::config::chaos_preset(args.get("chaos").unwrap_or("none"))?;
     if shards >= 1 {
-        return cmd_run_sharded(args, minutes, seed, scaler, model, shards);
+        return cmd_run_sharded(args, minutes, seed, scaler, model, shards, &chaos);
     }
 
     let cfg = ppa_edge::config::paper_cluster();
@@ -441,9 +474,11 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         other => bail!("unknown scaler '{other}' (hpa|ppa)"),
     }
 
+    world.install_chaos(&chaos, seed, minutes * MIN);
     println!(
-        "running {minutes} simulated minutes with {scaler} ({})...",
-        model.name()
+        "running {minutes} simulated minutes with {scaler} ({}), chaos: {}...",
+        model.name(),
+        chaos.label()
     );
     let wall = ppa_edge::util::wallclock();
     let events = world.run_until(minutes * MIN);
@@ -476,7 +511,24 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         stats.eigen.quantile(95.0)
     );
     println!("  RIR: {:.3} ± {:.3}", rir.mean, rir.std);
+    if !chaos.is_empty() {
+        print_chaos_summary(&world.chaos_summary(minutes * MIN));
+    }
     Ok(())
+}
+
+/// One-line fault tally for faulted runs (both engines).
+fn print_chaos_summary(c: &ppa_edge::cluster::ChaosCounters) {
+    println!(
+        "  faults: {} crashes / {} rejoins, {} pods killed, {} rescheduled, \
+         {} crash-loops, {:.1}s downtime",
+        c.crashes,
+        c.rejoins,
+        c.pods_killed,
+        c.pods_rescheduled,
+        c.crash_loops,
+        ppa_edge::sim::to_secs(c.downtime)
+    );
 }
 
 /// `run --shards S`: the same paper-topology run on the sharded engine
@@ -490,6 +542,7 @@ fn cmd_run_sharded(
     scaler: &str,
     model: ModelKind,
     shards: usize,
+    chaos: &ppa_edge::cluster::FaultPlan,
 ) -> anyhow::Result<()> {
     use ppa_edge::sim::{run_sharded, ShardSpec};
 
@@ -508,11 +561,13 @@ fn cmd_run_sharded(
         costs: TaskCosts::default(),
         end: minutes * MIN,
         record_decisions: false,
+        chaos: *chaos,
     };
 
     println!(
-        "running {minutes} simulated minutes with {scaler} ({}) on {shards} shard(s)...",
-        model.name()
+        "running {minutes} simulated minutes with {scaler} ({}) on {shards} shard(s), chaos: {}...",
+        model.name(),
+        chaos.label()
     );
     let wall = ppa_edge::util::wallclock();
     let run = match scaler {
@@ -599,6 +654,9 @@ fn cmd_run_sharded(
         eigen_stats.quantile(95.0)
     );
     println!("  RIR: {:.3} ± {:.3}", rir.mean, rir.std);
+    if !chaos.is_empty() {
+        print_chaos_summary(&run.chaos_counters());
+    }
     println!("  fingerprint: identical for any --shards >= 1 at this seed");
     Ok(())
 }

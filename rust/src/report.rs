@@ -177,35 +177,63 @@ pub fn print_nasa_eval(eval: &NasaEval) {
     );
 }
 
-/// Print the scenario sweep: per-cell rows, then per-(scenario, scaler)
-/// aggregates across seeds.
-pub fn print_sweep(result: &SweepResult) {
+/// Per-cell sweep table headers. `chaotic` appends the fault columns,
+/// printed when any cell ran under a non-empty fault plan. Pinned by
+/// `sweep_headers_are_pinned` — downstream tooling parses these.
+pub fn sweep_headers(chaotic: bool) -> Vec<&'static str> {
+    let mut headers = vec![
+        "scenario", "scaler", "seed", "sort (s)", "p95", "RIR", "RIR p95", "repl μ/max",
+        "pred MSE", "served",
+    ];
+    if chaotic {
+        headers.extend(["faults", "crash/rejoin", "resched", "down (s)", "cold p95"]);
+    }
+    headers
+}
+
+/// One per-cell sweep row, matching [`sweep_headers`] column for column.
+fn sweep_row(m: &crate::experiments::CellMetrics, chaotic: bool) -> Vec<String> {
     let fmt_opt = |v: Option<f64>| v.map_or_else(|| "-".to_string(), |x| format!("{x:.1}"));
+    let mut row = vec![
+        m.scenario.clone(),
+        m.scaler.clone(),
+        m.seed.to_string(),
+        format!("{:.3}±{:.3}", m.sort.mean, m.sort.std),
+        format!("{:.3}", m.sort_p95),
+        format!("{:.3}", m.rir.mean),
+        format!("{:.3}", m.rir_p95),
+        format!("{:.1}/{}", m.replicas_mean, m.replicas_max),
+        fmt_opt(m.prediction_mse),
+        m.completed.to_string(),
+    ];
+    if chaotic {
+        row.push(m.chaos.clone());
+        row.push(format!("{}/{}", m.crashes, m.rejoins));
+        row.push(m.pods_rescheduled.to_string());
+        row.push(format!("{:.1}", m.downtime_secs));
+        // NaN = no pod chaos (no perturbed init delays recorded).
+        row.push(if m.cold_start_p95.is_finite() {
+            format!("{:.2}", m.cold_start_p95)
+        } else {
+            "-".to_string()
+        });
+    }
+    row
+}
+
+/// Print the scenario sweep: per-cell rows, then per-(scenario, scaler)
+/// aggregates across seeds. Fault columns appear when any cell ran
+/// under a non-empty fault plan.
+pub fn print_sweep(result: &SweepResult) {
+    let chaotic = result.cells.iter().any(|c| c.metrics.chaos != "none");
     let rows: Vec<Vec<String>> = result
         .cells
         .iter()
-        .map(|c| {
-            let m = &c.metrics;
-            vec![
-                m.scenario.clone(),
-                m.scaler.clone(),
-                m.seed.to_string(),
-                format!("{:.3}±{:.3}", m.sort.mean, m.sort.std),
-                format!("{:.3}", m.sort_p95),
-                format!("{:.3}", m.rir.mean),
-                format!("{:.3}", m.rir_p95),
-                format!("{:.1}/{}", m.replicas_mean, m.replicas_max),
-                fmt_opt(m.prediction_mse),
-                m.completed.to_string(),
-            ]
-        })
+        .map(|c| sweep_row(&c.metrics, chaotic))
         .collect();
     print_table(
         "Scenario sweep — per-cell results",
-        &[
-            "scenario", "scaler", "seed", "sort (s)", "p95", "RIR", "RIR p95", "repl μ/max",
-            "pred MSE", "served",
-        ],
+        &sweep_headers(chaotic),
         &rows,
     );
 
@@ -269,10 +297,8 @@ mod tests {
         assert!(!fmt_p(0.5).contains("✓"));
     }
 
-    #[test]
-    fn sweep_table_prints() {
-        use crate::experiments::sweep::{CellMetrics, CellResult, SweepResult};
-        let metrics = CellMetrics {
+    fn cell_metrics(chaos: &str) -> crate::experiments::CellMetrics {
+        crate::experiments::CellMetrics {
             topology: "paper".into(),
             scenario: "step".into(),
             scaler: "hpa".into(),
@@ -292,17 +318,65 @@ mod tests {
             replicas_mean: 2.0,
             replicas_max: 4,
             prediction_mse: None,
-        };
-        print_sweep(&SweepResult {
-            topology: "paper".into(),
-            core: crate::sim::CoreKind::Calendar,
-            cells: vec![CellResult {
-                metrics,
-                wall_secs: 0.1,
-            }],
-            minutes: 5,
-            threads_used: 1,
-            wall_secs: 0.2,
-        });
+            chaos: chaos.into(),
+            crashes: if chaos == "none" { 0 } else { 3 },
+            rejoins: if chaos == "none" { 0 } else { 2 },
+            pods_killed: if chaos == "none" { 0 } else { 5 },
+            pods_rescheduled: if chaos == "none" { 0 } else { 5 },
+            crash_loops: 0,
+            downtime_secs: if chaos == "none" { 0.0 } else { 90.5 },
+            cold_start_p95: f64::NAN,
+        }
+    }
+
+    #[test]
+    fn sweep_table_prints() {
+        use crate::experiments::sweep::{CellResult, SweepResult};
+        for chaos in ["none", "crash"] {
+            print_sweep(&SweepResult {
+                topology: "paper".into(),
+                core: crate::sim::CoreKind::Calendar,
+                shards: 0,
+                cells: vec![CellResult {
+                    metrics: cell_metrics(chaos),
+                    wall_secs: 0.1,
+                }],
+                minutes: 5,
+                threads_used: 1,
+                wall_secs: 0.2,
+            });
+        }
+    }
+
+    #[test]
+    fn sweep_headers_are_pinned() {
+        // Downstream tooling parses these columns — changes here must be
+        // deliberate (update this pin and docs/CLI.md together).
+        assert_eq!(
+            sweep_headers(false),
+            vec![
+                "scenario", "scaler", "seed", "sort (s)", "p95", "RIR", "RIR p95",
+                "repl μ/max", "pred MSE", "served",
+            ]
+        );
+        assert_eq!(
+            sweep_headers(true),
+            vec![
+                "scenario", "scaler", "seed", "sort (s)", "p95", "RIR", "RIR p95",
+                "repl μ/max", "pred MSE", "served", "faults", "crash/rejoin", "resched",
+                "down (s)", "cold p95",
+            ]
+        );
+        // Rows line up with headers in both modes; fault cells render
+        // counters and the no-pod-chaos NaN as "-".
+        let plain = sweep_row(&cell_metrics("none"), false);
+        assert_eq!(plain.len(), sweep_headers(false).len());
+        let faulted = sweep_row(&cell_metrics("crash"), true);
+        assert_eq!(faulted.len(), sweep_headers(true).len());
+        assert_eq!(faulted[10], "crash");
+        assert_eq!(faulted[11], "3/2");
+        assert_eq!(faulted[12], "5");
+        assert_eq!(faulted[13], "90.5");
+        assert_eq!(faulted[14], "-");
     }
 }

@@ -105,6 +105,11 @@ pub enum Event {
     ModelUpdateTick { scaler: u32 },
     /// Workload generator wake-up (next arrival / phase switch).
     WorkloadTick { generator: u32 },
+    /// Chaos plane: a node crashes (see `cluster::chaos`). Only
+    /// enqueued by `schedule_node_faults` — absent from fault-free runs.
+    NodeCrash { node: NodeId },
+    /// Chaos plane: a crashed node rejoins the cluster.
+    NodeRejoin { node: NodeId },
 }
 
 #[cfg(test)]

@@ -53,7 +53,10 @@ use std::sync::{Barrier, Mutex};
 use super::{CoreKind, Event, EventQueue, ServiceId, Time};
 use crate::app::{App, ForwardedTask, ResponseStats, TaskCosts};
 use crate::autoscaler::{specs_label, Autoscaler, Ppa};
-use crate::cluster::{Cluster, DeploymentId, NodeSpec, Selector};
+use crate::cluster::{
+    chaos_net_stream, chaos_pod_stream, chaos_schedule_stream, schedule_node_faults,
+    ChaosCounters, Cluster, DeploymentId, FaultPlan, NetChaos, NodeSpec, PodChaos, Selector,
+};
 use crate::config::{ClusterConfig, NodeConfig};
 use crate::experiments::{DecisionRecord, RirSample};
 use crate::metrics::{MetricsPipeline, DEFAULT_SCRAPE_INTERVAL};
@@ -82,6 +85,18 @@ pub struct ShardSpec {
     pub end: Time,
     /// Populate per-world [`DecisionRecord`] logs (opt-in, unbounded).
     pub record_decisions: bool,
+    /// Fault plan (see `cluster::chaos`). [`FaultPlan::none`] is a
+    /// strict no-op: no chaos RNGs are built and no fault events are
+    /// enqueued, so the run is bit-identical to one without the chaos
+    /// plane. Each world draws its faults from chaos streams keyed by
+    /// its *world index*, so faulted runs stay bit-identical for every
+    /// shard count. The network-delay perturbation is installed only in
+    /// the cloud world (edge worlds hand Eigen forwards to the barrier
+    /// without a delay draw; the cloud draws at delivery, in the
+    /// shard-count-invariant barrier merge order). The extra delay is
+    /// non-negative, so it only pushes forward arrivals later and the
+    /// conservative-lookahead argument is untouched.
+    pub chaos: FaultPlan,
 }
 
 /// One zone world's slice of the topology: its nodes plus its single
@@ -194,6 +209,11 @@ struct ZoneWorld {
     rng_service: Pcg64,
     rng_workload: Pcg64,
     scrape_interval: Time,
+    /// Fault counters for this world (pod-chaos stats folded in by
+    /// [`Self::finish`]).
+    chaos: ChaosCounters,
+    /// Crash time per node index while it is down (downtime accounting).
+    crashed_at: Vec<Option<Time>>,
     events: u64,
     started: bool,
 }
@@ -208,7 +228,7 @@ impl ZoneWorld {
     ) -> Self {
         let (mut cluster, dep_ids) = plan.cfg.build();
         let dep = dep_ids[0];
-        let app = match plan.zone {
+        let mut app = match plan.zone {
             Some(z) => App::new_edge_shard(spec.costs, z, dep),
             None => App::new_cloud_shard(spec.costs, dep),
         };
@@ -219,6 +239,33 @@ impl ZoneWorld {
         for (dcfg, &id) in plan.cfg.deployments.iter().zip(&dep_ids) {
             cluster.reconcile(id, dcfg.initial_replicas, &mut queue, &mut rng_cluster);
         }
+        // Install the fault plan. Empty plan ⇒ zero RNG construction,
+        // zero events — bit-identity with pre-chaos builds. The streams
+        // are keyed by world index, so the fault schedule of a world is
+        // independent of the shard grouping.
+        if let Some(nc) = &spec.chaos.node_crash {
+            let mut rng = Pcg64::new(spec.seed, chaos_schedule_stream(world));
+            schedule_node_faults(&cluster, nc, spec.end, &mut rng, &mut queue);
+        }
+        if spec.chaos.cold_start.is_some() || spec.chaos.crash_loop.is_some() {
+            cluster.set_pod_chaos(Some(PodChaos::new(
+                Pcg64::new(spec.seed, chaos_pod_stream(world)),
+                spec.chaos.cold_start,
+                spec.chaos.crash_loop,
+            )));
+        }
+        if let Some(nd) = &spec.chaos.net_delay {
+            // Cloud world only: edge worlds push Eigen forwards to the
+            // barrier without a delay draw; the cloud perturbs each
+            // forward at delivery (barrier merge order — shard-invariant).
+            if plan.zone.is_none() {
+                app.set_net_chaos(Some(NetChaos::new(
+                    Pcg64::new(spec.seed, chaos_net_stream(world)),
+                    nd,
+                )));
+            }
+        }
+        let crashed_at = vec![None; cluster.nodes.len()];
         ZoneWorld {
             world,
             zone: plan.zone,
@@ -237,6 +284,8 @@ impl ZoneWorld {
             rng_service: Pcg64::new(spec.seed, shard_stream(world, 1)),
             rng_workload: Pcg64::new(spec.seed, shard_stream(world, 2)),
             scrape_interval: DEFAULT_SCRAPE_INTERVAL,
+            chaos: ChaosCounters::default(),
+            crashed_at,
             events: 0,
             started: false,
         }
@@ -357,18 +406,67 @@ impl ZoneWorld {
                         );
                     }
                 }
+                Event::NodeCrash { node } => {
+                    if let Some(out) = self.cluster.crash_node(node) {
+                        self.chaos.crashes += 1;
+                        self.chaos.pods_killed += out.pods_killed as u64;
+                        self.crashed_at[node.0 as usize] = Some(now);
+                        // Replace lost capacity immediately (ReplicaSet
+                        // reaction, not the next autoscale tick).
+                        for &dep in &out.deployments {
+                            let desired =
+                                self.cluster.deployments[dep.0 as usize].desired_replicas;
+                            let before = self.cluster.live_replicas(dep);
+                            self.cluster.reconcile(
+                                dep,
+                                desired,
+                                &mut self.queue,
+                                &mut self.rng_cluster,
+                            );
+                            let after = self.cluster.live_replicas(dep);
+                            self.chaos.pods_rescheduled +=
+                                after.saturating_sub(before) as u64;
+                        }
+                        self.app.requeue_orphans(
+                            &out.orphans,
+                            &mut self.cluster,
+                            &mut self.queue,
+                            &mut self.rng_service,
+                        );
+                    }
+                }
+                Event::NodeRejoin { node } => {
+                    if self.cluster.rejoin_node(node) {
+                        self.chaos.rejoins += 1;
+                        if let Some(t) = self.crashed_at[node.0 as usize].take() {
+                            self.chaos.downtime += now.saturating_sub(t);
+                        }
+                        self.cluster
+                            .retry_pending(&mut self.queue, &mut self.rng_cluster);
+                    }
+                }
             }
         }
     }
 
-    /// Plain-data summary — the only thing that leaves the worker thread.
-    fn finish(mut self) -> WorldOutcome {
+    /// Plain-data summary — the only thing that leaves the worker
+    /// thread. `end` finalizes downtime for nodes still down at the end
+    /// of the run.
+    fn finish(mut self, end: Time) -> WorldOutcome {
         let prediction_mse = self
             .scaler
             .as_any()
             .downcast_ref::<Ppa>()
             .filter(|p| p.prediction_count() > 0)
             .map(|p| p.prediction_mse());
+        let mut chaos = self.chaos.clone();
+        for t in self.crashed_at.iter().flatten() {
+            chaos.downtime += end.saturating_sub(*t);
+        }
+        if let Some(pc) = self.cluster.pod_chaos() {
+            chaos.crash_loops += pc.crash_loops;
+            chaos.init_delays.merge(&pc.init_delays);
+        }
         WorldOutcome {
             world: self.world,
             zone: self.zone,
@@ -380,6 +478,7 @@ impl ZoneWorld {
             replica_log: std::mem::take(&mut self.replica_log),
             decision_log: std::mem::take(&mut self.decision_log),
             prediction_mse,
+            chaos,
         }
     }
 }
@@ -398,6 +497,8 @@ pub struct WorldOutcome {
     pub replica_log: Vec<(Time, ServiceId, usize)>,
     pub decision_log: Vec<DecisionRecord>,
     pub prediction_mse: Option<f64>,
+    /// This world's fault counters (all-zero on fault-free runs).
+    pub chaos: ChaosCounters,
 }
 
 /// A finished sharded run: per-world outcomes in world order (edge zones
@@ -454,6 +555,16 @@ impl ShardedRun {
     /// Prediction MSEs of the PPA worlds that made predictions.
     pub fn prediction_mses(&self) -> Vec<f64> {
         self.outcomes.iter().filter_map(|o| o.prediction_mse).collect()
+    }
+
+    /// Every world's fault counters merged, in world order (all-zero on
+    /// fault-free runs). Shard-count invariant like every other view.
+    pub fn chaos_counters(&self) -> ChaosCounters {
+        let mut acc = ChaosCounters::default();
+        for o in &self.outcomes {
+            acc.merge(&o.chaos);
+        }
+        acc
     }
 
     /// All RIR samples merged by time (stable: equal-time samples keep
@@ -614,7 +725,7 @@ pub fn run_sharded(
                     barrier.wait();
                     t = t_next;
                 }
-                worlds.into_iter().map(ZoneWorld::finish).collect()
+                worlds.into_iter().map(|wld| wld.finish(end)).collect()
             }));
         }
         let mut per_worker = Vec::with_capacity(shards);
@@ -688,6 +799,7 @@ mod tests {
             costs: TaskCosts::default(),
             end,
             record_decisions: true,
+            chaos: FaultPlan::none(),
         }
     }
 
@@ -823,5 +935,64 @@ mod tests {
         let eight = sharded_quickstart(8, 42);
         let one = sharded_quickstart(1, 42);
         assert_eq!(one.fingerprint(), eight.fingerprint());
+    }
+
+    fn storm() -> FaultPlan {
+        use crate::cluster::{ColdStartPlan, CrashLoopPlan, NetDelayPlan, NodeCrashPlan};
+        use crate::sim::{MS, SEC};
+        FaultPlan {
+            node_crash: Some(NodeCrashPlan {
+                mean_gap: MIN,
+                outage_min: 5 * SEC,
+                outage_max: 20 * SEC,
+                cloud: false,
+            }),
+            cold_start: Some(ColdStartPlan {
+                slow_prob: 0.5,
+                factor_min: 2.0,
+                factor_max: 4.0,
+            }),
+            crash_loop: Some(CrashLoopPlan {
+                prob: 0.25,
+                max_restarts: 3,
+            }),
+            net_delay: Some(NetDelayPlan {
+                extra_min: MS,
+                extra_max: 50 * MS,
+            }),
+        }
+    }
+
+    /// Tentpole invariant: a faulted run — node crashes, cold starts,
+    /// crash loops and network jitter all active — is bit-identical for
+    /// every shard count, counters included.
+    #[test]
+    fn faulted_shard_counts_are_bit_identical() {
+        let run = |shards| {
+            let cfg = quickstart_cluster();
+            let gens = vec![Generator::RandomAccess(RandomAccessGen::new(1))];
+            let sp = ShardSpec {
+                chaos: storm(),
+                ..spec(shards, 42, 6 * MIN)
+            };
+            run_sharded(&cfg, gens, &|_| Box::new(Hpa::with_defaults()), &sp).unwrap()
+        };
+        let one = run(1);
+        let two = run(2);
+        let four = run(4);
+        let c = one.chaos_counters();
+        assert!(c.crashes > 0, "storm plan must crash nodes: {c:?}");
+        assert!(c.pods_rescheduled > 0, "kills must trigger reschedules: {c:?}");
+        for other in [&two, &four] {
+            assert_eq!(one.fingerprint(), other.fingerprint(), "response streams");
+            assert_eq!(one.events(), other.events(), "event counts");
+            assert_eq!(
+                format!("{:?}", one.chaos_counters()),
+                format!("{:?}", other.chaos_counters()),
+                "fault counters"
+            );
+        }
+        // A faulted run must differ from the fault-free run of the seed.
+        assert_ne!(one.fingerprint(), sharded_quickstart(1, 42).fingerprint());
     }
 }

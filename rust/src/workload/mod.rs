@@ -9,7 +9,7 @@
 mod nasa;
 mod scenario;
 
-pub use nasa::{load_minute_counts, nasa_synthetic, NasaTraceConfig};
+pub use nasa::{load_azure_minute_counts, load_minute_counts, nasa_synthetic, NasaTraceConfig};
 pub use scenario::{
     DiurnalConfig, FlashCrowdConfig, RateGen, RateProfile, Scenario, StepSurgeConfig,
 };

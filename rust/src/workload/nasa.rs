@@ -94,19 +94,38 @@ pub fn nasa_synthetic(cfg: &NasaTraceConfig) -> Vec<f64> {
     counts
 }
 
+/// A UTF-8 byte-order mark, as some Windows-exported traces start with
+/// one. `char::is_whitespace` does not cover it, so `trim` alone leaves
+/// it glued to the first count.
+const BOM: char = '\u{feff}';
+
+/// One line of a trace file, normalized: BOM/CRLF/whitespace trimmed and
+/// anything from an (inline or full-line) `#` comment on dropped.
+/// Returns `None` for lines with no payload.
+fn trace_payload(line: &str) -> Option<&str> {
+    let line = line.split('#').next().unwrap_or("");
+    let line = line.trim_matches(|c: char| c.is_whitespace() || c == BOM);
+    if line.is_empty() {
+        None
+    } else {
+        Some(line)
+    }
+}
+
 /// Load per-minute counts from a preprocessed text file (one count per
-/// line, `#` comments allowed) — the path for users who have the real
-/// NASA logs.
+/// line) — the path for users who have the real NASA logs. Tolerates
+/// the usual export noise: CRLF line endings, a leading BOM, leading and
+/// trailing blank lines, and `#` comments (full-line or inline after a
+/// count).
 pub fn load_minute_counts(path: &Path) -> crate::Result<Vec<f64>> {
     use anyhow::Context;
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading trace {}", path.display()))?;
     let mut counts = Vec::new();
     for (i, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
+        let Some(line) = trace_payload(line) else {
             continue;
-        }
+        };
         let v: f64 = line
             .parse()
             .with_context(|| format!("bad count on line {}", i + 1))?;
@@ -115,6 +134,58 @@ pub fn load_minute_counts(path: &Path) -> crate::Result<Vec<f64>> {
     }
     anyhow::ensure!(!counts.is_empty(), "empty trace file");
     Ok(counts)
+}
+
+/// Load an Azure-Functions-style per-minute invocation CSV and collapse
+/// it to one aggregate per-minute trace.
+///
+/// The Azure Functions 2019 dataset ships one row per function: a few
+/// identity columns (owner/app/function hashes, trigger type) followed
+/// by integer-named columns `1..=1440`, one invocation count per minute
+/// of the day. This adapter finds the first integer-named header column,
+/// treats it and everything after as the minute axis, and sums the
+/// counts across all function rows — producing the same shape
+/// [`load_minute_counts`] does, ready for trace replay. The same export
+/// noise is tolerated (CRLF, BOM, blank lines, `#` comments).
+pub fn load_azure_minute_counts(path: &Path) -> crate::Result<Vec<f64>> {
+    use anyhow::Context;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    let mut rows = text
+        .lines()
+        .enumerate()
+        .filter_map(|(i, l)| trace_payload(l).map(|p| (i, p)));
+
+    let (_, header) = rows.next().context("empty trace file")?;
+    let fields: Vec<&str> = header.split(',').map(str::trim).collect();
+    let first_minute = fields
+        .iter()
+        .position(|f| f.parse::<u64>().is_ok())
+        .context("no integer-named minute columns in the CSV header")?;
+    let n_minutes = fields.len() - first_minute;
+
+    let mut totals = vec![0.0; n_minutes];
+    let mut n_rows = 0usize;
+    for (i, row) in rows {
+        let cells: Vec<&str> = row.split(',').map(str::trim).collect();
+        anyhow::ensure!(
+            cells.len() == fields.len(),
+            "row on line {} has {} columns, header has {}",
+            i + 1,
+            cells.len(),
+            fields.len()
+        );
+        for (m, cell) in cells[first_minute..].iter().enumerate() {
+            let v: f64 = cell
+                .parse()
+                .with_context(|| format!("bad count on line {}", i + 1))?;
+            anyhow::ensure!(v >= 0.0 && v.is_finite(), "negative count on line {}", i + 1);
+            totals[m] += v;
+        }
+        n_rows += 1;
+    }
+    anyhow::ensure!(n_rows > 0, "no function rows after the CSV header");
+    Ok(totals)
 }
 
 #[cfg(test)]
@@ -167,6 +238,52 @@ mod tests {
         std::fs::write(&path, "# header\n10\n20\n\n30\n").unwrap();
         let counts = load_minute_counts(&path).unwrap();
         assert_eq!(counts, vec![10.0, 20.0, 30.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tolerates_export_noise() {
+        let dir = std::env::temp_dir().join("ppa_nasa_test_noise");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("noisy.txt");
+        // BOM, CRLF endings, inline comment, indentation, trailing blank
+        // lines — the usual spreadsheet-export artifacts.
+        std::fs::write(&path, "\u{feff}# header\r\n10\r\n 20 # afternoon\r\n\r\n30\r\n\r\n\r\n")
+            .unwrap();
+        let counts = load_minute_counts(&path).unwrap();
+        assert_eq!(counts, vec![10.0, 20.0, 30.0]);
+        // A BOM directly on the first count must not break parsing.
+        std::fs::write(&path, "\u{feff}5\n6\n").unwrap();
+        assert_eq!(load_minute_counts(&path).unwrap(), vec![5.0, 6.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn azure_csv_sums_function_rows_per_minute() {
+        let dir = std::env::temp_dir().join("ppa_nasa_test_azure");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("invocations.csv");
+        // Azure Functions 2019 shape: hash columns + trigger, then one
+        // column per minute of the day (trimmed to 4 minutes here).
+        std::fs::write(
+            &path,
+            "\u{feff}HashOwner,HashApp,HashFunction,Trigger,1,2,3,4\r\n\
+             o1,a1,f1,http,0,3,1,0\r\n\
+             # a stray comment row\r\n\
+             o1,a1,f2,timer,2,0,0,5\r\n\
+             o2,a2,f3,http,1,1,1,1\r\n",
+        )
+        .unwrap();
+        let counts = load_azure_minute_counts(&path).unwrap();
+        assert_eq!(counts, vec![3.0, 4.0, 2.0, 6.0]);
+
+        // Ragged rows and headers without minute columns are rejected.
+        std::fs::write(&path, "HashOwner,Trigger,1,2\r\no1,http,1\r\n").unwrap();
+        assert!(load_azure_minute_counts(&path).is_err());
+        std::fs::write(&path, "HashOwner,Trigger\r\no1,http\r\n").unwrap();
+        assert!(load_azure_minute_counts(&path).is_err());
+        std::fs::write(&path, "HashOwner,Trigger,1,2\r\n").unwrap();
+        assert!(load_azure_minute_counts(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

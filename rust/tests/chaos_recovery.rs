@@ -1,0 +1,178 @@
+//! The chaos-plane recovery battery.
+//!
+//! 64 seeded random fault storms (node crashes + rejoins, cold-start
+//! inflation, crash-loops, net delay) against the paper topology, each
+//! stepped in 15-second slices so the cluster's index plane is
+//! re-verified against a from-scratch scan right after every fault
+//! lands. The battery pins three recovery invariants:
+//!
+//! 1. **Indices survive faults** — `Cluster::verify_indices()` holds at
+//!    every slice boundary of every faulted run.
+//! 2. **No request is lost** — workload submission draws from its own
+//!    RNG stream, so a faulted run receives exactly the arrivals its
+//!    fault-free twin does; every one must end completed or still in
+//!    flight, never vanished.
+//! 3. **Replica counts respect min/max through outages** — autoscaler
+//!    targets stay inside each deployment's bounds no matter how many
+//!    nodes are down.
+//!
+//! Plus reproducibility: a faulted sweep cell is bit-identical across
+//! repeated runs and across shard counts 1/2/4.
+
+use ppa_edge::app::TaskCosts;
+use ppa_edge::autoscaler::Hpa;
+use ppa_edge::cluster::{
+    ChaosCounters, ColdStartPlan, CrashLoopPlan, FaultPlan, NetDelayPlan, NodeCrashPlan,
+};
+use ppa_edge::config::{paper_cluster, Topology};
+use ppa_edge::experiments::{run_cell, AutoscalerKind, SimWorld};
+use ppa_edge::sim::{CoreKind, Time, MIN, MS, SEC};
+use ppa_edge::workload::{Generator, RandomAccessGen};
+
+/// An aggressive storm: crashes every ~45 s per node, half the pods
+/// cold-start slow, a quarter crash-loop, and every forward is delayed.
+fn storm() -> FaultPlan {
+    FaultPlan {
+        node_crash: Some(NodeCrashPlan {
+            mean_gap: 45 * SEC,
+            outage_min: 5 * SEC,
+            outage_max: 20 * SEC,
+            cloud: false,
+        }),
+        cold_start: Some(ColdStartPlan {
+            slow_prob: 0.5,
+            factor_min: 2.0,
+            factor_max: 4.0,
+        }),
+        crash_loop: Some(CrashLoopPlan {
+            prob: 0.25,
+            max_restarts: 3,
+        }),
+        net_delay: Some(NetDelayPlan {
+            extra_min: MS,
+            extra_max: 50 * MS,
+        }),
+    }
+}
+
+fn build_world(seed: u64, faulted: bool, end: Time) -> SimWorld {
+    let cfg = paper_cluster();
+    let mut w = SimWorld::build(&cfg, TaskCosts::default(), seed);
+    w.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
+    w.add_generator(Generator::RandomAccess(RandomAccessGen::new(2)));
+    for svc in 0..w.app.services.len() {
+        w.add_scaler(Box::new(Hpa::with_defaults()), svc);
+    }
+    if faulted {
+        w.install_chaos(&storm(), seed, end);
+    }
+    w
+}
+
+#[test]
+fn recovery_battery_64_seed_fault_storms() {
+    const END: Time = 3 * MIN;
+    const SLICE: Time = 15 * SEC;
+
+    let mut battery = ChaosCounters::default();
+    for seed in 0..64u64 {
+        let mut faulted = build_world(seed, true, END);
+
+        // Step in slices: a fault is never more than one slice old when
+        // the index plane is re-verified, and the autoscaler bounds are
+        // re-checked mid-outage, not just at the end.
+        let mut t = SLICE;
+        while t <= END {
+            faulted.run_until(t);
+            faulted.cluster.verify_indices();
+            for dep in &faulted.cluster.deployments {
+                assert!(
+                    dep.desired_replicas >= dep.min_replicas
+                        && dep.desired_replicas <= dep.max_replicas,
+                    "seed {seed}: desired {} outside [{}, {}] at t={t}",
+                    dep.desired_replicas,
+                    dep.min_replicas,
+                    dep.max_replicas,
+                );
+            }
+            t += SLICE;
+        }
+
+        // Conservation: the fault-free twin receives the identical
+        // arrival stream (workload RNG is its own stream), so both runs
+        // must account for the same number of requests — the storm may
+        // delay work, never lose it.
+        let mut clean = build_world(seed, false, END);
+        clean.run_until(END);
+        assert_eq!(
+            faulted.app.completed() + faulted.app.in_flight_len(),
+            clean.app.completed() + clean.app.in_flight_len(),
+            "seed {seed}: requests lost under the storm"
+        );
+
+        battery.merge(&faulted.chaos_summary(END));
+    }
+
+    // The battery must actually have exercised every fault axis.
+    assert!(battery.crashes > 60, "only {} crashes across 64 storms", battery.crashes);
+    assert!(battery.rejoins > 0, "no node ever rejoined");
+    assert!(battery.pods_killed > 0, "crashes never killed a pod");
+    assert!(battery.pods_rescheduled > 0, "no pod was ever rescheduled");
+    assert!(battery.crash_loops > 0, "no crash-loop ever fired");
+    assert!(battery.downtime > 0, "zero downtime recorded");
+    assert!(battery.init_delays.n() > 0, "no cold start was ever sampled");
+}
+
+#[test]
+fn faulted_cell_is_bit_identical_across_repeats_and_shards() {
+    let topo = Topology::Paper;
+    let cluster = topo.cluster();
+    let label = topo.label();
+    let presets = topo.scenario_presets();
+    let (name, scenario) = &presets[0];
+    let plan = storm();
+    let cell = |shards: usize, seed: u64| {
+        run_cell(
+            &label,
+            &cluster,
+            name,
+            scenario,
+            AutoscalerKind::Hpa,
+            None,
+            seed,
+            5,
+            CoreKind::Calendar,
+            shards,
+            &plan,
+        )
+    };
+    for seed in [5, 21] {
+        // Repeats of the monolith engine.
+        let a = cell(0, seed);
+        let b = cell(0, seed);
+        assert!(a.metrics.crashes > 0, "seed {seed}: storm injected no crashes");
+        assert_eq!(
+            a.metrics.fingerprint(),
+            b.metrics.fingerprint(),
+            "seed {seed}: monolith repeat diverged"
+        );
+        assert_eq!(a.metrics.crashes, b.metrics.crashes);
+        assert_eq!(a.metrics.downtime_secs, b.metrics.downtime_secs);
+
+        // Shard counts 1/2/4 (a separate engine with its own per-world
+        // chaos streams: bit-identical to each other, not to shards=0).
+        let s1 = cell(1, seed);
+        assert!(s1.metrics.crashes > 0);
+        for shards in [2, 4] {
+            let sn = cell(shards, seed);
+            assert_eq!(
+                s1.metrics.fingerprint(),
+                sn.metrics.fingerprint(),
+                "seed {seed}: faulted cell diverged at shards={shards}"
+            );
+            assert_eq!(s1.metrics.crashes, sn.metrics.crashes);
+            assert_eq!(s1.metrics.pods_rescheduled, sn.metrics.pods_rescheduled);
+            assert_eq!(s1.metrics.downtime_secs, sn.metrics.downtime_secs);
+        }
+    }
+}

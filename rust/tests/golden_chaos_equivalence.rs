@@ -1,0 +1,177 @@
+//! Golden equivalence for the chaos plane's no-op contract.
+//!
+//! Installing an **empty** `FaultPlan` must be a strict no-op: no RNG
+//! stream is constructed, no fault event is scheduled, and the run
+//! evolves **bit-identically** to a world where `install_chaos` was
+//! never called — same decision logs, same event counts, same
+//! response-stream fingerprints, same RIR trajectories. These tests pin
+//! that contract on the paper grid and a city-8 grid, under both the
+//! HPA and a live-ARMA PPA, plus the sweep-cell harness (whose fault
+//! counter columns must stay all-zero under the `none` plan).
+
+use ppa_edge::app::TaskCosts;
+use ppa_edge::autoscaler::{Autoscaler, Hpa, Ppa, PpaConfig};
+use ppa_edge::cluster::FaultPlan;
+use ppa_edge::config::{city_scenario_presets, paper_cluster, ClusterConfig, Topology};
+use ppa_edge::experiments::{run_cell, AutoscalerKind, SimWorld};
+use ppa_edge::forecast::ArmaForecaster;
+use ppa_edge::sim::{CoreKind, MIN};
+use ppa_edge::workload::{Generator, RandomAccessGen};
+
+#[derive(Clone, Copy)]
+enum ScalerKind {
+    Hpa,
+    /// ARMA PPA trained online by a live 10-minute update loop.
+    PpaArma,
+}
+
+fn build_scaler(kind: ScalerKind) -> Box<dyn Autoscaler> {
+    match kind {
+        ScalerKind::Hpa => Box::new(Hpa::with_defaults()),
+        ScalerKind::PpaArma => Box::new(Ppa::new(
+            PpaConfig {
+                update_interval: 10 * MIN,
+                ..PpaConfig::default()
+            },
+            Box::new(ArmaForecaster::new()),
+        )),
+    }
+}
+
+/// Run the same (cluster, generators, scaler, seed) world twice — once
+/// untouched, once with `install_chaos(FaultPlan::none())` — and assert
+/// bit-identical evolution.
+fn assert_empty_plan_is_noop(
+    cfg: &ClusterConfig,
+    gens: &dyn Fn() -> Vec<Generator>,
+    kind: ScalerKind,
+    seed: u64,
+    minutes: u64,
+) {
+    let run_one = |install_empty_plan: bool| -> SimWorld {
+        let mut w = SimWorld::build(cfg, TaskCosts::default(), seed);
+        w.record_decisions();
+        for g in gens() {
+            w.add_generator(g);
+        }
+        for svc in 0..w.app.services.len() {
+            w.add_scaler(build_scaler(kind), svc);
+        }
+        if install_empty_plan {
+            w.install_chaos(&FaultPlan::none(), seed, minutes * MIN);
+        }
+        w.run_until(minutes * MIN);
+        w
+    };
+    let clean = run_one(false);
+    let noop = run_one(true);
+
+    assert!(clean.events_processed > 100, "world should be busy");
+    assert_eq!(
+        clean.events_processed, noop.events_processed,
+        "event counts diverged"
+    );
+    assert_eq!(clean.app.completed(), noop.app.completed());
+    assert_eq!(
+        clean.app.stats.fingerprint(),
+        noop.app.stats.fingerprint(),
+        "response streams diverged"
+    );
+    for svc in 0..clean.app.services.len() {
+        assert_eq!(
+            clean.decisions_for(svc),
+            noop.decisions_for(svc),
+            "service {svc}: decision logs diverged"
+        );
+    }
+    assert_eq!(clean.rir_log.len(), noop.rir_log.len());
+
+    // And the empty plan reports itself as exactly nothing.
+    let c = noop.chaos_summary(minutes * MIN);
+    assert_eq!(c.crashes, 0);
+    assert_eq!(c.rejoins, 0);
+    assert_eq!(c.pods_killed, 0);
+    assert_eq!(c.pods_rescheduled, 0);
+    assert_eq!(c.crash_loops, 0);
+    assert_eq!(c.downtime, 0);
+    assert!(c.cold_start_p95().is_nan(), "no pod chaos, no cold-start stats");
+}
+
+fn paper_generators() -> Vec<Generator> {
+    vec![
+        Generator::RandomAccess(RandomAccessGen::new(1)),
+        Generator::RandomAccess(RandomAccessGen::new(2)),
+    ]
+}
+
+#[test]
+fn golden_chaos_noop_paper_hpa() {
+    let cfg = paper_cluster();
+    assert_empty_plan_is_noop(&cfg, &paper_generators, ScalerKind::Hpa, 2021, 20);
+}
+
+#[test]
+fn golden_chaos_noop_paper_ppa_arma() {
+    let cfg = paper_cluster();
+    assert_empty_plan_is_noop(&cfg, &paper_generators, ScalerKind::PpaArma, 7, 15);
+}
+
+#[test]
+fn golden_chaos_noop_city8_grid() {
+    // A small city-8 grid: 2 scenarios x both scalers.
+    let topo = Topology::EdgeCity {
+        zones: 8,
+        workers_per_zone: 2,
+        mix: Default::default(),
+    };
+    let cfg = topo.cluster();
+    for (_, scenario) in &city_scenario_presets(8)[..2] {
+        for kind in [ScalerKind::Hpa, ScalerKind::PpaArma] {
+            let build = || scenario.build_generators();
+            assert_empty_plan_is_noop(&cfg, &build, kind, 11, 4);
+        }
+    }
+}
+
+#[test]
+fn sweep_cell_with_none_plan_reports_zero_fault_columns() {
+    // The harness path: a `none` cell must label itself "none", keep
+    // every fault counter at zero, and fingerprint identically to a run
+    // of the same cell — the fault columns ride along without touching
+    // the science.
+    let topo = Topology::EdgeCity {
+        zones: 8,
+        workers_per_zone: 2,
+        mix: Default::default(),
+    };
+    let cluster = topo.cluster();
+    let label = topo.label();
+    let presets = city_scenario_presets(8);
+    let (name, scenario) = &presets[0];
+    let cell = || {
+        run_cell(
+            &label,
+            &cluster,
+            name,
+            scenario,
+            AutoscalerKind::Hpa,
+            None,
+            1000,
+            4,
+            CoreKind::Calendar,
+            0,
+            &FaultPlan::none(),
+        )
+    };
+    let a = cell();
+    let b = cell();
+    assert_eq!(a.metrics.fingerprint(), b.metrics.fingerprint());
+    assert_eq!(a.metrics.chaos, "none");
+    assert_eq!(a.metrics.crashes, 0);
+    assert_eq!(a.metrics.rejoins, 0);
+    assert_eq!(a.metrics.pods_killed, 0);
+    assert_eq!(a.metrics.pods_rescheduled, 0);
+    assert_eq!(a.metrics.crash_loops, 0);
+    assert_eq!(a.metrics.downtime_secs, 0.0);
+    assert!(a.metrics.cold_start_p95.is_nan());
+}

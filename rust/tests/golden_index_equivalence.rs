@@ -117,6 +117,7 @@ fn golden_index_equivalence_city8_grid() {
     let topo = Topology::EdgeCity {
         zones: 8,
         workers_per_zone: 2,
+        mix: Default::default(),
     };
     let cfg = topo.cluster();
     for (_, scenario) in &city_scenario_presets(8)[..2] {
@@ -134,6 +135,7 @@ fn golden_index_equivalence_city50_cell() {
     let topo = Topology::EdgeCity {
         zones: 50,
         workers_per_zone: 2,
+        mix: Default::default(),
     };
     let cfg = topo.cluster();
     let presets = city_scenario_presets(50);

@@ -305,6 +305,7 @@ fn prop_cluster_indices_match_scan_after_interleavings() {
             Topology::EdgeCity {
                 zones: 8,
                 workers_per_zone: 2,
+                mix: Default::default(),
             }
             .cluster()
         };
@@ -357,6 +358,117 @@ fn prop_cluster_indices_match_scan_after_interleavings() {
         deliver_events(&mut app, &mut cluster, &mut q, &mut rng, u64::MAX);
         assert!(q.is_empty(), "seed {seed}: queue drained");
         cluster.verify_indices();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chaos plane: node crashes and rejoins woven into the same randomized
+// interleavings. After EVERY fault the index plane must still mirror a
+// from-scratch scan, resource accounting must balance, and no request
+// may be lost — a crash's orphans are requeued, never dropped.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cluster_indices_survive_random_faults() {
+    use ppa_edge::app::{App, TaskCosts, TaskType};
+    use ppa_edge::config::{paper_cluster, Topology};
+    use ppa_edge::sim::NodeId;
+
+    for seed in 0..64u64 {
+        let cfg = if seed % 2 == 0 {
+            paper_cluster()
+        } else {
+            Topology::EdgeCity {
+                zones: 4,
+                workers_per_zone: 2,
+                mix: ppa_edge::config::ClassMix::parse("small,large").unwrap(),
+            }
+            .cluster()
+        };
+        let (mut cluster, dep_ids) = cfg.build();
+        let edge: Vec<(u32, _)> = cfg.deployments[..dep_ids.len() - 1]
+            .iter()
+            .zip(&dep_ids)
+            .map(|(d, &id)| (d.zone.expect("edge deployments set a zone"), id))
+            .collect();
+        let cloud = *dep_ids.last().unwrap();
+        let n_zones = edge.len() as u64;
+        let mut app = App::new(TaskCosts::default(), &edge, cloud);
+        let mut q = EventQueue::new();
+        let mut rng = Pcg64::new(seed, 9);
+        let n_nodes = cluster.nodes.len() as u64;
+        let mut submitted = 0usize;
+
+        for step in 0..80 {
+            match rng.below(12) {
+                0..=2 => {
+                    let di = rng.below(dep_ids.len() as u64) as usize;
+                    let desired = 1 + rng.below(6) as usize;
+                    cluster.reconcile(dep_ids[di], desired, &mut q, &mut rng);
+                }
+                3 => cluster.retry_pending(&mut q, &mut rng),
+                4..=6 => {
+                    for _ in 0..1 + rng.below(5) {
+                        let task = if rng.chance(0.8) {
+                            TaskType::Sort
+                        } else {
+                            TaskType::Eigen
+                        };
+                        let zone = 1 + rng.below(n_zones) as u32;
+                        app.submit(task, zone, q.now(), &mut q);
+                        submitted += 1;
+                    }
+                }
+                // Crash a random node: indices must survive the mass
+                // eviction, and every in-flight request on the node must
+                // come back as a queued orphan.
+                7..=8 => {
+                    let nid = NodeId(rng.below(n_nodes) as u32);
+                    if let Some(out) = cluster.crash_node(nid) {
+                        cluster.verify_indices();
+                        for &dep in &out.deployments {
+                            let desired = cluster.deployments[dep.0 as usize].desired_replicas;
+                            cluster.reconcile(dep, desired, &mut q, &mut rng);
+                        }
+                        app.requeue_orphans(&out.orphans, &mut cluster, &mut q, &mut rng);
+                        cluster.verify_indices();
+                    }
+                }
+                // Rejoin a random node (no-op on up nodes).
+                9 => {
+                    let nid = NodeId(rng.below(n_nodes) as u32);
+                    if cluster.rejoin_node(nid) {
+                        cluster.retry_pending(&mut q, &mut rng);
+                        cluster.verify_indices();
+                    }
+                }
+                _ => {
+                    let limit = rng.below(12);
+                    deliver_events(&mut app, &mut cluster, &mut q, &mut rng, limit);
+                }
+            }
+            if step % 8 == 0 {
+                cluster.verify_indices();
+                check_invariants(&cluster, seed);
+            }
+        }
+        // Rejoin everything, drain to exhaustion: indices and resource
+        // accounting must balance, and every submitted request must be
+        // accounted for — completed or still queued, never vanished.
+        for i in 0..n_nodes {
+            if cluster.rejoin_node(NodeId(i as u32)) {
+                cluster.retry_pending(&mut q, &mut rng);
+            }
+        }
+        deliver_events(&mut app, &mut cluster, &mut q, &mut rng, u64::MAX);
+        assert!(q.is_empty(), "seed {seed}: queue drained");
+        cluster.verify_indices();
+        check_invariants(&cluster, seed);
+        let accounted = app.completed() + app.in_flight_len();
+        assert_eq!(
+            accounted, submitted,
+            "seed {seed}: {submitted} submitted but only {accounted} accounted for"
+        );
     }
 }
 

@@ -14,10 +14,11 @@
 
 use ppa_edge::app::TaskCosts;
 use ppa_edge::autoscaler::{Autoscaler, Hpa, Ppa, PpaConfig};
+use ppa_edge::cluster::{ColdStartPlan, CrashLoopPlan, FaultPlan, NetDelayPlan, NodeCrashPlan};
 use ppa_edge::config::{city_scenario_presets, paper_cluster, ClusterConfig, Topology};
 use ppa_edge::experiments::{run_cell, AutoscalerKind};
 use ppa_edge::forecast::ArmaForecaster;
-use ppa_edge::sim::{run_sharded, CoreKind, ServiceId, ShardSpec, ShardedRun, Time, MIN};
+use ppa_edge::sim::{run_sharded, CoreKind, ServiceId, ShardSpec, ShardedRun, Time, MIN, MS, SEC};
 use ppa_edge::workload::{Generator, RandomAccessGen, Scenario};
 
 const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
@@ -30,6 +31,7 @@ fn spec(shards: usize, seed: u64, minutes: u64) -> ShardSpec {
         costs: TaskCosts::default(),
         end: minutes * MIN,
         record_decisions: true,
+        chaos: FaultPlan::none(),
     }
 }
 
@@ -160,6 +162,7 @@ fn city8_topology_is_shard_invariant_across_seeds() {
     let topo = Topology::EdgeCity {
         zones: 8,
         workers_per_zone: 2,
+        mix: Default::default(),
     };
     let cfg = topo.cluster();
     let presets = city_scenario_presets(8);
@@ -177,6 +180,7 @@ fn city50_cell_is_shard_invariant() {
     let topo = Topology::EdgeCity {
         zones: 50,
         workers_per_zone: 2,
+        mix: Default::default(),
     };
     let cfg = topo.cluster();
     let presets = city_scenario_presets(50);
@@ -193,6 +197,7 @@ fn sweep_cells_are_shard_invariant_and_distinct_from_zero() {
     let topo = Topology::EdgeCity {
         zones: 8,
         workers_per_zone: 2,
+        mix: Default::default(),
     };
     let cluster = topo.cluster();
     let label = topo.label();
@@ -210,6 +215,7 @@ fn sweep_cells_are_shard_invariant_and_distinct_from_zero() {
             5,
             CoreKind::Calendar,
             shards,
+            &FaultPlan::none(),
         )
     };
     let reference = cell(1);
@@ -237,4 +243,83 @@ fn forward_heavy_scenario_is_shard_invariant() {
     };
     let gens = || scenario.build_generators();
     assert_shard_counts_identical(&cfg, &gens, ScalerKind::Hpa, 17, 6);
+}
+
+#[test]
+fn faulted_forward_heavy_cell_is_shard_invariant_to_eight() {
+    // The chaos plane's adversarial case: a forward-heavy flash crowd
+    // (max cross-shard Eigen traffic) under the full fault storm —
+    // crashes rescheduling pods mid-spike, cold-start inflation, net
+    // delay drawn in the cloud world's barrier merge. Bit-identity must
+    // hold all the way to shards=8 (more worker threads than worlds on
+    // the paper topology).
+    let cfg = paper_cluster();
+    let scenario = Scenario::FlashCrowd {
+        cfg: Default::default(),
+        zones: vec![1, 2],
+        stagger: 0,
+    };
+    let storm = FaultPlan {
+        node_crash: Some(NodeCrashPlan {
+            mean_gap: MIN,
+            outage_min: 5 * SEC,
+            outage_max: 20 * SEC,
+            cloud: false,
+        }),
+        cold_start: Some(ColdStartPlan {
+            slow_prob: 0.5,
+            factor_min: 2.0,
+            factor_max: 4.0,
+        }),
+        crash_loop: Some(CrashLoopPlan {
+            prob: 0.25,
+            max_restarts: 3,
+        }),
+        net_delay: Some(NetDelayPlan {
+            extra_min: MS,
+            extra_max: 50 * MS,
+        }),
+    };
+    let seed = 17;
+    let run_at = |shards: usize| {
+        let mut s = spec(shards, seed, 6);
+        s.chaos = storm;
+        run_sharded(
+            &cfg,
+            scenario.build_generators(),
+            &|_svc| build_scaler(ScalerKind::Hpa),
+            &s,
+        )
+        .expect("faulted sharded run failed")
+    };
+    let reference = run_at(1);
+    let counters = reference.chaos_counters();
+    assert!(counters.crashes > 0, "storm injected no crashes");
+    assert!(
+        reference
+            .outcomes
+            .last()
+            .expect("cloud world")
+            .stats
+            .eigen
+            .n()
+            > 0,
+        "no cross-shard forwards under the storm"
+    );
+    for shards in [2, 4, 8] {
+        let run = run_at(shards);
+        assert_eq!(
+            reference.fingerprint(),
+            run.fingerprint(),
+            "faulted fingerprints diverged at shards={shards}"
+        );
+        assert_eq!(reference.events(), run.events());
+        assert_eq!(reference.completed(), run.completed());
+        assert_eq!(decisions(&reference), decisions(&run));
+        assert_eq!(
+            format!("{:?}", counters),
+            format!("{:?}", run.chaos_counters()),
+            "chaos counters diverged at shards={shards}"
+        );
+    }
 }

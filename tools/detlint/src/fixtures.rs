@@ -355,10 +355,83 @@ pub fn exchange(slots: &[Mutex<Vec<u64>>], barrier: &Barrier) -> Vec<u64> {
 "##,
         expect: &[],
     },
+    // ---- Chaos plane (cluster/chaos.rs is inside SIM_SCOPE + HOT_SCOPE
+    //      and a sanctioned N1 owner for set_phase / unbind) ----
     Fixture {
-        // …but the hot-path panic ban still applies there: the idiomatic
-        // `.lock().unwrap()` is exactly the poison-propagating panic the
-        // engine must avoid.
+        // Fault schedules must come from the dedicated seeded streams
+        // (`chaos_schedule_stream` et al.), never ambient randomness or
+        // the wall clock — D1 applies to the chaos plane like any other
+        // simulation module.
+        name: "d1_chaos_wall_clock_fires",
+        path: "rust/src/cluster/chaos.rs",
+        src: r##"
+pub fn next_crash_gap() -> u64 {
+    let wall = std::time::SystemTime::now();
+    wall.elapsed().map(|d| d.as_micros() as u64).unwrap_or(0)
+}
+"##,
+        expect: &["D1"],
+    },
+    Fixture {
+        // The real shape: gaps drawn from a seeded per-world stream.
+        name: "d1_chaos_seeded_stream_clean",
+        path: "rust/src/cluster/chaos.rs",
+        src: r##"
+use crate::util::rng::Pcg64;
+
+pub fn next_crash_gap(rng: &mut Pcg64, mean_gap: u64) -> u64 {
+    (rng.f64() * 2.0 * mean_gap as f64) as u64
+}
+"##,
+        expect: &[],
+    },
+    Fixture {
+        // `crash_node` kills pods through the nexuses from inside the
+        // owner family — chaos.rs is on the allowed lists, so N1 stays
+        // quiet; it still maintains the incremental indices.
+        name: "n1_chaos_owner_file_clean",
+        path: "rust/src/cluster/chaos.rs",
+        src: r##"
+impl Cluster {
+    pub fn crash_pod(&mut self, pid: PodId, dep: DeploymentId, spec: &NodeSpec) {
+        let nid = self.pods[pid.0 as usize].node;
+        self.nodes[nid.0 as usize].unbind(pid, dep, spec);
+        self.set_phase(pid, PodPhase::Gone);
+    }
+}
+"##,
+        expect: &[],
+    },
+    Fixture {
+        // …but a fault injector living anywhere else may not reach the
+        // same nexuses: crashes route through `Cluster::crash_node`.
+        name: "n1_chaos_outside_owner_fires",
+        path: "rust/src/experiments/fixture.rs",
+        src: r##"
+pub fn hard_kill(cluster: &mut Cluster, pid: PodId) {
+    cluster.set_phase(pid, PodPhase::Gone);
+}
+"##,
+        expect: &["N1"],
+    },
+    Fixture {
+        // Chaos handlers run on the arrival→complete hot path (crash
+        // events interleave with request traffic), so P1's panic ban
+        // applies: stale-event tolerance, not unwrap.
+        name: "p1_chaos_unwrap_fires",
+        path: "rust/src/cluster/chaos.rs",
+        src: r##"
+pub fn victim(nodes: &[u32], idx: usize) -> u32 {
+    *nodes.get(idx).unwrap()
+}
+"##,
+        expect: &["P1"],
+    },
+    // ---- Sharded engine, continued ----
+    Fixture {
+        // The hot-path panic ban still applies to the exchange
+        // machinery in `sim/shard.rs`: the idiomatic `.lock().unwrap()`
+        // is exactly the poison-propagating panic the engine must avoid.
         name: "p1_shard_unwrap_fires",
         path: "rust/src/sim/shard.rs",
         src: r##"
