@@ -12,11 +12,12 @@
 //! (or set `BENCH_QUICK=1`) for the CI smoke mode with slashed
 //! iteration counts and shorter simulated horizons.
 //!
-//! Emits a machine-readable `BENCH_hotpath.json` (schema 5: events/sec
+//! Emits a machine-readable `BENCH_hotpath.json` (schema 6: events/sec
 //! per core, ns/scrape, ns/dispatch and ns/`max_replicas` per query
 //! mode, cells/sec, city-50 burst events/sec per mode, sharded city-50
 //! events/sec per shard count with `shard_speedup_2`/`shard_speedup_4`,
 //! a full-storm faulted city-50 cell with its chaos-plane overhead
+//! ratio, a champion–challenger city-8 cell with its selector-overhead
 //! ratio, peak-alloc bytes, speedups, and a `quick` marker) so the perf
 //! trajectory is tracked across PRs. Quick runs write
 //! `BENCH_hotpath.quick.json` instead, so smoke numbers never clobber
@@ -31,7 +32,7 @@ mod bench_common;
 use bench_common::{print_header, run};
 
 use ppa_edge::app::{App, TaskCosts, TaskType};
-use ppa_edge::autoscaler::{Autoscaler, Hpa};
+use ppa_edge::autoscaler::{Autoscaler, Hpa, ScalerPolicy, ScalerRegistry};
 use ppa_edge::cluster::{
     Cluster, Deployment, FaultPlan, NodeSpec, PodPhase, PodSpec, QueryMode, Selector, Tier,
 };
@@ -40,7 +41,7 @@ use ppa_edge::config::{
 };
 use ppa_edge::experiments::sweep::run_cell;
 use ppa_edge::experiments::{AutoscalerKind, SimWorld};
-use ppa_edge::forecast::{arma::fit_arma, Forecaster, LstmForecaster};
+use ppa_edge::forecast::{arma::fit_arma, Forecaster, ForecasterKind, LstmForecaster};
 use ppa_edge::metrics::{METRIC_DIM, METRIC_NAMES};
 use ppa_edge::sim::{run_sharded, CoreKind, Event, EventQueue, ShardSpec, Time, MIN, SEC};
 use ppa_edge::util::json::Json;
@@ -540,6 +541,56 @@ fn bench_sweep_cells() -> f64 {
     cells_per_sec
 }
 
+/// The champion–challenger cell: the city-8 step-carpet cell with every
+/// PPA on a single zoo model (holt-winters) vs the `auto:3` selector
+/// shadow-scoring three models per tick. The rate ratio is what online
+/// model selection costs on top of a single-forecaster cell —
+/// `selector_overhead` in the JSON (>1 = the selector cell is slower).
+/// Returns (single-model events/sec, auto:3 events/sec).
+fn bench_selector_overhead() -> (f64, f64) {
+    print_header("champion–challenger selector: single model vs auto:3 (city-8)");
+    let topo = Topology::EdgeCity {
+        zones: 8,
+        workers_per_zone: 2,
+        mix: Default::default(),
+    };
+    let cluster = topo.cluster();
+    let label = topo.label();
+    let presets = city_scenario_presets(8);
+    let (name, scenario) = &presets[2]; // city8-step-carpet
+    let minutes = sim_minutes(5);
+    let mut rates = Vec::new();
+    for kind in [ForecasterKind::HoltWinters, ForecasterKind::Auto(3)] {
+        let fleet = ScalerRegistry::uniform(ScalerPolicy::default().with_forecaster(kind));
+        let mut events = 0u64;
+        let bench_name = format!("run_cell city-8, --forecaster {}", kind.name());
+        let r = run(&bench_name, iters(1), iters(3), || {
+            let cell = run_cell(
+                &label,
+                &cluster,
+                name,
+                scenario,
+                AutoscalerKind::PpaArma,
+                Some(&fleet),
+                3,
+                minutes,
+                CoreKind::Calendar,
+                0,
+                &FaultPlan::none(),
+            );
+            events = cell.metrics.events;
+        });
+        rates.push(events as f64 / (r.mean_us / 1e6));
+    }
+    let (single, auto3) = (rates[0], rates[1]);
+    println!(
+        "  -> {single:.0} ev/s single model vs {auto3:.0} ev/s auto:3 \
+         ({:.2}x selector overhead)",
+        single / auto3
+    );
+    (single, auto3)
+}
+
 /// The acceptance cell: one city-50 sweep cell, old (heap) vs new
 /// (calendar) core. Returns events/sec and peak-alloc bytes per core,
 /// plus the peak when the cell is re-run with the opt-in full response
@@ -911,7 +962,7 @@ fn bench_city50_faulted() -> f64 {
 
 fn write_bench_json(entries: &[(&str, f64)]) {
     let mut o = BTreeMap::new();
-    o.insert("schema".to_string(), Json::Num(5.0));
+    o.insert("schema".to_string(), Json::Num(6.0));
     o.insert("quick".to_string(), Json::Bool(quick()));
     for &(k, v) in entries {
         let value = if v.is_finite() { Json::Num(v) } else { Json::Null };
@@ -953,6 +1004,7 @@ fn main() {
     let (burst_indexed, burst_scan) = bench_city50_burst();
     let (shard1, shard2, shard4) = bench_city50_sharded();
     let cell50_faulted = bench_city50_faulted();
+    let (forecast_single, forecast_auto3) = bench_selector_overhead();
     let entries = [
         ("events_per_sec", events_per_sec),
         ("queue_events_per_sec_calendar", queue_cal),
@@ -985,6 +1037,9 @@ fn main() {
         ("shard_speedup_4", shard4 / shard1),
         ("cell50_faulted_events_per_sec", cell50_faulted),
         ("cell50_chaos_overhead", cell50_cal / cell50_faulted),
+        ("cell8_forecaster_events_per_sec_single", forecast_single),
+        ("cell8_forecaster_events_per_sec_auto3", forecast_auto3),
+        ("selector_overhead", forecast_single / forecast_auto3),
     ];
     write_bench_json(&entries);
     check_quick_regressions(&entries);

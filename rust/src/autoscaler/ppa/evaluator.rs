@@ -52,6 +52,10 @@ impl Evaluator {
         self.forecaster.as_mut()
     }
 
+    pub fn forecaster(&self) -> &dyn Forecaster {
+        self.forecaster.as_ref()
+    }
+
     pub fn forecaster_name(&self) -> &str {
         self.forecaster.name()
     }

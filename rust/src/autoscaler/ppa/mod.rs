@@ -143,6 +143,13 @@ impl Ppa {
         self.evaluator.forecaster_name()
     }
 
+    /// Champion–challenger state, when this PPA's forecaster is a
+    /// [`crate::forecast::ChampionChallenger`] wrapper (`None` for
+    /// plain models) — surfaced per service in the sweep JSON.
+    pub fn selection(&self) -> Option<crate::forecast::SelectionSummary> {
+        self.evaluator.forecaster().selection()
+    }
+
     /// The primary (first-spec) metric index.
     pub fn primary_metric(&self) -> usize {
         self.cfg.specs[0].metric

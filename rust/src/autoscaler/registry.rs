@@ -6,6 +6,7 @@
 
 use super::behavior::ScalingBehavior;
 use super::spec::{specs_label, MetricSource, MetricSpec};
+use crate::forecast::ForecasterKind;
 use crate::metrics::M_CPU;
 
 /// One scaling policy — the spec set plus behavior a Kubernetes HPA
@@ -19,6 +20,11 @@ pub struct ScalerPolicy {
     /// that only customizes metrics never silently changes the
     /// baseline's stabilization dynamics.
     pub behavior: Option<ScalingBehavior>,
+    /// Forecaster override for PPA-family scalers — the per-service
+    /// forecaster axis (`--forecaster`). `None` keeps the scaler kind's
+    /// stock model (ppa-naive: last value; ppa-arma: online ARMA).
+    /// HPA-family scalers ignore it.
+    pub forecaster: Option<ForecasterKind>,
 }
 
 impl Default for ScalerPolicy {
@@ -31,6 +37,7 @@ impl Default for ScalerPolicy {
                 source: MetricSource::Forecast,
             }],
             behavior: None,
+            forecaster: None,
         }
     }
 }
@@ -42,6 +49,7 @@ impl ScalerPolicy {
         ScalerPolicy {
             specs,
             behavior: Some(behavior),
+            forecaster: None,
         }
     }
 
@@ -51,7 +59,14 @@ impl ScalerPolicy {
         ScalerPolicy {
             specs,
             behavior: None,
+            forecaster: None,
         }
+    }
+
+    /// Builder form of the forecaster axis.
+    pub fn with_forecaster(mut self, kind: ForecasterKind) -> Self {
+        self.forecaster = Some(kind);
+        self
     }
 
     /// Compact report/JSON label, e.g. `cpu:70+req_rate:150`.
@@ -142,5 +157,20 @@ mod tests {
     #[should_panic(expected = "needs >= 1 metric spec")]
     fn empty_spec_set_rejected() {
         let _ = ScalerPolicy::new(vec![], ScalingBehavior::stabilize_down(0));
+    }
+
+    #[test]
+    fn forecaster_axis_defaults_off_and_builds_on() {
+        assert_eq!(ScalerPolicy::default().forecaster, None);
+        let from_specs = ScalerPolicy::from_specs(vec![MetricSpec::forecast(M_CPU, 70.0)]);
+        assert_eq!(from_specs.forecaster, None);
+        let p = ScalerPolicy::default().with_forecaster(ForecasterKind::Auto(3));
+        assert_eq!(p.forecaster, Some(ForecasterKind::Auto(3)));
+        assert_eq!(p.label(), "cpu:70", "label stays specs-only");
+        // Registry plumbs the axis per service like any other field.
+        let reg = ScalerRegistry::uniform(ScalerPolicy::default())
+            .with_policy(1, ScalerPolicy::default().with_forecaster(ForecasterKind::HoltWinters));
+        assert_eq!(reg.policy_for(0).forecaster, None);
+        assert_eq!(reg.policy_for(1).forecaster, Some(ForecasterKind::HoltWinters));
     }
 }

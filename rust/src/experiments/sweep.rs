@@ -28,8 +28,7 @@ use crate::autoscaler::{
 };
 use crate::cluster::FaultPlan;
 use crate::config::{ClusterConfig, Topology};
-use crate::forecast::ArmaForecaster;
-use crate::forecast::NaiveForecaster;
+use crate::forecast::{ArmaForecaster, Forecaster, NaiveForecaster, SelectionSummary};
 use crate::sim::{run_sharded, to_secs, CoreKind, ShardSpec, Time, MIN};
 use crate::stats::{percentile, summarize, Summary};
 use crate::util::json::Json;
@@ -45,10 +44,14 @@ const SWEEP_UPDATE_INTERVAL: Time = 10 * MIN;
 
 /// Which autoscaler a sweep cell runs on every service.
 ///
-/// The LSTM PPA is deliberately absent: its PJRT runtime handle is not
+/// The PJRT LSTM PPA is deliberately absent: its runtime handle is not
 /// `Send` (and needs artifacts); the sweep compares the thread-safe
 /// model-free and ARMA variants, which is the (PPA vs HPA) axis the
-/// related-work matrices use.
+/// related-work matrices use. The PPA kinds' *models* are a separate
+/// axis: a fleet policy with [`ScalerPolicy::forecaster`] set swaps in
+/// any pure-Rust zoo forecaster (`--forecaster
+/// naive|arma|holt-winters|tcn|lstm-rs|auto:K`), including the
+/// champion–challenger selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AutoscalerKind {
     /// Reactive baseline, full Kubernetes semantics.
@@ -100,12 +103,15 @@ impl AutoscalerKind {
         }
     }
 
-    /// Fresh autoscaler running one fleet entry's `(spec set, behavior)`
-    /// policy. The HPA reads every spec reactively; the PPAs honour each
-    /// spec's current/forecast source. A policy without a behavior
+    /// Fresh autoscaler running one fleet entry's `(spec set, behavior,
+    /// forecaster)` policy. The HPA reads every spec reactively (and
+    /// ignores the forecaster axis); the PPAs honour each spec's
+    /// current/forecast source and swap their stock model for
+    /// `policy.forecaster` when set, seeding learned inits from the cell
+    /// seed so the build stays pure. A policy without a behavior
     /// override keeps the kind's stock default (HPA: 5-min down window;
     /// PPA: 2-min), so metric-only fleets never skew the baselines.
-    fn build_with(&self, policy: &ScalerPolicy) -> Box<dyn Autoscaler> {
+    fn build_with(&self, policy: &ScalerPolicy, seed: u64) -> Box<dyn Autoscaler> {
         match self {
             AutoscalerKind::Hpa => {
                 let default = HpaConfig::default();
@@ -123,11 +129,12 @@ impl AutoscalerKind {
                     update_interval: SWEEP_UPDATE_INTERVAL,
                     ..default
                 };
-                if *self == AutoscalerKind::PpaNaive {
-                    Box::new(Ppa::new(cfg, Box::new(NaiveForecaster)))
-                } else {
-                    Box::new(Ppa::new(cfg, Box::new(ArmaForecaster::new())))
-                }
+                let model: Box<dyn Forecaster> = match policy.forecaster {
+                    Some(kind) => kind.build(seed),
+                    None if *self == AutoscalerKind::PpaNaive => Box::new(NaiveForecaster),
+                    None => Box::new(ArmaForecaster::new()),
+                };
+                Box::new(Ppa::new(cfg, model))
             }
         }
     }
@@ -207,6 +214,14 @@ pub struct CellMetrics {
     pub replicas_max: usize,
     /// Mean prediction MSE across PPA scalers that made predictions.
     pub prediction_mse: Option<f64>,
+    /// Champion model name of every service that ran champion–challenger
+    /// selection (`--forecaster auto:K`), in service order — the same
+    /// order on the monolith and on every shard count; empty otherwise.
+    pub champions: Vec<String>,
+    /// Shadow-score MSE per zoo model, pooled across selecting services
+    /// (weighted by each service's scored-tick count), sorted by model
+    /// name; empty unless some service ran selection.
+    pub model_mses: Vec<(String, f64)>,
     /// Fault-plan label the cell ran under (`none` when fault-free).
     pub chaos: String,
     /// Node crashes injected.
@@ -267,6 +282,7 @@ pub struct CellScratch {
     reps: Vec<f64>,
     mses: Vec<f64>,
     specs: Vec<String>,
+    selections: Vec<SelectionSummary>,
 }
 
 /// Run one independent cell on `cluster` (a materialized topology).
@@ -330,6 +346,7 @@ pub fn run_cell_with_scratch(
     scratch.reps.clear();
     scratch.mses.clear();
     scratch.specs.clear();
+    scratch.selections.clear();
     let end = minutes * MIN;
 
     let (events, completed, sort, eigen, replicas_max, chaos_counters) = if shards == 0 {
@@ -340,7 +357,7 @@ pub fn run_cell_with_scratch(
         let n_services = world.app.services.len();
         for svc in 0..n_services {
             let autoscaler = match fleet {
-                Some(registry) => scaler.build_with(registry.policy_for(svc)),
+                Some(registry) => scaler.build_with(registry.policy_for(svc), seed),
                 None => scaler.build(),
             };
             world.add_scaler(autoscaler, svc);
@@ -361,6 +378,9 @@ pub fn run_cell_with_scratch(
                 // in sweep cells (flat memory).
                 if ppa.prediction_count() > 0 {
                     scratch.mses.push(ppa.prediction_mse());
+                }
+                if let Some(selection) = ppa.selection() {
+                    scratch.selections.push(selection);
                 }
             }
         }
@@ -387,7 +407,7 @@ pub fn run_cell_with_scratch(
             cluster,
             scenario.build_generators(),
             &|svc| match fleet {
-                Some(registry) => scaler.build_with(registry.policy_for(svc)),
+                Some(registry) => scaler.build_with(registry.policy_for(svc), seed),
                 None => scaler.build(),
             },
             &spec,
@@ -401,6 +421,7 @@ pub fn run_cell_with_scratch(
             .extend(replica_log.iter().map(|&(_, _, r)| r as f64));
         let replicas_max = replica_log.iter().map(|&(_, _, r)| r).max().unwrap_or(0);
         scratch.mses.extend(run.prediction_mses());
+        scratch.selections.extend(run.selections());
         (
             run.events(),
             run.completed(),
@@ -410,6 +431,27 @@ pub fn run_cell_with_scratch(
             run.chaos_counters(),
         )
     };
+
+    let champions: Vec<String> =
+        scratch.selections.iter().map(|s| s.champion.clone()).collect();
+    // Pool each model's shadow MSE across selecting services, weighted by
+    // the per-service scored-tick count. BTreeMap keys the sums by model
+    // name; the service-order iteration makes the float accumulation
+    // order identical on the monolith and on every shard count.
+    let mut pooled: BTreeMap<String, (f64, f64)> = BTreeMap::new();
+    for selection in &scratch.selections {
+        for model in &selection.models {
+            if let Some(mse) = model.mse {
+                let slot = pooled.entry(model.name.clone()).or_insert((0.0, 0.0));
+                slot.0 += mse * model.n as f64;
+                slot.1 += model.n as f64;
+            }
+        }
+    }
+    let model_mses: Vec<(String, f64)> = pooled
+        .into_iter()
+        .map(|(name, (weighted, n))| (name, weighted / n))
+        .collect();
 
     let metrics = CellMetrics {
         topology: topology_label.to_string(),
@@ -431,6 +473,8 @@ pub fn run_cell_with_scratch(
         replicas_mean: summarize(&scratch.reps).mean,
         replicas_max,
         prediction_mse: (!scratch.mses.is_empty()).then(|| summarize(&scratch.mses).mean),
+        champions,
+        model_mses,
         chaos: chaos.label(),
         crashes: chaos_counters.crashes,
         rejoins: chaos_counters.rejoins,
@@ -595,6 +639,19 @@ impl CellResult {
         o.insert(
             "prediction_mse".to_string(),
             m.prediction_mse.map_or(Json::Null, num),
+        );
+        o.insert(
+            "champions".to_string(),
+            Json::Arr(m.champions.iter().map(|c| Json::Str(c.clone())).collect()),
+        );
+        o.insert(
+            "model_mses".to_string(),
+            Json::Obj(
+                m.model_mses
+                    .iter()
+                    .map(|(name, mse)| (name.clone(), num(*mse)))
+                    .collect(),
+            ),
         );
         o.insert("chaos".to_string(), Json::Str(m.chaos.clone()));
         o.insert("crashes".to_string(), Json::Num(m.crashes as f64));
@@ -793,6 +850,44 @@ mod tests {
             "ARMA PPA should be predicting after the first model update"
         );
         assert!(cell.prediction_mse.unwrap().is_finite());
+        // Without a selecting forecaster, the selection columns stay
+        // empty (and the JSON keys are present but empty).
+        assert!(cell.champions.is_empty());
+        assert!(cell.model_mses.is_empty());
+    }
+
+    #[test]
+    fn auto_fleet_reports_champions_and_model_mses() {
+        // One champion–challenger cell on the paper topology: every
+        // service runs `auto:3`, so the cell reports one champion per
+        // service and a pooled shadow MSE for each roster model.
+        let fleet = ScalerRegistry::uniform(
+            ScalerPolicy::default().with_forecaster(crate::forecast::ForecasterKind::Auto(3)),
+        );
+        let cfg = SweepConfig {
+            topology: Topology::Paper,
+            scenarios: tiny_scenarios()[..1].to_vec(),
+            scalers: vec![AutoscalerKind::PpaArma],
+            seeds: vec![5],
+            minutes: 25,
+            threads: 1,
+            core: CoreKind::Calendar,
+            fleet: Some(fleet),
+            shards: 0,
+            chaos: FaultPlan::none(),
+        };
+        let result = run_sweep(&cfg).unwrap();
+        let cell = &result.cells[0].metrics;
+        assert_eq!(cell.champions.len(), 3, "one champion per paper service");
+        let roster = ["holt-winters(30)", "arma(1,1)", "naive-last-value"];
+        assert!(cell.champions.iter().all(|c| roster.contains(&c.as_str())));
+        assert!(!cell.model_mses.is_empty(), "challengers were shadow-scored");
+        assert!(cell.model_mses.iter().all(|(n, mse)| {
+            roster.contains(&n.as_str()) && mse.is_finite() && *mse >= 0.0
+        }));
+        let doc = result.cells[0].to_json();
+        assert_eq!(doc.get("champions").as_arr().unwrap().len(), 3);
+        assert!(doc.get("model_mses").get(&cell.model_mses[0].0).as_f64().is_some());
     }
 
     #[test]
@@ -1162,7 +1257,7 @@ mod tests {
             }
             for svc in 0..world.app.services.len() {
                 world.add_scaler(
-                    AutoscalerKind::PpaNaive.build_with(fleet.policy_for(svc)),
+                    AutoscalerKind::PpaNaive.build_with(fleet.policy_for(svc), 7),
                     svc,
                 );
             }

@@ -1,0 +1,290 @@
+//! Pure-Rust LSTM inference — evaluates the PJRT artifact's weight
+//! layout without the PJRT runtime handle.
+//!
+//! The AOT-compiled JAX/Pallas LSTM ([`super::LstmForecaster`]) owns a
+//! non-`Send` runtime `Rc`, so it cannot enter the sharded engine or
+//! the parallel sweep grid. This cell reimplements the *forward* pass
+//! over the same parameter shapes — `w: (I+H, 4H)` row-major with gate
+//! order `[i, f, g, o]`, `b: (4H,)`, dense head `wd: (H, O)`,
+//! `bd: (O,)`, ReLU output — in plain `f64` loops. Weights either come
+//! from a deterministic seeded init ([`LstmCellForecaster::seeded`],
+//! Glorot-uniform with the conventional forget-gate bias of 1) or are
+//! injected via [`LstmCellForecaster::from_weights`] after exporting a
+//! trained artifact's parameters.
+//!
+//! `retrain` only (re)fits the [`MinMaxScaler`]: this is an inference
+//! path, not a trainer — under the champion–challenger selector an
+//! unfitted random-weight cell simply never wins promotion.
+
+use super::window::latest_window;
+use super::{Forecaster, MinMaxScaler, Scaler, UpdatePolicy};
+use crate::metrics::METRIC_DIM;
+use crate::util::rng::Pcg64;
+
+/// Hidden width of the paper's model (`lstm(50)`).
+pub const DEFAULT_HIDDEN: usize = 50;
+/// Input window length of the paper's model.
+pub const DEFAULT_SEQ_LEN: usize = 8;
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// The inference-only LSTM forecaster.
+pub struct LstmCellForecaster {
+    name: String,
+    hidden: usize,
+    seq_len: usize,
+    /// Cell kernel, `(METRIC_DIM + hidden) × 4*hidden` row-major.
+    w: Vec<f64>,
+    /// Cell bias, `4*hidden`, gate order `[i, f, g, o]`.
+    b: Vec<f64>,
+    /// Dense head, `hidden × METRIC_DIM` row-major.
+    wd: Vec<f64>,
+    /// Head bias, `METRIC_DIM`.
+    bd: Vec<f64>,
+    scaler: Option<MinMaxScaler>,
+}
+
+impl LstmCellForecaster {
+    /// Deterministic Glorot-uniform init (forget-gate bias 1) on the
+    /// paper's `hidden=50, seq_len=8` geometry. Stream 17 mirrors the
+    /// PJRT forecaster's parameter stream.
+    pub fn seeded(seed: u64) -> Self {
+        let (hidden, seq_len) = (DEFAULT_HIDDEN, DEFAULT_SEQ_LEN);
+        let mut rng = Pcg64::new(seed, 17);
+        let init = |n: usize, fan_in: usize, fan_out: usize, rng: &mut Pcg64| -> Vec<f64> {
+            let limit = (6.0 / (fan_in + fan_out) as f64).sqrt();
+            (0..n).map(|_| rng.range(-limit, limit)).collect()
+        };
+        let w = init(
+            (METRIC_DIM + hidden) * 4 * hidden,
+            METRIC_DIM + hidden,
+            4 * hidden,
+            &mut rng,
+        );
+        let wd = init(hidden * METRIC_DIM, hidden, METRIC_DIM, &mut rng);
+        let mut b = vec![0.0; 4 * hidden];
+        for slot in &mut b[hidden..2 * hidden] {
+            *slot = 1.0; // forget-gate bias: remember by default
+        }
+        LstmCellForecaster {
+            name: format!("lstm-rs({hidden})"),
+            hidden,
+            seq_len,
+            w,
+            b,
+            wd,
+            bd: vec![0.0; METRIC_DIM],
+            scaler: None,
+        }
+    }
+
+    /// Wrap exported weights. Shapes must match the artifact layout
+    /// (`w: (METRIC_DIM+hidden)*4*hidden`, `b: 4*hidden`,
+    /// `wd: hidden*METRIC_DIM`, `bd: METRIC_DIM`).
+    pub fn from_weights(
+        w: Vec<f64>,
+        b: Vec<f64>,
+        wd: Vec<f64>,
+        bd: Vec<f64>,
+        hidden: usize,
+        seq_len: usize,
+    ) -> crate::Result<Self> {
+        if hidden == 0 || seq_len == 0 {
+            anyhow::bail!("lstm-rs needs hidden > 0 and seq_len > 0");
+        }
+        let expect = [
+            ("w", w.len(), (METRIC_DIM + hidden) * 4 * hidden),
+            ("b", b.len(), 4 * hidden),
+            ("wd", wd.len(), hidden * METRIC_DIM),
+            ("bd", bd.len(), METRIC_DIM),
+        ];
+        for (name, got, want) in expect {
+            if got != want {
+                anyhow::bail!("lstm-rs weight `{name}`: {got} values, expected {want}");
+            }
+        }
+        Ok(LstmCellForecaster {
+            name: format!("lstm-rs({hidden})"),
+            hidden,
+            seq_len,
+            w,
+            b,
+            wd,
+            bd,
+            scaler: None,
+        })
+    }
+
+    /// Run the cell over one scaled window (`seq_len × METRIC_DIM`
+    /// row-major) and return the scaled output vector.
+    fn forward(&self, window: &[f64]) -> [f64; METRIC_DIM] {
+        let h4 = 4 * self.hidden;
+        let mut h = vec![0.0; self.hidden];
+        let mut c = vec![0.0; self.hidden];
+        let mut z = vec![0.0; h4];
+        for step in 0..self.seq_len {
+            let x = &window[step * METRIC_DIM..(step + 1) * METRIC_DIM];
+            z.copy_from_slice(&self.b);
+            for (i, xi) in x.iter().enumerate() {
+                let row = &self.w[i * h4..(i + 1) * h4];
+                for (zj, wj) in z.iter_mut().zip(row) {
+                    *zj += xi * wj;
+                }
+            }
+            for (k, hk) in h.iter().enumerate() {
+                let row = &self.w[(METRIC_DIM + k) * h4..(METRIC_DIM + k + 1) * h4];
+                for (zj, wj) in z.iter_mut().zip(row) {
+                    *zj += hk * wj;
+                }
+            }
+            for j in 0..self.hidden {
+                let gi = sigmoid(z[j]);
+                let gf = sigmoid(z[self.hidden + j]);
+                let gg = z[2 * self.hidden + j].tanh();
+                let go = sigmoid(z[3 * self.hidden + j]);
+                c[j] = gf * c[j] + gi * gg;
+                h[j] = go * c[j].tanh();
+            }
+        }
+        let mut out = [0.0; METRIC_DIM];
+        for (o, slot) in out.iter_mut().enumerate() {
+            let mut acc = self.bd[o];
+            for (k, hk) in h.iter().enumerate() {
+                acc += hk * self.wd[k * METRIC_DIM + o];
+            }
+            *slot = acc.max(0.0); // ReLU head, as in the artifact
+        }
+        out
+    }
+}
+
+impl Forecaster for LstmCellForecaster {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Scale the latest window, run the cell, inverse-scale. `None`
+    /// until the scaler is fitted or when history is shorter than
+    /// `seq_len`.
+    fn predict(&mut self, history: &[[f64; METRIC_DIM]]) -> Option<[f64; METRIC_DIM]> {
+        let scaler = self.scaler.as_ref()?;
+        let window32 = latest_window(history, self.seq_len, scaler)?;
+        let window: Vec<f64> = window32.iter().map(|&v| v as f64).collect();
+        let scaled = self.forward(&window);
+        let mut out = scaler.inverse_row(&scaled);
+        for v in &mut out {
+            *v = v.max(0.0);
+        }
+        Some(out)
+    }
+
+    /// Inference path: `retrain` (re)fits only the scaler. `KeepSeed`
+    /// leaves everything untouched.
+    fn retrain(
+        &mut self,
+        history: &[[f64; METRIC_DIM]],
+        policy: UpdatePolicy,
+    ) -> crate::Result<()> {
+        if policy == UpdatePolicy::KeepSeed {
+            return Ok(());
+        }
+        if history.len() < self.seq_len + 1 {
+            anyhow::bail!(
+                "history too short to fit the lstm-rs scaler ({} rows < {})",
+                history.len(),
+                self.seq_len + 1
+            );
+        }
+        if policy == UpdatePolicy::RetrainScratch || self.scaler.is_none() {
+            self.scaler = Some(MinMaxScaler::fit(history));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn history(n: usize) -> Vec<[f64; METRIC_DIM]> {
+        (0..n)
+            .map(|t| {
+                let x = t as f64;
+                [10.0 + x, 20.0 + x, 5.0, x * 0.5, 100.0 - x]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn unfitted_predicts_none() {
+        let mut f = LstmCellForecaster::seeded(1);
+        assert_eq!(f.predict(&history(32)), None);
+    }
+
+    #[test]
+    fn fit_scaler_then_predictions_are_finite_and_nonnegative() {
+        let mut f = LstmCellForecaster::seeded(1);
+        let h = history(40);
+        f.retrain(&h, UpdatePolicy::FineTune).expect("fits scaler");
+        let p = f.predict(&h).expect("fitted");
+        assert!(p.iter().all(|v| v.is_finite() && *v >= 0.0), "{p:?}");
+        assert_eq!(f.predict(&h[..4]), None, "window shorter than seq_len");
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical() {
+        let h = history(30);
+        let mut a = LstmCellForecaster::seeded(9);
+        let mut b = LstmCellForecaster::seeded(9);
+        a.retrain(&h, UpdatePolicy::RetrainScratch).expect("fits");
+        b.retrain(&h, UpdatePolicy::RetrainScratch).expect("fits");
+        assert_eq!(a.predict(&h), b.predict(&h));
+        assert_ne!(
+            LstmCellForecaster::seeded(9).w,
+            LstmCellForecaster::seeded(10).w
+        );
+    }
+
+    #[test]
+    fn forget_gate_bias_is_one() {
+        let f = LstmCellForecaster::seeded(2);
+        let h = DEFAULT_HIDDEN;
+        assert!(f.b[h..2 * h].iter().all(|&v| v == 1.0));
+        assert!(f.b[..h].iter().all(|&v| v == 0.0));
+        assert!(f.b[2 * h..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn from_weights_validates_shapes_and_runs() {
+        let hidden = 4;
+        let w = vec![0.0; (METRIC_DIM + hidden) * 4 * hidden];
+        let b = vec![0.0; 4 * hidden];
+        let wd = vec![0.0; hidden * METRIC_DIM];
+        let bd = vec![0.25; METRIC_DIM];
+        let mut f = LstmCellForecaster::from_weights(w, b, wd, bd, hidden, 3).expect("shapes ok");
+        assert_eq!(f.name(), "lstm-rs(4)");
+        let h = history(20);
+        f.retrain(&h, UpdatePolicy::RetrainScratch).expect("fits");
+        // All-zero kernel → hidden state stays 0 → output = relu(bd),
+        // inverse-scaled: min + 0.25 * range on every feature.
+        let p = f.predict(&h).expect("fitted");
+        let scaler = MinMaxScaler::fit(&h);
+        for i in 0..METRIC_DIM {
+            let want = (scaler.min[i] + 0.25 * scaler.range[i]).max(0.0);
+            assert!((p[i] - want).abs() < 1e-9, "feature {i}: {} vs {want}", p[i]);
+        }
+        let bad = LstmCellForecaster::from_weights(vec![0.0; 3], vec![], vec![], vec![], 4, 3);
+        assert!(bad.expect_err("shape mismatch").to_string().contains("`w`"));
+    }
+
+    #[test]
+    fn short_history_bails() {
+        let mut f = LstmCellForecaster::seeded(1);
+        let err = f
+            .retrain(&history(DEFAULT_SEQ_LEN), UpdatePolicy::FineTune)
+            .expect_err("8 rows < seq_len+1");
+        assert!(err.to_string().contains("too short"), "{err}");
+    }
+}

@@ -10,15 +10,37 @@
 //!   fitted from scratch by conditional-sum-of-squares (what statsmodels
 //!   did in the paper's stack).
 //! * [`NaiveForecaster`] — last-value persistence (sanity floor).
+//!
+//! The zoo beyond the paper (all pure Rust, `Send`, shard-safe):
+//!
+//! * [`HoltWintersForecaster`] — additive-seasonal triple exponential
+//!   smoothing, the cheap strong baseline.
+//! * [`TcnForecaster`] — dilated causal conv1d over the protocol
+//!   window, fitted gradient-free by greedy SPSA.
+//! * [`LstmCellForecaster`] — pure-Rust LSTM *inference* over the PJRT
+//!   artifact's weight layout, without the non-`Send` runtime handle.
+//! * [`ChampionChallenger`] — online champion–challenger selection over
+//!   K wrapped models ([`selector`]).
+//!
+//! [`ForecasterKind`] names the CLI-buildable axis
+//! (`--forecaster naive|arma|holt-winters|tcn|lstm-rs|auto:K`).
 
 pub mod arma;
+pub mod holt_winters;
 pub mod lstm;
+pub mod lstm_cell;
 pub mod scaler;
+pub mod selector;
+pub mod tcn;
 pub mod window;
 
 pub use arma::ArmaForecaster;
+pub use holt_winters::HoltWintersForecaster;
 pub use lstm::LstmForecaster;
+pub use lstm_cell::LstmCellForecaster;
 pub use scaler::{MinMaxScaler, Scaler, StandardScaler};
+pub use selector::{ChampionChallenger, SelectionSummary, SelectorConfig};
+pub use tcn::TcnForecaster;
 
 use crate::metrics::METRIC_DIM;
 
@@ -77,6 +99,105 @@ pub trait Forecaster {
     fn confidence(&self) -> f64 {
         1.0
     }
+
+    /// Champion–challenger state, when this forecaster is a selection
+    /// wrapper ([`ChampionChallenger`] overrides this; plain models
+    /// report `None`).
+    fn selection(&self) -> Option<SelectionSummary> {
+        None
+    }
+}
+
+/// The CLI-buildable forecaster axis: every kind here is pure Rust and
+/// `Send`-safe, so it runs under the parallel sweep grid and any
+/// `--shards` layout. (The PJRT `lstm` model is *not* on this axis —
+/// its runtime handle is shared single-threaded state; `lstm-rs` is the
+/// sharded alternative.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ForecasterKind {
+    Naive,
+    Arma,
+    HoltWinters,
+    Tcn,
+    LstmRs,
+    /// Champion–challenger selection over the first K of [`ROSTER`].
+    Auto(u8),
+}
+
+/// Roster order for `auto:K`: strongest cheap baselines first, so small
+/// K stays useful (`auto:1` wraps Holt-Winters, `auto:3` adds ARMA and
+/// naive, `auto:5` the full zoo).
+pub const ROSTER: [ForecasterKind; 5] = [
+    ForecasterKind::HoltWinters,
+    ForecasterKind::Arma,
+    ForecasterKind::Naive,
+    ForecasterKind::Tcn,
+    ForecasterKind::LstmRs,
+];
+
+impl ForecasterKind {
+    /// Parse a `--forecaster` token.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        if let Some(k) = s.strip_prefix("auto:") {
+            let k: usize = k
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad auto:K forecaster `{s}` (K must be 1..=5)"))?;
+            if !(1..=ROSTER.len()).contains(&k) {
+                anyhow::bail!("auto:K supports K in 1..={} (got {k})", ROSTER.len());
+            }
+            return Ok(ForecasterKind::Auto(k as u8));
+        }
+        match s {
+            "naive" => Ok(ForecasterKind::Naive),
+            "arma" => Ok(ForecasterKind::Arma),
+            "holt-winters" => Ok(ForecasterKind::HoltWinters),
+            "tcn" => Ok(ForecasterKind::Tcn),
+            "lstm-rs" => Ok(ForecasterKind::LstmRs),
+            other => anyhow::bail!(
+                "unknown forecaster `{other}` (naive|arma|holt-winters|tcn|lstm-rs|auto:K)"
+            ),
+        }
+    }
+
+    /// The CLI token (and sweep-label suffix) for this kind.
+    pub fn name(&self) -> String {
+        match self {
+            ForecasterKind::Naive => "naive".to_string(),
+            ForecasterKind::Arma => "arma".to_string(),
+            ForecasterKind::HoltWinters => "holt-winters".to_string(),
+            ForecasterKind::Tcn => "tcn".to_string(),
+            ForecasterKind::LstmRs => "lstm-rs".to_string(),
+            ForecasterKind::Auto(k) => format!("auto:{k}"),
+        }
+    }
+
+    /// Build the forecaster. `seed` feeds the seeded inits (TCN,
+    /// lstm-rs); stateless kinds ignore it. Pure: same kind + seed →
+    /// bit-identical model, wherever (and on whichever thread) it is
+    /// built.
+    pub fn build(&self, seed: u64) -> Box<dyn Forecaster> {
+        self.build_send(seed)
+    }
+
+    /// [`Self::build`] with the `Send` bound kept visible — every kind
+    /// on this axis is `Send`, which is what lets learned models enter
+    /// the sharded engine.
+    pub fn build_send(&self, seed: u64) -> Box<dyn Forecaster + Send> {
+        match self {
+            ForecasterKind::Naive => Box::new(NaiveForecaster),
+            ForecasterKind::Arma => Box::new(ArmaForecaster::new()),
+            ForecasterKind::HoltWinters => Box::new(HoltWintersForecaster::default()),
+            ForecasterKind::Tcn => Box::new(TcnForecaster::seeded(seed)),
+            ForecasterKind::LstmRs => Box::new(LstmCellForecaster::seeded(seed)),
+            ForecasterKind::Auto(k) => Box::new(ChampionChallenger::new(
+                ROSTER[..*k as usize]
+                    .iter()
+                    .map(|m| m.build_send(seed))
+                    .collect(),
+                SelectorConfig::default(),
+            )),
+        }
+    }
 }
 
 /// Last-value persistence baseline.
@@ -120,5 +241,54 @@ mod tests {
         assert!(UpdatePolicy::KeepSeed.name().contains("policy1"));
         assert!(UpdatePolicy::RetrainScratch.name().contains("policy2"));
         assert!(UpdatePolicy::FineTune.name().contains("policy3"));
+    }
+
+    #[test]
+    fn forecaster_kind_parse_roundtrip() {
+        for token in ["naive", "arma", "holt-winters", "tcn", "lstm-rs", "auto:3"] {
+            let kind = ForecasterKind::parse(token).expect(token);
+            assert_eq!(kind.name(), token);
+        }
+        assert_eq!(
+            ForecasterKind::parse("auto:1").expect("k=1"),
+            ForecasterKind::Auto(1)
+        );
+        assert!(ForecasterKind::parse("auto:0").is_err());
+        assert!(ForecasterKind::parse("auto:6").is_err());
+        assert!(ForecasterKind::parse("auto:x").is_err());
+        let err = ForecasterKind::parse("lstm").expect_err("PJRT model is off this axis");
+        assert!(err.to_string().contains("lstm-rs"), "{err}");
+    }
+
+    #[test]
+    fn kinds_build_the_named_models() {
+        assert_eq!(ForecasterKind::Naive.build(1).name(), "naive-last-value");
+        assert_eq!(ForecasterKind::Arma.build(1).name(), "arma(1,1)");
+        assert_eq!(
+            ForecasterKind::HoltWinters.build(1).name(),
+            "holt-winters(30)"
+        );
+        assert_eq!(ForecasterKind::Tcn.build(1).name(), "tcn");
+        assert_eq!(ForecasterKind::LstmRs.build(1).name(), "lstm-rs(50)");
+        let auto = ForecasterKind::Auto(3).build(1);
+        assert_eq!(auto.name(), "auto:3");
+        let summary = auto.selection().expect("selector reports state");
+        assert_eq!(summary.champion, "holt-winters(30)", "roster head");
+        assert_eq!(summary.models.len(), 3);
+        assert!(NaiveForecaster.selection().is_none(), "plain models: None");
+    }
+
+    /// The whole CLI axis must stay `Send` so scalers built from it can
+    /// enter the sharded engine's worker threads.
+    #[test]
+    fn zoo_forecasters_are_send() {
+        fn assert_send<T: Send>(_: T) {}
+        assert_send(HoltWintersForecaster::default());
+        assert_send(TcnForecaster::seeded(1));
+        assert_send(LstmCellForecaster::seeded(1));
+        assert_send(ChampionChallenger::new(
+            vec![Box::new(NaiveForecaster)],
+            SelectorConfig::default(),
+        ));
     }
 }

@@ -1,0 +1,496 @@
+//! Online champion–challenger model selection.
+//!
+//! [`ChampionChallenger`] wraps K boxed forecasters for one service. The
+//! current *champion* drives the scaling decision; every other member is
+//! a *challenger* running shadow-mode: it predicts on the same history
+//! each tick, and when the realized vector arrives its squared error on
+//! the score metric is folded into the existing Welford
+//! [`StreamingStats`] machinery. After every `eval_window` ticks the
+//! selector reviews the window and promotes the lowest-MSE challenger —
+//! but only past a hysteresis `margin`, so two models trading
+//! statistically-even windows never flap the champion back and forth.
+//!
+//! Determinism contract: selection state is a pure function of the
+//! observed metric stream (and the members' own seeded state). There is
+//! no wall clock, no ambient randomness, and no dependence on thread or
+//! shard layout — each selector instance lives inside one service's
+//! scaler, so runs stay bit-identical across repeats, thread counts,
+//! and `--shards 1|2|4|8`. With K = 1 the wrapper is exactly
+//! transparent: the single member sees the same `predict` / `observe` /
+//! `retrain` sequence the bare PPA would deliver, and the confidence
+//! gate delegates, so decision logs reproduce the bare run bit-for-bit
+//! (covered by `tests/forecast_zoo.rs`).
+
+use super::{Forecaster, UpdatePolicy};
+use crate::metrics::{METRIC_DIM, M_CPU};
+use crate::stats::StreamingStats;
+
+/// Promotion-review tuning. Plain data; the defaults are what
+/// `ForecasterKind::Auto` builds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SelectorConfig {
+    /// Ticks between promotion reviews (default 30 ≙ 10 min of 20 s
+    /// control loops). A review scores only predictions closed inside
+    /// the window, so every model starts each window from zero.
+    pub eval_window: usize,
+    /// Hysteresis: a challenger is promoted only when its window MSE is
+    /// below `champion_mse * (1 - margin)`. Defaults to 0.1 (10%).
+    pub margin: f64,
+    /// Protocol-vector component the shadow MSE is scored on (default
+    /// `M_CPU`, the paper's primary metric).
+    pub score_metric: usize,
+}
+
+impl Default for SelectorConfig {
+    fn default() -> Self {
+        SelectorConfig {
+            eval_window: 30,
+            margin: 0.1,
+            score_metric: M_CPU,
+        }
+    }
+}
+
+/// One model's cumulative shadow score, for reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelScore {
+    pub name: String,
+    /// Cumulative shadow MSE on the score metric; `None` when the model
+    /// never produced a scoreable prediction.
+    pub mse: Option<f64>,
+    /// Number of closed (prediction, actual) pairs scored.
+    pub n: usize,
+}
+
+/// Structured record of one promotion decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PromotionRecord {
+    /// Tick count at the review that promoted (1-based, in observed
+    /// vectors).
+    pub tick: u64,
+    pub from: String,
+    pub to: String,
+    /// Window MSE of the outgoing champion (NaN when it never scored).
+    pub from_mse: f64,
+    /// Window MSE of the incoming champion.
+    pub to_mse: f64,
+}
+
+/// Snapshot of a selector's state after a run: the final champion, each
+/// member's cumulative shadow score, and the promotion log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelectionSummary {
+    pub champion: String,
+    pub models: Vec<ModelScore>,
+    pub promotions: Vec<PromotionRecord>,
+}
+
+/// A wrapped forecaster plus its shadow-scoring state.
+struct Member {
+    model: Box<dyn Forecaster + Send>,
+    /// The vector this member predicted for the *next* observed tick.
+    pending: Option<[f64; METRIC_DIM]>,
+    /// Squared errors closed inside the current review window.
+    window: StreamingStats,
+    /// Squared errors over the whole run (reported in the sweep JSON).
+    total: StreamingStats,
+}
+
+/// The selection wrapper. Implements [`Forecaster`] itself, so it slots
+/// into the PPA `Evaluator` unchanged.
+pub struct ChampionChallenger {
+    members: Vec<Member>,
+    champion: usize,
+    cfg: SelectorConfig,
+    label: String,
+    /// Observed vectors so far (drives the review cadence).
+    ticks: u64,
+    promotions: Vec<PromotionRecord>,
+}
+
+impl ChampionChallenger {
+    /// Wrap `models` (member 0 starts as champion) under `cfg`. Members
+    /// must be `Send` so the selector itself stays `Send` — the whole
+    /// zoo qualifies; only the PJRT LSTM does not.
+    pub fn new(models: Vec<Box<dyn Forecaster + Send>>, cfg: SelectorConfig) -> Self {
+        assert!(!models.is_empty(), "champion-challenger needs >= 1 model");
+        let label = format!("auto:{}", models.len());
+        ChampionChallenger {
+            members: models
+                .into_iter()
+                .map(|model| Member {
+                    model,
+                    pending: None,
+                    window: StreamingStats::new(),
+                    total: StreamingStats::new(),
+                })
+                .collect(),
+            champion: 0,
+            cfg,
+            label,
+            ticks: 0,
+            promotions: Vec::new(),
+        }
+    }
+
+    /// Name of the current champion.
+    pub fn champion_name(&self) -> &str {
+        self.members[self.champion].model.name()
+    }
+
+    /// The promotion log so far.
+    pub fn promotions(&self) -> &[PromotionRecord] {
+        &self.promotions
+    }
+
+    /// Review the window: promote the best challenger iff it clears the
+    /// hysteresis margin, then reset every window accumulator.
+    fn review(&mut self) {
+        let incumbent = self.champion;
+        let incumbent_scored = !self.members[incumbent].window.is_empty();
+        let incumbent_mse = self.members[incumbent].window.mean();
+        let mut best: Option<(usize, f64)> = None;
+        for (i, member) in self.members.iter().enumerate() {
+            if i == incumbent || member.window.is_empty() {
+                continue;
+            }
+            let mse = member.window.mean();
+            // A silent champion (no scoreable predictions all window —
+            // e.g. an unfitted model) loses to any scoring challenger.
+            let clears = !incumbent_scored || mse < incumbent_mse * (1.0 - self.cfg.margin);
+            if clears && best.is_none_or(|(_, b)| mse < b) {
+                best = Some((i, mse));
+            }
+        }
+        if let Some((winner, mse)) = best {
+            self.promotions.push(PromotionRecord {
+                tick: self.ticks,
+                from: self.members[incumbent].model.name().to_string(),
+                to: self.members[winner].model.name().to_string(),
+                from_mse: incumbent_mse,
+                to_mse: mse,
+            });
+            self.champion = winner;
+        }
+        for member in &mut self.members {
+            member.window = StreamingStats::new();
+        }
+    }
+}
+
+impl Forecaster for ChampionChallenger {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    /// Every member predicts shadow-mode; the champion's prediction is
+    /// returned as the selector's own.
+    fn predict(&mut self, history: &[[f64; METRIC_DIM]]) -> Option<[f64; METRIC_DIM]> {
+        let mut out = None;
+        for (i, member) in self.members.iter_mut().enumerate() {
+            let p = member.model.predict(history);
+            member.pending = p;
+            if i == self.champion {
+                out = p;
+            }
+        }
+        out
+    }
+
+    /// Forward the update to every member. The selector succeeds when at
+    /// least one member retrains (so the shared history file is cleared
+    /// exactly as for a bare model); it fails only when every member
+    /// fails, propagating the last error.
+    fn retrain(
+        &mut self,
+        history: &[[f64; METRIC_DIM]],
+        policy: UpdatePolicy,
+    ) -> crate::Result<()> {
+        let mut last_err = None;
+        let mut any_ok = false;
+        for member in &mut self.members {
+            match member.model.retrain(history, policy) {
+                Ok(()) => any_ok = true,
+                Err(e) => last_err = Some(e),
+            }
+        }
+        match (any_ok, last_err) {
+            (true, _) | (false, None) => Ok(()),
+            (false, Some(e)) => Err(e),
+        }
+    }
+
+    /// Close every pending shadow prediction against the realized
+    /// vector, forward the observation, and run a promotion review when
+    /// the window fills.
+    fn observe(&mut self, actual: &[f64; METRIC_DIM]) {
+        let metric = self.cfg.score_metric;
+        for member in &mut self.members {
+            if let Some(pred) = member.pending.take() {
+                let err = pred[metric] - actual[metric];
+                member.window.record(err * err);
+                member.total.record(err * err);
+            }
+            member.model.observe(actual);
+        }
+        self.ticks += 1;
+        if self.cfg.eval_window > 0 && self.ticks % self.cfg.eval_window as u64 == 0 {
+            self.review();
+        }
+    }
+
+    /// The confidence gate delegates to the champion, so an `auto:1`
+    /// wrapper gates identically to the bare model.
+    fn is_bayesian(&self) -> bool {
+        self.members[self.champion].model.is_bayesian()
+    }
+
+    fn confidence(&self) -> f64 {
+        self.members[self.champion].model.confidence()
+    }
+
+    fn selection(&self) -> Option<SelectionSummary> {
+        Some(SelectionSummary {
+            champion: self.champion_name().to_string(),
+            models: self
+                .members
+                .iter()
+                .map(|m| ModelScore {
+                    name: m.model.name().to_string(),
+                    mse: (!m.total.is_empty()).then(|| m.total.mean()),
+                    n: m.total.n(),
+                })
+                .collect(),
+            promotions: self.promotions.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forecast::NaiveForecaster;
+
+    /// Scripted model: always predicts `actual + bias` one tick ahead of
+    /// the deterministic ramp used in the tests, so its shadow MSE is
+    /// exactly `bias²`.
+    struct Biased {
+        name: String,
+        bias: f64,
+        last: Option<[f64; METRIC_DIM]>,
+    }
+
+    impl Biased {
+        fn new(name: &str, bias: f64) -> Self {
+            Biased {
+                name: name.to_string(),
+                bias,
+                last: None,
+            }
+        }
+    }
+
+    impl Forecaster for Biased {
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn predict(&mut self, _h: &[[f64; METRIC_DIM]]) -> Option<[f64; METRIC_DIM]> {
+            // Predict the *next* actual (tests feed a constant series)
+            // offset by the bias.
+            self.last.map(|v| {
+                let mut p = v;
+                p[M_CPU] += self.bias;
+                p
+            })
+        }
+        fn retrain(
+            &mut self,
+            _h: &[[f64; METRIC_DIM]],
+            _p: UpdatePolicy,
+        ) -> crate::Result<()> {
+            Ok(())
+        }
+        fn observe(&mut self, actual: &[f64; METRIC_DIM]) {
+            self.last = Some(*actual);
+        }
+    }
+
+    fn drive(sel: &mut ChampionChallenger, ticks: usize) {
+        let actual = [50.0; METRIC_DIM];
+        for _ in 0..ticks {
+            sel.observe(&actual);
+            let _ = sel.predict(&[actual]);
+        }
+    }
+
+    fn cfg(window: usize, margin: f64) -> SelectorConfig {
+        SelectorConfig {
+            eval_window: window,
+            margin,
+            score_metric: M_CPU,
+        }
+    }
+
+    #[test]
+    fn clear_winner_is_promoted_once() {
+        // Champion bias 10 (MSE 100), challenger bias 1 (MSE 1).
+        let mut sel = ChampionChallenger::new(
+            vec![
+                Box::new(Biased::new("bad", 10.0)),
+                Box::new(Biased::new("good", 1.0)),
+            ],
+            cfg(10, 0.1),
+        );
+        assert_eq!(sel.champion_name(), "bad");
+        drive(&mut sel, 100);
+        assert_eq!(sel.champion_name(), "good");
+        assert_eq!(sel.promotions().len(), 1, "{:?}", sel.promotions());
+        let p = &sel.promotions()[0];
+        assert_eq!((p.from.as_str(), p.to.as_str()), ("bad", "good"));
+        assert!(p.to_mse < p.from_mse);
+        assert_eq!(p.tick, 10, "promoted at the first review");
+    }
+
+    #[test]
+    fn hysteresis_prevents_flapping() {
+        // Two models within the 10% hysteresis band of each other: the
+        // marginally-better challenger must never be promoted, no matter
+        // how many review windows pass.
+        let mut sel = ChampionChallenger::new(
+            vec![
+                Box::new(Biased::new("a", 10.0)), // MSE 100
+                Box::new(Biased::new("b", 9.6)),  // MSE 92.16 > 100*0.9
+            ],
+            cfg(5, 0.1),
+        );
+        drive(&mut sel, 200);
+        assert_eq!(sel.champion_name(), "a");
+        assert!(sel.promotions().is_empty(), "{:?}", sel.promotions());
+    }
+
+    #[test]
+    fn margin_zero_still_requires_strict_improvement() {
+        let mut sel = ChampionChallenger::new(
+            vec![
+                Box::new(Biased::new("a", 2.0)),
+                Box::new(Biased::new("tie", 2.0)),
+            ],
+            cfg(5, 0.0),
+        );
+        drive(&mut sel, 100);
+        assert_eq!(sel.champion_name(), "a", "ties never flap");
+        assert!(sel.promotions().is_empty());
+    }
+
+    #[test]
+    fn silent_champion_loses_to_scoring_challenger() {
+        struct Mute;
+        impl Forecaster for Mute {
+            fn name(&self) -> &str {
+                "mute"
+            }
+            fn predict(&mut self, _h: &[[f64; METRIC_DIM]]) -> Option<[f64; METRIC_DIM]> {
+                None
+            }
+            fn retrain(
+                &mut self,
+                _h: &[[f64; METRIC_DIM]],
+                _p: UpdatePolicy,
+            ) -> crate::Result<()> {
+                Ok(())
+            }
+        }
+        let mut sel = ChampionChallenger::new(
+            vec![Box::new(Mute), Box::new(Biased::new("live", 3.0))],
+            cfg(10, 0.1),
+        );
+        drive(&mut sel, 20);
+        assert_eq!(sel.champion_name(), "live");
+    }
+
+    #[test]
+    fn auto1_is_transparent() {
+        // A K=1 wrapper forwards predict/observe verbatim and reports
+        // the member's name as champion.
+        let mut bare = NaiveForecaster;
+        let mut sel =
+            ChampionChallenger::new(vec![Box::new(NaiveForecaster)], SelectorConfig::default());
+        assert_eq!(sel.name(), "auto:1");
+        assert_eq!(sel.champion_name(), "naive-last-value");
+        let h = vec![[7.0; METRIC_DIM], [9.0; METRIC_DIM]];
+        assert_eq!(sel.predict(&h), bare.predict(&h));
+        assert_eq!(sel.is_bayesian(), bare.is_bayesian());
+        assert_eq!(sel.confidence(), bare.confidence());
+        assert!(sel.retrain(&h, UpdatePolicy::FineTune).is_ok());
+    }
+
+    #[test]
+    fn retrain_ok_when_any_member_fits() {
+        struct Refusenik;
+        impl Forecaster for Refusenik {
+            fn name(&self) -> &str {
+                "refusenik"
+            }
+            fn predict(&mut self, _h: &[[f64; METRIC_DIM]]) -> Option<[f64; METRIC_DIM]> {
+                None
+            }
+            fn retrain(
+                &mut self,
+                _h: &[[f64; METRIC_DIM]],
+                _p: UpdatePolicy,
+            ) -> crate::Result<()> {
+                anyhow::bail!("never fits")
+            }
+        }
+        let mut mixed = ChampionChallenger::new(
+            vec![Box::new(Refusenik), Box::new(NaiveForecaster)],
+            SelectorConfig::default(),
+        );
+        assert!(mixed.retrain(&[], UpdatePolicy::FineTune).is_ok());
+        let mut all_bad = ChampionChallenger::new(
+            vec![Box::new(Refusenik), Box::new(Refusenik)],
+            SelectorConfig::default(),
+        );
+        assert!(all_bad.retrain(&[], UpdatePolicy::FineTune).is_err());
+    }
+
+    #[test]
+    fn selection_summary_reports_scores_and_promotions() {
+        let mut sel = ChampionChallenger::new(
+            vec![
+                Box::new(Biased::new("bad", 4.0)),
+                Box::new(Biased::new("good", 1.0)),
+            ],
+            cfg(10, 0.1),
+        );
+        drive(&mut sel, 30);
+        let s = Forecaster::selection(&sel).expect("selector always has a summary");
+        assert_eq!(s.champion, "good");
+        assert_eq!(s.models.len(), 2);
+        assert_eq!(s.models[0].name, "bad");
+        let bad_mse = s.models[0].mse.expect("scored");
+        let good_mse = s.models[1].mse.expect("scored");
+        assert!((bad_mse - 16.0).abs() < 1e-9, "{bad_mse}");
+        assert!((good_mse - 1.0).abs() < 1e-9, "{good_mse}");
+        assert_eq!(s.promotions.len(), 1);
+    }
+
+    #[test]
+    fn reviews_are_deterministic_across_repeats() {
+        let build = || {
+            ChampionChallenger::new(
+                vec![
+                    Box::new(Biased::new("a", 5.0)),
+                    Box::new(Biased::new("b", 2.0)),
+                    Box::new(Biased::new("c", 8.0)),
+                ],
+                cfg(7, 0.05),
+            )
+        };
+        let mut x = build();
+        let mut y = build();
+        drive(&mut x, 150);
+        drive(&mut y, 150);
+        assert_eq!(Forecaster::selection(&x), Forecaster::selection(&y));
+    }
+}

@@ -1,0 +1,403 @@
+//! Temporal convolutional network forecaster — dilated causal conv1d
+//! over the 5-metric protocol window, pure Rust.
+//!
+//! Three causal convolution layers (kernel 3, dilations 1/2/4, ReLU)
+//! lift the scaled window to `TCN_CHANNELS` feature channels; a linear
+//! ReLU head reads the last timestep and emits the next protocol
+//! vector. The receptive field (15 ticks) covers the [`TCN_WINDOW`]
+//! input window.
+//!
+//! Training is gradient-free: greedy SPSA (simultaneous-perturbation
+//! stochastic approximation) over the flattened parameter vector, with
+//! every step re-evaluated and reverted unless it improves the
+//! minibatch loss — so the training loss is non-increasing and the fit
+//! needs no autodiff. All randomness (init + perturbations) comes from
+//! one seeded [`Pcg64`] stream owned by the forecaster, so retrains are
+//! bit-identical across repeats, thread counts, and shard layouts.
+
+use super::{Forecaster, MinMaxScaler, Scaler, UpdatePolicy};
+use crate::metrics::METRIC_DIM;
+use crate::util::rng::Pcg64;
+
+/// Input window length in control-loop ticks.
+pub const TCN_WINDOW: usize = 16;
+/// Hidden channels per convolution layer.
+pub const TCN_CHANNELS: usize = 6;
+
+const KERNEL: usize = 3;
+const DILATIONS: [usize; 3] = [1, 2, 4];
+
+/// (weight offset, bias offset, in channels, out channels) per layer,
+/// laid out contiguously in the flat parameter vector.
+const CONV1_W: usize = 0;
+const CONV1_B: usize = CONV1_W + TCN_CHANNELS * METRIC_DIM * KERNEL;
+const CONV2_W: usize = CONV1_B + TCN_CHANNELS;
+const CONV2_B: usize = CONV2_W + TCN_CHANNELS * TCN_CHANNELS * KERNEL;
+const CONV3_W: usize = CONV2_B + TCN_CHANNELS;
+const CONV3_B: usize = CONV3_W + TCN_CHANNELS * TCN_CHANNELS * KERNEL;
+const HEAD_W: usize = CONV3_B + TCN_CHANNELS;
+const HEAD_B: usize = HEAD_W + METRIC_DIM * TCN_CHANNELS;
+const N_PARAMS: usize = HEAD_B + METRIC_DIM;
+
+/// SPSA iteration counts per update policy.
+const SCRATCH_ITERS: usize = 60;
+const FINE_TUNE_ITERS: usize = 20;
+/// Largest minibatch of `(window → next row)` pairs per loss
+/// evaluation; larger histories are subsampled with a deterministic
+/// even stride.
+const MAX_BATCH: usize = 48;
+
+/// One causal dilated convolution + ReLU. `input` is `len × in_ch`
+/// row-major; out-of-range taps read zero (left padding).
+fn conv_forward(
+    params: &[f64],
+    w_off: usize,
+    b_off: usize,
+    input: &[f64],
+    in_ch: usize,
+    out_ch: usize,
+    dilation: usize,
+    len: usize,
+) -> Vec<f64> {
+    let mut out = vec![0.0; len * out_ch];
+    for t in 0..len {
+        for oc in 0..out_ch {
+            let mut acc = params[b_off + oc];
+            for k in 0..KERNEL {
+                let Some(src) = t.checked_sub(k * dilation) else {
+                    continue;
+                };
+                let w_base = w_off + oc * in_ch * KERNEL;
+                for ic in 0..in_ch {
+                    acc += params[w_base + ic * KERNEL + k] * input[src * in_ch + ic];
+                }
+            }
+            out[t * out_ch + oc] = acc.max(0.0);
+        }
+    }
+    out
+}
+
+/// Full forward pass over one scaled window (`TCN_WINDOW × METRIC_DIM`
+/// row-major) → the next scaled protocol vector.
+fn forward(params: &[f64], window: &[f64]) -> [f64; METRIC_DIM] {
+    let h1 = conv_forward(
+        params,
+        CONV1_W,
+        CONV1_B,
+        window,
+        METRIC_DIM,
+        TCN_CHANNELS,
+        DILATIONS[0],
+        TCN_WINDOW,
+    );
+    let h2 = conv_forward(
+        params,
+        CONV2_W,
+        CONV2_B,
+        &h1,
+        TCN_CHANNELS,
+        TCN_CHANNELS,
+        DILATIONS[1],
+        TCN_WINDOW,
+    );
+    let h3 = conv_forward(
+        params,
+        CONV3_W,
+        CONV3_B,
+        &h2,
+        TCN_CHANNELS,
+        TCN_CHANNELS,
+        DILATIONS[2],
+        TCN_WINDOW,
+    );
+    let last = &h3[(TCN_WINDOW - 1) * TCN_CHANNELS..TCN_WINDOW * TCN_CHANNELS];
+    let mut out = [0.0; METRIC_DIM];
+    for (o, slot) in out.iter_mut().enumerate() {
+        let mut acc = params[HEAD_B + o];
+        for (ic, x) in last.iter().enumerate() {
+            acc += params[HEAD_W + o * TCN_CHANNELS + ic] * x;
+        }
+        *slot = acc.max(0.0); // ReLU head: scaled targets are non-negative
+    }
+    out
+}
+
+/// The dilated-conv forecaster.
+pub struct TcnForecaster {
+    params: Vec<f64>,
+    scaler: Option<MinMaxScaler>,
+    trained: bool,
+    rng: Pcg64,
+}
+
+impl TcnForecaster {
+    /// Deterministic Glorot-uniform init from the dedicated RNG stream.
+    pub fn seeded(seed: u64) -> Self {
+        fn glorot(
+            params: &mut [f64],
+            w_off: usize,
+            n_w: usize,
+            fan_in: usize,
+            fan_out: usize,
+            rng: &mut Pcg64,
+        ) {
+            let limit = (6.0 / (fan_in + fan_out) as f64).sqrt();
+            for p in &mut params[w_off..w_off + n_w] {
+                *p = rng.range(-limit, limit);
+            }
+        }
+        let mut rng = Pcg64::new(seed, 23);
+        let mut params = vec![0.0; N_PARAMS];
+        glorot(
+            &mut params,
+            CONV1_W,
+            TCN_CHANNELS * METRIC_DIM * KERNEL,
+            METRIC_DIM * KERNEL,
+            TCN_CHANNELS * KERNEL,
+            &mut rng,
+        );
+        glorot(
+            &mut params,
+            CONV2_W,
+            TCN_CHANNELS * TCN_CHANNELS * KERNEL,
+            TCN_CHANNELS * KERNEL,
+            TCN_CHANNELS * KERNEL,
+            &mut rng,
+        );
+        glorot(
+            &mut params,
+            CONV3_W,
+            TCN_CHANNELS * TCN_CHANNELS * KERNEL,
+            TCN_CHANNELS * KERNEL,
+            TCN_CHANNELS * KERNEL,
+            &mut rng,
+        );
+        glorot(
+            &mut params,
+            HEAD_W,
+            METRIC_DIM * TCN_CHANNELS,
+            TCN_CHANNELS,
+            METRIC_DIM,
+            &mut rng,
+        );
+        TcnForecaster {
+            params,
+            scaler: None,
+            trained: false,
+            rng,
+        }
+    }
+
+    /// Scaled `(window, target)` pairs from the history, subsampled to
+    /// at most [`MAX_BATCH`] with an even deterministic stride.
+    fn batch(
+        history: &[[f64; METRIC_DIM]],
+        scaler: &MinMaxScaler,
+    ) -> Vec<(Vec<f64>, [f64; METRIC_DIM])> {
+        let n_pairs = history.len().saturating_sub(TCN_WINDOW);
+        let take = n_pairs.min(MAX_BATCH);
+        let mut out = Vec::with_capacity(take);
+        for j in 0..take {
+            // Even stride over [0, n_pairs): covers the whole history
+            // without RNG, so the minibatch is layout-independent.
+            let i = j * n_pairs / take + TCN_WINDOW;
+            let mut window = Vec::with_capacity(TCN_WINDOW * METRIC_DIM);
+            for row in &history[i - TCN_WINDOW..i] {
+                window.extend_from_slice(&scaler.transform(row));
+            }
+            out.push((window, scaler.transform(&history[i])));
+        }
+        out
+    }
+
+    fn loss(params: &[f64], batch: &[(Vec<f64>, [f64; METRIC_DIM])]) -> f64 {
+        let mut sum = 0.0;
+        for (window, target) in batch {
+            let pred = forward(params, window);
+            for (p, t) in pred.iter().zip(target) {
+                sum += (p - t) * (p - t);
+            }
+        }
+        sum / (batch.len().max(1) * METRIC_DIM) as f64
+    }
+
+    /// Greedy SPSA: propose a simultaneous-perturbation step, keep it
+    /// only if the minibatch loss improves. Loss is non-increasing.
+    fn spsa_fit(&mut self, batch: &[(Vec<f64>, [f64; METRIC_DIM])], iters: usize) {
+        let mut current = Self::loss(&self.params, batch);
+        let mut delta = vec![0.0; N_PARAMS];
+        for k in 0..iters {
+            let kf = (k + 1) as f64;
+            let a = 0.08 / kf.powf(0.602);
+            let c = 0.04 / kf.powf(0.101);
+            for d in &mut delta {
+                *d = if self.rng.chance(0.5) { 1.0 } else { -1.0 };
+            }
+            let probe = |sign: f64, params: &[f64]| -> Vec<f64> {
+                params
+                    .iter()
+                    .zip(&delta)
+                    .map(|(p, d)| p + sign * c * d)
+                    .collect()
+            };
+            let up = Self::loss(&probe(1.0, &self.params), batch);
+            let down = Self::loss(&probe(-1.0, &self.params), batch);
+            if !up.is_finite() || !down.is_finite() {
+                continue;
+            }
+            let g = (up - down) / (2.0 * c);
+            let candidate: Vec<f64> = self
+                .params
+                .iter()
+                .zip(&delta)
+                .map(|(p, d)| p - a * g * d)
+                .collect();
+            let next = Self::loss(&candidate, batch);
+            if next.is_finite() && next < current {
+                self.params = candidate;
+                current = next;
+            }
+        }
+    }
+}
+
+impl Forecaster for TcnForecaster {
+    fn name(&self) -> &str {
+        "tcn"
+    }
+
+    /// Forward the latest window through the network; `None` until the
+    /// first successful fit or when the history is shorter than
+    /// [`TCN_WINDOW`].
+    fn predict(&mut self, history: &[[f64; METRIC_DIM]]) -> Option<[f64; METRIC_DIM]> {
+        if !self.trained || history.len() < TCN_WINDOW {
+            return None;
+        }
+        let scaler = self.scaler.as_ref()?;
+        let mut window = Vec::with_capacity(TCN_WINDOW * METRIC_DIM);
+        for row in &history[history.len() - TCN_WINDOW..] {
+            window.extend_from_slice(&scaler.transform(row));
+        }
+        let scaled = forward(&self.params, &window);
+        let mut out = scaler.inverse_row(&scaled);
+        for v in &mut out {
+            *v = v.max(0.0);
+        }
+        Some(out)
+    }
+
+    fn retrain(
+        &mut self,
+        history: &[[f64; METRIC_DIM]],
+        policy: UpdatePolicy,
+    ) -> crate::Result<()> {
+        if policy == UpdatePolicy::KeepSeed {
+            return Ok(());
+        }
+        if history.len() <= TCN_WINDOW {
+            anyhow::bail!(
+                "history too short to fit TCN ({} rows, window {})",
+                history.len(),
+                TCN_WINDOW
+            );
+        }
+        let (scaler, iters) = match (policy, &self.scaler) {
+            // Scratch refits the scaler; fine-tune keeps the scale the
+            // existing weights were trained in.
+            (UpdatePolicy::RetrainScratch, _) | (_, None) => {
+                (MinMaxScaler::fit(history), SCRATCH_ITERS)
+            }
+            (_, Some(s)) => (s.clone(), FINE_TUNE_ITERS),
+        };
+        let batch = Self::batch(history, &scaler);
+        self.spsa_fit(&batch, iters);
+        self.scaler = Some(scaler);
+        self.trained = true;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(n: usize) -> Vec<[f64; METRIC_DIM]> {
+        (0..n)
+            .map(|t| {
+                let x = t as f64;
+                [x, 2.0 * x, 100.0 - 0.5 * x, 10.0, x * 0.25]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn untrained_predicts_none() {
+        let mut tcn = TcnForecaster::seeded(1);
+        assert_eq!(tcn.predict(&ramp(64)), None);
+    }
+
+    #[test]
+    fn short_history_bails_and_keeps_state() {
+        let mut tcn = TcnForecaster::seeded(1);
+        let err = tcn
+            .retrain(&ramp(TCN_WINDOW), UpdatePolicy::RetrainScratch)
+            .expect_err("16 rows < window+1");
+        assert!(err.to_string().contains("too short"), "{err}");
+        assert!(!tcn.trained);
+    }
+
+    #[test]
+    fn keep_seed_is_a_noop() {
+        let mut tcn = TcnForecaster::seeded(1);
+        tcn.retrain(&ramp(8), UpdatePolicy::KeepSeed).expect("noop");
+        assert_eq!(tcn.predict(&ramp(64)), None, "still untrained");
+    }
+
+    #[test]
+    fn greedy_spsa_never_increases_loss() {
+        let mut tcn = TcnForecaster::seeded(7);
+        let history = ramp(120);
+        let scaler = MinMaxScaler::fit(&history);
+        let batch = TcnForecaster::batch(&history, &scaler);
+        let before = TcnForecaster::loss(&tcn.params, &batch);
+        tcn.spsa_fit(&batch, SCRATCH_ITERS);
+        let after = TcnForecaster::loss(&tcn.params, &batch);
+        assert!(after <= before, "greedy SPSA regressed: {before} -> {after}");
+        assert!(after.is_finite());
+    }
+
+    #[test]
+    fn fit_then_predict_is_finite_and_nonnegative() {
+        let mut tcn = TcnForecaster::seeded(3);
+        let history = ramp(100);
+        tcn.retrain(&history, UpdatePolicy::RetrainScratch)
+            .expect("fits");
+        let p = tcn.predict(&history).expect("trained");
+        assert!(p.iter().all(|v| v.is_finite() && *v >= 0.0), "{p:?}");
+    }
+
+    #[test]
+    fn same_seed_same_fit_different_seed_different_init() {
+        let history = ramp(90);
+        let mut a = TcnForecaster::seeded(11);
+        let mut b = TcnForecaster::seeded(11);
+        a.retrain(&history, UpdatePolicy::RetrainScratch).expect("fits");
+        b.retrain(&history, UpdatePolicy::RetrainScratch).expect("fits");
+        assert_eq!(a.params, b.params, "bit-identical fit");
+        assert_eq!(a.predict(&history), b.predict(&history));
+        let c = TcnForecaster::seeded(12);
+        assert_ne!(a.params.len(), 0);
+        assert_ne!(c.params, TcnForecaster::seeded(11).params);
+    }
+
+    #[test]
+    fn fine_tune_after_scratch_keeps_scaler() {
+        let mut tcn = TcnForecaster::seeded(5);
+        let history = ramp(80);
+        tcn.retrain(&history, UpdatePolicy::RetrainScratch).expect("fits");
+        let scaler = tcn.scaler.clone();
+        tcn.retrain(&history, UpdatePolicy::FineTune).expect("tunes");
+        assert_eq!(tcn.scaler, scaler, "fine-tune keeps the trained scale");
+    }
+}

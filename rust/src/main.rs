@@ -4,11 +4,13 @@
 //! ppa-edge experiment <fig6|fig7|fig8|fig9-10|nasa|all> [--minutes N]
 //!          [--hours H] [--pretrain-hours H] [--seed S]
 //! ppa-edge run [--scaler hpa|ppa] [--model lstm|arma|naive]
+//!          [--forecaster naive|arma|holt-winters|tcn|lstm-rs|auto:K]
 //!          [--metric name:target[:src]]... [--behavior rules]
 //!          [--minutes N] [--seed S] [--shards S] [--chaos preset]
 //! ppa-edge sweep [--minutes N] [--seeds K] [--threads T]
 //!          [--topology paper|city-N[xW][:classes]] [--scenarios a,b,..]
 //!          [--scalers hpa,ppa-arma,..] [--core calendar|heap]
+//!          [--forecaster naive|arma|holt-winters|tcn|lstm-rs|auto:K]
 //!          [--metric name:target[:src]]... [--behavior rules]
 //!          [--shards S] [--chaos preset] [--node-classes list]
 //!          [--out FILE]
@@ -32,6 +34,7 @@ use ppa_edge::experiments::{
     nasa_eval, run_sweep, AutoscalerKind, FigParams, ModelKind, NasaParams, SimWorld,
     SweepConfig,
 };
+use ppa_edge::forecast::ForecasterKind;
 use ppa_edge::report;
 use ppa_edge::sim::MIN;
 use ppa_edge::stats::summarize;
@@ -103,12 +106,14 @@ USAGE:
   ppa-edge experiment <fig6|fig7|fig8|fig9-10|nasa|all>
            [--minutes N] [--hours H] [--pretrain-hours H] [--seed S]
   ppa-edge run [--scaler hpa|ppa] [--model lstm|arma|naive]
+           [--forecaster naive|arma|holt-winters|tcn|lstm-rs|auto:K]
            [--metric name:target[:current|:forecast]]...
            [--behavior rules] [--minutes N] [--seed S] [--shards S]
            [--chaos none|node-outage|flaky-pods|slow-network|full-storm]
   ppa-edge sweep [--minutes N] [--seeds K] [--threads T]
            [--topology paper|city-N[xW][:classes]] [--scenarios a,b,..]
            [--scalers hpa,ppa-arma,ppa-naive] [--core calendar|heap]
+           [--forecaster naive|arma|holt-winters|tcn|lstm-rs|auto:K]
            [--metric name:target[:current|:forecast]]...
            [--behavior rules] [--shards S] [--out FILE]
            [--chaos preset] [--node-classes small,medium,large]
@@ -153,6 +158,24 @@ SWEEP (scenario matrix):
   S >= 1 (0, the default, keeps the single-queue reference engine).
   City-scale example:
     ppa-edge sweep --topology city-50 --scalers hpa,ppa-arma --seeds 2 --shards 4
+
+FORECASTER ZOO (pure-Rust model axis):
+  --forecaster swaps the PPA's prediction model for a zoo member:
+  naive | arma | holt-winters (additive-seasonal smoothing) | tcn
+  (dilated causal conv, SPSA-fitted) | lstm-rs (pure-Rust LSTM
+  inference, no PJRT) | auto:K (online champion–challenger selection
+  over the first K of holt-winters, arma, naive, tcn, lstm-rs). Every
+  kind is Send, so the whole axis works under --shards and across the
+  sweep grid. auto:K shadow-scores every challenger each control tick
+  (squared CPU forecast error, streamed), promotes a challenger only
+  when it beats the champion by a 10% margin over a 30-tick window
+  (hysteresis — no flapping), and reports per-service champions plus
+  pooled per-model MSEs in the sweep JSON and report table. Mutually
+  exclusive with --model (the paper's axis; the PJRT lstm model stays
+  monolith-only — use --forecaster lstm-rs under --shards). Selection
+  is deterministic: same cell seed, same champions, any shard count.
+  Champion-selection sweep example:
+    ppa-edge sweep --topology city-8 --forecaster auto:3 --shards 4
 
 CHAOS (deterministic fault injection):
   --chaos picks a fault-plan preset: none (default), node-outage
@@ -345,7 +368,13 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             picked
         }
     };
+    // `--forecaster` swaps every PPA cell's model for a zoo member
+    // (both PPA kinds honour it; the HPA ignores it). With the flag set
+    // and no explicit `--scalers`, the grid drops to hpa + ppa-arma —
+    // the two PPA kinds would otherwise run identical cells.
+    let forecaster = args.get("forecaster").map(ForecasterKind::parse).transpose()?;
     let scalers = match args.get("scalers") {
+        None if forecaster.is_some() => vec![AutoscalerKind::Hpa, AutoscalerKind::PpaArma],
         None => vec![
             AutoscalerKind::Hpa,
             AutoscalerKind::PpaArma,
@@ -356,19 +385,20 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             .map(|s| AutoscalerKind::parse(s.trim()))
             .collect::<anyhow::Result<Vec<_>>>()?,
     };
-    // `--metric`/`--behavior` build a uniform fleet policy for every
-    // service of every cell (heterogeneous registries are API-level:
-    // see `ScalerRegistry::with_policy`). Unset `--behavior` fields
-    // default to the stock K8s values (5-min down window) so an up-rule-only flag
-    // cannot silently weaken the HPA baseline's stabilization; without
-    // the flag each scaler kind keeps its own default (HPA 5 min,
-    // PPA 2 min).
+    // `--metric`/`--behavior`/`--forecaster` build a uniform fleet
+    // policy for every service of every cell (heterogeneous registries
+    // are API-level: see `ScalerRegistry::with_policy`). Unset
+    // `--behavior` fields default to the stock K8s values (5-min down
+    // window) so an up-rule-only flag cannot silently weaken the HPA
+    // baseline's stabilization; without the flag each scaler kind keeps
+    // its own default (HPA 5 min, PPA 2 min).
     let specs = metric_flags(args, MetricSource::Forecast)?;
     let behavior = behavior_flag(args, 5 * ppa_edge::sim::MIN)?;
-    let fleet = if specs.is_some() || behavior.is_some() {
+    let fleet = if specs.is_some() || behavior.is_some() || forecaster.is_some() {
         Some(ScalerRegistry::uniform(ScalerPolicy {
             specs: specs.unwrap_or_else(|| ScalerPolicy::default().specs),
             behavior,
+            forecaster,
         }))
     } else {
         None
@@ -411,10 +441,24 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     // Default to ARMA: it works in every build. LSTM additionally needs
     // the `pjrt` cargo feature and `make artifacts`.
     let model = ModelKind::parse(args.get("model").unwrap_or("arma"))?;
+    // `--forecaster` (the pure-Rust zoo axis) replaces `--model` (the
+    // paper's axis) wholesale — the two would pick the PPA model twice.
+    let forecaster = args.get("forecaster").map(ForecasterKind::parse).transpose()?;
+    if forecaster.is_some() {
+        if args.get("model").is_some() {
+            bail!(
+                "--forecaster and --model are mutually exclusive: --model picks the \
+                 paper's lstm|arma|naive stack, --forecaster a pure-Rust zoo member"
+            );
+        }
+        if scaler != "ppa" {
+            bail!("--forecaster needs --scaler ppa (the HPA runs no prediction model)");
+        }
+    }
     let shards = args.get_u64("shards", 0)? as usize;
     let chaos = ppa_edge::config::chaos_preset(args.get("chaos").unwrap_or("none"))?;
     if shards >= 1 {
-        return cmd_run_sharded(args, minutes, seed, scaler, model, shards, &chaos);
+        return cmd_run_sharded(args, minutes, seed, scaler, model, forecaster, shards, &chaos);
     }
 
     let cfg = ppa_edge::config::paper_cluster();
@@ -436,6 +480,24 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
                     cfg.behavior = behavior;
                 }
                 world.add_scaler(Box::new(Hpa::new(cfg)), svc);
+            }
+        }
+        "ppa" if forecaster.is_some() => {
+            // Zoo models train online from the live history file (the
+            // update loop fits them mid-run) — no pretraining pass.
+            let kind = forecaster.unwrap_or(ForecasterKind::Naive);
+            let specs = metric_flags(args, MetricSource::Forecast)?;
+            let behavior = behavior_flag(args, 2 * ppa_edge::sim::MIN)?;
+            for svc in 0..n_services {
+                let mut cfg = ppa_edge::autoscaler::PpaConfig::default();
+                if let Some(specs) = &specs {
+                    cfg.specs = specs.clone();
+                }
+                if let Some(behavior) = behavior {
+                    cfg.behavior = behavior;
+                }
+                let ppa = ppa_edge::autoscaler::Ppa::new(cfg, kind.build(seed));
+                world.add_scaler(Box::new(ppa), svc);
             }
         }
         "ppa" => {
@@ -475,9 +537,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     }
 
     world.install_chaos(&chaos, seed, minutes * MIN);
+    let model_label = match forecaster {
+        Some(kind) => kind.name(),
+        None => model.name().to_string(),
+    };
     println!(
-        "running {minutes} simulated minutes with {scaler} ({}), chaos: {}...",
-        model.name(),
+        "running {minutes} simulated minutes with {scaler} ({model_label}), chaos: {}...",
         chaos.label()
     );
     let wall = ppa_edge::util::wallclock();
@@ -511,10 +576,34 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         stats.eigen.quantile(95.0)
     );
     println!("  RIR: {:.3} ± {:.3}", rir.mean, rir.std);
+    for (svc, binding) in world.scalers.iter().enumerate() {
+        let ppa = binding.autoscaler.as_any().downcast_ref::<ppa_edge::autoscaler::Ppa>();
+        if let Some(selection) = ppa.and_then(|p| p.selection()) {
+            print_selection(svc, &selection);
+        }
+    }
     if !chaos.is_empty() {
         print_chaos_summary(&world.chaos_summary(minutes * MIN));
     }
     Ok(())
+}
+
+/// One-line champion–challenger tally for one selecting service.
+fn print_selection(svc: usize, s: &ppa_edge::forecast::SelectionSummary) {
+    let scores: Vec<String> = s
+        .models
+        .iter()
+        .map(|m| match m.mse {
+            Some(mse) => format!("{} {mse:.3}", m.name),
+            None => format!("{} -", m.name),
+        })
+        .collect();
+    println!(
+        "  service {svc} champion: {} ({} promotion(s); shadow MSE: {})",
+        s.champion,
+        s.promotions.len(),
+        scores.join(", ")
+    );
 }
 
 /// One-line fault tally for faulted runs (both engines).
@@ -535,12 +624,14 @@ fn print_chaos_summary(c: &ppa_edge::cluster::ChaosCounters) {
 /// (one event core per zone, conservative lockstep windows). Results
 /// are bit-identical for any `S >= 1` but intentionally *not* to the
 /// monolith engine (different RNG stream layout — see `sim::shard`).
+#[allow(clippy::too_many_arguments)]
 fn cmd_run_sharded(
     args: &Args,
     minutes: u64,
     seed: u64,
     scaler: &str,
     model: ModelKind,
+    forecaster: Option<ForecasterKind>,
     shards: usize,
     chaos: &ppa_edge::cluster::FaultPlan,
 ) -> anyhow::Result<()> {
@@ -564,9 +655,13 @@ fn cmd_run_sharded(
         chaos: *chaos,
     };
 
+    let model_label = match forecaster {
+        Some(kind) => kind.name(),
+        None => model.name().to_string(),
+    };
     println!(
-        "running {minutes} simulated minutes with {scaler} ({}) on {shards} shard(s), chaos: {}...",
-        model.name(),
+        "running {minutes} simulated minutes with {scaler} ({model_label}) on {shards} \
+         shard(s), chaos: {}...",
         chaos.label()
     );
     let wall = ppa_edge::util::wallclock();
@@ -586,11 +681,32 @@ fn cmd_run_sharded(
             };
             run_sharded(&cfg, generators, &factory, &spec)?
         }
+        "ppa" if forecaster.is_some() => {
+            // The whole zoo axis is `Send`, so learned models (tcn,
+            // lstm-rs, auto:K) build directly on the worker threads —
+            // `ForecasterKind::build` is pure, so every shard layout
+            // gets a bit-identical model.
+            let kind = forecaster.unwrap_or(ForecasterKind::Naive);
+            let specs = metric_flags(args, MetricSource::Forecast)?;
+            let behavior = behavior_flag(args, 2 * ppa_edge::sim::MIN)?;
+            let factory = |_svc: usize| -> Box<dyn Autoscaler> {
+                let mut cfg = ppa_edge::autoscaler::PpaConfig::default();
+                if let Some(specs) = &specs {
+                    cfg.specs = specs.clone();
+                }
+                if let Some(behavior) = behavior {
+                    cfg.behavior = behavior;
+                }
+                Box::new(ppa_edge::autoscaler::Ppa::new(cfg, kind.build(seed)))
+            };
+            run_sharded(&cfg, generators, &factory, &spec)?
+        }
         "ppa" => {
             if model == ModelKind::Lstm {
                 bail!(
                     "--shards does not support --model lstm: the PJRT runtime is \
-                     shared single-threaded state; use --model arma|naive or drop --shards"
+                     shared single-threaded state; use --forecaster lstm-rs (the \
+                     pure-Rust LSTM), --model arma|naive, or drop --shards"
                 );
             }
             let specs = metric_flags(args, MetricSource::Forecast)?;
@@ -654,6 +770,11 @@ fn cmd_run_sharded(
         eigen_stats.quantile(95.0)
     );
     println!("  RIR: {:.3} ± {:.3}", rir.mean, rir.std);
+    for outcome in &run.outcomes {
+        if let Some(selection) = &outcome.selection {
+            print_selection(outcome.world, selection);
+        }
+    }
     if !chaos.is_empty() {
         print_chaos_summary(&run.chaos_counters());
     }

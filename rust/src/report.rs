@@ -177,14 +177,19 @@ pub fn print_nasa_eval(eval: &NasaEval) {
     );
 }
 
-/// Per-cell sweep table headers. `chaotic` appends the fault columns,
-/// printed when any cell ran under a non-empty fault plan. Pinned by
-/// `sweep_headers_are_pinned` — downstream tooling parses these.
-pub fn sweep_headers(chaotic: bool) -> Vec<&'static str> {
+/// Per-cell sweep table headers. `selective` appends the champion
+/// column (printed when any cell ran champion–challenger selection);
+/// `chaotic` appends the fault columns, printed when any cell ran under
+/// a non-empty fault plan. Pinned by `sweep_headers_are_pinned` —
+/// downstream tooling parses these.
+pub fn sweep_headers(selective: bool, chaotic: bool) -> Vec<&'static str> {
     let mut headers = vec![
         "scenario", "scaler", "seed", "sort (s)", "p95", "RIR", "RIR p95", "repl μ/max",
         "pred MSE", "served",
     ];
+    if selective {
+        headers.push("champion");
+    }
     if chaotic {
         headers.extend(["faults", "crash/rejoin", "resched", "down (s)", "cold p95"]);
     }
@@ -192,7 +197,7 @@ pub fn sweep_headers(chaotic: bool) -> Vec<&'static str> {
 }
 
 /// One per-cell sweep row, matching [`sweep_headers`] column for column.
-fn sweep_row(m: &crate::experiments::CellMetrics, chaotic: bool) -> Vec<String> {
+fn sweep_row(m: &crate::experiments::CellMetrics, selective: bool, chaotic: bool) -> Vec<String> {
     let fmt_opt = |v: Option<f64>| v.map_or_else(|| "-".to_string(), |x| format!("{x:.1}"));
     let mut row = vec![
         m.scenario.clone(),
@@ -206,6 +211,18 @@ fn sweep_row(m: &crate::experiments::CellMetrics, chaotic: bool) -> Vec<String> 
         fmt_opt(m.prediction_mse),
         m.completed.to_string(),
     ];
+    if selective {
+        // Distinct champions across the cell's services, `+`-joined
+        // ("-" for cells that ran no selecting forecaster).
+        let mut champs = m.champions.clone();
+        champs.sort();
+        champs.dedup();
+        row.push(if champs.is_empty() {
+            "-".to_string()
+        } else {
+            champs.join("+")
+        });
+    }
     if chaotic {
         row.push(m.chaos.clone());
         row.push(format!("{}/{}", m.crashes, m.rejoins));
@@ -226,14 +243,15 @@ fn sweep_row(m: &crate::experiments::CellMetrics, chaotic: bool) -> Vec<String> 
 /// under a non-empty fault plan.
 pub fn print_sweep(result: &SweepResult) {
     let chaotic = result.cells.iter().any(|c| c.metrics.chaos != "none");
+    let selective = result.cells.iter().any(|c| !c.metrics.champions.is_empty());
     let rows: Vec<Vec<String>> = result
         .cells
         .iter()
-        .map(|c| sweep_row(&c.metrics, chaotic))
+        .map(|c| sweep_row(&c.metrics, selective, chaotic))
         .collect();
     print_table(
         "Scenario sweep — per-cell results",
-        &sweep_headers(chaotic),
+        &sweep_headers(selective, chaotic),
         &rows,
     );
 
@@ -318,6 +336,8 @@ mod tests {
             replicas_mean: 2.0,
             replicas_max: 4,
             prediction_mse: None,
+            champions: vec![],
+            model_mses: vec![],
             chaos: chaos.into(),
             crashes: if chaos == "none" { 0 } else { 3 },
             rejoins: if chaos == "none" { 0 } else { 2 },
@@ -353,30 +373,44 @@ mod tests {
         // Downstream tooling parses these columns — changes here must be
         // deliberate (update this pin and docs/CLI.md together).
         assert_eq!(
-            sweep_headers(false),
+            sweep_headers(false, false),
             vec![
                 "scenario", "scaler", "seed", "sort (s)", "p95", "RIR", "RIR p95",
                 "repl μ/max", "pred MSE", "served",
             ]
         );
         assert_eq!(
-            sweep_headers(true),
+            sweep_headers(true, true),
             vec![
                 "scenario", "scaler", "seed", "sort (s)", "p95", "RIR", "RIR p95",
-                "repl μ/max", "pred MSE", "served", "faults", "crash/rejoin", "resched",
-                "down (s)", "cold p95",
+                "repl μ/max", "pred MSE", "served", "champion", "faults", "crash/rejoin",
+                "resched", "down (s)", "cold p95",
             ]
         );
-        // Rows line up with headers in both modes; fault cells render
+        // Rows line up with headers in every mode; fault cells render
         // counters and the no-pod-chaos NaN as "-".
-        let plain = sweep_row(&cell_metrics("none"), false);
-        assert_eq!(plain.len(), sweep_headers(false).len());
-        let faulted = sweep_row(&cell_metrics("crash"), true);
-        assert_eq!(faulted.len(), sweep_headers(true).len());
-        assert_eq!(faulted[10], "crash");
-        assert_eq!(faulted[11], "3/2");
-        assert_eq!(faulted[12], "5");
-        assert_eq!(faulted[13], "90.5");
-        assert_eq!(faulted[14], "-");
+        let plain = sweep_row(&cell_metrics("none"), false, false);
+        assert_eq!(plain.len(), sweep_headers(false, false).len());
+        let faulted = sweep_row(&cell_metrics("crash"), true, true);
+        assert_eq!(faulted.len(), sweep_headers(true, true).len());
+        assert_eq!(faulted[10], "-", "no selecting forecaster in this cell");
+        assert_eq!(faulted[11], "crash");
+        assert_eq!(faulted[12], "3/2");
+        assert_eq!(faulted[13], "5");
+        assert_eq!(faulted[14], "90.5");
+        assert_eq!(faulted[15], "-");
+    }
+
+    #[test]
+    fn champion_column_dedups_and_joins() {
+        let mut m = cell_metrics("none");
+        m.champions = vec![
+            "holt-winters(30)".into(),
+            "arma(1,1)".into(),
+            "holt-winters(30)".into(),
+        ];
+        let row = sweep_row(&m, true, false);
+        assert_eq!(row.len(), sweep_headers(true, false).len());
+        assert_eq!(row[10], "arma(1,1)+holt-winters(30)");
     }
 }

@@ -59,6 +59,7 @@ use crate::cluster::{
 };
 use crate::config::{ClusterConfig, NodeConfig};
 use crate::experiments::{DecisionRecord, RirSample};
+use crate::forecast::SelectionSummary;
 use crate::metrics::{MetricsPipeline, DEFAULT_SCRAPE_INTERVAL};
 use crate::stats::StreamingStats;
 use crate::util::rng::Pcg64;
@@ -453,12 +454,11 @@ impl ZoneWorld {
     /// thread. `end` finalizes downtime for nodes still down at the end
     /// of the run.
     fn finish(mut self, end: Time) -> WorldOutcome {
-        let prediction_mse = self
-            .scaler
-            .as_any()
-            .downcast_ref::<Ppa>()
+        let ppa = self.scaler.as_any().downcast_ref::<Ppa>();
+        let prediction_mse = ppa
             .filter(|p| p.prediction_count() > 0)
             .map(|p| p.prediction_mse());
+        let selection = ppa.and_then(|p| p.selection());
         let mut chaos = self.chaos.clone();
         for t in self.crashed_at.iter().flatten() {
             chaos.downtime += end.saturating_sub(*t);
@@ -478,6 +478,7 @@ impl ZoneWorld {
             replica_log: std::mem::take(&mut self.replica_log),
             decision_log: std::mem::take(&mut self.decision_log),
             prediction_mse,
+            selection,
             chaos,
         }
     }
@@ -497,6 +498,9 @@ pub struct WorldOutcome {
     pub replica_log: Vec<(Time, ServiceId, usize)>,
     pub decision_log: Vec<DecisionRecord>,
     pub prediction_mse: Option<f64>,
+    /// Champion–challenger state of this world's scaler, when it ran a
+    /// selecting forecaster (`--forecaster auto:K`).
+    pub selection: Option<SelectionSummary>,
     /// This world's fault counters (all-zero on fault-free runs).
     pub chaos: ChaosCounters,
 }
@@ -555,6 +559,13 @@ impl ShardedRun {
     /// Prediction MSEs of the PPA worlds that made predictions.
     pub fn prediction_mses(&self) -> Vec<f64> {
         self.outcomes.iter().filter_map(|o| o.prediction_mse).collect()
+    }
+
+    /// Champion–challenger summaries of the worlds whose scaler ran a
+    /// selecting forecaster, in world (== service) order — the same
+    /// order the monolith visits its scaler bindings.
+    pub fn selections(&self) -> Vec<SelectionSummary> {
+        self.outcomes.iter().filter_map(|o| o.selection.clone()).collect()
     }
 
     /// Every world's fault counters merged, in world order (all-zero on

@@ -1,0 +1,278 @@
+//! Forecaster-zoo golden equivalence and selection battery.
+//!
+//! The champion–challenger selector (`forecast::selector`) promises two
+//! properties worth pinning at the integration level:
+//!
+//! * **Transparency** — an `auto:1` wrapper is *exactly* the bare model:
+//!   same decision log, same event counts, same response-stream
+//!   fingerprints, on the paper topology and on city-8. The wrapper's
+//!   shadow-scoring must be pure observation.
+//! * **Determinism** — selection state (champions, promotion logs,
+//!   pooled shadow MSEs) is bit-identical across repeats and across
+//!   `--shards 1|2|4`, because it is a pure function of the observed
+//!   metric stream and the members' seeded state.
+//!
+//! Plus the accuracy battery: over multiple seeds, the selector's
+//! realized forecast error never degrades to worse than the worst
+//! standalone zoo model — the selector can only mix its members, and the
+//! review loop steers the mix toward the better ones.
+
+use ppa_edge::app::TaskCosts;
+use ppa_edge::autoscaler::{Autoscaler, Ppa, PpaConfig, ScalerPolicy, ScalerRegistry};
+use ppa_edge::cluster::FaultPlan;
+use ppa_edge::config::{city_scenario_presets, paper_cluster, Topology};
+use ppa_edge::experiments::{run_cell, AutoscalerKind, CellResult, SimWorld};
+use ppa_edge::forecast::{
+    ChampionChallenger, Forecaster, ForecasterKind, NaiveForecaster, SelectorConfig, UpdatePolicy,
+};
+use ppa_edge::metrics::{METRIC_DIM, M_CPU};
+use ppa_edge::sim::{CoreKind, MIN};
+use ppa_edge::util::rng::Pcg64;
+use ppa_edge::workload::{Generator, RandomAccessGen};
+
+// ---------------------------------------------------------------------------
+// Transparency: auto:1 == the bare model
+// ---------------------------------------------------------------------------
+
+/// The paper scenario: Table-2 cluster, Random Access on both zones.
+fn paper_world(seed: u64) -> SimWorld {
+    let cfg = paper_cluster();
+    let mut w = SimWorld::build(&cfg, TaskCosts::default(), seed);
+    w.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
+    w.add_generator(Generator::RandomAccess(RandomAccessGen::new(2)));
+    w
+}
+
+/// A sweep-style PPA (10-minute online update loop) over `model`.
+fn ppa_over(model: Box<dyn Forecaster>) -> Box<dyn Autoscaler> {
+    Box::new(Ppa::new(
+        PpaConfig {
+            update_interval: 10 * MIN,
+            ..PpaConfig::default()
+        },
+        model,
+    ))
+}
+
+#[test]
+fn auto1_reproduces_bare_ppa_decisions_on_paper() {
+    // An `auto:1` selector wrapping the naive model vs the stock naive
+    // PPA, decision-for-decision over 35 minutes (two update-loop
+    // firings): the wrapper must be invisible.
+    let seed = 2021;
+    let mut wrapped_world = paper_world(seed);
+    let mut bare_world = paper_world(seed);
+    wrapped_world.record_decisions();
+    bare_world.record_decisions();
+    let n_services = wrapped_world.app.services.len();
+    assert_eq!(n_services, 3, "paper topology: z1 + z2 + cloud");
+    for svc in 0..n_services {
+        wrapped_world.add_scaler(
+            ppa_over(Box::new(ChampionChallenger::new(
+                vec![Box::new(NaiveForecaster)],
+                SelectorConfig::default(),
+            ))),
+            svc,
+        );
+        bare_world.add_scaler(ppa_over(Box::new(NaiveForecaster)), svc);
+    }
+    wrapped_world.run_until(35 * MIN);
+    bare_world.run_until(35 * MIN);
+
+    for svc in 0..n_services {
+        let wrapped = wrapped_world.decisions_for(svc);
+        assert!(!wrapped.is_empty(), "service {svc} made no decisions");
+        assert_eq!(
+            wrapped,
+            bare_world.decisions_for(svc),
+            "service {svc}: auto:1 must reproduce the bare PPA decision \
+             sequence bit-identically"
+        );
+    }
+    assert_eq!(wrapped_world.events_processed, bare_world.events_processed);
+    assert_eq!(wrapped_world.app.completed(), bare_world.app.completed());
+    assert_eq!(
+        wrapped_world.app.stats.fingerprint(),
+        bare_world.app.stats.fingerprint(),
+        "bit-identical response streams"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// City-8 sweep cells: transparency, repeats, shard invariance
+// ---------------------------------------------------------------------------
+
+/// One city-8 sweep cell with every service's PPA on `kind`.
+fn city8_cell(kind: ForecasterKind, shards: usize, seed: u64) -> CellResult {
+    let topo = Topology::EdgeCity {
+        zones: 8,
+        workers_per_zone: 2,
+        mix: Default::default(),
+    };
+    let cluster = topo.cluster();
+    let presets = city_scenario_presets(8);
+    let (name, scenario) = &presets[0];
+    let fleet = ScalerRegistry::uniform(ScalerPolicy::default().with_forecaster(kind));
+    run_cell(
+        &topo.label(),
+        &cluster,
+        name,
+        scenario,
+        AutoscalerKind::PpaArma,
+        Some(&fleet),
+        seed,
+        5,
+        CoreKind::Calendar,
+        shards,
+        &FaultPlan::none(),
+    )
+}
+
+/// A cell fingerprint with the selection columns blanked — what must
+/// match between an `auto:1` cell and its unwrapped counterpart (the
+/// wrapper reports selection state; the bare model reports none).
+fn fingerprint_sans_selection(cell: &CellResult) -> String {
+    let mut m = cell.metrics.clone();
+    m.champions = Vec::new();
+    m.model_mses = Vec::new();
+    m.fingerprint()
+}
+
+#[test]
+fn auto1_cell_matches_bare_holt_winters_cell_on_city8() {
+    // `auto:1` wraps the roster head (holt-winters); apart from the
+    // selection columns the whole CellMetrics must be bit-identical to
+    // a cell running holt-winters unwrapped.
+    let auto = city8_cell(ForecasterKind::Auto(1), 0, 1000);
+    let bare = city8_cell(ForecasterKind::HoltWinters, 0, 1000);
+    assert!(auto.metrics.events > 100, "cell must be busy");
+    assert_eq!(
+        fingerprint_sans_selection(&auto),
+        fingerprint_sans_selection(&bare),
+        "auto:1 changed the world it was only supposed to observe"
+    );
+    // 8 edge zones + the cloud pool, all selecting; a K=1 roster has
+    // exactly one (champion) model per service.
+    assert_eq!(auto.metrics.champions, vec!["holt-winters(30)".to_string(); 9]);
+    assert!(bare.metrics.champions.is_empty(), "bare models report no selection");
+}
+
+#[test]
+fn auto3_selection_is_reproducible_and_shard_invariant() {
+    // The acceptance property: an auto:3 city-8 cell is bit-identical —
+    // champions, promotion-bearing pooled MSEs and all (both ride in the
+    // CellMetrics fingerprint) — across repeats and shards 1|2|4.
+    let reference = city8_cell(ForecasterKind::Auto(3), 1, 1000);
+    assert!(reference.metrics.events > 100);
+    assert_eq!(
+        reference.metrics.champions.len(),
+        9,
+        "every city-8 service (8 zones + cloud) reports a champion"
+    );
+    assert!(
+        !reference.metrics.model_mses.is_empty(),
+        "challengers were shadow-scored"
+    );
+    let repeat = city8_cell(ForecasterKind::Auto(3), 1, 1000);
+    assert_eq!(
+        reference.metrics.fingerprint(),
+        repeat.metrics.fingerprint(),
+        "same seed must reproduce the same selection state"
+    );
+    for shards in [2, 4] {
+        let run = city8_cell(ForecasterKind::Auto(3), shards, 1000);
+        assert_eq!(
+            reference.metrics.fingerprint(),
+            run.metrics.fingerprint(),
+            "selection state diverged at shards={shards}"
+        );
+    }
+    // A different seed must be able to tell a different story — the
+    // invariance is a property of the engine, not a constant output.
+    let other = city8_cell(ForecasterKind::Auto(3), 1, 1001);
+    assert_ne!(reference.metrics.fingerprint(), other.metrics.fingerprint());
+}
+
+// ---------------------------------------------------------------------------
+// Accuracy battery: the selector never loses to the worst member
+// ---------------------------------------------------------------------------
+
+/// A noisy seasonal CPU series (period 30 — the Holt-Winters default
+/// season) on every protocol component.
+fn seasonal_series(seed: u64, len: usize) -> Vec<[f64; METRIC_DIM]> {
+    let mut rng = Pcg64::new(seed, 5);
+    (0..len)
+        .map(|t| {
+            let phase = (t % 30) as f64 / 30.0 * std::f64::consts::TAU;
+            let v = (60.0 + 30.0 * phase.sin() + rng.normal_ms(0.0, 2.0)).max(0.0);
+            [v; METRIC_DIM]
+        })
+        .collect()
+}
+
+/// Walk-forward one-step MSE on `M_CPU` under the PPA's per-tick
+/// protocol (observe the realized row, then predict the next) with a
+/// periodic fine-tune, scored after `burn_in` rows.
+fn walk_forward_mse(
+    model: &mut dyn Forecaster,
+    series: &[[f64; METRIC_DIM]],
+    burn_in: usize,
+) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0u32;
+    for t in 0..series.len() - 1 {
+        model.observe(&series[t]);
+        if (t + 1) % 40 == 0 {
+            // The update loop: models that need a fit (ARMA) get one;
+            // online models treat fine-tune as a no-op.
+            let _ = model.retrain(&series[..=t], UpdatePolicy::FineTune);
+        }
+        if let Some(pred) = model.predict(&series[..=t]) {
+            if t + 1 >= burn_in {
+                let err = pred[M_CPU] - series[t + 1][M_CPU];
+                sum += err * err;
+                n += 1;
+            }
+        }
+    }
+    assert!(n > 0, "model never produced a scoreable forecast");
+    sum / n as f64
+}
+
+#[test]
+fn selector_is_never_worse_than_the_worst_standalone_model() {
+    // Multi-seed battery over the auto:3 roster (holt-winters, arma,
+    // naive): the selector's realized error must stay at or below the
+    // worst standalone member's — it can only ever serve predictions
+    // from its members, and reviews steer toward the better ones. (The
+    // 5% slack absorbs the pre-review ticks of a bad initial champion.)
+    for seed in [21, 22, 23] {
+        let series = seasonal_series(seed, 400);
+        let burn_in = 120;
+        let standalone: Vec<f64> = [
+            ForecasterKind::HoltWinters,
+            ForecasterKind::Arma,
+            ForecasterKind::Naive,
+        ]
+        .iter()
+        .map(|kind| walk_forward_mse(kind.build(seed).as_mut(), &series, burn_in))
+        .collect();
+        let worst = standalone.iter().cloned().fold(f64::MIN, f64::max);
+        let best = standalone.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(best < worst, "roster must be discriminative (seed {seed})");
+        let mut selector = ForecasterKind::Auto(3).build(seed);
+        let selector_mse = walk_forward_mse(selector.as_mut(), &series, burn_in);
+        assert!(
+            selector_mse <= worst * 1.05,
+            "seed {seed}: selector MSE {selector_mse:.2} worse than the worst \
+             standalone {worst:.2} (standalone: {standalone:?})"
+        );
+        let summary = selector.selection().expect("selector reports state");
+        assert_eq!(summary.models.len(), 3);
+        assert!(
+            summary.models.iter().all(|m| m.mse.is_some()),
+            "every member was shadow-scored (seed {seed}): {:?}",
+            summary.models
+        );
+    }
+}

@@ -444,6 +444,70 @@ pub fn drain(slot: &Mutex<Vec<u64>>) -> Vec<u64> {
 "##,
         expect: &["P1"],
     },
+    // ---- Forecaster zoo (the four zoo files are inside SIM_SCOPE via
+    //      rust/src/forecast/ and individually listed in HOT_SCOPE:
+    //      they run inside every PPA tick) ----
+    Fixture {
+        // Shadow-scoring must clock itself off the observed tick
+        // stream, never the wall — a selector that timestamps reviews
+        // with `Instant` replays differently on every machine.
+        name: "d1_selector_wall_clock_fires",
+        path: "rust/src/forecast/selector.rs",
+        src: r##"
+pub fn review_due(last_review: std::time::Instant) -> bool {
+    last_review.elapsed().as_secs() >= 60
+}
+"##,
+        expect: &["D1"],
+    },
+    Fixture {
+        // The real shape: reviews keyed off the deterministic tick
+        // counter, per-model scores in fixed roster order.
+        name: "d1_selector_tick_review_clean",
+        path: "rust/src/forecast/selector.rs",
+        src: r##"
+pub fn best_challenger(scores: &[(usize, f64)], incumbent: f64, margin: f64) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for &(idx, mse) in scores {
+        if mse < incumbent * (1.0 - margin) && best.is_none_or(|(_, b)| mse < b) {
+            best = Some((idx, mse));
+        }
+    }
+    best.map(|(idx, _)| idx)
+}
+"##,
+        expect: &[],
+    },
+    Fixture {
+        // Zoo models predict inside every PPA tick; a panic in the
+        // forward pass tears down the run like any other hot-path
+        // unwrap. `None` (fall back to the current metric) is the
+        // contract for "can't predict".
+        name: "p1_tcn_unwrap_fires",
+        path: "rust/src/forecast/tcn.rs",
+        src: r##"
+pub fn forward(window: &[f64], weights: &[f64]) -> f64 {
+    let last = window.last().unwrap();
+    last + weights.first().copied().unwrap_or(0.0)
+}
+"##,
+        expect: &["P1"],
+    },
+    Fixture {
+        // The real shape: insufficient history is a `None`, and the
+        // seasonal index derives from the deterministic row count.
+        name: "p1_holt_winters_handled_clean",
+        path: "rust/src/forecast/holt_winters.rs",
+        src: r##"
+pub fn seasonal_index(history_len: usize, season: usize) -> Option<usize> {
+    if season == 0 || history_len < 2 * season {
+        return None;
+    }
+    Some(history_len % season)
+}
+"##,
+        expect: &[],
+    },
 ];
 
 /// Run the whole corpus; `Err` lists every mismatching fixture.

@@ -62,7 +62,7 @@ pub const RULES: &[Rule] = &[
     Rule {
         id: "P1",
         title: "no unwrap/expect/panic on the arrival→complete hot path",
-        scope: "rust/src/{sim,app,cluster}",
+        scope: "rust/src/{sim,app,cluster} + the per-tick forecaster zoo",
         rationale: "a panic mid-run tears down city-scale simulations; hot-path code handles \
                     its None/Err arms (test modules and debug_assert! arguments exempt)",
     },
@@ -97,8 +97,21 @@ const SIM_SCOPE: &[&str] = &[
 /// covers the sharded engine (`sim/shard.rs`) too: its cross-shard
 /// channels (`Mutex`, `Barrier`, scoped threads) are not banned tokens,
 /// but its lock handling must stay panic-free — poisoned locks are
-/// recovered with `into_inner`, never `.lock().unwrap()`.
-const HOT_SCOPE: &[&str] = &["rust/src/sim/", "rust/src/app/", "rust/src/cluster/"];
+/// recovered with `into_inner`, never `.lock().unwrap()`. The four
+/// zoo files run inside every PPA tick (`evaluate` → predict/observe,
+/// and the selector's review loop), so they are hot path too; the
+/// PJRT-backed `forecast/lstm.rs` is not listed — it never enters the
+/// simulation loop without an explicit `--model lstm` opt-in and its
+/// FFI layer has its own error contract.
+const HOT_SCOPE: &[&str] = &[
+    "rust/src/sim/",
+    "rust/src/app/",
+    "rust/src/cluster/",
+    "rust/src/forecast/selector.rs",
+    "rust/src/forecast/holt_winters.rs",
+    "rust/src/forecast/tcn.rs",
+    "rust/src/forecast/lstm_cell.rs",
+];
 
 /// Nondeterministic randomness identifiers (anything outside `util::rng`).
 const RNG_IDENTS: &[&str] = &[
