@@ -12,13 +12,15 @@
 //! (or set `BENCH_QUICK=1`) for the CI smoke mode with slashed
 //! iteration counts and shorter simulated horizons.
 //!
-//! Emits a machine-readable `BENCH_hotpath.json` (schema 6: events/sec
+//! Emits a machine-readable `BENCH_hotpath.json` (schema 7: events/sec
 //! per core, ns/scrape, ns/dispatch and ns/`max_replicas` per query
 //! mode, cells/sec, city-50 burst events/sec per mode, sharded city-50
 //! events/sec per shard count with `shard_speedup_2`/`shard_speedup_4`,
 //! a full-storm faulted city-50 cell with its chaos-plane overhead
-//! ratio, a champion–challenger city-8 cell with its selector-overhead
-//! ratio, peak-alloc bytes, speedups, and a `quick` marker) so the perf
+//! ratio, a tight-SLA resilience-plane city-50 cell with its
+//! `sla_overhead` ratio, a champion–challenger city-8 cell with its
+//! selector-overhead ratio, peak-alloc bytes, speedups, and a `quick`
+//! marker) so the perf
 //! trajectory is tracked across PRs. Quick runs write
 //! `BENCH_hotpath.quick.json` instead, so smoke numbers never clobber
 //! the tracked artifact — and when a tracked `BENCH_hotpath.json`
@@ -31,7 +33,7 @@
 mod bench_common;
 use bench_common::{print_header, run};
 
-use ppa_edge::app::{App, TaskCosts, TaskType};
+use ppa_edge::app::{App, SlaConfig, SlaPolicy, TaskCosts, TaskType};
 use ppa_edge::autoscaler::{Autoscaler, Hpa, ScalerPolicy, ScalerRegistry};
 use ppa_edge::cluster::{
     Cluster, Deployment, FaultPlan, NodeSpec, PodPhase, PodSpec, QueryMode, Selector, Tier,
@@ -43,7 +45,7 @@ use ppa_edge::experiments::sweep::run_cell;
 use ppa_edge::experiments::{AutoscalerKind, SimWorld};
 use ppa_edge::forecast::{arma::fit_arma, Forecaster, ForecasterKind, LstmForecaster};
 use ppa_edge::metrics::{METRIC_DIM, METRIC_NAMES};
-use ppa_edge::sim::{run_sharded, CoreKind, Event, EventQueue, ShardSpec, Time, MIN, SEC};
+use ppa_edge::sim::{run_sharded, CoreKind, Event, EventQueue, ShardSpec, Time, MIN, MS, SEC};
 use ppa_edge::util::json::Json;
 use ppa_edge::util::rng::Pcg64;
 use ppa_edge::workload::{FlashCrowdConfig, Generator, RandomAccessGen, Scenario};
@@ -534,6 +536,7 @@ fn bench_sweep_cells() -> f64 {
             CoreKind::Calendar,
             0,
             &FaultPlan::none(),
+            None,
         );
     });
     let cells_per_sec = 1e6 / r.mean_us;
@@ -577,6 +580,7 @@ fn bench_selector_overhead() -> (f64, f64) {
                 CoreKind::Calendar,
                 0,
                 &FaultPlan::none(),
+                None,
             );
             events = cell.metrics.events;
         });
@@ -627,6 +631,7 @@ fn bench_city50_cell() -> (f64, f64, usize, usize, usize) {
                 core,
                 0,
                 &FaultPlan::none(),
+                None,
             );
             events = cell.metrics.events;
         });
@@ -645,6 +650,7 @@ fn bench_city50_cell() -> (f64, f64, usize, usize, usize) {
             core,
             0,
             &FaultPlan::none(),
+            None,
         );
         peaks.push(peak_bytes());
     }
@@ -871,6 +877,7 @@ fn bench_city50_sharded() -> (f64, f64, f64) {
             end: minutes * MIN,
             record_decisions: false,
             chaos: FaultPlan::none(),
+            sla: None,
         };
         let mut events = 0u64;
         let mut fp = String::new();
@@ -941,6 +948,7 @@ fn bench_city50_faulted() -> f64 {
             CoreKind::Calendar,
             0,
             &plan,
+            None,
         );
         events = cell.metrics.events;
         crashes = cell.metrics.crashes;
@@ -960,9 +968,76 @@ fn bench_city50_faulted() -> f64 {
     rate
 }
 
+/// The resilience-plane cell: the same city-50 flash-mosaic cell with a
+/// deliberately tight SLA (short deadline, shallow shed queue) so the
+/// deadline/retry/shed machinery actually fires during the flash
+/// crowds. Asserts SLA events occurred and repeats reproduce
+/// bit-identically, and returns SLA'd events/sec —
+/// `sla_overhead` in the JSON is the SLA-free/SLA'd rate ratio,
+/// tracking what the resilience plane costs when armed (the
+/// no-policy case is pinned to exactly zero by
+/// `tests/golden_sla_equivalence.rs`).
+fn bench_city50_sla() -> f64 {
+    print_header("city-50 SLA'd cell: tight deadline + shed (3 sim-minutes)");
+    let topo = Topology::EdgeCity {
+        zones: 50,
+        workers_per_zone: 2,
+        mix: Default::default(),
+    };
+    let cluster = topo.cluster();
+    let label = topo.label();
+    let presets = city_scenario_presets(50);
+    let (name, scenario) = &presets[1]; // city50-flash-mosaic
+    let sla = SlaConfig::new(SlaPolicy {
+        deadline: 250 * MS,
+        max_retries: 1,
+        backoff_base: 50 * MS,
+        shed_queue_depth: 16,
+    });
+    let minutes = sim_minutes(3);
+
+    let mut events = 0u64;
+    let mut fingerprint = String::new();
+    let mut sla_events = 0u64;
+    let r = run("run_cell city-50 tight SLA", iters(1), iters(3), || {
+        let cell = run_cell(
+            &label,
+            &cluster,
+            name,
+            scenario,
+            AutoscalerKind::Hpa,
+            None,
+            3,
+            minutes,
+            CoreKind::Calendar,
+            0,
+            &FaultPlan::none(),
+            Some(&sla),
+        );
+        events = cell.metrics.events;
+        sla_events = cell.metrics.sla_timeouts + cell.metrics.sla_shed;
+        if fingerprint.is_empty() {
+            fingerprint = cell.metrics.fingerprint();
+        } else {
+            assert_eq!(
+                fingerprint,
+                cell.metrics.fingerprint(),
+                "SLA'd city-50 cell must reproduce bit-identically"
+            );
+        }
+    });
+    assert!(
+        sla_events > 0,
+        "tight SLA fired no timeouts or sheds in the city-50 flash cell"
+    );
+    let rate = events as f64 / (r.mean_us / 1e6);
+    println!("  -> {rate:.0} ev/s under the SLA ({sla_events} timeout/shed events)");
+    rate
+}
+
 fn write_bench_json(entries: &[(&str, f64)]) {
     let mut o = BTreeMap::new();
-    o.insert("schema".to_string(), Json::Num(6.0));
+    o.insert("schema".to_string(), Json::Num(7.0));
     o.insert("quick".to_string(), Json::Bool(quick()));
     for &(k, v) in entries {
         let value = if v.is_finite() { Json::Num(v) } else { Json::Null };
@@ -1004,6 +1079,7 @@ fn main() {
     let (burst_indexed, burst_scan) = bench_city50_burst();
     let (shard1, shard2, shard4) = bench_city50_sharded();
     let cell50_faulted = bench_city50_faulted();
+    let cell50_sla = bench_city50_sla();
     let (forecast_single, forecast_auto3) = bench_selector_overhead();
     let entries = [
         ("events_per_sec", events_per_sec),
@@ -1037,6 +1113,8 @@ fn main() {
         ("shard_speedup_4", shard4 / shard1),
         ("cell50_faulted_events_per_sec", cell50_faulted),
         ("cell50_chaos_overhead", cell50_cal / cell50_faulted),
+        ("cell50_sla_events_per_sec", cell50_sla),
+        ("sla_overhead", cell50_cal / cell50_sla),
         ("cell8_forecaster_events_per_sec_single", forecast_single),
         ("cell8_forecaster_events_per_sec_auto3", forecast_auto3),
         ("selector_overhead", forecast_single / forecast_auto3),
@@ -1046,11 +1124,13 @@ fn main() {
 }
 
 /// Quick-mode regression gate. Absolute rates are machine-dependent,
-/// but the *ratios* (indexed vs scan, N shards vs 1) are not — so when
-/// a tracked `BENCH_hotpath.json` baseline is committed, the CI smoke
-/// run compares the key ratios against it and fails the bench binary
-/// (exit 1) if any fell below 0.8x its baseline value. No baseline
-/// file, or a pre-ratio schema, means nothing to gate against.
+/// but the *ratios* (indexed vs scan, N shards vs 1, SLA'd vs SLA-free)
+/// are not — so when a tracked `BENCH_hotpath.json` baseline is
+/// committed, the CI smoke run compares the key ratios against it and
+/// fails the bench binary (exit 1) if any speedup fell below 0.8x its
+/// baseline value, or any overhead ratio rose above 1.25x its baseline
+/// (the same 0.8x margin, inverted for keys where bigger is worse). No
+/// baseline file, or a pre-ratio schema, means nothing to gate against.
 fn check_quick_regressions(entries: &[(&str, f64)]) {
     const GATED_RATIOS: [&str; 4] = [
         "dispatch_speedup_vs_scan",
@@ -1058,6 +1138,7 @@ fn check_quick_regressions(entries: &[(&str, f64)]) {
         "shard_speedup_2",
         "shard_speedup_4",
     ];
+    const GATED_OVERHEADS: [&str; 1] = ["sla_overhead"];
     if !quick() {
         return;
     }
@@ -1088,6 +1169,24 @@ fn check_quick_regressions(entries: &[(&str, f64)]) {
             eprintln!(
                 "PERF REGRESSION: {key} = {current:.2} is below 0.8x the \
                  tracked baseline ({base:.2}, floor {floor:.2})"
+            );
+            failed = true;
+        } else {
+            println!("  gate ok: {key} = {current:.2} (baseline {base:.2})");
+        }
+    }
+    for key in GATED_OVERHEADS {
+        let Some(base) = baseline.get(key).as_f64() else {
+            continue; // older-schema baseline without this ratio
+        };
+        let Some(&(_, current)) = entries.iter().find(|(k, _)| *k == key) else {
+            continue;
+        };
+        let ceiling = base / 0.8;
+        if current > ceiling {
+            eprintln!(
+                "PERF REGRESSION: {key} = {current:.2} is above 1.25x the \
+                 tracked baseline ({base:.2}, ceiling {ceiling:.2})"
             );
             failed = true;
         } else {

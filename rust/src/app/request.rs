@@ -1,6 +1,10 @@
-//! Request and response-record types.
+//! Request and response-record types, plus the resilience-plane
+//! descriptors: per-request [`Priority`] classes, the configurable
+//! arrival [`PriorityMix`], and the per-service [`SlaPolicy`]
+//! (deadline / retry budget / backoff / shed depth).
 
 use crate::sim::{ServiceId, Time};
+use crate::util::rng::Pcg64;
 
 /// The two task classes of the example application (paper §5.1.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -20,6 +24,139 @@ impl TaskType {
     }
 }
 
+/// Request priority class, drawn per request from the seed-derived SLA
+/// stream (see [`super::sla_stream`]) via a configurable [`PriorityMix`].
+/// Ordering is severity-descending: `Critical` is never load-shed;
+/// `Batch` is the first (and only) class admission control drops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Priority {
+    Critical,
+    Standard,
+    Batch,
+}
+
+impl Priority {
+    /// Number of priority classes (per-class stat array length).
+    pub const COUNT: usize = 3;
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Critical => "critical",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Dense index into per-class arrays (severity-descending order).
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Critical => 0,
+            Priority::Standard => 1,
+            Priority::Batch => 2,
+        }
+    }
+}
+
+/// Arrival priority mix: relative weights of the three classes. The
+/// weights need not sum to 1 — the draw normalizes. Exactly one RNG
+/// draw per submitted request, so the SLA stream advance schedule is
+/// independent of the mix values.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PriorityMix {
+    pub critical: f64,
+    pub standard: f64,
+    pub batch: f64,
+}
+
+impl Default for PriorityMix {
+    /// The stock mix: mostly standard traffic with a critical head and
+    /// a batch tail.
+    fn default() -> Self {
+        PriorityMix {
+            critical: 0.1,
+            standard: 0.7,
+            batch: 0.2,
+        }
+    }
+}
+
+impl PriorityMix {
+    /// Draw one priority class (single `f64` draw, weight-normalized).
+    pub fn draw(&self, rng: &mut Pcg64) -> Priority {
+        let total = (self.critical + self.standard + self.batch).max(f64::MIN_POSITIVE);
+        let x = rng.f64() * total;
+        if x < self.critical {
+            Priority::Critical
+        } else if x < self.critical + self.standard {
+            Priority::Standard
+        } else {
+            Priority::Batch
+        }
+    }
+
+    /// `c:s:b` label for reports/JSON, e.g. `0.1:0.7:0.2`.
+    pub fn label(&self) -> String {
+        format!("{}:{}:{}", self.critical, self.standard, self.batch)
+    }
+}
+
+/// Per-service SLA policy — the resilience plane's contract terms. A
+/// request older than `deadline` is retried (exponential backoff with
+/// seeded jitter) until its `max_retries` budget is spent, then counted
+/// as an SLA violation and dropped; `Batch` arrivals are shed when the
+/// service queue is deeper than `shed_queue_depth`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlaPolicy {
+    /// Per-attempt response deadline (µs, like all sim [`Time`]s).
+    pub deadline: Time,
+    /// Retry budget per request (0 = violate on the first timeout).
+    pub max_retries: u32,
+    /// Base backoff: attempt `k` retries after
+    /// `backoff_base * 2^(k-1) + jitter`, jitter uniform in
+    /// `[0, backoff_base)` from the dedicated SLA stream.
+    pub backoff_base: Time,
+    /// Admission-control threshold: `Batch` arrivals are shed while the
+    /// target service queue holds more than this many requests
+    /// (`Critical`/`Standard` are never shed).
+    pub shed_queue_depth: usize,
+}
+
+impl SlaPolicy {
+    /// Compact report/JSON label, e.g. `d500ms:r2:b100ms:q64`.
+    pub fn label(&self) -> String {
+        format!(
+            "d{}ms:r{}:b{}ms:q{}",
+            self.deadline / crate::sim::MS,
+            self.max_retries,
+            self.backoff_base / crate::sim::MS,
+            self.shed_queue_depth
+        )
+    }
+}
+
+/// The full resilience-plane configuration of one world: the SLA policy
+/// plus the arrival priority mix. Plain `Copy` data — rides inside
+/// `ShardSpec`/`SweepConfig` like `FaultPlan` does.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlaConfig {
+    pub policy: SlaPolicy,
+    pub mix: PriorityMix,
+}
+
+impl SlaConfig {
+    pub fn new(policy: SlaPolicy) -> Self {
+        SlaConfig {
+            policy,
+            mix: PriorityMix::default(),
+        }
+    }
+
+    /// Combined report/JSON label, e.g. `d500ms:r2:b100ms:q64@0.1:0.7:0.2`.
+    pub fn label(&self) -> String {
+        format!("{}@{}", self.policy.label(), self.mix.label())
+    }
+}
+
 /// An in-flight request, stored in the app's
 /// [`RequestArena`](super::RequestArena) and addressed by the
 /// generational [`crate::sim::RequestId`] (the handle *is* the
@@ -30,6 +167,12 @@ pub struct Request {
     pub origin_zone: u32,
     pub service: ServiceId,
     pub created: Time,
+    /// Priority class (always `Standard` when no SLA policy is
+    /// installed — drawn from the SLA stream otherwise).
+    pub priority: Priority,
+    /// Completed retry count: 0 on the first attempt, incremented each
+    /// time the deadline passes and the retry budget allows another go.
+    pub attempts: u32,
 }
 
 /// A completed request (the experiments' unit of observation).
@@ -68,5 +211,59 @@ mod tests {
     fn task_names() {
         assert_eq!(TaskType::Sort.name(), "sort");
         assert_eq!(TaskType::Eigen.name(), "eigen");
+    }
+
+    #[test]
+    fn priority_index_and_names() {
+        assert_eq!(Priority::Critical.index(), 0);
+        assert_eq!(Priority::Standard.index(), 1);
+        assert_eq!(Priority::Batch.index(), 2);
+        assert_eq!(Priority::Batch.name(), "batch");
+        assert_eq!(Priority::COUNT, 3);
+    }
+
+    #[test]
+    fn priority_mix_draw_is_deterministic_and_respects_weights() {
+        let mix = PriorityMix {
+            critical: 0.2,
+            standard: 0.5,
+            batch: 0.3,
+        };
+        let mut a = Pcg64::new(9, 4_000_000);
+        let mut b = Pcg64::new(9, 4_000_000);
+        let mut counts = [0usize; Priority::COUNT];
+        for _ in 0..10_000 {
+            let p = mix.draw(&mut a);
+            assert_eq!(p, mix.draw(&mut b), "same stream, same draws");
+            counts[p.index()] += 1;
+        }
+        assert!(counts[0] > 1_500 && counts[0] < 2_500, "critical {counts:?}");
+        assert!(counts[1] > 4_400 && counts[1] < 5_600, "standard {counts:?}");
+        assert!(counts[2] > 2_400 && counts[2] < 3_600, "batch {counts:?}");
+    }
+
+    #[test]
+    fn degenerate_mix_always_draws_the_only_class() {
+        let mix = PriorityMix {
+            critical: 1.0,
+            standard: 0.0,
+            batch: 0.0,
+        };
+        let mut rng = Pcg64::new(1, 1);
+        for _ in 0..100 {
+            assert_eq!(mix.draw(&mut rng), Priority::Critical);
+        }
+    }
+
+    #[test]
+    fn sla_policy_label_is_compact() {
+        let p = SlaPolicy {
+            deadline: 500 * crate::sim::MS,
+            max_retries: 2,
+            backoff_base: 100 * crate::sim::MS,
+            shed_queue_depth: 64,
+        };
+        assert_eq!(p.label(), "d500ms:r2:b100ms:q64");
+        assert_eq!(SlaConfig::new(p).mix, PriorityMix::default());
     }
 }

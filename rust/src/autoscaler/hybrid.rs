@@ -1,0 +1,412 @@
+//! The Hybrid reactive–proactive autoscaler — the resilience plane's
+//! scaler guardrail (DESIGN.md §7c).
+//!
+//! Baseline behavior is the PPA's proactive pipeline (Formulator →
+//! Evaluator → behavior stage, Algorithm 1 per spec). On top of it sits
+//! a **reactive override**: when the SLA is visibly failing or the
+//! forecaster is visibly wrong, the evaluator is fed `Current`-source
+//! clones of the configured specs — pure reactive HPA-style scaling —
+//! until the signals clear. Two trip conditions, either one suffices:
+//!
+//! 1. **SLA-violation-rate signal** — the service's
+//!    `<svc>.sla_violations` series (violations/s over the last scrape
+//!    window) exceeds `violation_rate_threshold`. Requests are already
+//!    being dropped past their retry budget; forecast optimism must not
+//!    keep the fleet small.
+//! 2. **Forecast-guard trip** — the squared error of the primary
+//!    metric's one-step prediction spikes past `mse_z_threshold`
+//!    standard deviations of the streaming squared-error moments
+//!    (armed only after `guard_warmup` closed predictions, and only
+//!    when the error history has nonzero spread). An outage gap or
+//!    regime change poisons the model's inputs; its predictions are
+//!    quarantined until they line up with reality again.
+//!
+//! The override releases after `recovery_ticks` consecutive clean
+//! ticks. Crucially, the prediction loop keeps closing while
+//! overridden: the Evaluator computes the raw per-metric prediction for
+//! `Current`-source specs too, so the guard can observe the forecaster
+//! recovering without acting on it. Decisions made under override carry
+//! `used_fallback = true` in the decision log.
+//!
+//! Determinism: the override is a pure function of scraped metrics and
+//! the scaler's own streaming state — no RNG, no wall clock — so hybrid
+//! runs are bit-reproducible and shard-invariant like every other
+//! scaler's.
+
+use super::behavior::BehaviorState;
+use super::ppa::{Evaluator, Formulator, PpaConfig, Updater};
+use super::spec::MetricSpec;
+use super::{Autoscaler, ScaleDecision};
+use crate::cluster::{Cluster, DeploymentId};
+use crate::forecast::Forecaster;
+use crate::metrics::MetricsPipeline;
+use crate::sim::{ServiceId, Time};
+use crate::stats::StreamingStats;
+
+/// Hybrid scaler configuration: the proactive baseline plus the
+/// override thresholds.
+#[derive(Debug, Clone)]
+pub struct HybridConfig {
+    /// The proactive baseline (specs, intervals, behavior — all
+    /// honoured exactly as a plain [`super::Ppa`] would).
+    pub ppa: PpaConfig,
+    /// Reactive trip: override while the service's SLA violation rate
+    /// (violations/s over the last scrape window) exceeds this.
+    pub violation_rate_threshold: f64,
+    /// Forecast-guard trip: override when a closed prediction's squared
+    /// error lands more than this many standard deviations above the
+    /// streaming squared-error mean.
+    pub mse_z_threshold: f64,
+    /// Closed predictions required before the z-guard arms (too few
+    /// samples make the moments meaningless).
+    pub guard_warmup: usize,
+    /// Consecutive clean ticks before the override releases.
+    pub recovery_ticks: u32,
+}
+
+impl Default for HybridConfig {
+    fn default() -> Self {
+        HybridConfig {
+            ppa: PpaConfig::default(),
+            violation_rate_threshold: 0.05,
+            mse_z_threshold: 3.0,
+            guard_warmup: 10,
+            recovery_ticks: 3,
+        }
+    }
+}
+
+/// The assembled hybrid scaler (see module docs).
+pub struct Hybrid {
+    cfg: HybridConfig,
+    formulator: Formulator,
+    evaluator: Evaluator,
+    updater: Updater,
+    /// `Current`-source clones of the configured specs — what the
+    /// evaluator is fed while the override is active.
+    reactive_specs: Vec<MetricSpec>,
+    /// Primary-metric prediction made last tick, awaiting its actual.
+    pending_prediction: Option<f64>,
+    /// Streaming squared-error moments (always on, like the PPA's).
+    squared_errors: StreamingStats,
+    behavior_state: BehaviorState,
+    /// Whether the reactive override is currently active.
+    overridden: bool,
+    /// Clean ticks observed since the last trip.
+    clean_ticks: u32,
+    /// Times the override transitioned inactive → active.
+    trips: u64,
+    /// Total ticks decided under the override.
+    override_ticks: u64,
+}
+
+impl Hybrid {
+    pub fn new(cfg: HybridConfig, forecaster: Box<dyn Forecaster>) -> Self {
+        assert!(!cfg.ppa.specs.is_empty(), "hybrid needs >= 1 metric spec");
+        let reactive_specs = cfg
+            .ppa
+            .specs
+            .iter()
+            .map(|s| MetricSpec::current(s.metric, s.target))
+            .collect();
+        Hybrid {
+            evaluator: Evaluator::new(forecaster, cfg.ppa.confidence_threshold),
+            updater: Updater::new(cfg.ppa.update_policy),
+            formulator: Formulator::new(),
+            reactive_specs,
+            cfg,
+            pending_prediction: None,
+            squared_errors: StreamingStats::new(),
+            behavior_state: BehaviorState::new(),
+            overridden: false,
+            clean_ticks: 0,
+            trips: 0,
+            override_ticks: 0,
+        }
+    }
+
+    pub fn forecaster_name(&self) -> &str {
+        self.evaluator.forecaster_name()
+    }
+
+    /// Champion–challenger state, when the forecaster is a
+    /// [`crate::forecast::ChampionChallenger`] wrapper (`None` for
+    /// plain models).
+    pub fn selection(&self) -> Option<crate::forecast::SelectionSummary> {
+        self.evaluator.forecaster().selection()
+    }
+
+    /// The primary (first-spec) metric index.
+    pub fn primary_metric(&self) -> usize {
+        self.cfg.ppa.specs[0].metric
+    }
+
+    /// Mean squared prediction error of the primary metric so far.
+    pub fn prediction_mse(&self) -> f64 {
+        self.squared_errors.mean()
+    }
+
+    /// Number of closed (predicted, actual) pairs so far.
+    pub fn prediction_count(&self) -> usize {
+        self.squared_errors.n()
+    }
+
+    /// Whether the reactive override is active right now.
+    pub fn is_overridden(&self) -> bool {
+        self.overridden
+    }
+
+    /// Times the override tripped (inactive → active transitions).
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    /// Total control ticks decided under the reactive override.
+    pub fn override_ticks(&self) -> u64 {
+        self.override_ticks
+    }
+}
+
+impl Autoscaler for Hybrid {
+    fn name(&self) -> &str {
+        "hybrid"
+    }
+
+    fn control_interval(&self) -> Time {
+        self.cfg.ppa.control_interval
+    }
+
+    fn update_interval(&self) -> Option<Time> {
+        Some(self.cfg.ppa.update_interval)
+    }
+
+    fn specs(&self) -> &[MetricSpec] {
+        &self.cfg.ppa.specs
+    }
+
+    fn evaluate(
+        &mut self,
+        now: Time,
+        service: ServiceId,
+        target: DeploymentId,
+        metrics: &MetricsPipeline,
+        cluster: &Cluster,
+    ) -> ScaleDecision {
+        let vector = metrics.latest_vector(service);
+        self.formulator.record(vector);
+
+        // Close last tick's primary prediction. The z-guard compares the
+        // fresh squared error against the moments *before* folding it in
+        // (a spike must not dilute the baseline it is judged against).
+        let mut mse_spike = false;
+        if let Some(pred) = self.pending_prediction.take() {
+            let actual = vector[self.primary_metric()];
+            let err = pred - actual;
+            let sq = err * err;
+            if self.squared_errors.n() >= self.cfg.guard_warmup {
+                let std = self.squared_errors.std();
+                if std > 0.0 {
+                    mse_spike =
+                        (sq - self.squared_errors.mean()) / std > self.cfg.mse_z_threshold;
+                }
+            }
+            self.squared_errors.record(sq);
+        }
+        self.evaluator.observe_actual(&vector);
+
+        // Override state machine: trip on either signal, release after
+        // `recovery_ticks` consecutive clean ticks.
+        let violation_rate = metrics.latest_violation_rate(service);
+        let tripped = violation_rate > self.cfg.violation_rate_threshold || mse_spike;
+        if tripped {
+            if !self.overridden {
+                self.trips += 1;
+            }
+            self.overridden = true;
+            self.clean_ticks = 0;
+        } else if self.overridden {
+            self.clean_ticks += 1;
+            if self.clean_ticks >= self.cfg.recovery_ticks {
+                self.overridden = false;
+            }
+        }
+        if self.overridden {
+            self.override_ticks += 1;
+        }
+
+        // One evaluator pass per tick (the forecaster advances exactly
+        // once), fed whichever spec set is active. Current-source specs
+        // still carry the raw prediction, so the loop keeps closing.
+        let specs: &[MetricSpec] = if self.overridden {
+            &self.reactive_specs
+        } else {
+            &self.cfg.ppa.specs
+        };
+        let mut decision = self.evaluator.evaluate(
+            specs,
+            &vector,
+            self.formulator.history(),
+            target,
+            cluster,
+        );
+        self.pending_prediction = decision.predicted;
+        decision.used_fallback |= self.overridden;
+
+        let current = cluster.live_replicas(target);
+        decision.desired =
+            self.behavior_state
+                .apply(now, decision.desired, current, &self.cfg.ppa.behavior);
+        decision
+    }
+
+    fn model_update(&mut self, _now: Time) -> crate::Result<()> {
+        self.updater
+            .run(self.evaluator.forecaster_mut(), &mut self.formulator)
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autoscaler::spec::MetricSource;
+    use crate::autoscaler::Ppa;
+    use crate::cluster::{Deployment, NodeSpec, PodSpec, Selector, Tier};
+    use crate::forecast::NaiveForecaster;
+    use crate::metrics::{M_CPU, METRIC_DIM};
+    use crate::sim::{EventQueue, SEC};
+    use crate::util::rng::Pcg64;
+
+    fn cluster_fixture(replicas: usize) -> Cluster {
+        let mut cluster = Cluster::new();
+        cluster.add_node(NodeSpec::new("e1", Tier::Edge, 1, 2000, 2048));
+        cluster.add_node(NodeSpec::new("e2", Tier::Edge, 1, 2000, 2048));
+        let dep = cluster.add_deployment(Deployment::new(
+            "edge",
+            Selector::new(Tier::Edge, None),
+            PodSpec::new(500, 256),
+            1,
+            16,
+        ));
+        let mut q = EventQueue::new();
+        let mut rng = Pcg64::new(1, 0);
+        cluster.reconcile(dep, replicas, &mut q, &mut rng);
+        while let Some((_, ev)) = q.pop() {
+            if let crate::sim::Event::PodRunning { pod } = ev {
+                cluster.on_pod_running(pod);
+            }
+        }
+        cluster
+    }
+
+    fn metrics_with(cpu: f64, replicas: usize) -> MetricsPipeline {
+        let mut mp = MetricsPipeline::new(10 * SEC, 1);
+        let mut v = [0.0; METRIC_DIM];
+        v[M_CPU] = cpu;
+        mp.test_set_latest(ServiceId(0), v, replicas);
+        mp
+    }
+
+    #[test]
+    fn clean_run_matches_plain_ppa_decisions() {
+        // Without a trip signal the hybrid IS the PPA: same forecaster,
+        // same specs, same behavior → identical decision sequence.
+        let cluster = cluster_fixture(2);
+        let mut hybrid = Hybrid::new(HybridConfig::default(), Box::new(NaiveForecaster));
+        let mut ppa = Ppa::new(PpaConfig::default(), Box::new(NaiveForecaster));
+        for (i, cpu) in [100.0, 250.0, 180.0, 90.0, 300.0].iter().enumerate() {
+            let mp = metrics_with(*cpu, 2);
+            let t = i as Time * 20 * SEC;
+            let h = hybrid.evaluate(t, ServiceId(0), DeploymentId(0), &mp, &cluster);
+            let p = ppa.evaluate(t, ServiceId(0), DeploymentId(0), &mp, &cluster);
+            assert_eq!(h.desired, p.desired, "tick {i}");
+            assert_eq!(h.predicted, p.predicted, "tick {i}");
+            assert!(!h.used_fallback);
+        }
+        assert_eq!(hybrid.trips(), 0);
+        assert_eq!(hybrid.override_ticks(), 0);
+        assert_eq!(hybrid.prediction_count(), ppa.prediction_count());
+        assert_eq!(hybrid.prediction_mse(), ppa.prediction_mse());
+    }
+
+    #[test]
+    fn violation_rate_trips_reactive_override_then_recovers() {
+        let cluster = cluster_fixture(2);
+        let mut hybrid = Hybrid::new(HybridConfig::default(), Box::new(NaiveForecaster));
+        let mut mp = metrics_with(150.0, 2);
+
+        let d = hybrid.evaluate(0, ServiceId(0), DeploymentId(0), &mp, &cluster);
+        assert!(!d.used_fallback, "clean tick stays proactive");
+        assert_eq!(d.recommendations[0].source, MetricSource::Forecast);
+
+        // SLA failing: violations flowing past the retry budget.
+        mp.test_set_violation_rate(ServiceId(0), 1.0);
+        let d = hybrid.evaluate(20 * SEC, ServiceId(0), DeploymentId(0), &mp, &cluster);
+        assert!(d.used_fallback, "override active");
+        assert_eq!(d.recommendations[0].source, MetricSource::Current);
+        assert!(hybrid.is_overridden());
+        assert_eq!(hybrid.trips(), 1);
+        // Predictions still close under override (raw per-spec value).
+        assert_eq!(d.predicted, Some(150.0));
+
+        // Signal clears: override holds for recovery_ticks, then lifts.
+        mp.test_set_violation_rate(ServiceId(0), 0.0);
+        for i in 0..2u64 {
+            let d = hybrid.evaluate(
+                (2 + i) * 20 * SEC,
+                ServiceId(0),
+                DeploymentId(0),
+                &mp,
+                &cluster,
+            );
+            assert!(d.used_fallback, "still inside the recovery window");
+        }
+        let d = hybrid.evaluate(4 * 20 * SEC, ServiceId(0), DeploymentId(0), &mp, &cluster);
+        assert!(!d.used_fallback, "override released after 3 clean ticks");
+        assert_eq!(d.recommendations[0].source, MetricSource::Forecast);
+        assert!(!hybrid.is_overridden());
+        assert_eq!(hybrid.trips(), 1, "one trip, not re-counted per tick");
+        assert_eq!(hybrid.override_ticks(), 3);
+    }
+
+    #[test]
+    fn mse_z_spike_trips_forecast_guard() {
+        let cluster = cluster_fixture(2);
+        let mut hybrid = Hybrid::new(HybridConfig::default(), Box::new(NaiveForecaster));
+        // Mildly noisy warmup: naive predicts last value, so squared
+        // errors are small but with nonzero spread (arms the guard).
+        for i in 0..15u64 {
+            let cpu = 100.0 + (i % 3) as f64;
+            let mp = metrics_with(cpu, 2);
+            let d = hybrid.evaluate(i * 20 * SEC, ServiceId(0), DeploymentId(0), &mp, &cluster);
+            assert!(!d.used_fallback, "warmup tick {i}");
+        }
+        assert!(hybrid.prediction_count() >= 10, "guard armed");
+        // Regime change: the pending ~100 prediction meets actual 5000 —
+        // a squared error thousands of σ above the streaming baseline.
+        let mp = metrics_with(5000.0, 2);
+        let d = hybrid.evaluate(15 * 20 * SEC, ServiceId(0), DeploymentId(0), &mp, &cluster);
+        assert!(d.used_fallback, "forecast guard tripped");
+        assert_eq!(d.recommendations[0].source, MetricSource::Current);
+        assert!(hybrid.is_overridden());
+        assert_eq!(hybrid.trips(), 1);
+    }
+
+    #[test]
+    fn constant_metrics_never_arm_the_z_guard() {
+        // Zero-variance errors (perfect naive predictions) must not
+        // divide by zero or trip on the first nonzero error... until it
+        // is genuinely judged against a spread — std == 0 disarms.
+        let cluster = cluster_fixture(2);
+        let mut hybrid = Hybrid::new(HybridConfig::default(), Box::new(NaiveForecaster));
+        for i in 0..20u64 {
+            let mp = metrics_with(100.0, 2);
+            let d = hybrid.evaluate(i * 20 * SEC, ServiceId(0), DeploymentId(0), &mp, &cluster);
+            assert!(!d.used_fallback, "tick {i}");
+        }
+        assert_eq!(hybrid.trips(), 0);
+    }
+}

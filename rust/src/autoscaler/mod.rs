@@ -24,12 +24,14 @@
 
 pub mod behavior;
 pub mod hpa;
+pub mod hybrid;
 pub mod ppa;
 pub mod registry;
 pub mod spec;
 
 pub use behavior::{BehaviorState, RateLimits, ScalingBehavior, ScalingRules, SelectPolicy};
 pub use hpa::{Hpa, HpaConfig};
+pub use hybrid::{Hybrid, HybridConfig};
 pub use ppa::{Ppa, PpaConfig};
 pub use registry::{ScalerPolicy, ScalerRegistry};
 pub use spec::{specs_label, MetricSource, MetricSpec, Recommendation};

@@ -94,6 +94,11 @@ pub struct Cluster {
     /// Installed cold-start / crash-loop perturbation (`None` — the
     /// default — leaves `try_place` byte-identical to fault-free runs).
     pod_chaos: Option<PodChaos>,
+    /// Cost-ledger churn counter: total pods ever spawned (scale-ups
+    /// and crash replacements; crash-loop restarts extend an existing
+    /// pod's init instead of spawning). Pure observation — no behavior
+    /// reads it.
+    pub pod_churn: u64,
 }
 
 impl Cluster {
@@ -105,6 +110,7 @@ impl Cluster {
             free_slots: BTreeSet::new(),
             mode: QueryMode::Indexed,
             pod_chaos: None,
+            pod_churn: 0,
         }
     }
 
@@ -318,6 +324,7 @@ impl Cluster {
     }
 
     fn spawn_pod(&mut self, dep: DeploymentId, queue: &mut EventQueue, rng: &mut Pcg64) {
+        self.pod_churn += 1;
         let spec = self.deployments[dep.0 as usize].pod_spec;
         // Slab allocation: reuse the lowest Gone slot if available.
         let slot = match self.mode {

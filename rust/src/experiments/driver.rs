@@ -175,6 +175,34 @@ impl SimWorld {
         }
     }
 
+    /// Install an SLA policy + priority mix for the whole run (call
+    /// before the first [`Self::run_until`], mirroring
+    /// [`Self::install_chaos`]). Absent policy is a strict no-op — no
+    /// RNG construction, no timeout events, no priority draws — so
+    /// SLA-free runs stay bit-identical to pre-resilience builds. All
+    /// SLA randomness (priority draws, backoff jitter) comes from the
+    /// dedicated `sla_stream` keyed by `seed` (world index 0 — the
+    /// monolith), never from the engine streams.
+    pub fn install_sla(&mut self, cfg: &crate::app::SlaConfig, seed: u64) {
+        self.app.install_sla(cfg, seed, 0);
+    }
+
+    /// Resilience-plane counters + per-class response stats (all zero /
+    /// empty when no SLA policy is installed).
+    pub fn sla_summary(&self) -> crate::app::SlaSummary {
+        self.app.sla_summary()
+    }
+
+    /// Cost ledger: cluster node-hours up to `end`, with per-node
+    /// downtime (chaos-plane `Node::up` gaps) excluded — a crashed node
+    /// stops billing until it rejoins. The other ledger half,
+    /// [`crate::cluster::Cluster::pod_churn`], is read directly.
+    pub fn cost_node_hours(&self, end: Time) -> f64 {
+        let gross = self.cluster.nodes.len() as u64 * end;
+        let down = self.chaos_summary(end).downtime;
+        crate::sim::to_secs(gross.saturating_sub(down)) / 3600.0
+    }
+
     /// The run's fault counters with end-of-run finalization: nodes
     /// still down at `end` contribute their remaining downtime, and the
     /// pod-chaos restart/init-delay stats are folded in. Non-destructive
@@ -401,6 +429,9 @@ impl SimWorld {
                             &mut self.rng_service,
                         );
                     }
+                }
+                Event::RequestTimeout { request_id } => {
+                    self.app.on_timeout(request_id, &mut self.queue);
                 }
                 Event::NodeRejoin { node } => {
                     if self.cluster.rejoin_node(node) {

@@ -22,9 +22,10 @@
 //! percentiles), never collected into a per-request log.
 
 use super::driver::SimWorld;
-use crate::app::TaskCosts;
+use crate::app::{Priority, SlaConfig, SlaSummary, TaskCosts};
 use crate::autoscaler::{
-    specs_label, Autoscaler, Hpa, HpaConfig, Ppa, PpaConfig, ScalerPolicy, ScalerRegistry,
+    specs_label, Autoscaler, Hpa, HpaConfig, Hybrid, HybridConfig, Ppa, PpaConfig, ScalerPolicy,
+    ScalerRegistry,
 };
 use crate::cluster::FaultPlan;
 use crate::config::{ClusterConfig, Topology};
@@ -60,17 +61,26 @@ pub enum AutoscalerKind {
     PpaNaive,
     /// PPA with the ARMA(1,1) model, trained online by the update loop.
     PpaArma,
+    /// SLA-guarded hybrid: proactive ARMA baseline plus the reactive
+    /// override (violation-rate signal / forecast z-guard — see
+    /// [`crate::autoscaler::Hybrid`]).
+    Hybrid,
 }
 
 impl AutoscalerKind {
-    pub const ALL: [AutoscalerKind; 3] =
-        [AutoscalerKind::Hpa, AutoscalerKind::PpaNaive, AutoscalerKind::PpaArma];
+    pub const ALL: [AutoscalerKind; 4] = [
+        AutoscalerKind::Hpa,
+        AutoscalerKind::PpaNaive,
+        AutoscalerKind::PpaArma,
+        AutoscalerKind::Hybrid,
+    ];
 
     pub fn name(&self) -> &'static str {
         match self {
             AutoscalerKind::Hpa => "hpa",
             AutoscalerKind::PpaNaive => "ppa-naive",
             AutoscalerKind::PpaArma => "ppa-arma",
+            AutoscalerKind::Hybrid => "hybrid",
         }
     }
 
@@ -79,7 +89,8 @@ impl AutoscalerKind {
             "hpa" => Ok(AutoscalerKind::Hpa),
             "ppa-naive" | "naive" => Ok(AutoscalerKind::PpaNaive),
             "ppa-arma" | "arma" => Ok(AutoscalerKind::PpaArma),
-            other => bail!("unknown autoscaler '{other}' (hpa|ppa-naive|ppa-arma)"),
+            "hybrid" => Ok(AutoscalerKind::Hybrid),
+            other => bail!("unknown autoscaler '{other}' (hpa|ppa-naive|ppa-arma|hybrid)"),
         }
     }
 
@@ -100,6 +111,14 @@ impl AutoscalerKind {
             AutoscalerKind::PpaArma => {
                 Box::new(Ppa::new(ppa_cfg, Box::new(ArmaForecaster::new())))
             }
+            // Same ARMA baseline, wrapped in the reactive guardrail.
+            AutoscalerKind::Hybrid => Box::new(Hybrid::new(
+                HybridConfig {
+                    ppa: ppa_cfg,
+                    ..HybridConfig::default()
+                },
+                Box::new(ArmaForecaster::new()),
+            )),
         }
     }
 
@@ -121,7 +140,7 @@ impl AutoscalerKind {
                     ..default
                 }))
             }
-            AutoscalerKind::PpaNaive | AutoscalerKind::PpaArma => {
+            AutoscalerKind::PpaNaive | AutoscalerKind::PpaArma | AutoscalerKind::Hybrid => {
                 let default = PpaConfig::default();
                 let cfg = PpaConfig {
                     specs: policy.specs.clone(),
@@ -134,7 +153,17 @@ impl AutoscalerKind {
                     None if *self == AutoscalerKind::PpaNaive => Box::new(NaiveForecaster),
                     None => Box::new(ArmaForecaster::new()),
                 };
-                Box::new(Ppa::new(cfg, model))
+                if *self == AutoscalerKind::Hybrid {
+                    Box::new(Hybrid::new(
+                        HybridConfig {
+                            ppa: cfg,
+                            ..HybridConfig::default()
+                        },
+                        model,
+                    ))
+                } else {
+                    Box::new(Ppa::new(cfg, model))
+                }
             }
         }
     }
@@ -181,6 +210,13 @@ pub struct SweepConfig {
     /// counts, because all fault randomness comes from dedicated chaos
     /// RNG streams keyed by the cell seed.
     pub chaos: FaultPlan,
+    /// Resilience plane every cell runs under (deadline/retry/shed SLA
+    /// plus the arrival priority mix — see [`crate::app::SlaConfig`]).
+    /// `None` — the default — is a strict no-op: no SLA RNG stream is
+    /// built, no timeout events are scheduled, and cells are
+    /// bit-identical to a pre-resilience sweep (asserted by
+    /// `tests/golden_sla_equivalence.rs`).
+    pub sla: Option<SlaConfig>,
 }
 
 /// Deterministic per-cell outcome (everything except wall-clock).
@@ -238,6 +274,36 @@ pub struct CellMetrics {
     pub downtime_secs: f64,
     /// p95 of perturbed pod init delays, seconds (NaN when no pod chaos).
     pub cold_start_p95: f64,
+    /// SLA-policy label the cell ran under (`none` when the resilience
+    /// plane is off).
+    pub sla: String,
+    /// Deadline expiries (still-queued or in-service attempts that
+    /// outlived the per-attempt deadline).
+    pub sla_timeouts: u64,
+    /// Timed-out attempts rescheduled with backoff (budget remaining).
+    pub sla_retries: u64,
+    /// Requests dropped with the retry budget spent.
+    pub sla_violations: u64,
+    /// `Batch` arrivals shed by admission control.
+    pub sla_shed: u64,
+    /// Distinct simulated minutes containing >= 1 violation, summed per
+    /// world (the sweep's SLA-violation-minutes currency).
+    pub sla_violation_minutes: u64,
+    /// Per-priority-class response summaries (Critical/Standard/Batch
+    /// order); empty when the resilience plane is off.
+    pub class_response: Vec<(String, Summary)>,
+    /// Node-hours billed over the cell (downtime excluded — a crashed
+    /// node stops billing until it rejoins).
+    pub cost_node_hours: f64,
+    /// Pods ever spawned (scale-ups + crash replacements) — the cost
+    /// ledger's churn counter.
+    pub pod_churn: u64,
+    /// Reactive-override trips of the hybrid scaler (`None` when the
+    /// cell ran no hybrid).
+    pub hybrid_trips: Option<u64>,
+    /// Control ticks decided under the reactive override (`None` when
+    /// the cell ran no hybrid).
+    pub hybrid_override_ticks: Option<u64>,
 }
 
 impl CellMetrics {
@@ -285,6 +351,19 @@ pub struct CellScratch {
     selections: Vec<SelectionSummary>,
 }
 
+/// Per-priority-class response summaries in Critical/Standard/Batch
+/// order — empty when the resilience plane is off, so SLA-free cells
+/// keep the pre-resilience report shape.
+fn class_response(sla: Option<&SlaConfig>, summary: &SlaSummary) -> Vec<(String, Summary)> {
+    if sla.is_none() {
+        return Vec::new();
+    }
+    [Priority::Critical, Priority::Standard, Priority::Batch]
+        .iter()
+        .map(|p| (p.name().to_string(), summary.class_stats[p.index()].summary()))
+        .collect()
+}
+
 /// Run one independent cell on `cluster` (a materialized topology).
 /// Response statistics come from the app's always-on streaming stats —
 /// the cell never accumulates a per-request log, so memory stays flat
@@ -306,6 +385,7 @@ pub fn run_cell(
     core: CoreKind,
     shards: usize,
     chaos: &FaultPlan,
+    sla: Option<&SlaConfig>,
 ) -> CellResult {
     let mut scratch = CellScratch::default();
     run_cell_with_scratch(
@@ -320,6 +400,7 @@ pub fn run_cell(
         core,
         shards,
         chaos,
+        sla,
         &mut scratch,
     )
 }
@@ -339,6 +420,7 @@ pub fn run_cell_with_scratch(
     core: CoreKind,
     shards: usize,
     chaos: &FaultPlan,
+    sla: Option<&SlaConfig>,
     scratch: &mut CellScratch,
 ) -> CellResult {
     let wall = crate::util::wallclock();
@@ -349,7 +431,19 @@ pub fn run_cell_with_scratch(
     scratch.selections.clear();
     let end = minutes * MIN;
 
-    let (events, completed, sort, eigen, replicas_max, chaos_counters) = if shards == 0 {
+    let (
+        events,
+        completed,
+        sort,
+        eigen,
+        replicas_max,
+        chaos_counters,
+        sla_summary,
+        cost_node_hours,
+        pod_churn,
+        hybrid_trips,
+        hybrid_override_ticks,
+    ) = if shards == 0 {
         let mut world = SimWorld::build_with_core(cluster, TaskCosts::default(), seed, core);
         for gen in scenario.build_generators() {
             world.add_generator(gen);
@@ -363,6 +457,9 @@ pub fn run_cell_with_scratch(
             world.add_scaler(autoscaler, svc);
         }
         world.install_chaos(chaos, seed, end);
+        if let Some(cfg) = sla {
+            world.install_sla(cfg, seed);
+        }
         let events = world.run_until(end);
         scratch
             .specs
@@ -372,6 +469,8 @@ pub fn run_cell_with_scratch(
             .reps
             .extend(world.replica_log.iter().map(|&(_, _, r)| r as f64));
         let replicas_max = world.replica_log.iter().map(|&(_, _, r)| r).max().unwrap_or(0);
+        let mut hybrid_trips: Option<u64> = None;
+        let mut hybrid_override_ticks: Option<u64> = None;
         for binding in &world.scalers {
             if let Some(ppa) = binding.autoscaler.as_any().downcast_ref::<Ppa>() {
                 // Streaming count/MSE: the exact prediction log stays off
@@ -382,6 +481,16 @@ pub fn run_cell_with_scratch(
                 if let Some(selection) = ppa.selection() {
                     scratch.selections.push(selection);
                 }
+            } else if let Some(h) = binding.autoscaler.as_any().downcast_ref::<Hybrid>() {
+                if h.prediction_count() > 0 {
+                    scratch.mses.push(h.prediction_mse());
+                }
+                if let Some(selection) = h.selection() {
+                    scratch.selections.push(selection);
+                }
+                hybrid_trips = Some(hybrid_trips.unwrap_or(0) + h.trips());
+                hybrid_override_ticks =
+                    Some(hybrid_override_ticks.unwrap_or(0) + h.override_ticks());
             }
         }
         let stats = &world.app.stats;
@@ -392,6 +501,11 @@ pub fn run_cell_with_scratch(
             stats.eigen.clone(),
             replicas_max,
             world.chaos_summary(end),
+            world.sla_summary(),
+            world.cost_node_hours(end),
+            world.cluster.pod_churn,
+            hybrid_trips,
+            hybrid_override_ticks,
         )
     } else {
         let spec = ShardSpec {
@@ -402,6 +516,7 @@ pub fn run_cell_with_scratch(
             end,
             record_decisions: false,
             chaos: *chaos,
+            sla: sla.copied(),
         };
         let run = run_sharded(
             cluster,
@@ -429,6 +544,11 @@ pub fn run_cell_with_scratch(
             run.eigen_stats(),
             replicas_max,
             run.chaos_counters(),
+            run.sla_summary(),
+            run.cost_node_hours(),
+            run.pod_churn(),
+            run.hybrid_trips(),
+            run.hybrid_override_ticks(),
         )
     };
 
@@ -483,6 +603,17 @@ pub fn run_cell_with_scratch(
         crash_loops: chaos_counters.crash_loops,
         downtime_secs: to_secs(chaos_counters.downtime),
         cold_start_p95: chaos_counters.cold_start_p95(),
+        sla: sla.map_or_else(|| "none".to_string(), SlaConfig::label),
+        sla_timeouts: sla_summary.counters.timeouts,
+        sla_retries: sla_summary.counters.retries,
+        sla_violations: sla_summary.counters.violations,
+        sla_shed: sla_summary.counters.shed,
+        sla_violation_minutes: sla_summary.counters.violation_minutes,
+        class_response: class_response(sla, &sla_summary),
+        cost_node_hours,
+        pod_churn,
+        hybrid_trips,
+        hybrid_override_ticks,
     };
     CellResult {
         metrics,
@@ -563,6 +694,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> crate::Result<SweepResult> {
                         cfg.core,
                         cfg.shards,
                         &cfg.chaos,
+                        cfg.sla.as_ref(),
                         &mut scratch,
                     );
                     slots.lock().unwrap()[i] = Some(result);
@@ -664,6 +796,37 @@ impl CellResult {
         o.insert("crash_loops".to_string(), Json::Num(m.crash_loops as f64));
         o.insert("downtime_secs".to_string(), num(m.downtime_secs));
         o.insert("cold_start_p95".to_string(), num(m.cold_start_p95));
+        o.insert("sla".to_string(), Json::Str(m.sla.clone()));
+        o.insert("sla_timeouts".to_string(), Json::Num(m.sla_timeouts as f64));
+        o.insert("sla_retries".to_string(), Json::Num(m.sla_retries as f64));
+        o.insert(
+            "sla_violations".to_string(),
+            Json::Num(m.sla_violations as f64),
+        );
+        o.insert("sla_shed".to_string(), Json::Num(m.sla_shed as f64));
+        o.insert(
+            "sla_violation_minutes".to_string(),
+            Json::Num(m.sla_violation_minutes as f64),
+        );
+        o.insert(
+            "class_response".to_string(),
+            Json::Obj(
+                m.class_response
+                    .iter()
+                    .map(|(name, s)| (name.clone(), summary_json(s)))
+                    .collect(),
+            ),
+        );
+        o.insert("cost_node_hours".to_string(), num(m.cost_node_hours));
+        o.insert("pod_churn".to_string(), Json::Num(m.pod_churn as f64));
+        o.insert(
+            "hybrid_trips".to_string(),
+            m.hybrid_trips.map_or(Json::Null, |t| Json::Num(t as f64)),
+        );
+        o.insert(
+            "hybrid_override_ticks".to_string(),
+            m.hybrid_override_ticks.map_or(Json::Null, |t| Json::Num(t as f64)),
+        );
         o.insert("wall_secs".to_string(), num(self.wall_secs));
         Json::Obj(o)
     }
@@ -758,6 +921,7 @@ mod tests {
             fleet: None,
             shards: 0,
             chaos: FaultPlan::none(),
+            sla: None,
         }
     }
 
@@ -842,6 +1006,7 @@ mod tests {
             fleet: None,
             shards: 0,
             chaos: FaultPlan::none(),
+            sla: None,
         };
         let result = run_sweep(&cfg).unwrap();
         let cell = &result.cells[0].metrics;
@@ -875,6 +1040,7 @@ mod tests {
             fleet: Some(fleet),
             shards: 0,
             chaos: FaultPlan::none(),
+            sla: None,
         };
         let result = run_sweep(&cfg).unwrap();
         let cell = &result.cells[0].metrics;
@@ -903,6 +1069,7 @@ mod tests {
             fleet: None,
             shards: 0,
             chaos: FaultPlan::none(),
+            sla: None,
         })
         .unwrap();
         let dir = std::env::temp_dir().join("ppa_sweep_test");
@@ -952,6 +1119,7 @@ mod tests {
             fleet: None,
             shards: 0,
             chaos: FaultPlan::none(),
+            sla: None,
         };
         assert!(run_sweep(&cfg).is_err());
     }
@@ -972,6 +1140,7 @@ mod tests {
             fleet: None,
             shards: 0,
             chaos: FaultPlan::none(),
+            sla: None,
         };
         let err = run_sweep(&cfg).unwrap_err();
         assert!(format!("{err}").contains("zone 9"));
@@ -1036,6 +1205,7 @@ mod tests {
             fleet: None,
             shards: 0,
             chaos: FaultPlan::none(),
+            sla: None,
         };
         let serial = run_sweep(&grid(1)).unwrap();
         let parallel = run_sweep(&grid(4)).unwrap();
@@ -1093,6 +1263,7 @@ mod tests {
             fleet: None,
             shards: 0,
             chaos: FaultPlan::none(),
+            sla: None,
         };
         let calendar = run_sweep(&grid(CoreKind::Calendar)).unwrap();
         let heap = run_sweep(&grid(CoreKind::Heap)).unwrap();
@@ -1118,6 +1289,7 @@ mod tests {
             fleet: None,
             shards: 0,
             chaos: FaultPlan::none(),
+            sla: None,
         };
         let err = run_sweep(&cfg).unwrap_err();
         assert!(format!("{err}").contains("topology 'paper'"), "{err}");
@@ -1161,6 +1333,7 @@ mod tests {
             CoreKind::Calendar,
             0,
             &FaultPlan::none(),
+            None,
         );
         let m = &cell.metrics;
         assert!(m.events > 100, "fleet cell must simulate: {}", m.events);
@@ -1195,6 +1368,7 @@ mod tests {
                 CoreKind::Calendar,
                 shards,
                 &FaultPlan::none(),
+                None,
             )
             .metrics
         };
@@ -1307,6 +1481,7 @@ mod tests {
                 CoreKind::Calendar,
                 shards,
                 &chaos,
+                None,
             )
             .metrics
         };
@@ -1340,6 +1515,82 @@ mod tests {
             AutoscalerKind::parse("arma").unwrap(),
             AutoscalerKind::PpaArma
         );
+        assert_eq!(
+            AutoscalerKind::parse("hybrid").unwrap(),
+            AutoscalerKind::Hybrid
+        );
         assert!(AutoscalerKind::parse("lstm").is_err());
+        let err = AutoscalerKind::parse("lstm").unwrap_err();
+        assert!(format!("{err}").contains("hybrid"), "{err}");
+    }
+
+    #[test]
+    fn sla_cell_reports_resilience_columns() {
+        // One SLA'd hybrid cell on the paper topology: the resilience
+        // columns surface (and reproduce), and a plain cell keeps the
+        // pre-resilience shape — label `none`, zero counters, null
+        // hybrid columns, empty per-class table.
+        use crate::app::SlaPolicy;
+        use crate::sim::{MS, SEC};
+        let cluster = Topology::Paper.cluster();
+        let scenarios = tiny_scenarios();
+        let (name, scenario) = &scenarios[0];
+        let sla = SlaConfig::new(SlaPolicy {
+            deadline: 2 * SEC,
+            max_retries: 1,
+            backoff_base: 100 * MS,
+            shed_queue_depth: 4,
+        });
+        let cell = |scaler: AutoscalerKind, sla: Option<&SlaConfig>| {
+            run_cell(
+                "paper",
+                &cluster,
+                name,
+                scenario,
+                scaler,
+                None,
+                13,
+                6,
+                CoreKind::Calendar,
+                0,
+                &FaultPlan::none(),
+                sla,
+            )
+            .metrics
+        };
+        let a = cell(AutoscalerKind::Hybrid, Some(&sla));
+        let b = cell(AutoscalerKind::Hybrid, Some(&sla));
+        assert_eq!(a.fingerprint(), b.fingerprint(), "SLA'd hybrid cell must reproduce");
+        assert_eq!(a.scaler, "hybrid");
+        assert_eq!(a.sla, "d2000ms:r1:b100ms:q4@0.1:0.7:0.2");
+        assert!(a.sla_timeouts > 0, "2s deadline must expire under surge: {a:?}");
+        assert_eq!(a.class_response.len(), 3);
+        assert_eq!(a.class_response[0].0, "critical");
+        assert!(a.hybrid_trips.is_some(), "hybrid cells report the trip counter");
+        assert!(a.cost_node_hours > 0.0);
+        assert!(a.pod_churn > 0, "initial pods count as churn");
+        let doc = CellResult {
+            metrics: a.clone(),
+            wall_secs: 0.0,
+        }
+        .to_json();
+        assert_eq!(doc.get("sla").as_str(), Some("d2000ms:r1:b100ms:q4@0.1:0.7:0.2"));
+        assert_eq!(doc.get("sla_timeouts").as_f64(), Some(a.sla_timeouts as f64));
+        assert!(doc.get("class_response").get("critical").get("n").as_f64().is_some());
+        assert!(doc.get("cost_node_hours").as_f64().unwrap() > 0.0);
+        assert!(doc.get("hybrid_trips").as_f64().is_some());
+
+        let plain = cell(AutoscalerKind::Hpa, None);
+        assert_eq!(plain.sla, "none");
+        assert_eq!(plain.sla_timeouts + plain.sla_violations + plain.sla_shed, 0);
+        assert!(plain.class_response.is_empty());
+        assert_eq!(plain.hybrid_trips, None);
+        let doc = CellResult {
+            metrics: plain,
+            wall_secs: 0.0,
+        }
+        .to_json();
+        assert_eq!(doc.get("sla").as_str(), Some("none"));
+        assert!(matches!(doc.get("hybrid_trips"), &Json::Null));
     }
 }

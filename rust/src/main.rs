@@ -24,10 +24,10 @@
 //! small hand-rolled matcher.)
 
 use anyhow::{bail, Context};
-use ppa_edge::app::TaskCosts;
+use ppa_edge::app::{PriorityMix, SlaConfig, SlaPolicy, TaskCosts};
 use ppa_edge::autoscaler::{
-    Autoscaler, Hpa, HpaConfig, MetricSource, MetricSpec, ScalerPolicy, ScalerRegistry,
-    ScalingBehavior,
+    Autoscaler, Hpa, HpaConfig, Hybrid, HybridConfig, MetricSource, MetricSpec, ScalerPolicy,
+    ScalerRegistry, ScalingBehavior,
 };
 use ppa_edge::experiments::{
     self, fig6_trace, fig7_model_comparison, fig8_update_policies, fig9_fig10_key_metric,
@@ -36,9 +36,12 @@ use ppa_edge::experiments::{
 };
 use ppa_edge::forecast::ForecasterKind;
 use ppa_edge::report;
-use ppa_edge::sim::MIN;
+use ppa_edge::sim::{MIN, MS};
 use ppa_edge::stats::summarize;
-use ppa_edge::workload::{Generator, NasaTraceConfig, RandomAccessGen};
+use ppa_edge::workload::{
+    load_azure_minute_counts, load_minute_counts, Generator, NasaTraceConfig, RandomAccessGen,
+    Scenario,
+};
 
 /// Minimal flag parser: `--key value` pairs after positional args.
 struct Args {
@@ -105,18 +108,22 @@ const USAGE: &str = "ppa-edge — Proactive Pod Autoscaler reproduction (UCC '21
 USAGE:
   ppa-edge experiment <fig6|fig7|fig8|fig9-10|nasa|all>
            [--minutes N] [--hours H] [--pretrain-hours H] [--seed S]
-  ppa-edge run [--scaler hpa|ppa] [--model lstm|arma|naive]
+  ppa-edge run [--scaler hpa|ppa|hybrid] [--model lstm|arma|naive]
            [--forecaster naive|arma|holt-winters|tcn|lstm-rs|auto:K]
            [--metric name:target[:current|:forecast]]...
            [--behavior rules] [--minutes N] [--seed S] [--shards S]
            [--chaos none|node-outage|flaky-pods|slow-network|full-storm]
+           [--sla deadline_ms:retries:backoff_ms[:shed_depth]]
+           [--priority-mix c:s:b] [--trace nasa:FILE|azure:FILE]
   ppa-edge sweep [--minutes N] [--seeds K] [--threads T]
            [--topology paper|city-N[xW][:classes]] [--scenarios a,b,..]
-           [--scalers hpa,ppa-arma,ppa-naive] [--core calendar|heap]
+           [--scalers hpa,ppa-arma,ppa-naive,hybrid] [--core calendar|heap]
            [--forecaster naive|arma|holt-winters|tcn|lstm-rs|auto:K]
            [--metric name:target[:current|:forecast]]...
            [--behavior rules] [--shards S] [--out FILE]
            [--chaos preset] [--node-classes small,medium,large]
+           [--sla deadline_ms:retries:backoff_ms[:shed_depth]]
+           [--priority-mix c:s:b] [--trace nasa:FILE|azure:FILE]
   ppa-edge info
   ppa-edge help | --help | -h
 
@@ -193,6 +200,30 @@ CHAOS (deterministic fault injection):
     ppa-edge sweep --topology city-8 --node-classes small,large \\
              --chaos full-storm --seeds 2 --shards 4
 
+RESILIENCE (SLA plane + hybrid scaler):
+  --sla arms the resilience plane: requests carry a per-attempt
+  deadline (ms); a timed-out attempt retries with deterministic
+  exponential backoff (base ms, seeded jitter from a dedicated SLA RNG
+  stream) until the retry budget is spent, then counts as an SLA
+  violation; Batch arrivals are shed while the target queue is deeper
+  than shed_depth (default: no shedding). --priority-mix sets the
+  Critical:Standard:Batch arrival weights (default 0.1:0.7:0.2; one
+  RNG draw per request, so the mix never perturbs the schedule
+  shape). Without --sla the plane is a strict no-op — bit-identical
+  to a build without it. --scaler hybrid (run) / --scalers ..,hybrid
+  (sweep) runs the SLA-guarded hybrid: the proactive PPA baseline
+  plus a reactive override that trips on the SLA-violation-rate
+  signal or a forecast-error z-spike and releases after consecutive
+  clean ticks. Sweeps under --sla add per-class response stats, SLA
+  counters, the cost ledger (cost_node_hours, pod_churn) and a
+  cost-vs-violation-minutes Pareto table. Faulted SLA example:
+    ppa-edge sweep --topology city-8 --chaos full-storm \\
+             --sla 500:2:100:64 --scalers ppa-arma,hybrid --shards 4
+  --trace replays a request trace on every edge zone instead of the
+  preset scenarios: nasa:FILE (one per-minute count per line) or
+  azure:FILE (Azure Functions per-minute invocation CSV, summed
+  across function rows).
+
 Full flag reference: docs/CLI.md (including the sweep JSON schema).
 Artifacts must exist for LSTM experiments: run `make artifacts`.";
 
@@ -222,6 +253,115 @@ fn behavior_flag(
     args.get("behavior")
         .map(|s| ScalingBehavior::parse(s, default_down_window))
         .transpose()
+}
+
+/// `--sla deadline_ms:retries:backoff_ms[:shed_depth]` plus the
+/// optional `--priority-mix c:s:b`, as one resilience-plane config
+/// (None when `--sla` is absent — the plane stays a strict no-op).
+fn sla_flag(args: &Args) -> anyhow::Result<Option<SlaConfig>> {
+    let Some(raw) = args.get("sla") else {
+        if args.get("priority-mix").is_some() {
+            bail!("--priority-mix needs --sla (the resilience plane is off without a policy)");
+        }
+        return Ok(None);
+    };
+    let parts: Vec<&str> = raw.split(':').collect();
+    if parts.len() < 3 || parts.len() > 4 {
+        bail!(
+            "--sla must be deadline_ms:retries:backoff_ms[:shed_depth], e.g. 500:2:100:64 \
+             (got '{raw}')"
+        );
+    }
+    let deadline_ms: u64 = parts[0]
+        .parse()
+        .with_context(|| format!("--sla deadline '{}' must be integer ms", parts[0]))?;
+    let max_retries: u32 = parts[1]
+        .parse()
+        .with_context(|| format!("--sla retries '{}' must be an integer", parts[1]))?;
+    let backoff_ms: u64 = parts[2]
+        .parse()
+        .with_context(|| format!("--sla backoff '{}' must be integer ms", parts[2]))?;
+    let shed_queue_depth: usize = match parts.get(3) {
+        Some(d) => d
+            .parse()
+            .with_context(|| format!("--sla shed_depth '{d}' must be an integer"))?,
+        None => usize::MAX, // no admission control
+    };
+    if deadline_ms == 0 || backoff_ms == 0 {
+        bail!("--sla deadline and backoff must be positive");
+    }
+    let mut cfg = SlaConfig::new(SlaPolicy {
+        deadline: deadline_ms * MS,
+        max_retries,
+        backoff_base: backoff_ms * MS,
+        shed_queue_depth,
+    });
+    if let Some(mix) = args.get("priority-mix") {
+        let w: Vec<f64> = mix
+            .split(':')
+            .map(|p| p.parse::<f64>())
+            .collect::<Result<_, _>>()
+            .with_context(|| format!("--priority-mix must be c:s:b numbers (got '{mix}')"))?;
+        if w.len() != 3 || w.iter().any(|v| !v.is_finite() || *v < 0.0) || w.iter().sum::<f64>() <= 0.0
+        {
+            bail!("--priority-mix needs three non-negative weights with a positive sum, e.g. 0.1:0.7:0.2");
+        }
+        cfg.mix = PriorityMix {
+            critical: w[0],
+            standard: w[1],
+            batch: w[2],
+        };
+    }
+    Ok(Some(cfg))
+}
+
+/// `--trace nasa:FILE|azure:FILE` — a per-minute request trace replayed
+/// on every edge zone in `zones` (None when the flag is absent).
+fn trace_flag(args: &Args, zones: Vec<u32>) -> anyhow::Result<Option<(String, Scenario)>> {
+    const ACCEPTED: &str = "accepted trace formats: nasa:<path> (one per-minute count per \
+                            line) | azure:<path> (Azure Functions per-minute invocation CSV)";
+    let Some(raw) = args.get("trace") else {
+        return Ok(None);
+    };
+    let (format, path) = raw
+        .split_once(':')
+        .with_context(|| format!("--trace must be <format>:<path>; {ACCEPTED}"))?;
+    let counts = match format {
+        "nasa" => load_minute_counts(std::path::Path::new(path))?,
+        "azure" => load_azure_minute_counts(std::path::Path::new(path))?,
+        other => bail!("unknown trace format '{other}'; {ACCEPTED}"),
+    };
+    let name = format!("{format}-trace");
+    let scenario = Scenario::Trace {
+        counts: std::sync::Arc::new(counts),
+        scale: 1.0,
+        zones,
+        stagger: 0,
+    };
+    Ok(Some((name, scenario)))
+}
+
+/// One-block SLA + cost-ledger tally for `run` (both engines).
+fn print_sla_summary(s: &ppa_edge::app::SlaSummary, cost_node_hours: f64, pod_churn: u64) {
+    let c = &s.counters;
+    println!(
+        "  SLA: {} timeouts, {} retries, {} violations ({} violation-minute(s)), {} shed",
+        c.timeouts, c.retries, c.violations, c.violation_minutes, c.shed
+    );
+    let classes = ["critical", "standard", "batch"];
+    let per_class: Vec<String> = classes
+        .iter()
+        .zip(s.class_stats.iter())
+        .map(|(name, st)| {
+            if st.n() == 0 {
+                format!("{name} -")
+            } else {
+                format!("{name} {:.3}s (n={})", st.mean(), st.n())
+            }
+        })
+        .collect();
+    println!("  per-class resp: {}", per_class.join(", "));
+    println!("  cost: {cost_node_hours:.3} node-hours billed, {pod_churn} pod(s) spawned");
 }
 
 fn main() {
@@ -347,6 +487,8 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let shards = args.get_u64("shards", 0)? as usize;
     let chaos = ppa_edge::config::chaos_preset(args.get("chaos").unwrap_or("none"))?;
 
+    let sla = sla_flag(args)?;
+
     // The preset library follows the topology: Table-2 scenarios on
     // `paper`, generated N-zone `cityN-*` composites on `city-N[xW]`.
     let presets = topology.scenario_presets();
@@ -367,6 +509,19 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             }
             picked
         }
+    };
+    // `--trace` replaces the scenario axis with one replayed trace on
+    // every edge zone of the chosen topology.
+    let edge_zones: Vec<u32> =
+        topology.cluster().deployments.iter().filter_map(|d| d.zone).collect();
+    let scenarios = match trace_flag(args, edge_zones)? {
+        Some((name, scenario)) => {
+            if args.get("scenarios").is_some() {
+                bail!("--trace and --scenarios are mutually exclusive");
+            }
+            vec![(name, scenario)]
+        }
+        None => scenarios,
     };
     // `--forecaster` swaps every PPA cell's model for a zoo member
     // (both PPA kinds honour it; the HPA ignores it). With the flag set
@@ -415,17 +570,19 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         fleet,
         shards,
         chaos,
+        sla,
     };
 
     println!(
         "sweeping {} scenarios x {} autoscalers x {} seeds on topology {}, \
-         {} sim-minutes per cell (chaos: {})...",
+         {} sim-minutes per cell (chaos: {}, sla: {})...",
         cfg.scenarios.len(),
         cfg.scalers.len(),
         cfg.seeds.len(),
         cfg.topology.label(),
         minutes,
-        cfg.chaos.label()
+        cfg.chaos.label(),
+        cfg.sla.as_ref().map_or_else(|| "none".to_string(), SlaConfig::label)
     );
     let result = run_sweep(&cfg)?;
     report::print_sweep(&result);
@@ -451,20 +608,45 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
                  paper's lstm|arma|naive stack, --forecaster a pure-Rust zoo member"
             );
         }
-        if scaler != "ppa" {
-            bail!("--forecaster needs --scaler ppa (the HPA runs no prediction model)");
+        if scaler != "ppa" && scaler != "hybrid" {
+            bail!("--forecaster needs --scaler ppa|hybrid (the HPA runs no prediction model)");
         }
     }
     let shards = args.get_u64("shards", 0)? as usize;
     let chaos = ppa_edge::config::chaos_preset(args.get("chaos").unwrap_or("none"))?;
+    let sla = sla_flag(args)?;
+    // The paper run drives zones 1 and 2 with random-access clients
+    // unless `--trace` replays a file on them instead.
+    let generators = match trace_flag(args, vec![1, 2])? {
+        Some((name, scenario)) => {
+            println!("replaying {name} on zones 1-2");
+            scenario.build_generators()
+        }
+        None => vec![
+            Generator::RandomAccess(RandomAccessGen::new(1)),
+            Generator::RandomAccess(RandomAccessGen::new(2)),
+        ],
+    };
     if shards >= 1 {
-        return cmd_run_sharded(args, minutes, seed, scaler, model, forecaster, shards, &chaos);
+        return cmd_run_sharded(
+            args,
+            minutes,
+            seed,
+            scaler,
+            model,
+            forecaster,
+            shards,
+            &chaos,
+            sla.as_ref(),
+            generators,
+        );
     }
 
     let cfg = ppa_edge::config::paper_cluster();
     let mut world = SimWorld::build(&cfg, TaskCosts::default(), seed);
-    world.add_generator(Generator::RandomAccess(RandomAccessGen::new(1)));
-    world.add_generator(Generator::RandomAccess(RandomAccessGen::new(2)));
+    for gen in generators {
+        world.add_generator(gen);
+    }
     let n_services = world.app.services.len();
 
     match scaler {
@@ -500,6 +682,31 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
                 world.add_scaler(Box::new(ppa), svc);
             }
         }
+        "hybrid" => {
+            // The SLA-guarded hybrid: proactive baseline (zoo model,
+            // ARMA by default) + reactive override. Trains online like
+            // the zoo PPAs — no pretraining pass.
+            let kind = forecaster.unwrap_or(ForecasterKind::Arma);
+            let specs = metric_flags(args, MetricSource::Forecast)?;
+            let behavior = behavior_flag(args, 2 * ppa_edge::sim::MIN)?;
+            for svc in 0..n_services {
+                let mut cfg = ppa_edge::autoscaler::PpaConfig::default();
+                if let Some(specs) = &specs {
+                    cfg.specs = specs.clone();
+                }
+                if let Some(behavior) = behavior {
+                    cfg.behavior = behavior;
+                }
+                let hybrid = Hybrid::new(
+                    HybridConfig {
+                        ppa: cfg,
+                        ..HybridConfig::default()
+                    },
+                    kind.build(seed),
+                );
+                world.add_scaler(Box::new(hybrid), svc);
+            }
+        }
         "ppa" => {
             let runtime = if model == ModelKind::Lstm {
                 Some(experiments::try_runtime().context(
@@ -533,17 +740,21 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
                 world.add_scaler(Box::new(ppa), svc);
             }
         }
-        other => bail!("unknown scaler '{other}' (hpa|ppa)"),
+        other => bail!("unknown scaler '{other}' (hpa|ppa|hybrid)"),
     }
 
     world.install_chaos(&chaos, seed, minutes * MIN);
+    if let Some(cfg) = &sla {
+        world.install_sla(cfg, seed);
+    }
     let model_label = match forecaster {
         Some(kind) => kind.name(),
         None => model.name().to_string(),
     };
     println!(
-        "running {minutes} simulated minutes with {scaler} ({model_label}), chaos: {}...",
-        chaos.label()
+        "running {minutes} simulated minutes with {scaler} ({model_label}), chaos: {}, sla: {}...",
+        chaos.label(),
+        sla.as_ref().map_or_else(|| "none".to_string(), SlaConfig::label)
     );
     let wall = ppa_edge::util::wallclock();
     let events = world.run_until(minutes * MIN);
@@ -581,9 +792,23 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         if let Some(selection) = ppa.and_then(|p| p.selection()) {
             print_selection(svc, &selection);
         }
+        if let Some(h) = binding.autoscaler.as_any().downcast_ref::<Hybrid>() {
+            println!(
+                "  service {svc} hybrid: {} override trip(s), {} overridden tick(s)",
+                h.trips(),
+                h.override_ticks()
+            );
+        }
     }
     if !chaos.is_empty() {
         print_chaos_summary(&world.chaos_summary(minutes * MIN));
+    }
+    if world.app.sla_active() {
+        print_sla_summary(
+            &world.sla_summary(),
+            world.cost_node_hours(minutes * MIN),
+            world.cluster.pod_churn,
+        );
     }
     Ok(())
 }
@@ -634,14 +859,12 @@ fn cmd_run_sharded(
     forecaster: Option<ForecasterKind>,
     shards: usize,
     chaos: &ppa_edge::cluster::FaultPlan,
+    sla: Option<&SlaConfig>,
+    generators: Vec<Generator>,
 ) -> anyhow::Result<()> {
     use ppa_edge::sim::{run_sharded, ShardSpec};
 
     let cfg = ppa_edge::config::paper_cluster();
-    let generators = vec![
-        Generator::RandomAccess(RandomAccessGen::new(1)),
-        Generator::RandomAccess(RandomAccessGen::new(2)),
-    ];
     // World order == service order: edge zones in config order, then the
     // cloud pool; the scaler factory sees the global world index.
     let n_services = cfg.deployments.len();
@@ -653,6 +876,7 @@ fn cmd_run_sharded(
         end: minutes * MIN,
         record_decisions: false,
         chaos: *chaos,
+        sla: sla.copied(),
     };
 
     let model_label = match forecaster {
@@ -661,8 +885,9 @@ fn cmd_run_sharded(
     };
     println!(
         "running {minutes} simulated minutes with {scaler} ({model_label}) on {shards} \
-         shard(s), chaos: {}...",
-        chaos.label()
+         shard(s), chaos: {}, sla: {}...",
+        chaos.label(),
+        sla.map_or_else(|| "none".to_string(), SlaConfig::label)
     );
     let wall = ppa_edge::util::wallclock();
     let run = match scaler {
@@ -739,7 +964,31 @@ fn cmd_run_sharded(
             };
             run_sharded(&cfg, generators, &factory, &spec)?
         }
-        other => bail!("unknown scaler '{other}' (hpa|ppa)"),
+        "hybrid" => {
+            // Proactive PPA baseline with the reactive SLA guardrail; the
+            // forecaster axis is shared with the zoo-ppa arm above.
+            let kind = forecaster.unwrap_or(ForecasterKind::Arma);
+            let specs = metric_flags(args, MetricSource::Forecast)?;
+            let behavior = behavior_flag(args, 2 * ppa_edge::sim::MIN)?;
+            let factory = |_svc: usize| -> Box<dyn Autoscaler> {
+                let mut cfg = ppa_edge::autoscaler::PpaConfig::default();
+                if let Some(specs) = &specs {
+                    cfg.specs = specs.clone();
+                }
+                if let Some(behavior) = behavior {
+                    cfg.behavior = behavior;
+                }
+                Box::new(Hybrid::new(
+                    HybridConfig {
+                        ppa: cfg,
+                        ..HybridConfig::default()
+                    },
+                    kind.build(seed),
+                ))
+            };
+            run_sharded(&cfg, generators, &factory, &spec)?
+        }
+        other => bail!("unknown scaler '{other}' (hpa|ppa|hybrid)"),
     };
     let elapsed = wall.elapsed();
 
@@ -777,6 +1026,12 @@ fn cmd_run_sharded(
     }
     if !chaos.is_empty() {
         print_chaos_summary(&run.chaos_counters());
+    }
+    if sla.is_some() {
+        print_sla_summary(&run.sla_summary(), run.cost_node_hours(), run.pod_churn());
+    }
+    if let (Some(trips), Some(ticks)) = (run.hybrid_trips(), run.hybrid_override_ticks()) {
+        println!("  hybrid: {trips} override trip(s), {ticks} overridden tick(s)");
     }
     println!("  fingerprint: identical for any --shards >= 1 at this seed");
     Ok(())

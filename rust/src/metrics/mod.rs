@@ -93,6 +93,10 @@ pub struct ServiceSeries {
     pub rir: SeriesId,
     /// `<svc>.queue_depth`
     pub queue_depth: SeriesId,
+    /// `<svc>.sla_violations` — SLA violations per second over the
+    /// scrape window (constant 0 without an installed policy). The
+    /// hybrid scaler's reactive override watches this series.
+    pub sla_violations: SeriesId,
 }
 
 impl ServiceSeries {
@@ -106,6 +110,7 @@ impl ServiceSeries {
             replicas: tsdb.register(&format!("{service_name}.replicas")),
             rir: tsdb.register(&format!("{service_name}.rir")),
             queue_depth: tsdb.register(&format!("{service_name}.queue_depth")),
+            sla_violations: tsdb.register(&format!("{service_name}.sla_violations")),
         }
     }
 }
@@ -118,6 +123,10 @@ pub struct MetricsPipeline {
     last_scrape: Time,
     /// Latest snapshot per service (adapter "current value" cache).
     latest: Vec<ServiceSnapshot>,
+    /// Latest SLA violation rate per service (violations/s over the
+    /// last scrape window; 0 without a policy) — the hybrid scaler's
+    /// reactive-override signal.
+    latest_violation_rate: Vec<f64>,
     /// Per-service interned handle bundles, index-aligned with services.
     service_series: Vec<ServiceSeries>,
     /// Constant per-pod CPU fraction burned while Running (interpreter /
@@ -162,6 +171,7 @@ impl MetricsPipeline {
             scrape_interval,
             last_scrape: 0,
             latest: vec![ServiceSnapshot::default(); service_series.len()],
+            latest_violation_rate: vec![0.0; service_series.len()],
             service_series,
             base_burn: base_burn.clamp(0.0, 1.0),
         }
@@ -244,6 +254,10 @@ impl MetricsPipeline {
             }
             self.tsdb
                 .push(handles.queue_depth, now, svc.queue.len() as f64);
+            let violation_rate = c.sla_violations as f64 / interval_secs;
+            self.latest_violation_rate[svc_idx] = violation_rate;
+            self.tsdb
+                .push(handles.sla_violations, now, violation_rate);
         }
         self.last_scrape = now;
     }
@@ -261,6 +275,12 @@ impl MetricsPipeline {
     /// Adapter: the latest full snapshot.
     pub fn latest_snapshot(&self, svc: ServiceId) -> ServiceSnapshot {
         self.latest[svc.0 as usize]
+    }
+
+    /// Adapter: the latest SLA violation rate (violations/s over the
+    /// last scrape window; constant 0 without an installed policy).
+    pub fn latest_violation_rate(&self, svc: ServiceId) -> f64 {
+        self.latest_violation_rate[svc.0 as usize]
     }
 
     /// The interned handle bundle of a service.
@@ -299,6 +319,12 @@ impl MetricsPipeline {
             requested_millis: replicas as f64 * 500.0,
             used_millis: vector[M_CPU] / 100.0 * 500.0,
         };
+    }
+
+    /// Test/bench helper: inject an SLA violation rate without a scrape.
+    #[doc(hidden)]
+    pub fn test_set_violation_rate(&mut self, svc: ServiceId, rate: f64) {
+        self.latest_violation_rate[svc.0 as usize] = rate;
     }
 }
 
@@ -431,6 +457,7 @@ mod tests {
                 (handles.replicas, "replicas"),
                 (handles.rir, "rir"),
                 (handles.queue_depth, "queue_depth"),
+                (handles.sla_violations, "sla_violations"),
             ] {
                 let by_name = mp.range(&format!("{name}.{suffix}"), 60 * SEC, 60 * SEC);
                 let by_id: Vec<(Time, f64)> = mp.range_of(id, 60 * SEC, 60 * SEC).collect();
@@ -448,7 +475,9 @@ mod tests {
         let (mut app, mut cluster, mut q, mut rng, mut mp) = world();
         cluster.reconcile(DeploymentId(0), 1, &mut q, &mut rng);
         let before = mp.tsdb.series_count();
-        assert_eq!(before, app.services.len() * (METRIC_DIM + 3));
+        // METRIC_DIM protocol metrics + replicas + rir + queue_depth +
+        // sla_violations per service.
+        assert_eq!(before, app.services.len() * (METRIC_DIM + 4));
         for tick in 1..=20u64 {
             mp.scrape(tick * 10 * SEC, &mut cluster, &mut app);
         }

@@ -180,9 +180,10 @@ pub fn print_nasa_eval(eval: &NasaEval) {
 /// Per-cell sweep table headers. `selective` appends the champion
 /// column (printed when any cell ran champion–challenger selection);
 /// `chaotic` appends the fault columns, printed when any cell ran under
-/// a non-empty fault plan. Pinned by `sweep_headers_are_pinned` —
-/// downstream tooling parses these.
-pub fn sweep_headers(selective: bool, chaotic: bool) -> Vec<&'static str> {
+/// a non-empty fault plan; `sla` appends the resilience columns,
+/// printed when any cell ran under an SLA policy. Pinned by
+/// `sweep_headers_are_pinned` — downstream tooling parses these.
+pub fn sweep_headers(selective: bool, chaotic: bool, sla: bool) -> Vec<&'static str> {
     let mut headers = vec![
         "scenario", "scaler", "seed", "sort (s)", "p95", "RIR", "RIR p95", "repl μ/max",
         "pred MSE", "served",
@@ -193,11 +194,21 @@ pub fn sweep_headers(selective: bool, chaotic: bool) -> Vec<&'static str> {
     if chaotic {
         headers.extend(["faults", "crash/rejoin", "resched", "down (s)", "cold p95"]);
     }
+    if sla {
+        headers.extend([
+            "t/o", "retry", "viol", "shed", "viol min", "cost (nh)", "churn", "trips",
+        ]);
+    }
     headers
 }
 
 /// One per-cell sweep row, matching [`sweep_headers`] column for column.
-fn sweep_row(m: &crate::experiments::CellMetrics, selective: bool, chaotic: bool) -> Vec<String> {
+fn sweep_row(
+    m: &crate::experiments::CellMetrics,
+    selective: bool,
+    chaotic: bool,
+    sla: bool,
+) -> Vec<String> {
     let fmt_opt = |v: Option<f64>| v.map_or_else(|| "-".to_string(), |x| format!("{x:.1}"));
     let mut row = vec![
         m.scenario.clone(),
@@ -235,7 +246,80 @@ fn sweep_row(m: &crate::experiments::CellMetrics, selective: bool, chaotic: bool
             "-".to_string()
         });
     }
+    if sla {
+        row.push(m.sla_timeouts.to_string());
+        row.push(m.sla_retries.to_string());
+        row.push(m.sla_violations.to_string());
+        row.push(m.sla_shed.to_string());
+        row.push(m.sla_violation_minutes.to_string());
+        row.push(format!("{:.2}", m.cost_node_hours));
+        row.push(m.pod_churn.to_string());
+        // "-" for cells whose scaler has no reactive override.
+        row.push(m.hybrid_trips.map_or_else(|| "-".to_string(), |t| t.to_string()));
+    }
     row
+}
+
+/// Cost-vs-SLA Pareto table headers (printed when any cell ran under an
+/// SLA policy). Pinned by `sweep_headers_are_pinned`.
+pub fn pareto_headers() -> Vec<&'static str> {
+    vec![
+        "scaler", "cost node-h", "viol min", "violations", "shed", "pod churn", "frontier",
+    ]
+}
+
+/// The cost ledger against the SLA: per scaler — aggregated over
+/// scenarios and seeds — mean node-hours billed vs mean
+/// SLA-violation-minutes. A scaler sits on the Pareto frontier (`*`)
+/// when no other scaler is at-least-as-cheap *and* at-least-as-reliable
+/// with a strict win on one axis.
+pub fn print_cost_sla_pareto(result: &SweepResult) {
+    let mut groups: BTreeMap<String, Vec<&crate::experiments::CellMetrics>> = BTreeMap::new();
+    for c in &result.cells {
+        groups.entry(c.metrics.scaler.clone()).or_default().push(&c.metrics);
+    }
+    // (scaler, mean cost, mean violation-minutes, Σviolations, Σshed, Σchurn)
+    let points: Vec<(String, f64, f64, u64, u64, u64)> = groups
+        .iter()
+        .map(|(scaler, cells)| {
+            let n = cells.len() as f64;
+            let cost: f64 = cells.iter().map(|m| m.cost_node_hours).sum::<f64>() / n;
+            let viol_min: f64 =
+                cells.iter().map(|m| m.sla_violation_minutes as f64).sum::<f64>() / n;
+            let violations: u64 = cells.iter().map(|m| m.sla_violations).sum();
+            let shed: u64 = cells.iter().map(|m| m.sla_shed).sum();
+            let churn: u64 = cells.iter().map(|m| m.pod_churn).sum();
+            (scaler.clone(), cost, viol_min, violations, shed, churn)
+        })
+        .collect();
+    let dominated = |i: usize| {
+        points.iter().enumerate().any(|(j, q)| {
+            j != i
+                && q.1 <= points[i].1
+                && q.2 <= points[i].2
+                && (q.1 < points[i].1 || q.2 < points[i].2)
+        })
+    };
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            vec![
+                p.0.clone(),
+                format!("{:.3}", p.1),
+                format!("{:.1}", p.2),
+                p.3.to_string(),
+                p.4.to_string(),
+                p.5.to_string(),
+                if dominated(i) { "" } else { "*" }.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "Cost vs SLA — node-hours against violation-minutes (means over cells; * = Pareto frontier)",
+        &pareto_headers(),
+        &rows,
+    );
 }
 
 /// Print the scenario sweep: per-cell rows, then per-(scenario, scaler)
@@ -244,16 +328,29 @@ fn sweep_row(m: &crate::experiments::CellMetrics, selective: bool, chaotic: bool
 pub fn print_sweep(result: &SweepResult) {
     let chaotic = result.cells.iter().any(|c| c.metrics.chaos != "none");
     let selective = result.cells.iter().any(|c| !c.metrics.champions.is_empty());
+    let sla = result.cells.iter().any(|c| c.metrics.sla != "none");
     let rows: Vec<Vec<String>> = result
         .cells
         .iter()
-        .map(|c| sweep_row(&c.metrics, selective, chaotic))
+        .map(|c| sweep_row(&c.metrics, selective, chaotic, sla))
         .collect();
     print_table(
         "Scenario sweep — per-cell results",
-        &sweep_headers(selective, chaotic),
+        &sweep_headers(selective, chaotic, sla),
         &rows,
     );
+    if sla {
+        println!(
+            "  SLA: {}",
+            result
+                .cells
+                .iter()
+                .map(|c| c.metrics.sla.as_str())
+                .find(|s| *s != "none")
+                .unwrap_or("none")
+        );
+        print_cost_sla_pareto(result);
+    }
 
     // Aggregate across seeds.
     let mut groups: BTreeMap<(String, String), Vec<&crate::experiments::CellMetrics>> =
@@ -346,7 +443,35 @@ mod tests {
             crash_loops: 0,
             downtime_secs: if chaos == "none" { 0.0 } else { 90.5 },
             cold_start_p95: f64::NAN,
+            sla: "none".into(),
+            sla_timeouts: 0,
+            sla_retries: 0,
+            sla_violations: 0,
+            sla_shed: 0,
+            sla_violation_minutes: 0,
+            class_response: vec![],
+            cost_node_hours: 1.25,
+            pod_churn: 7,
+            hybrid_trips: None,
+            hybrid_override_ticks: None,
         }
+    }
+
+    /// A fixture with the resilience plane on (tight SLA, hybrid scaler).
+    fn sla_cell_metrics(scaler: &str, cost: f64, viol_min: u64) -> crate::experiments::CellMetrics {
+        let mut m = cell_metrics("none");
+        m.scaler = scaler.into();
+        m.sla = "d500ms:r2:b100ms:q64@0.1:0.7:0.2".into();
+        m.sla_timeouts = 12;
+        m.sla_retries = 8;
+        m.sla_violations = 4;
+        m.sla_shed = 3;
+        m.sla_violation_minutes = viol_min;
+        m.cost_node_hours = cost;
+        m.pod_churn = 9;
+        m.hybrid_trips = if scaler == "hybrid" { Some(2) } else { None };
+        m.hybrid_override_ticks = if scaler == "hybrid" { Some(6) } else { None };
+        m
     }
 
     #[test]
@@ -373,32 +498,95 @@ mod tests {
         // Downstream tooling parses these columns — changes here must be
         // deliberate (update this pin and docs/CLI.md together).
         assert_eq!(
-            sweep_headers(false, false),
+            sweep_headers(false, false, false),
             vec![
                 "scenario", "scaler", "seed", "sort (s)", "p95", "RIR", "RIR p95",
                 "repl μ/max", "pred MSE", "served",
             ]
         );
         assert_eq!(
-            sweep_headers(true, true),
+            sweep_headers(true, true, false),
             vec![
                 "scenario", "scaler", "seed", "sort (s)", "p95", "RIR", "RIR p95",
                 "repl μ/max", "pred MSE", "served", "champion", "faults", "crash/rejoin",
                 "resched", "down (s)", "cold p95",
             ]
         );
+        assert_eq!(
+            sweep_headers(false, false, true),
+            vec![
+                "scenario", "scaler", "seed", "sort (s)", "p95", "RIR", "RIR p95",
+                "repl μ/max", "pred MSE", "served", "t/o", "retry", "viol", "shed",
+                "viol min", "cost (nh)", "churn", "trips",
+            ]
+        );
         // Rows line up with headers in every mode; fault cells render
         // counters and the no-pod-chaos NaN as "-".
-        let plain = sweep_row(&cell_metrics("none"), false, false);
-        assert_eq!(plain.len(), sweep_headers(false, false).len());
-        let faulted = sweep_row(&cell_metrics("crash"), true, true);
-        assert_eq!(faulted.len(), sweep_headers(true, true).len());
+        let plain = sweep_row(&cell_metrics("none"), false, false, false);
+        assert_eq!(plain.len(), sweep_headers(false, false, false).len());
+        let faulted = sweep_row(&cell_metrics("crash"), true, true, false);
+        assert_eq!(faulted.len(), sweep_headers(true, true, false).len());
         assert_eq!(faulted[10], "-", "no selecting forecaster in this cell");
         assert_eq!(faulted[11], "crash");
         assert_eq!(faulted[12], "3/2");
         assert_eq!(faulted[13], "5");
         assert_eq!(faulted[14], "90.5");
         assert_eq!(faulted[15], "-");
+    }
+
+    #[test]
+    fn sla_columns_are_pinned() {
+        // The resilience columns, value for value (hybrid cell), and the
+        // "-" trips placeholder on non-hybrid scalers.
+        let hybrid = sweep_row(&sla_cell_metrics("hybrid", 1.5, 4), false, false, true);
+        assert_eq!(hybrid.len(), sweep_headers(false, false, true).len());
+        assert_eq!(&hybrid[10..], &["12", "8", "4", "3", "4", "1.50", "9", "2"]);
+        let hpa = sweep_row(&sla_cell_metrics("hpa", 1.5, 4), false, false, true);
+        assert_eq!(hpa[17], "-", "no override counter on reactive scalers");
+        assert_eq!(pareto_headers(), vec![
+            "scaler", "cost node-h", "viol min", "violations", "shed", "pod churn", "frontier",
+        ]);
+    }
+
+    #[test]
+    fn pareto_frontier_marks_non_dominated_scalers() {
+        use crate::experiments::sweep::{CellResult, SweepResult};
+        // hybrid: cheap AND reliable (dominates hpa); ppa-arma: cheapest
+        // but unreliable (frontier); hpa: dominated on both axes.
+        let cells = vec![
+            ("hybrid", 1.0, 2),
+            ("hpa", 2.0, 5),
+            ("ppa-arma", 0.5, 9),
+        ];
+        let result = SweepResult {
+            topology: "paper".into(),
+            core: crate::sim::CoreKind::Calendar,
+            shards: 0,
+            cells: cells
+                .into_iter()
+                .map(|(s, c, v)| CellResult {
+                    metrics: sla_cell_metrics(s, c, v),
+                    wall_secs: 0.1,
+                })
+                .collect(),
+            minutes: 5,
+            threads_used: 1,
+            wall_secs: 0.2,
+        };
+        // Exercise the full printer (panic = fail) ...
+        print_sweep(&result);
+        print_cost_sla_pareto(&result);
+        // ... and pin the dominance rule itself: recompute the frontier
+        // the same way the table does.
+        let dominated = |p: (f64, f64), others: &[(f64, f64)]| {
+            others
+                .iter()
+                .any(|q| q.0 <= p.0 && q.1 <= p.1 && (q.0 < p.0 || q.1 < p.1))
+        };
+        let pts = [(1.0, 2.0), (2.0, 5.0), (0.5, 9.0)];
+        assert!(!dominated(pts[0], &[pts[1], pts[2]]), "hybrid on frontier");
+        assert!(dominated(pts[1], &[pts[0], pts[2]]), "hpa dominated by hybrid");
+        assert!(!dominated(pts[2], &[pts[0], pts[1]]), "cheap ppa-arma on frontier");
     }
 
     #[test]
@@ -409,8 +597,8 @@ mod tests {
             "arma(1,1)".into(),
             "holt-winters(30)".into(),
         ];
-        let row = sweep_row(&m, true, false);
-        assert_eq!(row.len(), sweep_headers(true, false).len());
+        let row = sweep_row(&m, true, false, false);
+        assert_eq!(row.len(), sweep_headers(true, false, false).len());
         assert_eq!(row[10], "arma(1,1)+holt-winters(30)");
     }
 }

@@ -110,6 +110,13 @@ pub enum Event {
     NodeCrash { node: NodeId },
     /// Chaos plane: a crashed node rejoins the cluster.
     NodeRejoin { node: NodeId },
+    /// Resilience plane: a request's per-attempt deadline expired
+    /// (fires at `created + deadline`, and for retries at
+    /// `retry_arrival + deadline`). Only scheduled when an
+    /// `SlaPolicy` is installed — absent from SLA-free runs, so those
+    /// stay byte-identical to pre-resilience builds. A stale handle
+    /// (the request already completed) makes this a no-op.
+    RequestTimeout { request_id: RequestId },
 }
 
 #[cfg(test)]

@@ -51,8 +51,8 @@
 use std::sync::{Barrier, Mutex};
 
 use super::{CoreKind, Event, EventQueue, ServiceId, Time};
-use crate::app::{App, ForwardedTask, ResponseStats, TaskCosts};
-use crate::autoscaler::{specs_label, Autoscaler, Ppa};
+use crate::app::{App, ForwardedTask, ResponseStats, SlaConfig, SlaSummary, TaskCosts};
+use crate::autoscaler::{specs_label, Autoscaler, Hybrid, Ppa};
 use crate::cluster::{
     chaos_net_stream, chaos_pod_stream, chaos_schedule_stream, schedule_node_faults,
     ChaosCounters, Cluster, DeploymentId, FaultPlan, NetChaos, NodeSpec, PodChaos, Selector,
@@ -98,6 +98,18 @@ pub struct ShardSpec {
     /// non-negative, so it only pushes forward arrivals later and the
     /// conservative-lookahead argument is untouched.
     pub chaos: FaultPlan,
+    /// Resilience plane (see `app::SlaConfig`). `None` is a strict
+    /// no-op — no SLA RNG, no timeout events, no priority draws — so
+    /// SLA-free runs stay bit-identical to pre-resilience builds. Each
+    /// world draws from its own `sla_stream(world)`, so SLA'd runs stay
+    /// bit-identical for every shard count: timeout/retry events are
+    /// strictly intra-world (a retry re-arrives in the same world's
+    /// queue), leaving the conservative lookahead untouched. Edge worlds
+    /// draw each request's priority at submit (carried inside
+    /// [`ForwardedTask`]); the cloud world sheds `Batch` forwards and
+    /// arms deadlines at delivery, in the shard-count-invariant barrier
+    /// merge order.
+    pub sla: Option<SlaConfig>,
 }
 
 /// One zone world's slice of the topology: its nodes plus its single
@@ -265,6 +277,12 @@ impl ZoneWorld {
                     nd,
                 )));
             }
+        }
+        // Resilience plane: per-world SLA stream, so priority draws and
+        // backoff jitter are independent of the shard grouping. Absent
+        // policy ⇒ strict no-op (bit-identity with pre-resilience runs).
+        if let Some(sla) = &spec.sla {
+            app.install_sla(sla, spec.seed, world as u32);
         }
         let crashed_at = vec![None; cluster.nodes.len()];
         ZoneWorld {
@@ -446,6 +464,11 @@ impl ZoneWorld {
                             .retry_pending(&mut self.queue, &mut self.rng_cluster);
                     }
                 }
+                Event::RequestTimeout { request_id } => {
+                    // Intra-world: retries re-arrive in this world's own
+                    // queue, so the lookahead argument is untouched.
+                    self.app.on_timeout(request_id, &mut self.queue);
+                }
             }
         }
     }
@@ -455,10 +478,20 @@ impl ZoneWorld {
     /// of the run.
     fn finish(mut self, end: Time) -> WorldOutcome {
         let ppa = self.scaler.as_any().downcast_ref::<Ppa>();
+        let hybrid = self.scaler.as_any().downcast_ref::<Hybrid>();
         let prediction_mse = ppa
             .filter(|p| p.prediction_count() > 0)
-            .map(|p| p.prediction_mse());
-        let selection = ppa.and_then(|p| p.selection());
+            .map(|p| p.prediction_mse())
+            .or_else(|| {
+                hybrid
+                    .filter(|h| h.prediction_count() > 0)
+                    .map(|h| h.prediction_mse())
+            });
+        let selection = ppa
+            .and_then(|p| p.selection())
+            .or_else(|| hybrid.and_then(|h| h.selection()));
+        let hybrid_trips = hybrid.map(|h| h.trips());
+        let hybrid_override_ticks = hybrid.map(|h| h.override_ticks());
         let mut chaos = self.chaos.clone();
         for t in self.crashed_at.iter().flatten() {
             chaos.downtime += end.saturating_sub(*t);
@@ -467,6 +500,11 @@ impl ZoneWorld {
             chaos.crash_loops += pc.crash_loops;
             chaos.init_delays.merge(&pc.init_delays);
         }
+        // Cost ledger: node-hours billed while up (downtime excluded),
+        // plus total pod spawns.
+        let gross = self.cluster.nodes.len() as u64 * end;
+        let cost_node_hours =
+            crate::sim::to_secs(gross.saturating_sub(chaos.downtime)) / 3600.0;
         WorldOutcome {
             world: self.world,
             zone: self.zone,
@@ -479,7 +517,12 @@ impl ZoneWorld {
             decision_log: std::mem::take(&mut self.decision_log),
             prediction_mse,
             selection,
+            hybrid_trips,
+            hybrid_override_ticks,
             chaos,
+            sla: self.app.sla_summary(),
+            cost_node_hours,
+            pod_churn: self.cluster.pod_churn,
         }
     }
 }
@@ -501,8 +544,22 @@ pub struct WorldOutcome {
     /// Champion–challenger state of this world's scaler, when it ran a
     /// selecting forecaster (`--forecaster auto:K`).
     pub selection: Option<SelectionSummary>,
+    /// Reactive-override trips of this world's scaler, when it is a
+    /// [`Hybrid`] (`None` for every other scaler kind).
+    pub hybrid_trips: Option<u64>,
+    /// Control ticks this world's [`Hybrid`] decided under the
+    /// reactive override (`None` for other scaler kinds).
+    pub hybrid_override_ticks: Option<u64>,
     /// This world's fault counters (all-zero on fault-free runs).
     pub chaos: ChaosCounters,
+    /// This world's resilience-plane summary (all-zero without an
+    /// installed `SlaPolicy`).
+    pub sla: SlaSummary,
+    /// Node-hours billed while up (downtime excluded) over this world's
+    /// nodes.
+    pub cost_node_hours: f64,
+    /// Total pods ever spawned in this world (cost-ledger churn).
+    pub pod_churn: u64,
 }
 
 /// A finished sharded run: per-world outcomes in world order (edge zones
@@ -576,6 +633,51 @@ impl ShardedRun {
             acc.merge(&o.chaos);
         }
         acc
+    }
+
+    /// Every world's resilience-plane summary merged in deterministic
+    /// world (== service) order: counters sum, per-class response
+    /// moments combine exactly (Chan/Welford). All-zero without an
+    /// installed `SlaPolicy`.
+    pub fn sla_summary(&self) -> SlaSummary {
+        let mut acc = SlaSummary::default();
+        for o in &self.outcomes {
+            acc.merge(&o.sla);
+        }
+        acc
+    }
+
+    /// Total node-hours billed across worlds (downtime excluded).
+    pub fn cost_node_hours(&self) -> f64 {
+        self.outcomes.iter().map(|o| o.cost_node_hours).sum()
+    }
+
+    /// Total pods ever spawned across worlds (cost-ledger churn).
+    pub fn pod_churn(&self) -> u64 {
+        self.outcomes.iter().map(|o| o.pod_churn).sum()
+    }
+
+    /// Reactive-override trips summed over the worlds whose scaler is a
+    /// [`Hybrid`] (`None` when no world ran one).
+    pub fn hybrid_trips(&self) -> Option<u64> {
+        let trips: Vec<u64> = self.outcomes.iter().filter_map(|o| o.hybrid_trips).collect();
+        if trips.is_empty() {
+            None
+        } else {
+            Some(trips.iter().sum())
+        }
+    }
+
+    /// Ticks decided under the reactive override, summed like
+    /// [`Self::hybrid_trips`] (`None` when no world ran a hybrid).
+    pub fn hybrid_override_ticks(&self) -> Option<u64> {
+        let ticks: Vec<u64> =
+            self.outcomes.iter().filter_map(|o| o.hybrid_override_ticks).collect();
+        if ticks.is_empty() {
+            None
+        } else {
+            Some(ticks.iter().sum())
+        }
     }
 
     /// All RIR samples merged by time (stable: equal-time samples keep
@@ -811,6 +913,7 @@ mod tests {
             end,
             record_decisions: true,
             chaos: FaultPlan::none(),
+            sla: None,
         }
     }
 
@@ -844,6 +947,7 @@ mod tests {
             ForwardedTask {
                 origin_zone: 1,
                 submitted: window,
+                priority: crate::app::Priority::Standard,
             },
             &mut cloud.queue,
         );
@@ -1005,5 +1109,52 @@ mod tests {
         }
         // A faulted run must differ from the fault-free run of the seed.
         assert_ne!(one.fingerprint(), sharded_quickstart(1, 42).fingerprint());
+    }
+
+    /// Tentpole invariant: an SLA'd run — deadlines, retries, priority
+    /// draws and shedding all active — is bit-identical for every shard
+    /// count, resilience counters included; and `sla: None` reproduces
+    /// the pre-resilience run of the same seed bit-for-bit.
+    #[test]
+    fn sla_shard_counts_are_bit_identical_and_none_is_noop() {
+        use crate::app::{PriorityMix, SlaConfig, SlaPolicy};
+        use crate::sim::{MS, SEC};
+        let tight = SlaConfig {
+            policy: SlaPolicy {
+                deadline: 2 * SEC,
+                max_retries: 2,
+                backoff_base: 100 * MS,
+                shed_queue_depth: 4,
+            },
+            mix: PriorityMix::default(),
+        };
+        let run = |shards| {
+            let cfg = quickstart_cluster();
+            let gens = vec![Generator::RandomAccess(RandomAccessGen::new(1))];
+            let sp = ShardSpec {
+                sla: Some(tight),
+                ..spec(shards, 42, 6 * MIN)
+            };
+            run_sharded(&cfg, gens, &|_| Box::new(Hpa::with_defaults()), &sp).unwrap()
+        };
+        let one = run(1);
+        let two = run(2);
+        let four = run(4);
+        let s = one.sla_summary();
+        assert!(s.counters.timeouts > 0, "tight deadline must fire: {s:?}");
+        for other in [&two, &four] {
+            assert_eq!(one.fingerprint(), other.fingerprint(), "response streams");
+            assert_eq!(one.events(), other.events(), "event counts");
+            assert_eq!(s.counters, other.sla_summary().counters, "sla counters");
+        }
+        // Per-class moments merge identically across shard counts.
+        for (a, b) in s.class_stats.iter().zip(four.sla_summary().class_stats.iter()) {
+            assert_eq!(a.fingerprint(), b.fingerprint(), "class stats");
+        }
+        // `sla: None` is byte-identical to the pre-resilience build (the
+        // plain quickstart run) — and distinct from the SLA'd run.
+        let plain = sharded_quickstart(1, 42);
+        assert!(plain.sla_summary().counters.is_zero());
+        assert_ne!(one.fingerprint(), plain.fingerprint());
     }
 }

@@ -19,7 +19,7 @@
 //! Plus reproducibility: a faulted sweep cell is bit-identical across
 //! repeated runs and across shard counts 1/2/4.
 
-use ppa_edge::app::TaskCosts;
+use ppa_edge::app::{SlaConfig, SlaCounters, SlaPolicy, TaskCosts};
 use ppa_edge::autoscaler::Hpa;
 use ppa_edge::cluster::{
     ChaosCounters, ColdStartPlan, CrashLoopPlan, FaultPlan, NetDelayPlan, NodeCrashPlan,
@@ -123,6 +123,74 @@ fn recovery_battery_64_seed_fault_storms() {
     assert!(battery.init_delays.n() > 0, "no cold start was ever sampled");
 }
 
+/// A deliberately tight SLA so the deadline/retry/shed machinery fires
+/// hard while the storm rages: sub-second deadline, one retry, shallow
+/// admission queue.
+fn tight_sla() -> SlaConfig {
+    SlaConfig::new(SlaPolicy {
+        deadline: 400 * MS,
+        max_retries: 1,
+        backoff_base: 50 * MS,
+        shed_queue_depth: 8,
+    })
+}
+
+/// The resilience-plane battery: 32 seeded fault storms with the tight
+/// SLA armed, stepped in 15-second slices with the index plane
+/// re-verified at every boundary. Pins the request-conservation
+/// invariant — every submission the SLA'd faulted world receives ends
+/// exactly one way (completed, still in flight, shed, or
+/// violation-dropped), so the four buckets sum to the fault-free
+/// SLA-free twin's completed + in-flight count (both worlds draw the
+/// identical arrival stream; the SLA priority draws live on their own
+/// RNG stream). Also pins the counter identity `timeouts = retries +
+/// violations` per world, and that the battery as a whole exercised
+/// every resilience axis.
+#[test]
+fn sla_deadline_battery_under_fault_storms() {
+    const END: Time = 3 * MIN;
+    const SLICE: Time = 15 * SEC;
+
+    let sla = tight_sla();
+    let mut totals = SlaCounters::default();
+    for seed in 0..32u64 {
+        let mut faulted = build_world(seed, true, END);
+        faulted.install_sla(&sla, seed);
+
+        let mut t = SLICE;
+        while t <= END {
+            faulted.run_until(t);
+            faulted.cluster.verify_indices();
+            t += SLICE;
+        }
+
+        let c = faulted.app.sla_summary().counters;
+        assert_eq!(
+            c.timeouts,
+            c.retries + c.violations,
+            "seed {seed}: every deadline expiry must be a retry or a violation"
+        );
+
+        let mut clean = build_world(seed, false, END);
+        clean.run_until(END);
+        assert_eq!(
+            faulted.app.completed()
+                + faulted.app.in_flight_len()
+                + (c.shed + c.violations) as usize,
+            clean.app.completed() + clean.app.in_flight_len(),
+            "seed {seed}: requests lost by the resilience plane under the storm"
+        );
+
+        totals.merge(&c);
+    }
+
+    assert!(totals.timeouts > 0, "no deadline ever expired across 32 storms");
+    assert!(totals.retries > 0, "no retry was ever scheduled");
+    assert!(totals.violations > 0, "no retry budget was ever spent");
+    assert!(totals.shed > 0, "admission control never shed a Batch arrival");
+    assert!(totals.violation_minutes > 0, "zero violation-minutes recorded");
+}
+
 #[test]
 fn faulted_cell_is_bit_identical_across_repeats_and_shards() {
     let topo = Topology::Paper;
@@ -144,6 +212,7 @@ fn faulted_cell_is_bit_identical_across_repeats_and_shards() {
             CoreKind::Calendar,
             shards,
             &plan,
+            None,
         )
     };
     for seed in [5, 21] {

@@ -125,6 +125,7 @@ fn city8_cell(kind: ForecasterKind, shards: usize, seed: u64) -> CellResult {
         CoreKind::Calendar,
         shards,
         &FaultPlan::none(),
+        None,
     )
 }
 

@@ -161,6 +161,7 @@ fn sweep_cell_with_none_plan_reports_zero_fault_columns() {
             CoreKind::Calendar,
             0,
             &FaultPlan::none(),
+            None,
         )
     };
     let a = cell();

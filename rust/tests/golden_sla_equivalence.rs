@@ -1,0 +1,211 @@
+//! Golden equivalence for the resilience plane's no-op contract.
+//!
+//! An **absent** `SlaPolicy` must leave a run byte-identical to the
+//! pre-resilience engine: no SLA RNG stream is constructed, every
+//! request is born `Standard` without a draw, no `RequestTimeout` is
+//! scheduled, and admission control never runs. There is no
+//! pre-resilience binary to diff against, so these tests pin the two
+//! executable faces of that contract, following the pattern of
+//! `golden_chaos_equivalence.rs`:
+//!
+//! 1. **Absent policy reports exactly nothing** — `sla_active()` is
+//!    false, the summary counters are all zero and the per-class stats
+//!    are empty, on the monolith, the sweep harness, and the sharded
+//!    engine alike.
+//! 2. **A maximally-lax policy is observationally a no-op** — with the
+//!    deadline beyond the horizon and an unreachable shed depth, the
+//!    only remaining SLA activity is priority draws on the dedicated
+//!    `sla_stream` (disjoint from every engine stream) and timeout
+//!    events scheduled past the end of time. A lax-SLA world must
+//!    therefore evolve **bit-identically** (fingerprints, decision
+//!    logs, event counts, RIR trajectories) to a world where
+//!    `install_sla` was never called — proving the plane acts on a run
+//!    *only* through deadline expiry and queue-depth shedding.
+
+use ppa_edge::app::{SlaConfig, SlaPolicy, TaskCosts};
+use ppa_edge::autoscaler::{Autoscaler, Hpa, Ppa, PpaConfig};
+use ppa_edge::cluster::FaultPlan;
+use ppa_edge::config::{city_scenario_presets, paper_cluster, ClusterConfig, Topology};
+use ppa_edge::experiments::{run_cell, AutoscalerKind, SimWorld};
+use ppa_edge::forecast::ArmaForecaster;
+use ppa_edge::sim::{CoreKind, Time, MIN, MS};
+use ppa_edge::workload::{Generator, RandomAccessGen};
+
+#[derive(Clone, Copy)]
+enum ScalerKind {
+    Hpa,
+    /// ARMA PPA trained online by a live 10-minute update loop.
+    PpaArma,
+}
+
+fn build_scaler(kind: ScalerKind) -> Box<dyn Autoscaler> {
+    match kind {
+        ScalerKind::Hpa => Box::new(Hpa::with_defaults()),
+        ScalerKind::PpaArma => Box::new(Ppa::new(
+            PpaConfig {
+                update_interval: 10 * MIN,
+                ..PpaConfig::default()
+            },
+            Box::new(ArmaForecaster::new()),
+        )),
+    }
+}
+
+/// A policy that can never fire: deadline far past any horizon, zero
+/// retries, admission depth no queue can reach.
+fn lax_sla() -> SlaConfig {
+    SlaConfig::new(SlaPolicy {
+        deadline: Time::MAX / 4,
+        max_retries: 0,
+        backoff_base: MS,
+        shed_queue_depth: usize::MAX,
+    })
+}
+
+/// Run the same (cluster, generators, scaler, seed) world twice — once
+/// untouched, once with the lax policy installed — and assert
+/// bit-identical evolution plus an all-zero summary.
+fn assert_lax_sla_is_noop(
+    cfg: &ClusterConfig,
+    gens: &dyn Fn() -> Vec<Generator>,
+    kind: ScalerKind,
+    seed: u64,
+    minutes: u64,
+) {
+    let run_one = |install_lax: bool| -> SimWorld {
+        let mut w = SimWorld::build(cfg, TaskCosts::default(), seed);
+        w.record_decisions();
+        for g in gens() {
+            w.add_generator(g);
+        }
+        for svc in 0..w.app.services.len() {
+            w.add_scaler(build_scaler(kind), svc);
+        }
+        if install_lax {
+            w.install_sla(&lax_sla(), seed);
+        }
+        w.run_until(minutes * MIN);
+        w
+    };
+    let clean = run_one(false);
+    let lax = run_one(true);
+
+    assert!(clean.events_processed > 100, "world should be busy");
+    assert_eq!(
+        clean.events_processed, lax.events_processed,
+        "event counts diverged"
+    );
+    assert_eq!(clean.app.completed(), lax.app.completed());
+    assert_eq!(
+        clean.app.stats.fingerprint(),
+        lax.app.stats.fingerprint(),
+        "response streams diverged"
+    );
+    for svc in 0..clean.app.services.len() {
+        assert_eq!(
+            clean.decisions_for(svc),
+            lax.decisions_for(svc),
+            "service {svc}: decision logs diverged"
+        );
+    }
+    assert_eq!(clean.rir_log.len(), lax.rir_log.len());
+
+    // The absent policy reports exactly nothing...
+    assert!(!clean.app.sla_active());
+    let absent = clean.app.sla_summary();
+    assert!(absent.counters.is_zero(), "SLA-free counters not zero: {:?}", absent.counters);
+    assert!(
+        absent.class_stats.iter().all(|s| s.n() == 0),
+        "SLA-free per-class stats not empty"
+    );
+    // ...and the lax policy, which classified every arrival, still
+    // counted no timeout, retry, violation or shed.
+    assert!(lax.app.sla_active());
+    let summary = lax.app.sla_summary();
+    assert!(summary.counters.is_zero(), "lax policy fired: {:?}", summary.counters);
+    assert!(
+        summary.class_stats.iter().map(|s| s.n()).sum::<usize>() > 0,
+        "lax policy classified no completions"
+    );
+}
+
+fn paper_generators() -> Vec<Generator> {
+    vec![
+        Generator::RandomAccess(RandomAccessGen::new(1)),
+        Generator::RandomAccess(RandomAccessGen::new(2)),
+    ]
+}
+
+#[test]
+fn golden_sla_noop_paper_hpa() {
+    let cfg = paper_cluster();
+    assert_lax_sla_is_noop(&cfg, &paper_generators, ScalerKind::Hpa, 2021, 20);
+}
+
+#[test]
+fn golden_sla_noop_paper_ppa_arma() {
+    let cfg = paper_cluster();
+    assert_lax_sla_is_noop(&cfg, &paper_generators, ScalerKind::PpaArma, 7, 15);
+}
+
+#[test]
+fn golden_sla_noop_city8_grid() {
+    // A small city-8 grid: 2 scenarios x both scalers.
+    let topo = Topology::EdgeCity {
+        zones: 8,
+        workers_per_zone: 2,
+        mix: Default::default(),
+    };
+    let cfg = topo.cluster();
+    for (_, scenario) in &city_scenario_presets(8)[..2] {
+        for kind in [ScalerKind::Hpa, ScalerKind::PpaArma] {
+            let build = || scenario.build_generators();
+            assert_lax_sla_is_noop(&cfg, &build, kind, 11, 4);
+        }
+    }
+}
+
+#[test]
+fn sweep_cell_without_sla_reports_none_columns() {
+    // The harness path: an SLA-free cell must label itself "none", keep
+    // every resilience counter at zero, carry no per-class stats, and
+    // fingerprint identically across repeats — the SLA columns ride
+    // along without touching the science.
+    let topo = Topology::EdgeCity {
+        zones: 8,
+        workers_per_zone: 2,
+        mix: Default::default(),
+    };
+    let cluster = topo.cluster();
+    let label = topo.label();
+    let presets = city_scenario_presets(8);
+    let (name, scenario) = &presets[0];
+    let cell = || {
+        run_cell(
+            &label,
+            &cluster,
+            name,
+            scenario,
+            AutoscalerKind::Hpa,
+            None,
+            1000,
+            4,
+            CoreKind::Calendar,
+            0,
+            &FaultPlan::none(),
+            None,
+        )
+    };
+    let a = cell();
+    let b = cell();
+    assert_eq!(a.metrics.fingerprint(), b.metrics.fingerprint());
+    assert_eq!(a.metrics.sla, "none");
+    assert_eq!(a.metrics.sla_timeouts, 0);
+    assert_eq!(a.metrics.sla_retries, 0);
+    assert_eq!(a.metrics.sla_violations, 0);
+    assert_eq!(a.metrics.sla_shed, 0);
+    assert_eq!(a.metrics.sla_violation_minutes, 0);
+    assert!(a.metrics.class_response.is_empty());
+    assert_eq!(a.metrics.hybrid_trips, None);
+    assert_eq!(a.metrics.hybrid_override_ticks, None);
+}

@@ -12,8 +12,8 @@
 //! invariant the sweep already pins across worker-thread counts,
 //! extended inward.
 
-use ppa_edge::app::TaskCosts;
-use ppa_edge::autoscaler::{Autoscaler, Hpa, Ppa, PpaConfig};
+use ppa_edge::app::{SlaConfig, SlaPolicy, TaskCosts};
+use ppa_edge::autoscaler::{Autoscaler, Hpa, Hybrid, HybridConfig, Ppa, PpaConfig};
 use ppa_edge::cluster::{ColdStartPlan, CrashLoopPlan, FaultPlan, NetDelayPlan, NodeCrashPlan};
 use ppa_edge::config::{city_scenario_presets, paper_cluster, ClusterConfig, Topology};
 use ppa_edge::experiments::{run_cell, AutoscalerKind};
@@ -32,6 +32,7 @@ fn spec(shards: usize, seed: u64, minutes: u64) -> ShardSpec {
         end: minutes * MIN,
         record_decisions: true,
         chaos: FaultPlan::none(),
+        sla: None,
     }
 }
 
@@ -216,6 +217,7 @@ fn sweep_cells_are_shard_invariant_and_distinct_from_zero() {
             CoreKind::Calendar,
             shards,
             &FaultPlan::none(),
+            None,
         )
     };
     let reference = cell(1);
@@ -321,5 +323,82 @@ fn faulted_forward_heavy_cell_is_shard_invariant_to_eight() {
             format!("{:?}", run.chaos_counters()),
             "chaos counters diverged at shards={shards}"
         );
+    }
+}
+
+#[test]
+fn sla_faulted_hybrid_cell_is_shard_invariant_to_eight() {
+    // The resilience plane's adversarial case: a forward-heavy flash
+    // crowd under the full fault storm with a tight SLA armed and the
+    // hybrid reactive–proactive scaler on every world. Everything the
+    // PR adds is in play at once — deadline timeouts, seeded retry
+    // jitter, Batch shedding, the reactive override, the per-world SLA
+    // merge, the cost ledger — and none of it may depend on the shard
+    // count, all the way to shards=8.
+    let cfg = paper_cluster();
+    let scenario = Scenario::FlashCrowd {
+        cfg: Default::default(),
+        zones: vec![1, 2],
+        stagger: 0,
+    };
+    let storm = ppa_edge::config::chaos_preset("full-storm").expect("preset exists");
+    let sla = SlaConfig::new(SlaPolicy {
+        deadline: 400 * MS,
+        max_retries: 2,
+        backoff_base: 50 * MS,
+        shed_queue_depth: 8,
+    });
+    let seed = 23;
+    let run_at = |shards: usize| {
+        let mut s = spec(shards, seed, 6);
+        s.chaos = storm;
+        s.sla = Some(sla);
+        run_sharded(
+            &cfg,
+            scenario.build_generators(),
+            &|_svc| -> Box<dyn Autoscaler> {
+                Box::new(Hybrid::new(
+                    HybridConfig::default(),
+                    Box::new(ArmaForecaster::new()),
+                ))
+            },
+            &s,
+        )
+        .expect("SLA'd faulted sharded run failed")
+    };
+    let reference = run_at(1);
+    let summary = reference.sla_summary();
+    assert!(
+        !summary.counters.is_zero(),
+        "tight SLA fired nothing under the storm"
+    );
+    assert!(reference.chaos_counters().crashes > 0, "storm injected no crashes");
+    for shards in [2, 4, 8] {
+        let run = run_at(shards);
+        assert_eq!(
+            reference.fingerprint(),
+            run.fingerprint(),
+            "SLA'd faulted fingerprints diverged at shards={shards}"
+        );
+        assert_eq!(reference.events(), run.events());
+        assert_eq!(reference.completed(), run.completed());
+        assert_eq!(decisions(&reference), decisions(&run));
+        assert_eq!(
+            summary.counters,
+            run.sla_summary().counters,
+            "SLA counters diverged at shards={shards}"
+        );
+        assert_eq!(
+            format!("{:?}", summary.class_stats),
+            format!("{:?}", run.sla_summary().class_stats),
+            "per-class stats diverged at shards={shards}"
+        );
+        assert_eq!(reference.pod_churn(), run.pod_churn());
+        assert!(
+            (reference.cost_node_hours() - run.cost_node_hours()).abs() < 1e-12,
+            "cost ledger diverged at shards={shards}"
+        );
+        assert_eq!(reference.hybrid_trips(), run.hybrid_trips());
+        assert_eq!(reference.hybrid_override_ticks(), run.hybrid_override_ticks());
     }
 }

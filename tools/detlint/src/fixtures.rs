@@ -493,6 +493,88 @@ pub fn forward(window: &[f64], weights: &[f64]) -> f64 {
 "##,
         expect: &["P1"],
     },
+    // ---- Resilience plane (the deadline/retry/shed path lives in
+    //      rust/src/app/, and autoscaler/hybrid.rs is individually
+    //      listed in HOT_SCOPE: its override logic runs every tick) ----
+    Fixture {
+        // The timeout handler must date a deadline expiry off the
+        // request's sim-time `created` stamp, never the wall clock — a
+        // wall-clocked deadline breaks bit-identical replays outright.
+        name: "d1_timeout_wall_clock_fires",
+        path: "rust/src/app/fixture.rs",
+        src: r##"
+pub fn deadline_expired(deadline_ms: u64) -> bool {
+    let wall = std::time::Instant::now();
+    wall.elapsed().as_millis() as u64 > deadline_ms
+}
+"##,
+        expect: &["D1"],
+    },
+    Fixture {
+        // The real shape: expiry is pure sim-time arithmetic on the
+        // event's scheduled stamp.
+        name: "d1_timeout_sim_time_clean",
+        path: "rust/src/app/fixture.rs",
+        src: r##"
+pub fn deadline_expired(now: u64, created: u64, deadline: u64) -> bool {
+    now >= created.saturating_add(deadline)
+}
+"##,
+        expect: &[],
+    },
+    Fixture {
+        // Retry scheduling runs inside the `RequestTimeout` handler —
+        // an unwrap on the arena lookup panics the whole run the moment
+        // a stale timeout races a completion. Stale handles must be
+        // dropped, not unwrapped.
+        name: "p1_retry_unwrap_fires",
+        path: "rust/src/app/fixture.rs",
+        src: r##"
+pub fn backoff_for(attempts: &[u32], idx: usize, base: u64) -> u64 {
+    let k = *attempts.get(idx).unwrap();
+    base << k.min(16)
+}
+"##,
+        expect: &["P1"],
+    },
+    Fixture {
+        // The real shape: a missing arena entry means the request
+        // already completed; the timeout is stale and simply dropped.
+        name: "p1_retry_stale_handled_clean",
+        path: "rust/src/app/fixture.rs",
+        src: r##"
+pub fn backoff_for(attempts: &[u32], idx: usize, base: u64) -> Option<u64> {
+    let k = *attempts.get(idx)?;
+    Some(base << k.min(16))
+}
+"##,
+        expect: &[],
+    },
+    Fixture {
+        // The hybrid scaler's reactive override decides from scraped
+        // SLA-violation rates and the forecast guard's z-score — both
+        // deterministic tick inputs. A panic there tears down the run
+        // on every tick, so P1 applies to hybrid.rs like the zoo files.
+        name: "p1_hybrid_unwrap_fires",
+        path: "rust/src/autoscaler/hybrid.rs",
+        src: r##"
+pub fn violation_rate(series: &[f64]) -> f64 {
+    *series.last().unwrap()
+}
+"##,
+        expect: &["P1"],
+    },
+    Fixture {
+        // The real shape: an empty series is "no signal", not a panic.
+        name: "p1_hybrid_handled_clean",
+        path: "rust/src/autoscaler/hybrid.rs",
+        src: r##"
+pub fn violation_rate(series: &[f64]) -> f64 {
+    series.last().copied().unwrap_or(0.0)
+}
+"##,
+        expect: &[],
+    },
     Fixture {
         // The real shape: insufficient history is a `None`, and the
         // seasonal index derives from the deterministic row count.

@@ -102,11 +102,16 @@ const SIM_SCOPE: &[&str] = &[
 /// and the selector's review loop), so they are hot path too; the
 /// PJRT-backed `forecast/lstm.rs` is not listed — it never enters the
 /// simulation loop without an explicit `--model lstm` opt-in and its
-/// FFI layer has its own error contract.
+/// FFI layer has its own error contract. The resilience plane rides the
+/// same path: deadline timeouts, retry scheduling and shedding live in
+/// `rust/src/app/` (already covered), and the hybrid scaler's
+/// override/guard logic (`autoscaler/hybrid.rs`) runs inside every
+/// scaler tick, so it is listed individually like the zoo files.
 const HOT_SCOPE: &[&str] = &[
     "rust/src/sim/",
     "rust/src/app/",
     "rust/src/cluster/",
+    "rust/src/autoscaler/hybrid.rs",
     "rust/src/forecast/selector.rs",
     "rust/src/forecast/holt_winters.rs",
     "rust/src/forecast/tcn.rs",
